@@ -1,0 +1,76 @@
+//! Ablations over the WiHetNoC design choices (DESIGN.md §5 calls these
+//! out): what does each ingredient buy?
+//!
+//!   A0  optimized mesh, XY            (baseline routing)
+//!   A1  optimized mesh, XY+YX         (+ minimal-adaptive routing [29])
+//!   A2  AMOSA wireline only (HetNoC)  (+ irregular topology)
+//!   A3  WiHetNoC, no dedicated CPU ch (+ wireless, shared channels only)
+//!   A4  WiHetNoC full                 (+ dedicated CPU-MC channel)
+//!
+//! Run: `cargo run --release --example ablations`
+
+use wihetnoc::energy::network::message_edp;
+use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::model::{lenet, SystemConfig};
+use wihetnoc::noc::builder::{
+    het_noc, mesh_opt, optimize_wireline, DesignConfig, NocInstance, NocKind,
+};
+use wihetnoc::noc::routing::RouteSet;
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::optim::wiplace::build_wireless;
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+
+fn main() {
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &lenet(), 32);
+    let fij = tm.fij(&sys);
+    let cfg = DesignConfig::quick(42);
+    let energy = EnergyParams::default();
+    let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
+
+    // shared wireline topology for A3/A4 (one AMOSA run)
+    let topo = optimize_wireline(&sys, &fij, &cfg);
+    let air = build_wireless(&topo, &fij, &sys.cpus(), &sys.mcs(), cfg.n_wi, cfg.gpu_channels);
+
+    // A3: wireless but no dedicated-channel policy — every pair may use
+    // any channel and nothing is force-enabled.
+    let all_channels: Vec<usize> = (0..air.num_channels).collect();
+    let a3_routes = RouteSet::alash(&topo, &air, Some(&fij), |_, _| all_channels.clone(), 5);
+    let a3 = NocInstance {
+        kind: NocKind::WiHetNoc,
+        topo: topo.clone(),
+        routes: a3_routes,
+        air: air.clone(),
+    };
+    // A4: the full design (dedicated CPU-MC channel + forced air)
+    let a4_routes = wihetnoc::noc::builder::alash_routes(&sys, &topo, &air, &fij);
+    let a4 = NocInstance { kind: NocKind::WiHetNoc, topo, routes: a4_routes, air };
+
+    let variants: Vec<(&str, NocInstance)> = vec![
+        ("A0 mesh XY", mesh_opt(&sys, false)),
+        ("A1 mesh XY+YX", mesh_opt(&sys, true)),
+        ("A2 HetNoC (wireline)", het_noc(&sys, &fij, &cfg)),
+        ("A3 wireless, shared ch", a3),
+        ("A4 WiHetNoC full", a4),
+    ];
+
+    println!(
+        "{:<24} {:>9} {:>9} {:>11} {:>9}",
+        "variant", "latency", "cpu-mc", "msg EDP", "air %"
+    );
+    for (name, inst) in &variants {
+        let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+        let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+            .run(&trace);
+        println!(
+            "{:<24} {:>9.2} {:>9.2} {:>11.0} {:>8.1}%",
+            name,
+            rep.latency.mean(),
+            rep.cpu_mc_latency.mean(),
+            message_edp(&inst.topo, &rep, &energy),
+            100.0 * rep.wireless_utilization(),
+        );
+    }
+    println!("\n(each row adds one design ingredient; the CPU-MC column is the dedicated channel's contribution: A4 vs A3 under load)");
+}

@@ -1,0 +1,67 @@
+//! Using the design methodology on a *different* platform — the paper's
+//! §5 claim that the flow "can be used for any composition of
+//! CPUs/GPUs/MCs and system size". Here: a 16-tile edge-inference chip
+//! (12 GPU, 2 CPU, 2 MC) running CDBNet, designed end to end and compared
+//! against its mesh.
+//!
+//! Run: `cargo run --release --example design_custom_noc`
+
+use wihetnoc::energy::network::message_edp;
+use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::model::{cdbnet, SystemConfig};
+use wihetnoc::noc::analysis::analyze;
+use wihetnoc::noc::builder::{mesh_opt, wi_het_noc, DesignConfig};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::noc::topology::Topology;
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+
+fn main() {
+    let sys = SystemConfig::small_4x4();
+    println!(
+        "custom platform: {} tiles = {} GPU + {} CPU + {} MC",
+        sys.num_tiles(),
+        sys.gpus().len(),
+        sys.cpus().len(),
+        sys.mcs().len()
+    );
+
+    // workload: CDBNet at batch 16
+    let tm = model_phases(&sys, &cdbnet(), 16);
+    let fij = tm.fij(&sys);
+
+    // scale the design knobs with the platform: fewer WIs and channels
+    let mut cfg = DesignConfig::quick(7);
+    cfg.k_max = 5;
+    cfg.n_wi = 4;
+    cfg.gpu_channels = 2;
+    cfg.max_link_mm = Some(10.0); // 4x4 on the same 20 mm die -> 5 mm pitch
+    let inst = wi_het_noc(&sys, &fij, &cfg);
+
+    let mesh_topo = Topology::mesh(&sys);
+    let (am, aw) = (analyze(&mesh_topo, &fij), analyze(&inst.topo, &fij));
+    println!(
+        "wireline objectives (U_mean / sigma): mesh {:.4}/{:.4} -> WiHetNoC {:.4}/{:.4}",
+        am.u_mean, am.u_std, aw.u_mean, aw.u_std
+    );
+    println!(
+        "WIs: {:?}",
+        inst.air.wis.iter().map(|w| (w.router, w.channel)).collect::<Vec<_>>()
+    );
+
+    // head-to-head simulation
+    let mesh = mesh_opt(&sys, true);
+    let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
+    let energy = EnergyParams::default();
+    for (name, inst) in [("mesh", &mesh), ("wihetnoc", &inst)] {
+        let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+        let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+            .run(&trace);
+        println!(
+            "{name:<9} latency {:>7.2} | cpu-mc {:>7.2} | msg EDP {:>9.0}",
+            rep.latency.mean(),
+            rep.cpu_mc_latency.mean(),
+            message_edp(&inst.topo, &rep, &energy),
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Quickstart: design a WiHetNoC for the paper's 64-tile heterogeneous
+//! system, simulate one LeNet training iteration's traffic on it and on
+//! the optimized-mesh baseline, and print the comparison.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use wihetnoc::energy::network::{message_edp, network_energy_pj};
+use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::model::{lenet, SystemConfig};
+use wihetnoc::noc::builder::{mesh_opt, wi_het_noc, DesignConfig};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+
+fn main() {
+    // 1. the platform: 56 GPUs + 4 CPUs + 4 MCs on an 8x8 grid
+    let sys = SystemConfig::paper_8x8();
+
+    // 2. the workload: LeNet training traffic (per-layer fwd+bwd phases)
+    let tm = model_phases(&sys, &lenet(), 32);
+    println!(
+        "LeNet iteration: {} phases, {:.1}% many-to-few traffic",
+        tm.phases.len(),
+        100.0 * tm.many_to_few_fraction(&sys)
+    );
+
+    // 3. design the WiHetNoC (AMOSA wireline + wireless overlay + ALASH)
+    let fij = tm.fij(&sys);
+    let cfg = DesignConfig::quick(42); // DesignConfig::default() = paper effort
+    let t0 = std::time::Instant::now();
+    let wihet = wi_het_noc(&sys, &fij, &cfg);
+    println!(
+        "designed WiHetNoC in {:.1}s: k_max={}, {} WIs on {} channels, {} virtual layers",
+        t0.elapsed().as_secs_f64(),
+        wihet.topo.k_max(),
+        wihet.air.wis.len(),
+        wihet.air.num_channels,
+        wihet.routes.num_layers,
+    );
+
+    // 4. simulate both NoCs on the same traffic
+    let mesh = mesh_opt(&sys, true);
+    let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
+    let energy = EnergyParams::default();
+    println!("\n{:<10} {:>10} {:>10} {:>12} {:>12}", "noc", "latency", "cpu-mc", "pJ/packet", "msg EDP");
+    for (name, inst) in [("mesh", &mesh), ("wihetnoc", &wihet)] {
+        let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+        let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+            .run(&trace);
+        let e = network_energy_pj(&inst.topo, &rep, &energy);
+        println!(
+            "{:<10} {:>10.2} {:>10.2} {:>12.1} {:>12.0}",
+            name,
+            rep.latency.mean(),
+            rep.cpu_mc_latency.mean(),
+            e.total_pj() / rep.delivered_packets as f64,
+            message_edp(&inst.topo, &rep, &energy),
+        );
+    }
+    println!("\n(expect WiHetNoC to win both latency columns and message EDP)");
+}

@@ -1,0 +1,45 @@
+//! Standalone WI-count + channel-count sweep (the Fig 12/13 design-space
+//! exploration) with CSV output for plotting.
+//!
+//! Run: `cargo run --release --example wi_sweep [--effort full]`
+
+use wihetnoc::energy::network::message_edp;
+use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::experiments::{Ctx, Effort};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::traffic::trace::training_trace;
+
+fn main() {
+    let effort = if std::env::args().any(|a| a == "--effort=full" || a == "full") {
+        Effort::Full
+    } else {
+        Effort::Quick
+    };
+    let mut ctx = Ctx::new(effort, 42);
+    let energy = EnergyParams::default();
+    println!("n_wi,channels,msg_edp,latency,wireless_util,fallback_rate");
+    for channels in 1..=4usize {
+        for n_wi in [4usize, 8, 12, 16, 24, 32, 40] {
+            if n_wi % channels != 0 {
+                continue;
+            }
+            let inst = ctx.wihet_variant(n_wi, channels);
+            let sys = ctx.sys.clone();
+            let tm = ctx.traffic("lenet");
+            let cfg = ctx.trace_cfg();
+            let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+            let rep =
+                NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+                    .run(&trace);
+            println!(
+                "{},{},{:.1},{:.2},{:.4},{:.4}",
+                n_wi,
+                channels,
+                message_edp(&inst.topo, &rep, &energy),
+                rep.latency.mean(),
+                rep.wireless_utilization(),
+                rep.air_fallbacks as f64 / rep.delivered_packets.max(1) as f64,
+            );
+        }
+    }
+}

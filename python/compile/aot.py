@@ -1,0 +1,133 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + manifest for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos whose instruction ids
+exceed INT_MAX, while the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs in ``artifacts/``:
+  <model>_train_step.hlo.txt   flat (*params, x, y) -> (*params', loss)
+  <model>_forward.hlo.txt      flat (*params, x)    -> (logits,)
+  matmul_micro.hlo.txt         small GEMM used by runtime smoke tests
+  manifest.json                entry-point signatures + per-layer metadata
+                               consumed by rust/src/runtime/manifest.rs and
+                               cross-checked against rust/src/model/cnn.rs
+
+Run: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; the
+Makefile skips it when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .shapes import MODELS, check_table1
+
+DEFAULT_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_dicts(specs) -> List[dict]:
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_artifacts(out_dir: str, batch: int, models: List[str]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    check_table1()
+    manifest = {"version": 1, "batch": batch, "entries": [], "models": []}
+
+    for name in models:
+        spec = MODELS[name]()
+        manifest["models"].append(spec.to_dict(batch))
+
+        for kind, fn, with_labels, extra_out in (
+            ("train_step", M.make_train_step_fn(spec), True, 1),
+            ("forward", M.make_forward_fn(spec), False, 1),
+        ):
+            specs = M.input_specs(spec, batch, with_labels)
+            text = lower_entry(fn, specs)
+            fname = f"{name}_{kind}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            n_params = 2 * len(M.param_layers(spec))
+            manifest["entries"].append({
+                "name": f"{name}_{kind}",
+                "model": name,
+                "kind": kind,
+                "path": fname,
+                "inputs": _spec_dicts(specs),
+                "num_params": n_params,
+                # train_step returns (*params, loss); forward returns (logits,)
+                "num_outputs": (n_params + 1) if kind == "train_step" else 1,
+                "lr": M.DEFAULT_LR if kind == "train_step" else None,
+            })
+            print(f"lowered {fname}: {len(text)} chars")
+
+    # Micro GEMM artifact for runtime smoke tests / benches.
+    def micro(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    s = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    text = lower_entry(micro, (s, s))
+    with open(os.path.join(out_dir, "matmul_micro.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["entries"].append({
+        "name": "matmul_micro", "model": None, "kind": "micro",
+        "path": "matmul_micro.hlo.txt",
+        "inputs": _spec_dicts([s, s]), "num_params": 0, "num_outputs": 1,
+        "lr": None,
+    })
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile package — lets `make artifacts` skip clean runs."""
+    root = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    args = ap.parse_args()
+    build_artifacts(args.out_dir, args.batch, args.models)
+    with open(os.path.join(args.out_dir, ".fingerprint"), "w") as f:
+        f.write(source_fingerprint())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the CNN training hot paths.
+
+Exports: tiled matmul (MXU-style), max/avg pooling, im2col conv2d, dense,
+plus the pure-jnp reference oracles in :mod:`ref`.
+All kernels run ``interpret=True`` on the CPU PJRT plugin (DESIGN.md §3).
+"""
+
+from .matmul import matmul, vmem_bytes, mxu_utilization  # noqa: F401
+from .pool import maxpool, avgpool  # noqa: F401
+from .conv import conv2d, im2col  # noqa: F401
+from .dense import dense  # noqa: F401

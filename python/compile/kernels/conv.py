@@ -1,0 +1,103 @@
+"""conv2d = im2col + Pallas tiled matmul, with a custom VJP whose backward
+pass is *also* GEMM-shaped and runs on the same Pallas kernel.
+
+Hardware adaptation (DESIGN.md §3): the paper's workload runs convolutions
+on CUDA GPUs (thread-per-output-pixel). The MXU formulation is im2col +
+systolic matmul: patches are gathered once (a layout transform XLA fuses
+into the producing op on TPU) and the arithmetic intensity lives entirely in
+the (B*OH*OW, KH*KW*CI) x (KH*KW*CI, CO) GEMM that `kernels.matmul` tiles
+for VMEM.
+
+Backward (stride-1 convs only — all LeNet/CDBNet convs are stride 1):
+  dW = P^T  @ dYm          (GEMM, Pallas)
+  dB = sum(dYm, axis=0)
+  dP = dYm  @ Wm^T         (GEMM, Pallas)
+  dX = col2im(dP)          (overlap-add of KH*KW static slices)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _pad_same(x, kh, kw):
+    ph, pw = kh // 2, kw // 2
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0))), ph, pw
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """(B,H,W,C) -> (B, OH, OW, KH*KW*C) patch tensor, stride 1, VALID.
+
+    KH*KW static slices concatenated on the channel axis; on TPU this is the
+    HBM->VMEM gather that the BlockSpec schedule of the GEMM consumes.
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(x, (0, i, j, 0), (b, i + oh, j + ow, c)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _col2im(dp: jax.Array, h: int, w: int, kh: int, kw: int) -> jax.Array:
+    """Adjoint of `im2col`: overlap-add patches back to (B,H,W,C)."""
+    b, oh, ow, kc = dp.shape
+    c = kc // (kh * kw)
+    dx = jnp.zeros((b, h, w, c), dp.dtype)
+    idx = 0
+    for i in range(kh):
+        for j in range(kw):
+            piece = jax.lax.slice(dp, (0, 0, 0, idx * c), (b, oh, ow, (idx + 1) * c))
+            dx = jax.lax.dynamic_update_slice(
+                dx,
+                jax.lax.dynamic_slice(dx, (0, i, j, 0), (b, oh, ow, c)) + piece,
+                (0, i, j, 0),
+            )
+            idx += 1
+    return dx
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, padding: str = "VALID"):
+    """Stride-1 2D convolution. x: NHWC, w: HWIO, b: (O,).
+
+    padding: "VALID" or "SAME".
+    """
+    return _conv2d_fwd(x, w, b, padding)[0]
+
+
+def _conv2d_fwd(x, w, b, padding):
+    kh, kw, ci, co = w.shape
+    xb, ph, pw = (x, 0, 0) if padding == "VALID" else _pad_same(x, kh, kw)
+    bsz, h, wdt, _ = xb.shape
+    oh, ow = h - kh + 1, wdt - kw + 1
+    patches = im2col(xb, kh, kw)  # (B, OH, OW, KH*KW*CI)
+    pm = patches.reshape(bsz * oh * ow, kh * kw * ci)
+    wm = w.reshape(kh * kw * ci, co)
+    ym = matmul(pm, wm) + b
+    y = ym.reshape(bsz, oh, ow, co)
+    return y, (pm, wm, xb.shape, (kh, kw, ci, co), (ph, pw), x.shape)
+
+
+def _conv2d_bwd(padding, res, dy):
+    pm, wm, xb_shape, (kh, kw, ci, co), (ph, pw), x_shape = res
+    bsz, h, wdt, _ = xb_shape
+    oh, ow = h - kh + 1, wdt - kw + 1
+    dym = dy.reshape(bsz * oh * ow, co)
+    dwm = matmul(pm.T, dym)                      # (KH*KW*CI, CO)
+    db = jnp.sum(dym, axis=0)
+    dpm = matmul(dym, wm.T)                      # (M, KH*KW*CI)
+    dp = dpm.reshape(bsz, oh, ow, kh * kw * ci)
+    dxb = _col2im(dp, h, wdt, kh, kw)
+    if ph or pw:
+        dxb = dxb[:, ph:ph + x_shape[1], pw:pw + x_shape[2], :]
+    return dxb, dwm.reshape(kh, kw, ci, co), db
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)

@@ -1,0 +1,33 @@
+"""Fully-connected layer on the Pallas tiled matmul, custom VJP.
+
+dX = dY @ W^T and dW = X^T @ dY are the same GEMM kernel, so the FC
+backward also exercises the MXU path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, I), w: (I, O), b: (O,) -> (B, O)."""
+    return _dense_fwd(x, w, b)[0]
+
+
+def _dense_fwd(x, w, b):
+    return matmul(x, w) + b, (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,153 @@
+"""L1 Pallas tiled-matmul kernel — the compute hot-spot of CNN training.
+
+Every convolution and fully-connected layer in LeNet/CDBNet is lowered to
+GEMM (im2col for convs), and this kernel is the GEMM. It is written the way
+an MXU-targeting kernel is written:
+
+  * the grid walks (M/bm, N/bn, K/bk) tiles; K is the innermost (fastest)
+    grid axis so a given output tile stays resident while the reduction runs;
+  * each step multiplies a (bm, bk) LHS panel by a (bk, bn) RHS panel — on a
+    real TPU these land in VMEM via the BlockSpec index maps below and feed
+    the 128x128 systolic array; on this CPU build the same schedule runs
+    under ``interpret=True`` (Mosaic custom-calls cannot execute on the CPU
+    PJRT plugin, see DESIGN.md §3);
+  * accumulation is fp32 into the output tile. On TPU the accumulator would
+    be a VMEM scratch buffer and the inputs bf16; interpret mode has no
+    scratch memory spaces, so we accumulate directly into ``o_ref`` (bit-for
+    -bit identical for f32 inputs).
+
+VMEM budget (DESIGN.md §8): bytes = 4*(bm*bk + bk*bn + bm*bn). The default
+128x128x128 tiles use 192 KiB — far under the ~16 MiB/core budget, chosen so
+the M dimension (batch*out_h*out_w, often small here) does not over-pad.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size policy: MXU-aligned (multiples of 8/128), sized adaptively so
+# the three resident panels fit the VMEM budget while the grid stays as
+# coarse as possible — on TPU this maximizes MXU occupancy per DMA, and
+# under interpret=True it minimizes the per-grid-step interpreter overhead
+# (measured ~0.5 ms/step on this CPU — see EXPERIMENTS.md §Perf).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+MAX_BM = 8192
+MAX_BN = 1024
+MAX_BK = 1024
+
+
+def pick_tiles(m: int, k: int, n: int,
+               budget: int = VMEM_BUDGET_BYTES) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk) minimizing grid steps under the VMEM budget."""
+    bm = min(_round_up(m, 8), MAX_BM)
+    bn = min(_round_up(n, 8), MAX_BN)
+    bk = min(_round_up(k, 8), MAX_BK)
+
+    def vmem(bm, bn, bk):
+        return 4 * (bm * bk + bk * bn + bm * bn)
+
+    # shrink the M tile first (replays the reduction least), then K, then N
+    while vmem(bm, bn, bk) > budget and bm > 128:
+        bm = max(128, bm // 2)
+    while vmem(bm, bn, bk) > budget and bk > 128:
+        bk = max(128, bk // 2)
+    while vmem(bm, bn, bk) > budget and bn > 128:
+        bn = max(128, bn // 2)
+    return bm, bn, bk
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile; grid axis 2 runs the K reduction."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(arr: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - arr.shape[0], cols - arr.shape[1]
+    if pr == 0 and pc == 0:
+        return arr
+    return jnp.pad(arr, ((0, pr), (0, pc)))
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ y`` via the Pallas tiled kernel.
+
+    Tile sizes default to `pick_tiles` (VMEM-budgeted, grid-minimal);
+    explicit ``bm``/``bn``/``bk`` override for tests and sweeps. Shapes are
+    padded up to tile multiples (zero padding is exact for matmul) and the
+    result is sliced back. f32 in / f32 out.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    abm, abn, abk = pick_tiles(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
+    # Shrink tiles to the (padded-up-to-8) problem size so tiny layers do not
+    # pay for full tiles of zeros.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM working set of one grid step (f32)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int | None = None,
+                    bn: int | None = None, bk: int | None = None) -> float:
+    """Fraction of MXU issue slots doing useful work for an (m,k)x(k,n) GEMM.
+
+    The padded grid issues round_up(m,bm)*round_up(n,bn)*round_up(k,bk) MACs
+    worth of systolic-array work; m*n*k of them are useful.
+    """
+    abm, abn, abk = pick_tiles(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
+    issued = _round_up(m, min(bm, _round_up(m, 8))) * \
+        _round_up(n, min(bn, _round_up(n, 8))) * \
+        _round_up(k, min(bk, _round_up(k, 8)))
+    return (m * n * k) / issued

@@ -1,0 +1,174 @@
+"""L1 Pallas pooling kernels (max and average), NHWC.
+
+Pooling is memory-bound; the kernel's job on TPU is to stream HBM->VMEM
+once and reduce in-register. The grid walks the batch axis; each grid step
+holds one image's full feature map in VMEM (LeNet/CDBNet maps are at most
+31*31*32*4 B = 123 KiB — comfortably resident) and produces the pooled map
+by ``kh*kw`` static strided slices, which XLA/Mosaic fuse into a single
+window reduction.
+
+Ceil-mode (LeNet's 29 -> 15 maxpool) is handled by the caller padding with
+the reduction identity (-inf for max, 0 for avg); average pooling divides by
+the full window size (count_include_pad=True), matching ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+POOL_VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _pool_kernel(x_ref, o_ref, *, kh, kw, sh, sw, op):
+    x = x_ref[...]  # (bb, ih, iw, c)
+    _, oh, ow, _ = o_ref.shape
+    acc = None
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (x.shape[0], i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, x.shape[3]),
+                (1, sh, sw, 1),
+            )
+            if acc is None:
+                acc = sl
+            elif op == "max":
+                acc = jnp.maximum(acc, sl)
+            else:
+                acc = acc + sl
+    if op == "avg":
+        acc = acc / float(kh * kw)
+    o_ref[...] = acc
+
+
+def _pool(x, kh, kw, sh, sw, op, ceil_mode, interpret):
+    if x.ndim != 4:
+        raise ValueError(f"pool expects NHWC rank-4 input, got {x.shape}")
+    b, ih, iw, c = x.shape
+
+    def out_dim(i, k, s):
+        if ceil_mode:
+            return -(-(i - k) // s) + 1
+        return (i - k) // s + 1
+
+    oh, ow = out_dim(ih, kh, sh), out_dim(iw, kw, sw)
+    if oh < 1 or ow < 1:
+        raise ValueError(f"pool window ({kh},{kw}) larger than input {x.shape}")
+    # ceil mode: pad right/bottom with the reduction identity.
+    need_h = (oh - 1) * sh + kh
+    need_w = (ow - 1) * sw + kw
+    if need_h > ih or need_w > iw:
+        pad_val = -jnp.inf if op == "max" else 0.0
+        x = jnp.pad(
+            x,
+            ((0, 0), (0, need_h - ih), (0, need_w - iw), (0, 0)),
+            constant_values=pad_val,
+        )
+
+    # Batch-block: as many images per grid step as fit the VMEM budget —
+    # coarse grids amortize the HBM->VMEM streams on TPU and the per-step
+    # interpreter overhead on CPU (§Perf).
+    per_image = x.shape[1] * x.shape[2] * c * 4
+    bb = max(1, min(b, POOL_VMEM_BUDGET // max(per_image, 1)))
+    if b % bb != 0:
+        # pad batch to a multiple of the block (sliced back below)
+        pad_val = -jnp.inf if op == "max" else 0.0
+        pad_b = -(-b // bb) * bb - b
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0), (0, 0)), constant_values=pad_val)
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, kh=kh, kw=kw, sh=sh, sw=sw, op=op),
+        grid=(x.shape[0] // bb,),
+        in_specs=[pl.BlockSpec((bb, x.shape[1], x.shape[2], c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bb, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def maxpool(x, ksize, stride, ceil_mode=False):
+    """Max pooling, NHWC, Pallas forward. ``ksize``/``stride`` are ints.
+
+    Backward routes the cotangent to the max position(s); ties split evenly
+    (ties have measure zero for float inputs).
+    """
+    return _pool(x, ksize, ksize, stride, stride, "max", ceil_mode, True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def avgpool(x, ksize, stride, ceil_mode=False):
+    """Average pooling (count_include_pad), NHWC, Pallas forward."""
+    return _pool(x, ksize, ksize, stride, stride, "avg", ceil_mode, True)
+
+
+def _padded_geometry(shape, ksize, stride, ceil_mode):
+    b, ih, iw, c = shape
+
+    def out_dim(i):
+        return (-(-(i - ksize) // stride) + 1) if ceil_mode else ((i - ksize) // stride + 1)
+
+    oh, ow = out_dim(ih), out_dim(iw)
+    return oh, ow, (oh - 1) * stride + ksize, (ow - 1) * stride + ksize
+
+
+def _maxpool_fwd(x, ksize, stride, ceil_mode):
+    out = _pool(x, ksize, ksize, stride, stride, "max", ceil_mode, True)
+    return out, (x, out)
+
+
+def _maxpool_bwd(ksize, stride, ceil_mode, res, dy):
+    x, out = res
+    b, ih, iw, c = x.shape
+    oh, ow, need_h, need_w = _padded_geometry(x.shape, ksize, stride, ceil_mode)
+    xp = x
+    if need_h > ih or need_w > iw:
+        xp = jnp.pad(x, ((0, 0), (0, need_h - ih), (0, need_w - iw), (0, 0)),
+                     constant_values=-jnp.inf)
+    # Count ties per window, then split dy evenly among them.
+    masks, cnt = [], 0
+    for i in range(ksize):
+        for j in range(ksize):
+            sl = jax.lax.slice(xp, (0, i, j, 0),
+                               (b, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                               (1, stride, stride, 1))
+            m = (sl == out).astype(dy.dtype)
+            masks.append(m)
+            cnt = cnt + m
+    share = dy / jnp.maximum(cnt, 1.0)
+    dxp = jnp.zeros_like(xp)
+    idx = 0
+    for i in range(ksize):
+        for j in range(ksize):
+            dxp = dxp.at[:, i:i + (oh - 1) * stride + 1:stride,
+                         j:j + (ow - 1) * stride + 1:stride, :].add(masks[idx] * share)
+            idx += 1
+    return (dxp[:, :ih, :iw, :],)
+
+
+def _avgpool_fwd(x, ksize, stride, ceil_mode):
+    out = _pool(x, ksize, ksize, stride, stride, "avg", ceil_mode, True)
+    return out, (x.shape,)
+
+
+def _avgpool_bwd(ksize, stride, ceil_mode, res, dy):
+    (xshape,) = res
+    b, ih, iw, c = xshape
+    oh, ow, need_h, need_w = _padded_geometry(xshape, ksize, stride, ceil_mode)
+    share = dy / float(ksize * ksize)
+    dxp = jnp.zeros((b, max(need_h, ih), max(need_w, iw), c), dy.dtype)
+    for i in range(ksize):
+        for j in range(ksize):
+            dxp = dxp.at[:, i:i + (oh - 1) * stride + 1:stride,
+                         j:j + (ow - 1) * stride + 1:stride, :].add(share)
+    return (dxp[:, :ih, :iw, :],)
+
+
+maxpool.defvjp(_maxpool_fwd, _maxpool_bwd)
+avgpool.defvjp(_avgpool_fwd, _avgpool_bwd)

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth for pytest: each kernel in this package must
+match its `ref_*` counterpart to float32 tolerance on randomized shape
+sweeps (see python/tests/test_kernels.py). They use only stock jax.numpy /
+lax ops — no Pallas — so any disagreement implicates the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def _ref_pool(x, ksize, stride, ceil_mode, init, op, is_avg):
+    b, ih, iw, c = x.shape
+
+    def out_dim(i):
+        return (-(-(i - ksize) // stride) + 1) if ceil_mode else ((i - ksize) // stride + 1)
+
+    oh, ow = out_dim(ih), out_dim(iw)
+    need_h = (oh - 1) * stride + ksize
+    need_w = (ow - 1) * stride + ksize
+    if need_h > ih or need_w > iw:
+        x = jnp.pad(x, ((0, 0), (0, need_h - ih), (0, need_w - iw), (0, 0)),
+                    constant_values=init)
+    out = jax.lax.reduce_window(
+        x, init, op,
+        window_dimensions=(1, ksize, ksize, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    if is_avg:
+        out = out / float(ksize * ksize)
+    return out
+
+
+def ref_maxpool(x, ksize, stride, *, ceil_mode=False):
+    return _ref_pool(x, ksize, stride, ceil_mode, -jnp.inf, jax.lax.max, False)
+
+
+def ref_avgpool(x, ksize, stride, *, ceil_mode=False):
+    return _ref_pool(x, ksize, stride, ceil_mode, 0.0, jax.lax.add, True)
+
+
+def ref_conv2d(x, w, b=None, *, padding="VALID"):
+    """NHWC x, HWIO w, stride-1 convolution (the only stride the models use)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    return out
+
+
+def ref_dense(x, w, b=None):
+    out = ref_matmul(x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def ref_lrn(x, *, size=5, alpha=1e-4, beta=0.75, k=1.0):
+    """Local response normalization across channels (AlexNet/ccv style)."""
+    sq = x * x
+    half = size // 2
+    c = x.shape[-1]
+    padded = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
+    acc = jnp.zeros_like(x)
+    for i in range(size):
+        acc = acc + jax.lax.slice_in_dim(padded, i, i + c, axis=3)
+    return x / jnp.power(k + (alpha / size) * acc, beta)

@@ -1,0 +1,141 @@
+"""L2: LeNet / CDBNet forward + backward in JAX, built on the L1 Pallas
+kernels, with a flat-parameter calling convention for the Rust runtime.
+
+Everything here is build-time only: `aot.py` lowers `train_step` /
+`forward` once to HLO text; the Rust coordinator executes the artifacts via
+PJRT with Python out of the loop.
+
+Calling convention (mirrored by `rust/src/runtime/manifest.rs`):
+  forward(w0, b0, w1, b1, ..., x)            -> (logits,)
+  train_step(w0, b0, ..., x, y_onehot)       -> (w0', b0', ..., loss)
+Parameters appear in layer order; only conv/dense layers carry (w, b).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense, maxpool, avgpool
+from .kernels.ref import ref_lrn
+from .shapes import Layer, ModelSpec, MODELS, lenet, cdbnet  # noqa: F401
+
+DEFAULT_LR = 0.01
+
+
+def param_layers(spec: ModelSpec) -> List[Layer]:
+    """Layers that carry (w, b) parameter pairs, in flat-list order."""
+    return [l for l in spec.layers if l.kind in ("conv", "dense")]
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> List[jax.Array]:
+    """He-initialized flat [w0, b0, w1, b1, ...] list."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for layer in param_layers(spec):
+        key, sub = jax.random.split(key)
+        if layer.kind == "conv":
+            k, ci, co = layer.kernel, layer.in_shape[2], layer.out_shape[2]
+            fan_in = k * k * ci
+            w = jax.random.normal(sub, (k, k, ci, co), jnp.float32)
+            w = w * jnp.sqrt(2.0 / fan_in)
+            b = jnp.zeros((co,), jnp.float32)
+        else:
+            fan_in = layer.in_shape[0] * layer.in_shape[1] * layer.in_shape[2]
+            co = layer.out_shape[2]
+            w = jax.random.normal(sub, (fan_in, co), jnp.float32)
+            w = w * jnp.sqrt(2.0 / fan_in)
+            b = jnp.zeros((co,), jnp.float32)
+        params.extend([w, b])
+    return params
+
+
+def forward(spec: ModelSpec, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Forward pass -> logits (B, num_classes). x is NHWC."""
+    it = iter(range(0, len(params), 2))
+    h = x
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            i = next(it)
+            h = conv2d(h, params[i], params[i + 1], layer.padding)
+            h = jax.nn.relu(h)
+        elif layer.kind == "maxpool":
+            h = maxpool(h, layer.kernel, layer.stride, layer.ceil_mode)
+        elif layer.kind == "avgpool":
+            h = avgpool(h, layer.kernel, layer.stride, layer.ceil_mode)
+        elif layer.kind == "lrn":
+            h = ref_lrn(h)
+        elif layer.kind == "dense":
+            i = next(it)
+            h = h.reshape(h.shape[0], -1)
+            h = dense(h, params[i], params[i + 1])
+        else:  # pragma: no cover - spec builder cannot produce others
+            raise ValueError(f"unknown layer kind {layer.kind}")
+    return h
+
+
+def loss_fn(spec: ModelSpec, params: Sequence[jax.Array], x: jax.Array,
+            y_onehot: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy."""
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def make_forward_fn(spec: ModelSpec):
+    """Flat-arg forward for AOT lowering: f(*params, x) -> (logits,)."""
+
+    def fn(*args):
+        *params, x = args
+        return (forward(spec, params, x),)
+
+    return fn
+
+
+def make_train_step_fn(spec: ModelSpec, lr: float = DEFAULT_LR):
+    """Flat-arg SGD train step: f(*params, x, y) -> (*new_params, loss)."""
+
+    def fn(*args):
+        *params, x, y = args
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, x, y))(list(params))
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return fn
+
+
+def input_specs(spec: ModelSpec, batch: int, with_labels: bool) -> List[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs matching the flat calling convention."""
+    structs = []
+    for layer in param_layers(spec):
+        if layer.kind == "conv":
+            k, ci, co = layer.kernel, layer.in_shape[2], layer.out_shape[2]
+            structs.append(jax.ShapeDtypeStruct((k, k, ci, co), jnp.float32))
+        else:
+            fan_in = layer.in_shape[0] * layer.in_shape[1] * layer.in_shape[2]
+            co = layer.out_shape[2]
+            structs.append(jax.ShapeDtypeStruct((fan_in, co), jnp.float32))
+        structs.append(jax.ShapeDtypeStruct((structs[-1].shape[-1],), jnp.float32))
+    h, w, c = spec.input_shape
+    structs.append(jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32))
+    if with_labels:
+        structs.append(jax.ShapeDtypeStruct((batch, spec.num_classes), jnp.float32))
+    return structs
+
+
+def synthetic_batch(spec: ModelSpec, batch: int, seed: int = 0
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Class-conditional synthetic data: learnable, deterministic, shaped
+    like the real dataset (DESIGN.md §2 substitution)."""
+    key = jax.random.PRNGKey(seed)
+    km, kl, kx = jax.random.split(key, 3)
+    h, w, c = spec.input_shape
+    means = jax.random.normal(km, (spec.num_classes, h, w, c), jnp.float32)
+    labels = jax.random.randint(kl, (batch,), 0, spec.num_classes)
+    noise = 0.5 * jax.random.normal(kx, (batch, h, w, c), jnp.float32)
+    x = means[labels] + noise
+    y = jax.nn.one_hot(labels, spec.num_classes, dtype=jnp.float32)
+    return x, y

@@ -1,0 +1,188 @@
+"""Layer-shape algebra for LeNet and CDBNet (paper Table 1).
+
+Single source of truth for layer geometry on the Python side; the Rust side
+(`rust/src/model/cnn.rs`) re-derives the same table independently and an
+integration test cross-checks the two via the AOT manifest.
+
+Table 1 entries are layer *outputs*:
+  LeNet  (MNIST,  33x33x1):  C1 5x5x16 -> 29x29x16; P1 max 2/2 ceil -> 15;
+         C2 5x5x16 -> 11x11x16; P2 max 2/2 -> 5; C3 5x5x128 -> 1x1x128;
+         F1 128 -> 10.
+  CDBNet (CIFAR10, 31x31x3): C1 5x5x32 SAME -> 31x31x32; P1 max 3/2 -> 15;
+         LRN; C2 5x5x32 SAME -> 15x15x32; P2 avg 3/2 -> 7;
+         C3 5x5x64 SAME -> 7x7x64; P3 avg 7/7 -> 1x1x64; F1 64 -> 10.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+BYTES_PER_ELEM = 4  # f32
+
+
+@dataclass
+class Layer:
+    """One CNN layer: geometry plus derived traffic/compute quantities."""
+
+    name: str                      # e.g. "C1", "P1", "F1", "LRN"
+    kind: str                      # conv | maxpool | avgpool | dense | lrn
+    in_shape: Tuple[int, int, int]  # (H, W, C), per-sample
+    out_shape: Tuple[int, int, int]
+    kernel: int = 0                # square kernel / window / pool size
+    stride: int = 1
+    padding: str = "VALID"         # conv only
+    ceil_mode: bool = False        # pool only
+
+    @property
+    def weight_count(self) -> int:
+        if self.kind == "conv":
+            kh = kw = self.kernel
+            return kh * kw * self.in_shape[2] * self.out_shape[2] + self.out_shape[2]
+        if self.kind == "dense":
+            fan_in = self.in_shape[0] * self.in_shape[1] * self.in_shape[2]
+            return fan_in * self.out_shape[2] + self.out_shape[2]
+        return 0
+
+    def macs(self, batch: int) -> int:
+        """Multiply-accumulates for one forward pass of `batch` samples."""
+        oh, ow, oc = self.out_shape
+        ih, iw, ic = self.in_shape
+        if self.kind == "conv":
+            return batch * oh * ow * oc * self.kernel * self.kernel * ic
+        if self.kind == "dense":
+            return batch * (ih * iw * ic) * oc
+        if self.kind in ("maxpool", "avgpool"):
+            return batch * oh * ow * oc * self.kernel * self.kernel
+        if self.kind == "lrn":
+            return batch * ih * iw * ic * 5
+        return 0
+
+    def in_bytes(self, batch: int) -> int:
+        h, w, c = self.in_shape
+        return batch * h * w * c * BYTES_PER_ELEM
+
+    def out_bytes(self, batch: int) -> int:
+        h, w, c = self.out_shape
+        return batch * h * w * c * BYTES_PER_ELEM
+
+    def weight_bytes(self) -> int:
+        return self.weight_count * BYTES_PER_ELEM
+
+    def to_dict(self, batch: int) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+            "kernel": self.kernel,
+            "stride": self.stride,
+            "weight_bytes": self.weight_bytes(),
+            "in_bytes": self.in_bytes(batch),
+            "out_bytes": self.out_bytes(batch),
+            "macs": self.macs(batch),
+        }
+
+
+def _conv_out(ih: int, iw: int, k: int, padding: str) -> Tuple[int, int]:
+    if padding == "SAME":
+        return ih, iw
+    return ih - k + 1, iw - k + 1
+
+
+def _pool_out(ih: int, iw: int, k: int, s: int, ceil_mode: bool) -> Tuple[int, int]:
+    if ceil_mode:
+        return -(-(ih - k) // s) + 1, -(-(iw - k) // s) + 1
+    return (ih - k) // s + 1, (iw - k) // s + 1
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    input_shape: Tuple[int, int, int]
+    num_classes: int
+    layers: List[Layer] = field(default_factory=list)
+
+    def _cur(self) -> Tuple[int, int, int]:
+        return self.layers[-1].out_shape if self.layers else self.input_shape
+
+    def conv(self, name: str, k: int, co: int, padding: str = "VALID") -> "ModelSpec":
+        ih, iw, ci = self._cur()
+        oh, ow = _conv_out(ih, iw, k, padding)
+        assert oh > 0 and ow > 0, f"{name}: conv {k}x{k} does not fit {ih}x{iw}"
+        self.layers.append(Layer(name, "conv", (ih, iw, ci), (oh, ow, co),
+                                 kernel=k, padding=padding))
+        return self
+
+    def pool(self, name: str, kind: str, k: int, s: int, ceil_mode: bool = False) -> "ModelSpec":
+        ih, iw, c = self._cur()
+        oh, ow = _pool_out(ih, iw, k, s, ceil_mode)
+        assert oh > 0 and ow > 0, f"{name}: pool {k}/{s} does not fit {ih}x{iw}"
+        self.layers.append(Layer(name, kind, (ih, iw, c), (oh, ow, c),
+                                 kernel=k, stride=s, ceil_mode=ceil_mode))
+        return self
+
+    def lrn(self, name: str = "LRN") -> "ModelSpec":
+        s = self._cur()
+        self.layers.append(Layer(name, "lrn", s, s, kernel=5))
+        return self
+
+    def dense(self, name: str) -> "ModelSpec":
+        ih, iw, c = self._cur()
+        self.layers.append(Layer(name, "dense", (ih, iw, c), (1, 1, self.num_classes)))
+        return self
+
+    def to_dict(self, batch: int) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "num_classes": self.num_classes,
+            "batch": batch,
+            "layers": [l.to_dict(batch) for l in self.layers],
+        }
+
+
+def lenet() -> ModelSpec:
+    m = ModelSpec("lenet", (33, 33, 1), 10)
+    m.conv("C1", 5, 16)
+    m.pool("P1", "maxpool", 2, 2, ceil_mode=True)
+    m.conv("C2", 5, 16)
+    m.pool("P2", "maxpool", 2, 2)
+    m.conv("C3", 5, 128)
+    m.dense("F1")
+    return m
+
+
+def cdbnet() -> ModelSpec:
+    m = ModelSpec("cdbnet", (31, 31, 3), 10)
+    m.conv("C1", 5, 32, padding="SAME")
+    m.pool("P1", "maxpool", 3, 2)
+    m.lrn()
+    m.conv("C2", 5, 32, padding="SAME")
+    m.pool("P2", "avgpool", 3, 2)
+    m.conv("C3", 5, 64, padding="SAME")
+    m.pool("P3", "avgpool", 7, 7)
+    m.dense("F1")
+    return m
+
+
+MODELS = {"lenet": lenet, "cdbnet": cdbnet}
+
+
+def check_table1() -> None:
+    """Assert the derived shapes match paper Table 1 (outputs reading)."""
+    ln = lenet()
+    by = {l.name: l.out_shape for l in ln.layers}
+    assert by["C1"] == (29, 29, 16), by
+    assert by["C2"] == (11, 11, 16), by
+    assert by["C3"] == (1, 1, 128), by
+    cd = cdbnet()
+    by = {l.name: l.out_shape for l in cd.layers}
+    assert by["C1"] == (31, 31, 32), by
+    assert by["C2"] == (15, 15, 32), by
+    assert by["C3"] == (7, 7, 64), by
+
+
+if __name__ == "__main__":
+    check_table1()
+    print("Table 1 shape check OK")

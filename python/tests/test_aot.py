@@ -1,0 +1,82 @@
+"""AOT path tests: HLO-text lowering + manifest consistency.
+
+Uses batch=4 throughout so lowering stays fast; the real artifacts are
+produced by `make artifacts` at batch=32.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.shapes import MODELS, lenet
+
+
+def test_to_hlo_text_entry_and_roundtrip_safety():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.lower_entry(fn, (s, s))
+    assert "ENTRY" in text and "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_forward_entry_lowers_with_pallas():
+    spec = lenet()
+    specs = M.input_specs(spec, 4, False)
+    text = aot.lower_entry(M.make_forward_fn(spec), specs)
+    assert "ENTRY" in text
+    # logits shape appears as the (tupled) root
+    assert "f32[4,10]" in text
+
+
+def test_build_artifacts_manifest(tmp_path):
+    manifest = aot.build_artifacts(str(tmp_path), batch=4, models=["lenet"])
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == {"lenet_train_step", "lenet_forward", "matmul_micro"}
+    for e in manifest["entries"]:
+        path = tmp_path / e["path"]
+        assert path.exists() and path.stat().st_size > 0
+        assert "ENTRY" in path.read_text()[:200000]
+    ts = next(e for e in manifest["entries"] if e["kind"] == "train_step")
+    # train_step: params + x + y inputs; params + loss outputs
+    assert len(ts["inputs"]) == ts["num_params"] + 2
+    assert ts["num_outputs"] == ts["num_params"] + 1
+    # manifest JSON round-trips
+    j = json.loads((tmp_path / "manifest.json").read_text())
+    assert j["batch"] == 4
+
+
+def test_manifest_layer_metadata_consistent(tmp_path):
+    manifest = aot.build_artifacts(str(tmp_path), batch=4, models=["lenet"])
+    model = manifest["models"][0]
+    layers = model["layers"]
+    # chaining and byte accounting
+    for prev, cur in zip(layers, layers[1:]):
+        assert prev["out_shape"] == cur["in_shape"]
+    c1 = layers[0]
+    assert c1["name"] == "C1"
+    assert c1["macs"] == 4 * 29 * 29 * 16 * 25 * 1
+    assert c1["weight_bytes"] == (25 * 16 + 16) * 4
+    assert c1["in_bytes"] == 4 * 33 * 33 * 1 * 4
+
+
+def test_fingerprint_stable():
+    assert aot.source_fingerprint() == aot.source_fingerprint()
+    assert len(aot.source_fingerprint()) == 64
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_input_specs_match_manifest_convention(name):
+    spec = MODELS[name]()
+    structs = M.input_specs(spec, 4, True)
+    n_params = 2 * len(M.param_layers(spec))
+    assert len(structs) == n_params + 2
+    h, w, c = spec.input_shape
+    assert structs[-2].shape == (4, h, w, c)
+    assert structs[-1].shape == (4, spec.num_classes)

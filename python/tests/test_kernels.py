@@ -1,0 +1,244 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and tile sizes for the GEMM); gradients of the
+custom-VJP ops are compared against JAX autodiff of the reference
+implementations. This is the core correctness signal for the compute stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, maxpool, avgpool, conv2d, dense, im2col
+from compile.kernels.matmul import mxu_utilization, vmem_bytes
+from compile.kernels.ref import (
+    ref_avgpool, ref_conv2d, ref_dense, ref_lrn, ref_matmul, ref_maxpool,
+)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 90),
+    n=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x, y = rand(seed, m, k), rand(seed + 1, k, n)
+    np.testing.assert_allclose(matmul(x, y), ref_matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_tile_sweep(bm, bn, bk):
+    x, y = rand(7, 50, 70), rand(8, 70, 30)
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref_matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = rand(3, 17, 17)
+    np.testing.assert_allclose(matmul(x, jnp.eye(17)), x, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(rand(0, 3, 4), rand(1, 5, 6))
+    with pytest.raises(ValueError):
+        matmul(rand(0, 3), rand(1, 3, 2))
+
+
+def test_matmul_zero_padding_exact():
+    # Padding must contribute exactly zero, even with adversarial values.
+    x = jnp.full((9, 13), 1e30, jnp.float32)
+    y = jnp.full((13, 5), 1e-30, jnp.float32)
+    np.testing.assert_allclose(matmul(x, y), ref_matmul(x, y), rtol=1e-5)
+
+
+def test_mxu_utilization_bounds():
+    assert 0.0 < mxu_utilization(1, 1, 1) <= 1.0
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert vmem_bytes(128, 128, 128) == 4 * 3 * 128 * 128
+
+
+def test_pick_tiles_respects_vmem_budget():
+    from compile.kernels.matmul import pick_tiles, vmem_bytes, VMEM_BUDGET_BYTES
+
+    for m, k, n in [(26912, 25, 16), (7200, 800, 32), (50000, 2048, 2048), (8, 8, 8)]:
+        bm, bn, bk = pick_tiles(m, k, n)
+        assert vmem_bytes(bm, bn, bk) <= VMEM_BUDGET_BYTES, (m, k, n)
+        assert bm % 8 == 0 and bn % 8 == 0 and bk % 8 == 0
+
+
+def test_pick_tiles_minimizes_grid_for_small_problems():
+    from compile.kernels.matmul import pick_tiles
+
+    # LeNet C1 GEMM: everything fits in one or a few tiles
+    bm, bn, bk = pick_tiles(26912, 25, 16)
+    assert bk >= 32 and bn >= 16
+    assert -(-26912 // bm) <= 8, f"grid too fine: bm={bm}"
+
+
+# ---------------------------------------------------------------- pooling
+
+@settings(**SETTINGS)
+@given(
+    ih=st.integers(4, 33),
+    ksize=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2, 3]),
+    ceil_mode=st.booleans(),
+    c=st.sampled_from([1, 3, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(ih, ksize, stride, ceil_mode, c, seed):
+    x = rand(seed, 2, ih, ih, c)
+    got = maxpool(x, ksize, stride, ceil_mode)
+    want = ref_maxpool(x, ksize, stride, ceil_mode=ceil_mode)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    ih=st.integers(4, 33),
+    ksize=st.sampled_from([2, 3, 7]),
+    stride=st.sampled_from([1, 2, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_avgpool_matches_ref(ih, ksize, stride, seed):
+    if ksize > ih:
+        return
+    x = rand(seed, 2, ih, ih, 4)
+    got = avgpool(x, ksize, stride, False)
+    want = ref_avgpool(x, ksize, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pool_window_too_large():
+    with pytest.raises(ValueError):
+        maxpool(rand(0, 1, 3, 3, 1), 5, 1, False)
+
+
+def test_maxpool_grad_matches_ref():
+    x = rand(11, 2, 11, 11, 4)
+    g = jax.grad(lambda x: jnp.sum(jnp.cos(maxpool(x, 2, 2, False))))(x)
+    gr = jax.grad(lambda x: jnp.sum(jnp.cos(ref_maxpool(x, 2, 2))))(x)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool_ceil_grad_matches_ref():
+    x = rand(12, 1, 29, 29, 2)
+    g = jax.grad(lambda x: jnp.sum(maxpool(x, 2, 2, True)))(x)
+    gr = jax.grad(lambda x: jnp.sum(ref_maxpool(x, 2, 2, ceil_mode=True)))(x)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_avgpool_grad_matches_ref():
+    x = rand(13, 2, 15, 15, 3)
+    g = jax.grad(lambda x: jnp.sum(jnp.sin(avgpool(x, 3, 2, False))))(x)
+    gr = jax.grad(lambda x: jnp.sum(jnp.sin(ref_avgpool(x, 3, 2))))(x)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_avgpool_overlapping_windows_grad():
+    # stride < ksize: each input position feeds several windows.
+    x = rand(14, 1, 9, 9, 2)
+    g = jax.grad(lambda x: jnp.sum(avgpool(x, 3, 1, False)))(x)
+    gr = jax.grad(lambda x: jnp.sum(ref_avgpool(x, 3, 1)))(x)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(**SETTINGS)
+@given(
+    ih=st.integers(6, 20),
+    ci=st.sampled_from([1, 3, 8]),
+    co=st.sampled_from([4, 16]),
+    padding=st.sampled_from(["VALID", "SAME"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(ih, ci, co, padding, seed):
+    x = rand(seed, 2, ih, ih, ci)
+    w = rand(seed + 1, 5, 5, ci, co) * 0.2
+    b = rand(seed + 2, co)
+    got = conv2d(x, w, b, padding)
+    want = ref_conv2d(x, w, b, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shape_and_content():
+    x = rand(20, 1, 4, 4, 2)
+    p = im2col(x, 3, 3)
+    assert p.shape == (1, 2, 2, 18)
+    # first patch, first slice position == x[0, 0:2? ...]: verify corner value
+    np.testing.assert_allclose(p[0, 0, 0, :2], x[0, 0, 0, :])
+    np.testing.assert_allclose(p[0, 1, 1, -2:], x[0, 3, 3, :])
+
+
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+def test_conv2d_grads_match_ref(padding):
+    x = rand(21, 2, 10, 10, 3)
+    w = rand(22, 5, 5, 3, 4) * 0.2
+    b = rand(23, 4)
+    f = lambda x, w, b: jnp.sum(jnp.sin(conv2d(x, w, b, padding)))
+    fr = lambda x, w, b: jnp.sum(jnp.sin(ref_conv2d(x, w, b, padding=padding)))
+    g = jax.grad(f, (0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, (0, 1, 2))(x, w, b)
+    for a, r in zip(g, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_1x1_kernel():
+    x, w, b = rand(24, 1, 7, 7, 3), rand(25, 1, 1, 3, 5), rand(26, 5)
+    np.testing.assert_allclose(
+        conv2d(x, w, b, "VALID"), ref_conv2d(x, w, b, padding="VALID"),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- dense
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 40),
+    i=st.integers(1, 80),
+    o=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(b, i, o, seed):
+    x, w, bias = rand(seed, b, i), rand(seed + 1, i, o), rand(seed + 2, o)
+    np.testing.assert_allclose(dense(x, w, bias), ref_dense(x, w, bias),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dense_grads_match_ref():
+    x, w, b = rand(30, 6, 20), rand(31, 20, 10), rand(32, 10)
+    f = lambda x, w, b: jnp.sum(jnp.tanh(dense(x, w, b)))
+    fr = lambda x, w, b: jnp.sum(jnp.tanh(ref_dense(x, w, b)))
+    g = jax.grad(f, (0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, (0, 1, 2))(x, w, b)
+    for a, r in zip(g, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- lrn oracle
+
+def test_lrn_normalizes():
+    x = rand(40, 1, 4, 4, 8)
+    y = ref_lrn(x)
+    assert y.shape == x.shape
+    # LRN shrinks magnitudes (denominator >= 1 for k=1)
+    assert float(jnp.max(jnp.abs(y))) <= float(jnp.max(jnp.abs(x))) + 1e-6

@@ -1,0 +1,114 @@
+"""L2 model tests: Table 1 geometry, forward shapes, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.shapes import MODELS, cdbnet, check_table1, lenet
+
+
+def test_table1_shapes():
+    check_table1()
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_layer_chain_consistent(name):
+    spec = MODELS[name]()
+    cur = spec.input_shape
+    for layer in spec.layers:
+        assert layer.in_shape == cur, f"{layer.name} input mismatch"
+        cur = layer.out_shape
+    assert cur == (1, 1, spec.num_classes)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_param_shapes_match_specs(name):
+    spec = MODELS[name]()
+    params = M.init_params(spec)
+    structs = M.input_specs(spec, 4, True)
+    assert len(structs) == len(params) + 2
+    for p, s in zip(params, structs):
+        assert p.shape == s.shape and p.dtype == s.dtype
+
+
+def test_lenet_param_count():
+    # C1: 5*5*1*16+16, C2: 5*5*16*16+16, C3: 5*5*16*128+128, F1: 128*10+10
+    spec = lenet()
+    total = sum(int(np.prod(p.shape)) for p in M.init_params(spec))
+    expect = (25 * 16 + 16) + (25 * 16 * 16 + 16) + (25 * 16 * 128 + 128) + (128 * 10 + 10)
+    assert total == expect
+    assert total == sum(l.weight_count for l in spec.layers)
+
+
+def test_cdbnet_weight_accounting():
+    spec = cdbnet()
+    total = sum(int(np.prod(p.shape)) for p in M.init_params(spec))
+    assert total == sum(l.weight_count for l in spec.layers)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_forward_shape_and_finite(name):
+    spec = MODELS[name]()
+    params = M.init_params(spec)
+    x, _ = M.synthetic_batch(spec, 3)
+    logits = M.forward(spec, params, x)
+    assert logits.shape == (3, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_train_step_reduces_loss(name):
+    spec = MODELS[name]()
+    params = M.init_params(spec)
+    x, y = M.synthetic_batch(spec, 8)
+    step = jax.jit(M.make_train_step_fn(spec, lr=0.01))
+    out = step(*params, x, y)
+    first = float(out[-1])
+    for _ in range(15):
+        out = step(*out[:-1], x, y)
+    last = float(out[-1])
+    assert np.isfinite(first) and np.isfinite(last)
+    assert last < first, f"{name}: loss {first} -> {last}"
+
+
+def test_train_step_updates_every_param():
+    spec = lenet()
+    params = M.init_params(spec)
+    x, y = M.synthetic_batch(spec, 4)
+    out = M.make_train_step_fn(spec, lr=0.1)(*params, x, y)
+    for i, (old, new) in enumerate(zip(params, out[:-1])):
+        assert old.shape == new.shape
+        assert not np.allclose(np.asarray(old), np.asarray(new)), f"param {i} frozen"
+
+
+def test_loss_matches_crossentropy_oracle():
+    spec = lenet()
+    params = M.init_params(spec)
+    x, y = M.synthetic_batch(spec, 4)
+    loss = M.loss_fn(spec, params, x, y)
+    logits = M.forward(spec, params, x)
+    p = jax.nn.softmax(logits)
+    want = -np.mean(np.log(np.sum(np.asarray(p) * np.asarray(y), axis=1)))
+    np.testing.assert_allclose(float(loss), want, rtol=1e-5)
+
+
+def test_synthetic_batch_deterministic_and_learnable():
+    spec = lenet()
+    x1, y1 = M.synthetic_batch(spec, 16, seed=5)
+    x2, y2 = M.synthetic_batch(spec, 16, seed=5)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    x3, _ = M.synthetic_batch(spec, 16, seed=6)
+    assert not np.allclose(np.asarray(x1), np.asarray(x3))
+    # one-hot labels
+    assert np.all(np.sum(np.asarray(y1), axis=1) == 1.0)
+
+
+def test_init_deterministic():
+    spec = cdbnet()
+    a = M.init_params(spec, seed=3)
+    b = M.init_params(spec, seed=3)
+    for p, q in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))

@@ -1,0 +1,93 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the performance-
+//! critical paths (EXPERIMENTS.md §Perf):
+//!   * analytic Eqn 3-5 evaluation (the AMOSA inner loop)
+//!   * AMOSA end-to-end design throughput
+//!   * cycle-level simulator event throughput
+//!   * route-set construction (Dijkstra + LASH)
+//!   * PJRT train-step latency (skipped when artifacts/ is absent)
+
+use wihetnoc::bench::Bencher;
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::analysis::{analyze_with, AnalysisScratch};
+use wihetnoc::noc::builder::{generic_many_to_few, mesh_opt, DesignConfig};
+use wihetnoc::noc::routing::RouteSet;
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::noc::topology::Topology;
+use wihetnoc::optim::amosa::Amosa;
+use wihetnoc::optim::linkplace::LinkPlacement;
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+
+fn main() {
+    let mut b = Bencher::default();
+    let sys = SystemConfig::paper_8x8();
+    let fij = generic_many_to_few(&sys);
+
+    // --- analytic evaluation (AMOSA inner loop) ---
+    let mesh = Topology::mesh(&sys);
+    let mut scratch = AnalysisScratch::new(64);
+    let evals = 1000usize;
+    b.bench_items("analysis/eqn3-5 x1000 (64 tiles)", Some(evals as f64), &mut || {
+        for _ in 0..evals {
+            let a = analyze_with(&mesh, &fij, &mut scratch);
+            std::hint::black_box(a.u_mean);
+        }
+    });
+
+    // --- AMOSA design throughput ---
+    b.bench("amosa/quick wireline design (2.8k evals)", || {
+        let cfg = DesignConfig::quick(7);
+        let problem = LinkPlacement::new(&sys, &fij, 112, 6).with_max_link_mm(Some(7.6));
+        let mut opt = Amosa::new(&problem, cfg.amosa.clone());
+        opt.run();
+        std::hint::black_box(opt.evaluations);
+    });
+
+    // --- route construction ---
+    b.bench("routes/xy mesh 64", || {
+        std::hint::black_box(RouteSet::xy(&sys, &mesh).num_layers);
+    });
+    b.bench("routes/shortest+LASH 64", || {
+        std::hint::black_box(RouteSet::shortest(&mesh, Some(&fij)).num_layers);
+    });
+
+    // --- simulator throughput ---
+    let tm = model_phases(&sys, &wihetnoc::model::lenet(), 32);
+    let cfg = TraceConfig { scale: 0.1, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    let inst = mesh_opt(&sys, true);
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    let packets = {
+        let rep = sim.run(&trace);
+        rep.delivered_packets
+    };
+    b.bench_items(
+        &format!("sim/lenet iteration 10% scale ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            std::hint::black_box(sim.run(&trace).delivered_packets);
+        },
+    );
+
+    // --- PJRT train step (needs artifacts) ---
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut rt = wihetnoc::runtime::Runtime::new(&dir).expect("runtime");
+        let batch = rt.manifest.batch;
+        let mut trainer =
+            wihetnoc::coordinator::Trainer::new(&mut rt, wihetnoc::model::lenet(), 1)
+                .expect("trainer");
+        let mut ds =
+            wihetnoc::coordinator::SyntheticDataset::new(&wihetnoc::model::lenet(), 2);
+        let (x, y) = ds.next_batch(batch);
+        // warm the compile cache before timing
+        trainer.step(&x, &y).expect("step");
+        b.bench("pjrt/lenet train_step (batch 32)", || {
+            std::hint::black_box(trainer.step(&x, &y).expect("step"));
+        });
+    } else {
+        println!("pjrt/lenet train_step: SKIPPED (run `make artifacts`)");
+    }
+
+    println!("\n== hotpath benches done ==");
+}

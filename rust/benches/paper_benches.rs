@@ -1,0 +1,36 @@
+//! `cargo bench --bench paper_benches` — regenerates every table and
+//! figure of the paper's evaluation section and reports the wall time of
+//! each harness. The printed series are the reproduction artifacts
+//! recorded in EXPERIMENTS.md.
+//!
+//! Effort is controlled by WIHETNOC_BENCH_EFFORT=quick|full (default
+//! quick, so `cargo bench` completes in minutes; EXPERIMENTS.md numbers
+//! use full).
+
+use wihetnoc::bench::Bencher;
+use wihetnoc::experiments::{self, Ctx, Effort};
+
+fn main() {
+    let effort = match std::env::var("WIHETNOC_BENCH_EFFORT").as_deref() {
+        Ok("full") => Effort::Full,
+        _ => Effort::Quick,
+    };
+    let seed = 42;
+    println!("== paper benches (effort {effort:?}, seed {seed}) ==\n");
+    let mut ctx = Ctx::new(effort, seed);
+    let mut b = Bencher::quick();
+    // Warm the expensive caches once so per-figure timings reflect the
+    // harness, not the shared design step.
+    let _ = ctx.instance("mesh_opt");
+    let _ = ctx.instance("hetnoc");
+    let _ = ctx.instance("wihetnoc");
+
+    for id in experiments::ALL {
+        let mut report = String::new();
+        b.bench(&format!("experiment/{id}"), || {
+            report = experiments::run(id, &mut ctx).expect("experiment runs");
+        });
+        println!("\n{report}\n{}\n", "-".repeat(72));
+    }
+    println!("== done: {} experiments ==", experiments::ALL.len());
+}

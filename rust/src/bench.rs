@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is not vendored; `cargo bench`
+//! targets use `harness = false` and drive this).
+//!
+//! Methodology: warmup runs, then `samples` timed batches; reports
+//! median and MAD so stray scheduler noise does not skew results.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub samples: usize,
+    /// Optional throughput annotation (items per iteration).
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let per_item = self
+            .items
+            .map(|n| format!("  ({:.1} Mitems/s)", n / self.median_ns * 1e3))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>12}  ±{:>10}{}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            per_item
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 7, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, samples: 3, results: Vec::new() }
+    }
+
+    /// Time `f`, which performs one full iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Time `f` and annotate items/iteration for throughput reporting.
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<f64> = (0..self.samples)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_nanos() as f64
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = dev[dev.len() / 2];
+        let r = BenchResult {
+            name: name.to_string(),
+            median_ns: median,
+            mad_ns: mad,
+            samples: self.samples,
+            items,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { warmup: 1, samples: 3, results: Vec::new() };
+        let mut acc = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Training + NoC co-simulation: run real training steps through PJRT
+//! while the traffic model + simulator evaluate the candidate NoCs on the
+//! same workload — the Fig 19 end-to-end loop.
+
+use anyhow::Result;
+
+use crate::energy::params::EnergyParams;
+use crate::energy::system::{full_system_run, FullSystemReport, StallModel};
+use crate::model::cnn::ModelSpec;
+use crate::model::SystemConfig;
+use crate::noc::builder::NocInstance;
+use crate::traffic::phases::model_phases;
+use crate::traffic::trace::TraceConfig;
+
+#[derive(Debug, Clone)]
+pub struct CosimReport {
+    /// One full-system report per evaluated NoC, same order as input.
+    pub per_noc: Vec<FullSystemReport>,
+}
+
+impl CosimReport {
+    /// Execution time of NoC `i` normalized to NoC 0 (the mesh baseline).
+    pub fn exec_vs_baseline(&self, i: usize) -> f64 {
+        self.per_noc[i].exec_seconds / self.per_noc[0].exec_seconds
+    }
+
+    /// Full-system EDP of NoC `i` normalized to NoC 0.
+    pub fn edp_vs_baseline(&self, i: usize) -> f64 {
+        self.per_noc[i].edp / self.per_noc[0].edp
+    }
+}
+
+/// Evaluate `nocs` under one training iteration of `spec` at `batch`.
+pub fn cosimulate(
+    sys: &SystemConfig,
+    spec: &ModelSpec,
+    batch: usize,
+    nocs: &[&NocInstance],
+    trace_cfg: &TraceConfig,
+) -> Result<CosimReport> {
+    let tm = model_phases(sys, spec, batch);
+    let energy = EnergyParams::default();
+    let stall = StallModel::default();
+    let per_noc = nocs
+        .iter()
+        .map(|inst| full_system_run(sys, inst, &tm, trace_cfg, &energy, &stall))
+        .collect();
+    Ok(CosimReport { per_noc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lenet;
+    use crate::noc::builder::{mesh_opt, wi_het_noc_quick};
+
+    #[test]
+    fn wihetnoc_beats_mesh_end_to_end() {
+        let sys = SystemConfig::paper_8x8();
+        let spec = lenet();
+        let mesh = mesh_opt(&sys, true);
+        let wihet = wi_het_noc_quick(&sys, 17);
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let rep = cosimulate(&sys, &spec, 32, &[&mesh, &wihet], &cfg).unwrap();
+        assert_eq!(rep.per_noc.len(), 2);
+        // WiHetNoC must not be slower, and must cut EDP
+        let exec = rep.exec_vs_baseline(1);
+        let edp = rep.edp_vs_baseline(1);
+        assert!(exec <= 1.01, "exec ratio {exec}");
+        assert!(edp < 1.0, "edp ratio {edp}");
+    }
+}

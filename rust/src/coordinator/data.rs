@@ -1,0 +1,99 @@
+//! Synthetic dataset generation, mirroring `python/compile/model.py`'s
+//! `synthetic_batch`: class-conditional Gaussian images so training has
+//! learnable structure (DESIGN.md §2 substitution for MNIST/CIFAR-10).
+//!
+//! The exact pixel values differ from the Python generator (different
+//! PRNG); the learnability property — class means + noise — is identical,
+//! which is what the loss-curve validation needs.
+
+use crate::model::cnn::ModelSpec;
+use crate::util::rng::Rng;
+
+/// Deterministic synthetic image-classification dataset.
+pub struct SyntheticDataset {
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    /// Per-class mean images, flattened.
+    means: Vec<Vec<f32>>,
+    noise: f32,
+    rng: Rng,
+}
+
+impl SyntheticDataset {
+    pub fn new(spec: &ModelSpec, seed: u64) -> Self {
+        let (h, w, c) = spec.input_shape;
+        let mut rng = Rng::new(seed);
+        let means = (0..spec.num_classes)
+            .map(|_| (0..h * w * c).map(|_| rng.normal() as f32).collect())
+            .collect();
+        SyntheticDataset {
+            input_shape: spec.input_shape,
+            num_classes: spec.num_classes,
+            means,
+            noise: 0.5,
+            rng,
+        }
+    }
+
+    /// Next batch: (images flattened NHWC, one-hot labels).
+    pub fn next_batch(&mut self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let (h, w, c) = self.input_shape;
+        let pix = h * w * c;
+        let mut x = Vec::with_capacity(batch * pix);
+        let mut y = vec![0.0f32; batch * self.num_classes];
+        for b in 0..batch {
+            let label = self.rng.below(self.num_classes);
+            y[b * self.num_classes + label] = 1.0;
+            let mean = &self.means[label];
+            for p in 0..pix {
+                x.push(mean[p] + self.noise * self.rng.normal() as f32);
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lenet;
+
+    #[test]
+    fn batch_shapes() {
+        let spec = lenet();
+        let mut ds = SyntheticDataset::new(&spec, 1);
+        let (x, y) = ds.next_batch(8);
+        assert_eq!(x.len(), 8 * 33 * 33);
+        assert_eq!(y.len(), 8 * 10);
+        // one-hot rows
+        for b in 0..8 {
+            let row = &y[b * 10..(b + 1) * 10];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert!(row.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = lenet();
+        let mut a = SyntheticDataset::new(&spec, 7);
+        let mut b = SyntheticDataset::new(&spec, 7);
+        assert_eq!(a.next_batch(4).0, b.next_batch(4).0);
+        let mut c = SyntheticDataset::new(&spec, 8);
+        assert_ne!(a.next_batch(4).0, c.next_batch(4).0);
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        let spec = lenet();
+        let ds = SyntheticDataset::new(&spec, 2);
+        // distinct class means differ substantially
+        let d: f32 = ds.means[0]
+            .iter()
+            .zip(&ds.means[1])
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / ds.means[0].len() as f32;
+        assert!(d > 0.5, "mean L1 distance {d}");
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: drives CNN training through the PJRT runtime while
+//! co-simulating the induced NoC traffic — the end-to-end loop that
+//! produces the paper's full-system numbers (Fig 19).
+
+pub mod cosim;
+pub mod data;
+pub mod trainer;
+
+pub use cosim::{cosimulate, CosimReport};
+pub use data::SyntheticDataset;
+pub use trainer::{TrainConfig, Trainer, TrainLog};

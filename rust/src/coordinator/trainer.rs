@@ -1,0 +1,201 @@
+//! The training driver: owns parameters, streams batches through the AOT
+//! train-step executable, and logs the loss curve. This is the "leader"
+//! loop — pure Rust + PJRT, no Python.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::data::SyntheticDataset;
+use crate::model::cnn::ModelSpec;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps (0 = only first/last).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 100, batch: 32, seed: 0x5EED, log_every: 10 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub steps: usize,
+    /// Wall seconds spent inside PJRT execute.
+    pub execute_secs: f64,
+    /// Wall seconds total (data gen + execute + bookkeeping).
+    pub total_secs: f64,
+}
+
+impl TrainLog {
+    pub fn first_loss(&self) -> f32 {
+        self.losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last k logged points (smooths SGD noise).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let tail = &self.losses[n.saturating_sub(k)..];
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// He-style initialization matching `python/compile/model.py::init_params`
+/// in structure (exact values differ across PRNGs; scale is what matters).
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::new();
+    for l in &spec.layers {
+        if !l.has_params() {
+            continue;
+        }
+        let (fan_in, co) = match l.kind {
+            crate::model::cnn::LayerKind::Conv => {
+                (l.kernel * l.kernel * l.in_shape.2, l.out_shape.2)
+            }
+            _ => (l.in_shape.0 * l.in_shape.1 * l.in_shape.2, l.out_shape.2),
+        };
+        let w_len = fan_in * co;
+        let scale = (2.0 / fan_in as f64).sqrt();
+        params.push((0..w_len).map(|_| (rng.normal() * scale) as f32).collect());
+        params.push(vec![0.0f32; co]);
+    }
+    params
+}
+
+/// Drives `<model>_train_step` from the artifacts.
+pub struct Trainer<'r> {
+    pub runtime: &'r mut Runtime,
+    pub spec: ModelSpec,
+    pub params: Vec<Vec<f32>>,
+    entry_name: String,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(runtime: &'r mut Runtime, spec: ModelSpec, seed: u64) -> Result<Self> {
+        let entry_name = format!("{}_train_step", spec.name);
+        let entry = runtime.manifest.entry(&entry_name)?.clone();
+        let params = init_params(&spec, seed);
+        if entry.num_params != params.len() {
+            bail!(
+                "manifest says {} params, model derives {}",
+                entry.num_params,
+                params.len()
+            );
+        }
+        // validate shapes against the manifest signature
+        for (i, p) in params.iter().enumerate() {
+            let want = entry.inputs[i].elements();
+            if p.len() != want {
+                bail!("param {i}: {} elements vs manifest {}", p.len(), want);
+            }
+        }
+        runtime.load(&entry_name)?;
+        Ok(Trainer { runtime, spec, params, entry_name })
+    }
+
+    /// One SGD step; returns the loss.
+    pub fn step(&mut self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let mut args: Vec<Vec<f32>> = self.params.clone();
+        args.push(x.to_vec());
+        args.push(y.to_vec());
+        let mut out = self.runtime.run(&self.entry_name, &args)?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| anyhow!("train_step returned nothing"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty loss output"))?;
+        if out.len() != self.params.len() {
+            bail!("expected {} updated params, got {}", self.params.len(), out.len());
+        }
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Full training run on the synthetic dataset.
+    pub fn train(&mut self, cfg: &TrainConfig) -> Result<TrainLog> {
+        let t0 = std::time::Instant::now();
+        let mut ds = SyntheticDataset::new(&self.spec, cfg.seed);
+        let mut log = TrainLog::default();
+        let mut exec = 0.0;
+        for step in 0..cfg.steps {
+            let (x, y) = ds.next_batch(cfg.batch);
+            let te = std::time::Instant::now();
+            let loss = self.step(&x, &y)?;
+            exec += te.elapsed().as_secs_f64();
+            if !loss.is_finite() {
+                bail!("loss diverged to {loss} at step {step}");
+            }
+            let should_log = step == 0
+                || step + 1 == cfg.steps
+                || (cfg.log_every > 0 && step % cfg.log_every == 0);
+            if should_log {
+                log.losses.push((step, loss));
+            }
+        }
+        log.steps = cfg.steps;
+        log.execute_secs = exec;
+        log.total_secs = t0.elapsed().as_secs_f64();
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{cdbnet, lenet};
+
+    #[test]
+    fn init_params_shapes() {
+        let spec = lenet();
+        let p = init_params(&spec, 1);
+        // 4 weighted layers -> 8 tensors
+        assert_eq!(p.len(), 8);
+        assert_eq!(p[0].len(), 5 * 5 * 1 * 16);
+        assert_eq!(p[1].len(), 16);
+        assert_eq!(p[6].len(), 128 * 10);
+        assert_eq!(p[7].len(), 10);
+        // biases start at zero
+        assert!(p[1].iter().all(|&v| v == 0.0));
+        // weights have sane scale
+        let rms = (p[0].iter().map(|&v| (v * v) as f64).sum::<f64>() / p[0].len() as f64).sqrt();
+        assert!((0.1..0.6).contains(&rms), "rms {rms}");
+    }
+
+    #[test]
+    fn init_matches_python_structure_cdbnet() {
+        let p = init_params(&cdbnet(), 2);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p[0].len(), 5 * 5 * 3 * 32);
+        assert_eq!(p[6].len(), 64 * 10);
+    }
+
+    #[test]
+    fn train_log_helpers() {
+        let log = TrainLog {
+            losses: vec![(0, 3.0), (10, 2.0), (20, 1.0)],
+            steps: 21,
+            execute_secs: 0.0,
+            total_secs: 0.0,
+        };
+        assert_eq!(log.first_loss(), 3.0);
+        assert_eq!(log.last_loss(), 1.0);
+        assert_eq!(log.tail_mean(2), 1.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Energy and EDP models: network (router + wireline + wireless per-flit
+//! energies) and full system (core power x execution time + network).
+
+pub mod network;
+pub mod params;
+pub mod system;
+
+pub use network::{network_energy_pj, message_edp, NetworkEnergy};
+pub use params::EnergyParams;
+pub use system::{full_system_run, FullSystemReport};

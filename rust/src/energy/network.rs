@@ -1,0 +1,114 @@
+//! Network energy accounting from a `SimReport`: wireline link, router,
+//! and wireless channel energies, plus the per-message EDP the paper's
+//! Fig 18 reports.
+
+use crate::energy::params::EnergyParams;
+use crate::noc::sim::SimReport;
+use crate::noc::topology::Topology;
+
+#[derive(Debug, Clone, Default)]
+pub struct NetworkEnergy {
+    pub wire_pj: f64,
+    pub router_pj: f64,
+    pub wireless_pj: f64,
+}
+
+impl NetworkEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.wire_pj + self.router_pj + self.wireless_pj
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.total_pj() * 1e-12
+    }
+}
+
+/// Aggregate network energy of a simulation run.
+pub fn network_energy_pj(topo: &Topology, rep: &SimReport, p: &EnergyParams) -> NetworkEnergy {
+    let mut wire = 0.0;
+    for (li, link) in topo.links.iter().enumerate() {
+        wire += rep.link_flits[li] as f64 * p.wire_flit_pj(link.length_mm);
+    }
+    let mut router = 0.0;
+    for (r, &flits) in rep.router_flits.iter().enumerate() {
+        // +1 local (core) port on top of the inter-tile ports
+        router += flits as f64 * p.router_flit_pj(topo.degree(r) + 1);
+    }
+    let wireless: f64 = rep
+        .air_flits
+        .iter()
+        .map(|&f| f as f64 * p.wireless_flit_pj())
+        .sum();
+    NetworkEnergy { wire_pj: wire, router_pj: router, wireless_pj: wireless }
+}
+
+/// Per-message EDP (pJ x cycles): mean message energy times mean latency —
+/// the quantity plotted in Fig 18.
+pub fn message_edp(topo: &Topology, rep: &SimReport, p: &EnergyParams) -> f64 {
+    if rep.delivered_packets == 0 {
+        return 0.0;
+    }
+    let e = network_energy_pj(topo, rep, p).total_pj() / rep.delivered_packets as f64;
+    e * rep.latency.mean()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+    use crate::noc::routing::RouteSet;
+    use crate::noc::sim::{Message, MsgClass, NocSim, SimConfig};
+    use crate::noc::wireless::WirelessSpec;
+
+    fn run_one(src: usize, dst: usize) -> (Topology, SimReport) {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rs = RouteSet::xy(&sys, &topo);
+        let air = WirelessSpec::new(0);
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let rep = sim.run(&[Message { src, dst, flits: 1, class: MsgClass::Control, inject_at: 0 }]);
+        (topo, rep)
+    }
+
+    #[test]
+    fn energy_scales_with_hops() {
+        let p = EnergyParams::default();
+        let (t1, r1) = run_one(0, 1);
+        let (t2, r2) = run_one(0, 63);
+        let e1 = network_energy_pj(&t1, &r1, &p).total_pj();
+        let e2 = network_energy_pj(&t2, &r2, &p).total_pj();
+        assert!(e2 > 10.0 * e1, "e1 {e1} e2 {e2}");
+    }
+
+    #[test]
+    fn exact_one_hop_energy() {
+        let p = EnergyParams::default();
+        let (t, r) = run_one(0, 1);
+        let want = p.wire_flit_pj(2.5) + p.router_flit_pj(t.degree(0) + 1);
+        let got = network_energy_pj(&t, &r, &p).total_pj();
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+    }
+
+    #[test]
+    fn message_edp_positive() {
+        let p = EnergyParams::default();
+        let (t, r) = run_one(0, 63);
+        assert!(message_edp(&t, &r, &p) > 0.0);
+    }
+
+    #[test]
+    fn empty_report_zero() {
+        let p = EnergyParams::default();
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rep = SimReport {
+            link_flits: vec![0; topo.links.len()],
+            router_flits: vec![0; topo.n],
+            air_flits: vec![0; 1],
+            link_busy: vec![0; topo.links.len()],
+            air_busy: vec![0; 1],
+            ..Default::default()
+        };
+        assert_eq!(message_edp(&topo, &rep, &p), 0.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Energy/power constants (28 nm, DSENT-style scaling; wireless figures
+//! from the paper §4.2.4). All relative comparisons in the paper's
+//! evaluation are reproduced with these constants; absolute joules are
+//! simulator-grade estimates (DESIGN.md §2).
+
+#[derive(Debug, Clone)]
+pub struct EnergyParams {
+    /// Wireline signaling energy per bit per mm (repeated global wire).
+    pub wire_pj_per_bit_mm: f64,
+    /// Router traversal energy per flit for a `ports`-port router:
+    /// `router_base_pj + router_port_pj * ports^2` — the crossbar and
+    /// allocators scale quadratically with radix, which is what turns the
+    /// Fig 11 EDP curve back up past k_max = 6.
+    pub router_base_pj: f64,
+    pub router_port_pj: f64,
+    /// Wireless energy per bit (paper: 1.3 pJ/bit at 16 Gbps, 20 mm).
+    pub wireless_pj_per_bit: f64,
+    /// Flit width in bits.
+    pub flit_bits: f64,
+    /// Core active/idle power (W) by tile kind.
+    pub gpu_active_w: f64,
+    pub gpu_idle_w: f64,
+    pub cpu_active_w: f64,
+    pub cpu_idle_w: f64,
+    pub mc_active_w: f64,
+    pub mc_idle_w: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            wire_pj_per_bit_mm: 0.075,
+            router_base_pj: 2.0,
+            router_port_pj: 0.35,
+            wireless_pj_per_bit: 1.3,
+            flit_bits: 128.0,
+            gpu_active_w: 1.25,
+            gpu_idle_w: 0.30,
+            cpu_active_w: 3.00,
+            cpu_idle_w: 0.50,
+            mc_active_w: 1.50,
+            mc_idle_w: 0.40,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Energy (pJ) for one flit to cross a wireline link of `mm`.
+    pub fn wire_flit_pj(&self, mm: f64) -> f64 {
+        self.wire_pj_per_bit_mm * self.flit_bits * mm
+    }
+
+    /// Energy (pJ) for one flit to traverse a router with `ports` ports.
+    pub fn router_flit_pj(&self, ports: usize) -> f64 {
+        self.router_base_pj + self.router_port_pj * (ports * ports) as f64
+    }
+
+    /// Energy (pJ) for one flit over a wireless channel.
+    pub fn wireless_flit_pj(&self) -> f64 {
+        self.wireless_pj_per_bit * self.flit_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wireless_beats_long_multihop_wire() {
+        // The premise of §4.2.3: a 20 mm wireless hop must cost less than
+        // the equivalent multi-hop wireline path (8 x 2.5 mm links + 8
+        // 4-port routers).
+        let p = EnergyParams::default();
+        let air = p.wireless_flit_pj();
+        let wire_path = 8.0 * (p.wire_flit_pj(2.5) + p.router_flit_pj(4));
+        assert!(air < wire_path, "air {air} vs wire {wire_path}");
+    }
+
+    #[test]
+    fn wireless_loses_on_short_hops() {
+        let p = EnergyParams::default();
+        let air = p.wireless_flit_pj();
+        let one_hop = p.wire_flit_pj(2.5) + p.router_flit_pj(4);
+        assert!(air > one_hop);
+    }
+
+    #[test]
+    fn router_energy_grows_with_radix() {
+        let p = EnergyParams::default();
+        assert!(p.router_flit_pj(7) > p.router_flit_pj(4));
+    }
+}

@@ -1,0 +1,229 @@
+//! Full-system execution-time and EDP model (paper §5.5, Fig 19).
+//!
+//! Per phase (layer x pass) the execution time is
+//!
+//!   exec = max(duration, flits / simulated_throughput) + cpu_stall + gpu_stall
+//!
+//! where `duration` is the compute/bandwidth model from `traffic::phases`,
+//! the max() term captures a saturated network extending the phase, and
+//! the stall terms convert simulated round-trip latencies into lost core
+//! cycles: CPUs block on memory (memory-level parallelism ~4 across the
+//! four cores), GPUs hide latency up to `gpu_hide_cycles` via warp
+//! switching and only stall beyond it.
+//!
+//! Energy = per-tile active/idle power x phase time + network energy from
+//! the simulator (scaled back up when the trace was downsampled).
+//! Full-system EDP = total energy x total time.
+
+use crate::energy::network::network_energy_pj;
+use crate::energy::params::EnergyParams;
+use crate::model::cnn::{LayerKind, Pass};
+use crate::model::{SystemConfig, TileKind};
+use crate::noc::builder::NocInstance;
+use crate::noc::sim::{NocSim, SimConfig, SimReport};
+use crate::traffic::phases::TrafficModel;
+use crate::traffic::trace::{phase_trace, TraceConfig};
+use crate::util::rng::Rng;
+
+/// Stall-model constants.
+#[derive(Debug, Clone)]
+pub struct StallModel {
+    /// Outstanding misses a CPU core overlaps.
+    pub cpu_mlp: f64,
+    /// Round-trip cycles a GPU SM hides via multithreading.
+    pub gpu_hide_cycles: f64,
+    /// Outstanding misses per GPU tile.
+    pub gpu_mlp: f64,
+}
+
+impl Default for StallModel {
+    fn default() -> Self {
+        StallModel { cpu_mlp: 4.0, gpu_hide_cycles: 120.0, gpu_mlp: 16.0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PhaseResult {
+    pub tag: String,
+    pub pass: Pass,
+    pub kind: LayerKind,
+    /// Simulated mean packet latency (cycles).
+    pub latency: f64,
+    pub cpu_mc_latency: f64,
+    /// Per-message EDP (pJ x cycles).
+    pub msg_edp: f64,
+    /// Modeled execution cycles including stalls.
+    pub exec_cycles: f64,
+    /// Network energy for the full (unscaled) phase, Joules.
+    pub network_j: f64,
+    pub throughput: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FullSystemReport {
+    pub noc: String,
+    pub model: String,
+    pub per_phase: Vec<PhaseResult>,
+    pub exec_cycles: f64,
+    pub exec_seconds: f64,
+    pub network_j: f64,
+    pub core_j: f64,
+    pub total_j: f64,
+    /// Full-system EDP in Joule-seconds.
+    pub edp: f64,
+}
+
+/// Run every phase of `tm` through the simulator on `inst` and assemble
+/// the full-system report.
+pub fn full_system_run(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    trace_cfg: &TraceConfig,
+    energy: &EnergyParams,
+    stall: &StallModel,
+) -> FullSystemReport {
+    let mut rng = Rng::new(trace_cfg.seed);
+    let sim_cfg = SimConfig::default();
+    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, sim_cfg);
+    let inv_scale = 1.0 / trace_cfg.scale;
+
+    let mut per_phase = Vec::new();
+    let mut exec_total = 0.0f64;
+    let mut net_j = 0.0f64;
+    let mut core_j = 0.0f64;
+
+    for p in &tm.phases {
+        let (msgs, _dur) = phase_trace(sys, p, 0, trace_cfg, &mut rng);
+        let rep: SimReport = sim.run(&msgs);
+        let e = network_energy_pj(&inst.topo, &rep, energy);
+        let phase_net_j = e.total_pj() * inv_scale * 1e-12;
+
+        // stalls from unscaled message counts
+        let lines = |b: u64| b.div_ceil(sys.line_bytes) as f64;
+        let cpu_msgs = lines(p.cpu_read_bytes) + lines(p.cpu_write_bytes);
+        let gpu_msgs = lines(p.gpu_read_bytes) + lines(p.gpu_write_bytes);
+        let rt = 2.0; // request + reply legs per memory access
+        let cpu_lat = rep.cpu_mc_latency.mean();
+        let gpu_lat = rep.gpu_mc_latency.mean();
+        let cpu_stall =
+            cpu_msgs * rt * cpu_lat / (stall.cpu_mlp * sys.cpus().len().max(1) as f64);
+        let gpu_stall = gpu_msgs * rt * (gpu_lat - stall.gpu_hide_cycles).max(0.0)
+            / (stall.gpu_mlp * sys.gpus().len().max(1) as f64);
+
+        // saturation: the network cannot drain flits faster than its
+        // simulated throughput
+        let thr = rep.throughput().max(1e-9);
+        let total_flits = p.total_flits(sys) as f64;
+        let comm_cycles = total_flits / thr;
+        let exec = (p.duration_cycles as f64).max(comm_cycles) + cpu_stall + gpu_stall;
+        exec_total += exec;
+        net_j += phase_net_j;
+
+        // core energy over this phase
+        let secs = exec / sys.noc_clock_hz;
+        let gpus_active = p.gpu_read_bytes + p.gpu_write_bytes > 0;
+        let cpus_active = p.cpu_read_bytes + p.cpu_write_bytes > 0;
+        for t in &sys.tiles {
+            let w = match t {
+                TileKind::Gpu => {
+                    if gpus_active { energy.gpu_active_w } else { energy.gpu_idle_w }
+                }
+                TileKind::Cpu => {
+                    if cpus_active { energy.cpu_active_w } else { energy.cpu_idle_w }
+                }
+                TileKind::Mc => energy.mc_active_w,
+            };
+            core_j += w * secs;
+        }
+
+        per_phase.push(PhaseResult {
+            tag: p.tag.clone(),
+            pass: p.pass,
+            kind: p.kind,
+            latency: rep.latency.mean(),
+            cpu_mc_latency: cpu_lat,
+            msg_edp: crate::energy::network::message_edp(&inst.topo, &rep, energy),
+            exec_cycles: exec,
+            network_j: phase_net_j,
+            throughput: thr,
+        });
+    }
+
+    let exec_seconds = exec_total / sys.noc_clock_hz;
+    let total_j = net_j + core_j;
+    FullSystemReport {
+        noc: inst.kind.as_str().to_string(),
+        model: tm.model.clone(),
+        per_phase,
+        exec_cycles: exec_total,
+        exec_seconds,
+        network_j: net_j,
+        core_j,
+        total_j,
+        edp: total_j * exec_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lenet;
+    use crate::noc::builder::{mesh_opt, wi_het_noc_quick};
+    use crate::traffic::phases::model_phases;
+
+    fn quick_cfg() -> TraceConfig {
+        TraceConfig { scale: 0.05, ..Default::default() }
+    }
+
+    #[test]
+    fn report_is_positive_and_consistent() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = model_phases(&sys, &lenet(), 32);
+        let inst = mesh_opt(&sys, false);
+        let rep = full_system_run(
+            &sys,
+            &inst,
+            &tm,
+            &quick_cfg(),
+            &EnergyParams::default(),
+            &StallModel::default(),
+        );
+        assert_eq!(rep.per_phase.len(), tm.phases.len());
+        assert!(rep.exec_seconds > 0.0);
+        assert!(rep.network_j > 0.0);
+        assert!(rep.core_j > 0.0);
+        assert!((rep.total_j - (rep.network_j + rep.core_j)).abs() < 1e-12);
+        assert!((rep.edp - rep.total_j * rep.exec_seconds).abs() < 1e-15);
+        // exec includes the compute model at minimum
+        assert!(rep.exec_cycles >= tm.total_cycles() as f64 * 0.99);
+    }
+
+    #[test]
+    fn wihetnoc_cuts_cpu_latency_vs_mesh() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = model_phases(&sys, &lenet(), 32);
+        let mesh = mesh_opt(&sys, false);
+        let wihet = wi_het_noc_quick(&sys, 3);
+        let cfg = quick_cfg();
+        let e = EnergyParams::default();
+        let s = StallModel::default();
+        let rm = full_system_run(&sys, &mesh, &tm, &cfg, &e, &s);
+        let rw = full_system_run(&sys, &wihet, &tm, &cfg, &e, &s);
+        let mean_cpu = |r: &FullSystemReport| {
+            let v: Vec<f64> = r
+                .per_phase
+                .iter()
+                .filter(|p| p.cpu_mc_latency > 0.0)
+                .map(|p| p.cpu_mc_latency)
+                .collect();
+            v.iter().sum::<f64>() / v.len().max(1) as f64
+        };
+        assert!(
+            mean_cpu(&rw) < mean_cpu(&rm),
+            "wihetnoc cpu lat {} vs mesh {}",
+            mean_cpu(&rw),
+            mean_cpu(&rm)
+        );
+    }
+}

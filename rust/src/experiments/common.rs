@@ -1,0 +1,42 @@
+//! Shared helpers for the experiment harnesses (normalization, printing).
+
+/// Normalize a series to its first element (the paper plots most results
+/// relative to the optimized mesh).
+pub fn normalize_to_first(xs: &[f64]) -> Vec<f64> {
+    let base = xs.first().copied().unwrap_or(1.0);
+    xs.iter().map(|x| x / base.max(1e-30)).collect()
+}
+
+/// Normalize to the max element (Fig 5 style).
+pub fn normalize_to_max(xs: &[f64]) -> Vec<f64> {
+    let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    xs.iter().map(|x| x / m.max(1e-30)).collect()
+}
+
+/// Render a fixed-width table row.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizations() {
+        assert_eq!(normalize_to_first(&[2.0, 4.0]), vec![1.0, 2.0]);
+        assert_eq!(normalize_to_max(&[2.0, 4.0]), vec![0.5, 1.0]);
+        assert!(normalize_to_first(&[]).is_empty());
+    }
+
+    #[test]
+    fn rows() {
+        let r = row(&["a".into(), "bb".into()], &[3, 4]);
+        assert_eq!(r, "  a    bb");
+    }
+}

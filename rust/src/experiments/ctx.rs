@@ -1,0 +1,219 @@
+//! Shared experiment context: caches the expensive pieces (AMOSA-optimized
+//! topologies, traffic models, NoC instances) across figures so `all`
+//! reuses one design per configuration — exactly like the paper, where a
+//! single WiHetNoC is designed and then evaluated everywhere.
+
+use std::collections::HashMap;
+
+use crate::model::cnn::ModelSpec;
+use crate::model::{cdbnet, lenet, SystemConfig};
+use crate::noc::analysis::TrafficMatrix;
+use crate::noc::builder::{
+    alash_routes, het_noc, mesh_opt, optimize_wireline, wi_het_noc_on, DesignConfig, NocInstance,
+};
+use crate::noc::routing::RouteSet;
+use crate::noc::topology::Topology;
+use crate::optim::placement::optimize_placement;
+use crate::optim::wiplace::build_wireless;
+use crate::traffic::phases::{model_phases, TrafficModel};
+use crate::traffic::trace::TraceConfig;
+
+/// Simulation/optimization effort level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    /// CI-grade: tiny AMOSA budgets, heavily downsampled traces.
+    Quick,
+    /// Paper-grade: full budgets (used for EXPERIMENTS.md numbers).
+    Full,
+}
+
+pub struct Ctx {
+    pub effort: Effort,
+    pub seed: u64,
+    pub batch: usize,
+    /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
+    pub sys: SystemConfig,
+    /// AMOSA-optimized CPU/MC placement for the mesh baseline.
+    mesh_sys: Option<SystemConfig>,
+    traffic: HashMap<(String, String), TrafficModel>, // (model, sys tag)
+    wireline: HashMap<usize, Topology>,               // per k_max
+    instances: HashMap<String, NocInstance>,
+}
+
+impl Ctx {
+    pub fn new(effort: Effort, seed: u64) -> Self {
+        Ctx {
+            effort,
+            seed,
+            batch: 32,
+            sys: SystemConfig::paper_8x8(),
+            mesh_sys: None,
+            traffic: HashMap::new(),
+            wireline: HashMap::new(),
+            instances: HashMap::new(),
+        }
+    }
+
+    pub fn spec(&self, model: &str) -> ModelSpec {
+        match model {
+            "lenet" => lenet(),
+            "cdbnet" => cdbnet(),
+            other => panic!("unknown model {other}"),
+        }
+    }
+
+    pub fn design_cfg(&self) -> DesignConfig {
+        match self.effort {
+            Effort::Quick => DesignConfig::quick(self.seed),
+            Effort::Full => DesignConfig { seed: self.seed, ..DesignConfig::default() },
+        }
+    }
+
+    pub fn trace_cfg(&self) -> TraceConfig {
+        TraceConfig {
+            scale: match self.effort {
+                Effort::Quick => 0.05,
+                Effort::Full => 0.5,
+            },
+            burst_duty: 0.5,
+            seed: self.seed ^ 0x7ACE,
+        }
+    }
+
+    /// Mesh-baseline system (AMOSA CPU/MC placement, cached).
+    pub fn mesh_sys(&mut self) -> SystemConfig {
+        if self.mesh_sys.is_none() {
+            self.mesh_sys = Some(optimize_placement(&self.sys, self.seed));
+        }
+        self.mesh_sys.clone().unwrap()
+    }
+
+    /// Traffic model for `model` on a given system placement.
+    pub fn traffic_on(&mut self, model: &str, sys: &SystemConfig, tag: &str) -> TrafficModel {
+        let key = (model.to_string(), tag.to_string());
+        if !self.traffic.contains_key(&key) {
+            let spec = self.spec(model);
+            self.traffic
+                .insert(key.clone(), model_phases(sys, &spec, self.batch));
+        }
+        self.traffic[&key].clone()
+    }
+
+    pub fn traffic(&mut self, model: &str) -> TrafficModel {
+        let sys = self.sys.clone();
+        self.traffic_on(model, &sys, "wihet")
+    }
+
+    /// Aggregate LeNet f_ij on the WiHetNoC placement (the design input —
+    /// the paper optimizes on the traffic pattern, not per-layer).
+    pub fn fij(&mut self, model: &str) -> TrafficMatrix {
+        let sys = self.sys.clone();
+        self.traffic(model).fij(&sys)
+    }
+
+    /// Optimized irregular wireline topology for `k_max` (cached).
+    pub fn wireline(&mut self, k_max: usize) -> Topology {
+        if !self.wireline.contains_key(&k_max) {
+            let fij = self.fij("lenet");
+            let mut cfg = self.design_cfg();
+            cfg.k_max = k_max;
+            cfg.seed = self.seed.wrapping_add(k_max as u64);
+            let topo = optimize_wireline(&self.sys, &fij, &cfg);
+            self.wireline.insert(k_max, topo);
+        }
+        self.wireline[&k_max].clone()
+    }
+
+    /// The four headline NoC instances, cached by name:
+    /// "mesh_xy", "mesh_opt" (XY+YX), "hetnoc", "wihetnoc".
+    pub fn instance(&mut self, name: &str) -> &NocInstance {
+        if !self.instances.contains_key(name) {
+            let inst = match name {
+                "mesh_xy" => {
+                    let sys = self.mesh_sys();
+                    mesh_opt(&sys, false)
+                }
+                "mesh_opt" => {
+                    let sys = self.mesh_sys();
+                    mesh_opt(&sys, true)
+                }
+                "hetnoc" => {
+                    let fij = self.fij("lenet");
+                    let cfg = self.design_cfg();
+                    het_noc(&self.sys, &fij, &cfg)
+                }
+                "wihetnoc" => {
+                    let topo = self.wireline(self.design_cfg().k_max);
+                    let fij = self.fij("lenet");
+                    let cfg = self.design_cfg();
+                    wi_het_noc_on(&self.sys, &fij, &cfg, topo)
+                }
+                other => panic!("unknown instance {other}"),
+            };
+            self.instances.insert(name.to_string(), inst);
+        }
+        &self.instances[name]
+    }
+
+    /// Owned copy of a cached instance (for call sites that also need
+    /// `&mut self` while holding the instance).
+    pub fn instance_cloned(&mut self, name: &str) -> NocInstance {
+        self.instance(name).clone()
+    }
+
+    /// WiHetNoC variant with a custom WI count / channel count on the
+    /// cached k_max=default wireline topology (Figs 12-13 sweeps).
+    pub fn wihet_variant(&mut self, n_wi: usize, gpu_channels: usize) -> NocInstance {
+        let topo = self.wireline(self.design_cfg().k_max);
+        let fij = self.fij("lenet");
+        let air = build_wireless(&topo, &fij, &self.sys.cpus(), &self.sys.mcs(), n_wi, gpu_channels);
+        let routes: RouteSet = alash_routes(&self.sys, &topo, &air, &fij);
+        NocInstance {
+            kind: crate::noc::builder::NocKind::WiHetNoc,
+            topo,
+            routes,
+            air,
+        }
+    }
+
+    /// The system placement an instance should be simulated on.
+    pub fn sys_for(&mut self, name: &str) -> SystemConfig {
+        match name {
+            "mesh_xy" | "mesh_opt" => self.mesh_sys(),
+            _ => self.sys.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_caches_instances() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let a = ctx.instance("mesh_xy").topo.links.len();
+        let b = ctx.instance("mesh_xy").topo.links.len();
+        assert_eq!(a, b);
+        assert_eq!(a, 112);
+    }
+
+    #[test]
+    fn wireline_cached_per_kmax() {
+        let mut ctx = Ctx::new(Effort::Quick, 2);
+        let t4 = ctx.wireline(4);
+        let t4b = ctx.wireline(4);
+        assert_eq!(t4.edges(), t4b.edges());
+        assert!(t4.k_max() <= 4);
+        let t6 = ctx.wireline(6);
+        assert!(t6.k_max() <= 6);
+    }
+
+    #[test]
+    fn variant_builder() {
+        let mut ctx = Ctx::new(Effort::Quick, 3);
+        let v = ctx.wihet_variant(8, 2);
+        assert_eq!(v.air.num_channels, 3);
+        assert_eq!(v.air.wis.len(), 8 + 8);
+    }
+}

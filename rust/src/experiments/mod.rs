@@ -1,0 +1,46 @@
+//! Per-figure experiment harnesses — one entry per table/figure of the
+//! paper's evaluation (§5). Each regenerates the corresponding series and
+//! prints paper-vs-measured where the paper states a number.
+//!
+//! Run via `wihetnoc experiment <id>` (ids: table1, fig5..fig19, all) or
+//! `cargo bench` (rust/benches/paper_benches.rs drives the same code).
+
+pub mod common;
+pub mod ctx;
+pub mod table1;
+pub mod traffic_figs; // fig5, fig6, fig7
+pub mod optim_figs; // fig8, fig9, fig10
+pub mod param_figs; // fig11, fig12, fig13
+pub mod wireless_figs; // fig14, fig15, fig16
+pub mod compare_figs; // fig17, fig18, fig19
+
+pub use ctx::{Ctx, Effort};
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
+];
+
+/// Dispatch one experiment by id; returns its printable report.
+pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, String> {
+    match id {
+        "table1" => Ok(table1::run(ctx)),
+        "fig5" => Ok(traffic_figs::fig5(ctx)),
+        "fig6" => Ok(traffic_figs::fig6(ctx)),
+        "fig7" => Ok(traffic_figs::fig7(ctx)),
+        "fig8" => Ok(optim_figs::fig8(ctx)),
+        "fig9" => Ok(optim_figs::fig9(ctx)),
+        "fig10" => Ok(optim_figs::fig10(ctx)),
+        "fig11" => Ok(param_figs::fig11(ctx)),
+        "fig12" => Ok(param_figs::fig12(ctx)),
+        "fig13" => Ok(param_figs::fig13(ctx)),
+        "fig14" => Ok(wireless_figs::fig14(ctx)),
+        "fig15" => Ok(wireless_figs::fig15(ctx)),
+        "fig16" => Ok(wireless_figs::fig16(ctx)),
+        "fig17" => Ok(compare_figs::fig17(ctx)),
+        "fig18" => Ok(compare_figs::fig18(ctx)),
+        "fig19" => Ok(compare_figs::fig19(ctx)),
+        other => Err(format!("unknown experiment '{other}' (try: {})", ALL.join(", "))),
+    }
+}

@@ -1,0 +1,127 @@
+//! Figs 11-13: WiHetNoC parameter selection — router port bound k_max,
+//! WI count, and channel count.
+
+use super::ctx::Ctx;
+use crate::energy::network::message_edp;
+use crate::energy::params::EnergyParams;
+use crate::noc::builder::NocInstance;
+use crate::noc::routing::RouteSet;
+use crate::noc::sim::{NocSim, SimConfig, SimReport};
+use crate::traffic::trace::training_trace;
+
+/// Simulate one full training iteration of LeNet on `inst`; returns the
+/// sim report (shared by the parameter sweeps).
+pub fn sim_iteration(ctx: &mut Ctx, inst: &NocInstance) -> SimReport {
+    let sys = ctx.sys.clone();
+    let tm = ctx.traffic("lenet");
+    let cfg = ctx.trace_cfg();
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    sim.run(&trace)
+}
+
+/// Fig 11: network EDP vs k_max. Paper: optimum at k_max = 6 (EDP worsens
+/// beyond due to router energy without latency gains).
+pub fn fig11(ctx: &mut Ctx) -> String {
+    let energy = EnergyParams::default();
+    let mut out = String::from("Fig 11 — network EDP vs router port bound k_max (paper optimum: 6)\n\n");
+    out.push_str("  k_max   msg EDP (pJ*cyc)   mean latency   norm\n");
+    let mut rows = Vec::new();
+    for k_max in 4..=7 {
+        let topo = ctx.wireline(k_max);
+        let fij = ctx.fij("lenet");
+        let routes = RouteSet::shortest(&topo, Some(&fij));
+        let inst = NocInstance {
+            kind: crate::noc::builder::NocKind::HetNoc,
+            topo,
+            routes,
+            air: crate::noc::wireless::WirelessSpec::new(0),
+        };
+        let rep = sim_iteration(ctx, &inst);
+        let edp = message_edp(&inst.topo, &rep, &energy);
+        rows.push((k_max, edp, rep.latency.mean()));
+    }
+    let best = rows.iter().cloned().fold(f64::INFINITY, |m, r| m.min(r.1));
+    for (k, edp, lat) in &rows {
+        out.push_str(&format!(
+            "  {k}       {edp:>12.1}       {lat:>8.2}      {:>5.3}{}\n",
+            edp / best,
+            if (edp / best - 1.0).abs() < 1e-9 { "  <- optimum" } else { "" }
+        ));
+    }
+    out
+}
+
+/// Fig 12: EDP and wireless utilization vs WI count. Paper: EDP improves
+/// up to 24 WIs (6 per channel), then MAC overhead turns it around.
+pub fn fig12(ctx: &mut Ctx) -> String {
+    let energy = EnergyParams::default();
+    let mut out = String::from(
+        "Fig 12 — EDP & wireless utilization vs GPU-MC WI count (paper optimum: 24)\n\n",
+    );
+    out.push_str("  n_wi   msg EDP (pJ*cyc)   wireless util   air fallback\n");
+    for n_wi in [8usize, 16, 24, 32, 40] {
+        let inst = ctx.wihet_variant(n_wi, 4);
+        let rep = sim_iteration(ctx, &inst);
+        let edp = message_edp(&inst.topo, &rep, &energy);
+        out.push_str(&format!(
+            "  {n_wi:<5}  {edp:>12.1}       {:>6.2}%         {:>6.2}%\n",
+            100.0 * rep.wireless_utilization(),
+            100.0 * rep.air_fallbacks as f64 / rep.delivered_packets.max(1) as f64,
+        ));
+    }
+    out.push_str("\n(MAC request period grows with WIs/channel: beyond 6 per channel the access latency erodes the shortcut gain)\n");
+    out
+}
+
+/// Fig 13: EDP and WI utilization vs number of GPU-MC channels at 6 WIs
+/// per channel. Paper: gains plateau at 4 channels for 64 tiles.
+pub fn fig13(ctx: &mut Ctx) -> String {
+    let energy = EnergyParams::default();
+    let mut out = String::from(
+        "Fig 13 — EDP & wireless utilization vs channel count (6 WIs/channel; paper plateau: 4)\n\n",
+    );
+    out.push_str("  channels   n_wi   msg EDP (pJ*cyc)   wireless util\n");
+    for channels in 1..=4usize {
+        let n_wi = channels * 6;
+        let inst = ctx.wihet_variant(n_wi, channels);
+        let rep = sim_iteration(ctx, &inst);
+        let edp = message_edp(&inst.topo, &rep, &energy);
+        out.push_str(&format!(
+            "  {channels:<9}  {n_wi:<5}  {edp:>12.1}       {:>6.2}%\n",
+            100.0 * rep.wireless_utilization(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ctx::Effort;
+
+    #[test]
+    fn fig12_more_wis_more_wireless_traffic() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let small = ctx.wihet_variant(8, 4);
+        let big = ctx.wihet_variant(24, 4);
+        let rs = sim_iteration(&mut ctx, &small);
+        let rb = sim_iteration(&mut ctx, &big);
+        assert!(
+            rb.wireless_utilization() >= rs.wireless_utilization(),
+            "24 WI util {} < 8 WI util {}",
+            rb.wireless_utilization(),
+            rs.wireless_utilization()
+        );
+    }
+
+    #[test]
+    fn fig11_all_kmax_feasible() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        for k in 4..=7 {
+            let t = ctx.wireline(k);
+            assert!(t.is_connected());
+            assert!(t.k_max() <= k);
+        }
+    }
+}

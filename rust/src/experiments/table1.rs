@@ -1,0 +1,51 @@
+//! Table 1: layer configurations of LeNet and CDBNet (derived, and
+//! asserted against the paper's entries in model::cnn tests).
+
+use super::ctx::Ctx;
+
+pub fn run(ctx: &mut Ctx) -> String {
+    let mut out = String::from("Table 1 — layer configurations (derived)\n");
+    for model in ["lenet", "cdbnet"] {
+        let spec = ctx.spec(model);
+        out.push_str(&format!(
+            "\n{} (input {}x{}x{}):\n",
+            spec.name, spec.input_shape.0, spec.input_shape.1, spec.input_shape.2
+        ));
+        out.push_str("  layer  kind      in           out          kernel  weights\n");
+        for l in &spec.layers {
+            out.push_str(&format!(
+                "  {:<6} {:<9} {:<12} {:<12} {:<7} {}\n",
+                l.name,
+                l.kind.as_str(),
+                format!("{}x{}x{}", l.in_shape.0, l.in_shape.1, l.in_shape.2),
+                format!("{}x{}x{}", l.out_shape.0, l.out_shape.1, l.out_shape.2),
+                if l.kernel > 0 { format!("{0}x{0}", l.kernel) } else { "-".into() },
+                l.weight_count(),
+            ));
+        }
+        out.push_str(&format!(
+            "  total weights: {}  | fwd MACs @batch {}: {}\n",
+            spec.layers.iter().map(|l| l.weight_count()).sum::<u64>(),
+            ctx.batch,
+            spec.total_macs(ctx.batch),
+        ));
+    }
+    out.push_str("\npaper check: LeNet C1 29x29x16, C2 11x11x16, C3 1x1x128; CDBNet C1 31x31x32, C2 15x15x32, C3 7x7x64 — asserted in model::cnn::tests.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ctx::Effort;
+
+    #[test]
+    fn renders_both_models() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let s = run(&mut ctx);
+        assert!(s.contains("lenet"));
+        assert!(s.contains("cdbnet"));
+        assert!(s.contains("29x29x16"));
+        assert!(s.contains("7x7x64"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Figs 5-7: on-chip traffic characterization of CNN training.
+
+use super::common::normalize_to_max;
+use super::ctx::Ctx;
+use crate::model::cnn::Pass;
+use crate::model::TileKind;
+use crate::noc::sim::{NocSim, SimConfig};
+use crate::traffic::trace::phase_trace;
+use crate::util::rng::Rng;
+
+/// Fig 5: per-layer message injection rate, forward + backward, both CNNs,
+/// normalized to the hottest layer. Paper shape: conv > pool > FC.
+pub fn fig5(ctx: &mut Ctx) -> String {
+    let mut out = String::from(
+        "Fig 5 — normalized injection rate per layer (paper: conv > pool > FC)\n",
+    );
+    let sys = ctx.sys.clone();
+    for model in ["lenet", "cdbnet"] {
+        let tm = ctx.traffic(model);
+        for pass in [Pass::Forward, Pass::Backward] {
+            let phases = tm.pass_phases(pass);
+            let rates: Vec<f64> = phases.iter().map(|p| p.injection_rate(&sys)).collect();
+            let norm = normalize_to_max(&rates);
+            out.push_str(&format!("\n{model} {pass:?}:\n"));
+            for (p, r) in phases.iter().zip(&norm) {
+                out.push_str(&format!("  {:<5} {:>6.3} {}\n", p.tag, r, bar(*r)));
+            }
+        }
+    }
+    out
+}
+
+/// Fig 6: per-layer traffic breakdown — core->MC vs MC->core shares and
+/// the many-to-few fraction (paper: 93% LeNet / 89% CDBNet).
+pub fn fig6(ctx: &mut Ctx) -> String {
+    let mut out = String::from("Fig 6 — traffic breakdown per layer (flit shares)\n");
+    let sys = ctx.sys.clone();
+    for model in ["lenet", "cdbnet"] {
+        let tm = ctx.traffic(model);
+        out.push_str(&format!(
+            "\n{model}: many-to-few = {:.1}% (paper: {}%)\n",
+            100.0 * tm.many_to_few_fraction(&sys),
+            if model == "lenet" { 93 } else { 89 },
+        ));
+        out.push_str("  layer(pass)   core->MC  MC->core  core-core  MC->core/core->MC\n");
+        for p in &tm.phases {
+            let c2m = p.core_to_mc_flits(&sys) as f64;
+            let m2c = p.mc_to_core_flits(&sys) as f64;
+            let cc = p.core_core_flits as f64;
+            let tot = c2m + m2c + cc;
+            out.push_str(&format!(
+                "  {:<5}({:<3})   {:>6.1}%   {:>6.1}%    {:>5.1}%       {:>5.2}x\n",
+                p.tag,
+                pass_tag(p.pass),
+                100.0 * c2m / tot,
+                100.0 * m2c / tot,
+                100.0 * cc / tot,
+                p.asymmetry(&sys),
+            ));
+        }
+    }
+    out
+}
+
+/// Fig 7: temporal locality raster of MC accesses during LeNet's forward
+/// conv (C1) and pool (P1) layers: which tiles talk to MCs in which time
+/// bin. The paper's observation: many GPUs transmit simultaneously
+/// (waves), demonstrating the need for dedicated CPU-MC links.
+pub fn fig7(ctx: &mut Ctx) -> String {
+    let sys = ctx.sys.clone();
+    let tm = ctx.traffic("lenet");
+    let mut out = String::from(
+        "Fig 7 — temporal locality of MC accesses (LeNet fwd; '#' = tile sent/received in bin)\n",
+    );
+    for want in ["C1", "P1"] {
+        let phase = tm
+            .phases
+            .iter()
+            .find(|p| p.tag == want && p.pass == Pass::Forward)
+            .expect("phase exists");
+        let mut rng = Rng::new(ctx.seed);
+        let cfg = ctx.trace_cfg();
+        let (msgs, dur) = phase_trace(&sys, phase, 0, &cfg, &mut rng);
+        // raster: 64 time bins x tiles (sample: all 4 CPUs + 12 GPUs)
+        let bins = 64usize;
+        let mut tiles: Vec<usize> = sys.cpus();
+        tiles.extend(sys.gpus().into_iter().step_by(5).take(12));
+        let mut grid = vec![vec![false; bins]; tiles.len()];
+        for m in &msgs {
+            if let Some(row) = tiles.iter().position(|&t| t == m.src) {
+                let b = ((m.inject_at.min(dur - 1)) as usize * bins) / dur as usize;
+                grid[row][b] = true;
+            }
+        }
+        out.push_str(&format!("\n{} (duration {} cycles, {} msgs):\n", want, dur, msgs.len()));
+        for (row, &tile) in tiles.iter().enumerate() {
+            let kind = match sys.tiles[tile] {
+                TileKind::Cpu => "CPU",
+                TileKind::Gpu => "GPU",
+                TileKind::Mc => "MC ",
+            };
+            let line: String = grid[row]
+                .iter()
+                .map(|&b| if b { '#' } else { '.' })
+                .collect();
+            out.push_str(&format!("  {kind}{tile:<3} {line}\n"));
+        }
+    }
+    out.push_str("\n(observe: GPU rows form staggered waves; CPU rows are sparse but overlap GPU bursts — motivating the dedicated CPU-MC wireless channel)\n");
+    out
+}
+
+fn pass_tag(p: Pass) -> &'static str {
+    match p {
+        Pass::Forward => "fwd",
+        Pass::Backward => "bwd",
+    }
+}
+
+fn bar(v: f64) -> String {
+    "#".repeat((v * 40.0).round() as usize)
+}
+
+/// Simulated (not just modeled) injection ordering — used by tests to tie
+/// the Fig 5 model to actual simulator behavior.
+pub fn simulated_phase_latency(ctx: &mut Ctx, model: &str, tag: &str, pass: Pass) -> f64 {
+    let sys = ctx.sys.clone();
+    let tm = ctx.traffic(model);
+    let phase = tm
+        .phases
+        .iter()
+        .find(|p| p.tag == tag && p.pass == pass)
+        .expect("phase");
+    let mut rng = Rng::new(ctx.seed);
+    let cfg = ctx.trace_cfg();
+    let (msgs, _) = phase_trace(&sys, phase, 0, &cfg, &mut rng);
+    let inst = ctx.instance("mesh_xy");
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    sim.run(&msgs).latency.mean()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ctx::Effort;
+
+    #[test]
+    fn fig5_reports_all_layers() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let s = fig5(&mut ctx);
+        for tag in ["C1", "P1", "C2", "P2", "C3", "F1"] {
+            assert!(s.contains(tag), "missing {tag}\n{s}");
+        }
+        assert!(s.contains("cdbnet Backward"));
+    }
+
+    #[test]
+    fn fig6_many_to_few_near_paper() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let s = fig6(&mut ctx);
+        assert!(s.contains("many-to-few"));
+        // extract lenet fraction
+        let frac = s
+            .lines()
+            .find(|l| l.contains("lenet: many-to-few"))
+            .and_then(|l| l.split('=').nth(1))
+            .and_then(|x| x.trim().trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.').split('%').next())
+            .and_then(|x| x.trim().parse::<f64>().ok())
+            .unwrap();
+        assert!((85.0..=99.0).contains(&frac), "lenet m2f {frac}");
+    }
+
+    #[test]
+    fn fig7_raster_has_waves() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let s = fig7(&mut ctx);
+        assert!(s.contains("C1"));
+        assert!(s.contains('#'));
+        assert!(s.lines().filter(|l| l.contains("GPU")).count() >= 10);
+    }
+}

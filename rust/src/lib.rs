@@ -1,0 +1,26 @@
+//! # WiHetNoC — wireless-enabled heterogeneous NoC for CNN training
+//!
+//! Reproduction of Choi et al., *On-Chip Communication Network for
+//! Efficient Training of Deep Convolutional Networks on Heterogeneous
+//! Manycore Systems* (IEEE TC 2017). See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L1/L2 (build-time Python)**: Pallas conv/pool/dense kernels and the
+//!   LeNet/CDBNet training step in JAX, AOT-lowered to HLO text under
+//!   `artifacts/` by `make artifacts`.
+//! * **L3 (this crate)**: the PJRT runtime executes the artifacts while
+//!   the NoC toolchain — traffic model, AMOSA design-space optimizer,
+//!   cycle-level simulator, energy model — evaluates mesh / HetNoC /
+//!   WiHetNoC architectures running that workload.
+
+pub mod bench;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod model;
+pub mod noc;
+pub mod optim;
+pub mod runtime;
+pub mod traffic;
+pub mod util;

@@ -1,0 +1,260 @@
+//! `wihetnoc` — CLI for the WiHetNoC reproduction.
+//!
+//! Subcommands:
+//!   experiment <id|all>     regenerate a paper table/figure (table1, fig5..fig19)
+//!   train                   train a CNN through the PJRT artifacts (L3 path)
+//!   design                  run the WiHetNoC design flow and print the result
+//!   simulate                simulate one training iteration on a chosen NoC
+//!   list                    list experiments and manifest entries
+
+use std::process::ExitCode;
+
+use wihetnoc::coordinator::{TrainConfig, Trainer};
+use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::analysis::analyze;
+use wihetnoc::noc::builder::{wi_het_noc, DesignConfig};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::runtime::Runtime;
+use wihetnoc::traffic::trace::training_trace;
+use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", top_usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "train" => cmd_train(rest),
+        "design" => cmd_design(rest),
+        "simulate" => cmd_simulate(rest),
+        "list" => cmd_list(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "wihetnoc — WiHetNoC reproduction (Choi et al., IEEE TC 2017)\n\
+     usage: wihetnoc <experiment|train|design|simulate|list> [options]\n\
+     run `wihetnoc <command> --help` for command options"
+        .to_string()
+}
+
+fn common_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "seed", help: "PRNG seed", default: Some("42"), is_flag: false },
+        ArgSpec {
+            name: "effort",
+            help: "quick|full (AMOSA budget + trace scale)",
+            default: Some("quick"),
+            is_flag: false,
+        },
+    ]
+}
+
+fn ctx_from(args: &Args) -> Result<Ctx, String> {
+    let seed = args.get_u64("seed", 42)?;
+    let effort = match args.get_or("effort", "quick").as_str() {
+        "quick" => Effort::Quick,
+        "full" => Effort::Full,
+        other => return Err(format!("--effort must be quick|full, got {other}")),
+    };
+    Ok(Ctx::new(effort, seed))
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<(), String> {
+    let specs = common_specs();
+    let args = parse(argv, &specs)?;
+    let Some(id) = args.positional.first() else {
+        return Err(format!(
+            "usage: wihetnoc experiment <id|all> [--effort quick|full]\nids: {}\n{}",
+            experiments::ALL.join(", "),
+            usage(&specs)
+        ));
+    };
+    let mut ctx = ctx_from(&args)?;
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let report = experiments::run(id, &mut ctx)?;
+        println!("{report}");
+        println!("[{id} done in {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.extend([
+        ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false },
+        ArgSpec { name: "steps", help: "training steps", default: Some("100"), is_flag: false },
+        ArgSpec {
+            name: "artifacts",
+            help: "artifacts directory",
+            default: Some("artifacts"),
+            is_flag: false,
+        },
+    ]);
+    let args = parse(argv, &specs)?;
+    let model = args.get_or("model", "lenet");
+    let steps = args.get_usize("steps", 100)?;
+    let seed = args.get_u64("seed", 42)?;
+    let mut rt = Runtime::new(args.get_or("artifacts", "artifacts")).map_err(|e| format!("{e:#}"))?;
+    let batch = rt.manifest.batch;
+    println!("platform: {} | model: {model} | batch: {batch} | steps: {steps}", rt.platform());
+    let spec = match model.as_str() {
+        "lenet" => wihetnoc::model::lenet(),
+        "cdbnet" => wihetnoc::model::cdbnet(),
+        other => return Err(format!("unknown model {other}")),
+    };
+    let mut trainer = Trainer::new(&mut rt, spec, seed).map_err(|e| format!("{e:#}"))?;
+    let cfg = TrainConfig { steps, batch, seed, log_every: (steps / 20).max(1) };
+    let log = trainer.train(&cfg).map_err(|e| format!("{e:#}"))?;
+    for (step, loss) in &log.losses {
+        println!("step {step:>5}  loss {loss:.4}");
+    }
+    println!(
+        "loss {:.4} -> {:.4} | {:.2}s total, {:.1} ms/step (PJRT {:.1} ms/step)",
+        log.first_loss(),
+        log.last_loss(),
+        log.total_secs,
+        1e3 * log.total_secs / steps as f64,
+        1e3 * log.execute_secs / steps as f64,
+    );
+    Ok(())
+}
+
+fn cmd_design(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.extend([
+        ArgSpec { name: "kmax", help: "router port bound", default: Some("6"), is_flag: false },
+        ArgSpec { name: "nwi", help: "GPU-MC wireless interfaces", default: Some("24"), is_flag: false },
+        ArgSpec { name: "channels", help: "GPU-MC channels", default: Some("4"), is_flag: false },
+    ]);
+    let args = parse(argv, &specs)?;
+    let mut ctx = ctx_from(&args)?;
+    let sys = SystemConfig::paper_8x8();
+    let fij = ctx.fij("lenet");
+    let mut cfg = match ctx.effort {
+        Effort::Quick => DesignConfig::quick(ctx.seed),
+        Effort::Full => DesignConfig { seed: ctx.seed, ..DesignConfig::default() },
+    };
+    cfg.k_max = args.get_usize("kmax", 6)?;
+    cfg.n_wi = args.get_usize("nwi", 24)?;
+    cfg.gpu_channels = args.get_usize("channels", 4)?;
+    println!(
+        "designing WiHetNoC: k_max={} n_wi={} channels={}+1 ...",
+        cfg.k_max, cfg.n_wi, cfg.gpu_channels
+    );
+    let t0 = std::time::Instant::now();
+    let inst = wi_het_noc(&sys, &fij, &cfg);
+    let a = analyze(&inst.topo, &fij);
+    println!(
+        "done in {:.1}s: {} links (k_max {} k_avg {:.2}), {} WIs, {} virtual layers",
+        t0.elapsed().as_secs_f64(),
+        inst.topo.links.len(),
+        inst.topo.k_max(),
+        inst.topo.k_avg(),
+        inst.air.wis.len(),
+        inst.routes.num_layers,
+    );
+    println!(
+        "objectives: U_mean={:.4} sigma={:.4} twhc={:.2} | air coverage {:.1}% | WI area {:.2} mm^2",
+        a.u_mean,
+        a.u_std,
+        a.twhc,
+        100.0 * inst.routes.air_coverage(),
+        inst.air.total_area_mm2(),
+    );
+    println!("\nWI placement (router, channel):");
+    for wi in &inst.air.wis {
+        print!(" ({},{})", wi.router, wi.channel);
+    }
+    println!();
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.extend([
+        ArgSpec {
+            name: "noc",
+            help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
+            default: Some("wihetnoc"),
+            is_flag: false,
+        },
+        ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false },
+        ArgSpec { name: "scale", help: "trace downsampling", default: Some("0.05"), is_flag: false },
+    ]);
+    let args = parse(argv, &specs)?;
+    let mut ctx = ctx_from(&args)?;
+    let name = args.get_or("noc", "wihetnoc");
+    let model = args.get_or("model", "lenet");
+    let inst = ctx.instance_cloned(&name);
+    let sys = ctx.sys_for(&name);
+    let tag = if name.starts_with("mesh") { "mesh" } else { "wihet" };
+    let tm = ctx.traffic_on(&model, &sys, tag);
+    let mut cfg = ctx.trace_cfg();
+    cfg.scale = args.get_f64("scale", 0.05)?;
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    println!("simulating {name} on {model}: {} messages ...", trace.len());
+    let t0 = std::time::Instant::now();
+    let rep =
+        NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace);
+    println!(
+        "{} packets in {:.2}s wall | latency mean {:.2} max {:.0} | cpu-mc {:.2} | throughput {:.3} flits/cyc | wireless {:.1}% (fallbacks {})",
+        rep.delivered_packets,
+        t0.elapsed().as_secs_f64(),
+        rep.latency.mean(),
+        rep.latency.max,
+        rep.cpu_mc_latency.mean(),
+        rep.throughput(),
+        100.0 * rep.wireless_utilization(),
+        rep.air_fallbacks,
+    );
+    Ok(())
+}
+
+fn cmd_list(argv: &[String]) -> Result<(), String> {
+    let specs = vec![ArgSpec {
+        name: "artifacts",
+        help: "artifacts directory",
+        default: Some("artifacts"),
+        is_flag: false,
+    }];
+    let args = parse(argv, &specs)?;
+    println!("experiments: {}", experiments::ALL.join(", "));
+    match Runtime::new(args.get_or("artifacts", "artifacts")) {
+        Ok(rt) => {
+            println!("artifact entries ({}):", rt.manifest.dir.display());
+            for e in &rt.manifest.entries {
+                println!(
+                    "  {:<22} {} inputs, {} outputs ({})",
+                    e.name,
+                    e.inputs.len(),
+                    e.num_outputs,
+                    e.path
+                );
+            }
+        }
+        Err(e) => println!("artifacts not available: {e:#}"),
+    }
+    Ok(())
+}

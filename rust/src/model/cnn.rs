@@ -1,0 +1,335 @@
+//! LeNet / CDBNet layer geometry — the Rust mirror of
+//! `python/compile/shapes.py` (paper Table 1).
+//!
+//! This is re-derived independently rather than read from the manifest so
+//! the NoC toolchain works without artifacts; `rust/tests/integration.rs`
+//! cross-checks the two derivations through `artifacts/manifest.json`.
+
+pub const BYTES_PER_ELEM: u64 = 4; // f32
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    MaxPool,
+    AvgPool,
+    Dense,
+    Lrn,
+}
+
+impl LayerKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::MaxPool => "maxpool",
+            LayerKind::AvgPool => "avgpool",
+            LayerKind::Dense => "dense",
+            LayerKind::Lrn => "lrn",
+        }
+    }
+
+    /// Short label used in the paper's per-layer figures (C/P/F).
+    pub fn tag(&self) -> char {
+        match self {
+            LayerKind::Conv => 'C',
+            LayerKind::MaxPool | LayerKind::AvgPool => 'P',
+            LayerKind::Dense => 'F',
+            LayerKind::Lrn => 'N',
+        }
+    }
+}
+
+/// Training pass direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+/// (H, W, C) per-sample tensor shape.
+pub type Shape3 = (usize, usize, usize);
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_shape: Shape3,
+    pub out_shape: Shape3,
+    pub kernel: usize,
+    pub stride: usize,
+    pub same_padding: bool,
+    pub ceil_mode: bool,
+}
+
+impl Layer {
+    pub fn weight_count(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                let (_, _, ci) = self.in_shape;
+                let (_, _, co) = self.out_shape;
+                (self.kernel * self.kernel * ci * co + co) as u64
+            }
+            LayerKind::Dense => {
+                let (ih, iw, ic) = self.in_shape;
+                let (_, _, co) = self.out_shape;
+                (ih * iw * ic * co + co) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Forward-pass multiply-accumulates for a batch.
+    pub fn macs(&self, batch: usize) -> u64 {
+        let (oh, ow, oc) = self.out_shape;
+        let (ih, iw, ic) = self.in_shape;
+        let b = batch as u64;
+        match self.kind {
+            LayerKind::Conv => {
+                b * (oh * ow * oc * self.kernel * self.kernel * ic) as u64
+            }
+            LayerKind::Dense => b * (ih * iw * ic * oc) as u64,
+            LayerKind::MaxPool | LayerKind::AvgPool => {
+                b * (oh * ow * oc * self.kernel * self.kernel) as u64
+            }
+            LayerKind::Lrn => b * (ih * iw * ic * 5) as u64,
+        }
+    }
+
+    /// Backward-pass MACs: dX and dW GEMMs for weighted layers (~2x fwd),
+    /// mask routing for pools, rescale for LRN.
+    pub fn bwd_macs(&self, batch: usize) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Dense => 2 * self.macs(batch),
+            _ => self.macs(batch),
+        }
+    }
+
+    pub fn in_bytes(&self, batch: usize) -> u64 {
+        let (h, w, c) = self.in_shape;
+        (batch * h * w * c) as u64 * BYTES_PER_ELEM
+    }
+
+    pub fn out_bytes(&self, batch: usize) -> u64 {
+        let (h, w, c) = self.out_shape;
+        (batch * h * w * c) as u64 * BYTES_PER_ELEM
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_count() * BYTES_PER_ELEM
+    }
+
+    pub fn has_params(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv | LayerKind::Dense)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub input_shape: Shape3,
+    pub num_classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl ModelSpec {
+    fn cur(&self) -> Shape3 {
+        self.layers
+            .last()
+            .map(|l| l.out_shape)
+            .unwrap_or(self.input_shape)
+    }
+
+    fn conv(&mut self, name: &str, k: usize, co: usize, same: bool) -> &mut Self {
+        let (ih, iw, ci) = self.cur();
+        let (oh, ow) = if same { (ih, iw) } else { (ih - k + 1, iw - k + 1) };
+        assert!(oh > 0 && ow > 0, "{name}: conv {k}x{k} does not fit {ih}x{iw}");
+        self.layers.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            in_shape: (ih, iw, ci),
+            out_shape: (oh, ow, co),
+            kernel: k,
+            stride: 1,
+            same_padding: same,
+            ceil_mode: false,
+        });
+        self
+    }
+
+    fn pool(
+        &mut self,
+        name: &str,
+        kind: LayerKind,
+        k: usize,
+        s: usize,
+        ceil_mode: bool,
+    ) -> &mut Self {
+        let (ih, iw, c) = self.cur();
+        let dim = |i: usize| {
+            if ceil_mode {
+                (i - k).div_ceil(s) + 1
+            } else {
+                (i - k) / s + 1
+            }
+        };
+        let (oh, ow) = (dim(ih), dim(iw));
+        assert!(oh > 0 && ow > 0, "{name}: pool {k}/{s} does not fit {ih}x{iw}");
+        self.layers.push(Layer {
+            name: name.into(),
+            kind,
+            in_shape: (ih, iw, c),
+            out_shape: (oh, ow, c),
+            kernel: k,
+            stride: s,
+            same_padding: false,
+            ceil_mode,
+        });
+        self
+    }
+
+    fn lrn(&mut self) -> &mut Self {
+        let s = self.cur();
+        self.layers.push(Layer {
+            name: "LRN".into(),
+            kind: LayerKind::Lrn,
+            in_shape: s,
+            out_shape: s,
+            kernel: 5,
+            stride: 1,
+            same_padding: false,
+            ceil_mode: false,
+        });
+        self
+    }
+
+    fn dense(&mut self, name: &str) -> &mut Self {
+        let (ih, iw, c) = self.cur();
+        self.layers.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Dense,
+            in_shape: (ih, iw, c),
+            out_shape: (1, 1, self.num_classes),
+            kernel: 0,
+            stride: 1,
+            same_padding: false,
+            ceil_mode: false,
+        });
+        self
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn total_macs(&self, batch: usize) -> u64 {
+        self.layers.iter().map(|l| l.macs(batch)).sum()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// LeNet for MNIST (paper Table 1, MNIST row).
+pub fn lenet() -> ModelSpec {
+    let mut m = ModelSpec {
+        name: "lenet".into(),
+        input_shape: (33, 33, 1),
+        num_classes: 10,
+        layers: Vec::new(),
+    };
+    m.conv("C1", 5, 16, false);
+    m.pool("P1", LayerKind::MaxPool, 2, 2, true);
+    m.conv("C2", 5, 16, false);
+    m.pool("P2", LayerKind::MaxPool, 2, 2, false);
+    m.conv("C3", 5, 128, false);
+    m.dense("F1");
+    m
+}
+
+/// CDBNet for CIFAR-10 (paper Table 1, CIFAR-10 row).
+pub fn cdbnet() -> ModelSpec {
+    let mut m = ModelSpec {
+        name: "cdbnet".into(),
+        input_shape: (31, 31, 3),
+        num_classes: 10,
+        layers: Vec::new(),
+    };
+    m.conv("C1", 5, 32, true);
+    m.pool("P1", LayerKind::MaxPool, 3, 2, false);
+    m.lrn();
+    m.conv("C2", 5, 32, true);
+    m.pool("P2", LayerKind::AvgPool, 3, 2, false);
+    m.conv("C3", 5, 64, true);
+    m.pool("P3", LayerKind::AvgPool, 7, 7, false);
+    m.dense("F1");
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lenet() {
+        let m = lenet();
+        assert_eq!(m.layer("C1").unwrap().out_shape, (29, 29, 16));
+        assert_eq!(m.layer("C2").unwrap().out_shape, (11, 11, 16));
+        assert_eq!(m.layer("C3").unwrap().out_shape, (1, 1, 128));
+        assert_eq!(m.layers.last().unwrap().out_shape, (1, 1, 10));
+    }
+
+    #[test]
+    fn table1_cdbnet() {
+        let m = cdbnet();
+        assert_eq!(m.layer("C1").unwrap().out_shape, (31, 31, 32));
+        assert_eq!(m.layer("C2").unwrap().out_shape, (15, 15, 32));
+        assert_eq!(m.layer("C3").unwrap().out_shape, (7, 7, 64));
+        assert_eq!(m.layers.last().unwrap().out_shape, (1, 1, 10));
+    }
+
+    #[test]
+    fn layer_chain_consistent() {
+        for m in [lenet(), cdbnet()] {
+            let mut cur = m.input_shape;
+            for l in &m.layers {
+                assert_eq!(l.in_shape, cur, "{} input mismatch", l.name);
+                cur = l.out_shape;
+            }
+        }
+    }
+
+    #[test]
+    fn lenet_param_count_matches_python() {
+        // Same closed-form as python/tests/test_model.py
+        let expect = (25 * 16 + 16) + (25 * 16 * 16 + 16) + (25 * 16 * 128 + 128) + (128 * 10 + 10);
+        let total: u64 = lenet().layers.iter().map(|l| l.weight_count()).sum();
+        assert_eq!(total, expect as u64);
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        let m = lenet();
+        let c1 = m.layer("C1").unwrap();
+        assert_eq!(c1.macs(4), 4 * 29 * 29 * 16 * 25);
+        assert_eq!(c1.bwd_macs(4), 2 * c1.macs(4));
+    }
+
+    #[test]
+    fn pools_have_no_weights() {
+        for m in [lenet(), cdbnet()] {
+            for l in &m.layers {
+                if !l.has_params() {
+                    assert_eq!(l.weight_count(), 0, "{}", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let m = lenet();
+        let c1 = m.layer("C1").unwrap();
+        assert_eq!(c1.in_bytes(4), 4 * 33 * 33 * 4);
+        assert_eq!(c1.weight_bytes(), (25 * 16 + 16) * 4);
+    }
+}

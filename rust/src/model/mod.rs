@@ -1,0 +1,8 @@
+//! CNN workload descriptions (paper Table 1) and the heterogeneous
+//! manycore system configuration (paper Table 2 / §5).
+
+pub mod cnn;
+pub mod system;
+
+pub use cnn::{cdbnet, lenet, Layer, LayerKind, ModelSpec, Pass};
+pub use system::{SystemConfig, TileKind};

@@ -1,0 +1,213 @@
+//! Heterogeneous manycore system configuration (paper Table 2 / §5).
+//!
+//! 64 tiles on an 8x8 grid of a 20x20 mm die: 56 GPU tiles, 4 CPU tiles,
+//! 4 MC tiles (each MC = 1 MB shared-L2 slice + DRAM port). The NoC clock
+//! is 2.5 GHz; links are 128-bit, so one flit = 16 B moves per link-cycle.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileKind {
+    Gpu,
+    Cpu,
+    Mc,
+}
+
+impl TileKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TileKind::Gpu => "GPU",
+            TileKind::Cpu => "CPU",
+            TileKind::Mc => "MC",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Grid width (tiles are laid out row-major on a `width x width` mesh).
+    pub width: usize,
+    /// Tile kind per tile id (row-major).
+    pub tiles: Vec<TileKind>,
+    /// NoC clock (Hz). Paper: routers run at 2.5 GHz.
+    pub noc_clock_hz: f64,
+    /// GPU core clock (Hz). Table 2: 1.5 GHz.
+    pub gpu_clock_hz: f64,
+    /// CPU core clock (Hz). Table 2: 2.5 GHz.
+    pub cpu_clock_hz: f64,
+    /// Die edge (mm). Paper §5.3.2: 20x20 mm die.
+    pub die_mm: f64,
+    /// Link width in bytes (one flit per cycle). 128-bit links.
+    pub flit_bytes: u64,
+    /// Cache-line / reply payload size in bytes.
+    pub line_bytes: u64,
+    /// MACs each GPU tile retires per GPU clock (SIMT width x SMs abstracted).
+    pub gpu_macs_per_cycle: u64,
+    /// L1 cache size per core (bytes); Table 2: 64 kB I + 64 kB D.
+    pub l1_bytes: u64,
+    /// Shared L2 per MC (bytes); Table 2: 1 MB.
+    pub l2_bytes_per_mc: u64,
+    /// Sustained DRAM bandwidth per MC in bytes per NoC cycle
+    /// (10 B/cyc @ 2.5 GHz = 25 GB/s per channel — sized so CNN conv layers
+    /// drive the baseline mesh to its saturation edge, the regime the
+    /// paper characterizes in Fig 8).
+    pub mc_bw_bytes_per_cycle: f64,
+}
+
+impl SystemConfig {
+    /// The paper's 64-tile experimental platform: 56 GPU + 4 CPU + 4 MC.
+    ///
+    /// Placement follows §5.2's conclusion: CPUs in the center (the four
+    /// innermost tiles), MCs at the center of each quadrant, GPUs elsewhere.
+    pub fn paper_8x8() -> Self {
+        let width = 8;
+        let mut tiles = vec![TileKind::Gpu; width * width];
+        // CPUs: central 2x2 block (tiles (3,3),(3,4),(4,3),(4,4)).
+        for (r, c) in [(3, 3), (3, 4), (4, 3), (4, 4)] {
+            tiles[r * width + c] = TileKind::Cpu;
+        }
+        // MCs: quadrant centers.
+        for (r, c) in [(1, 1), (1, 6), (6, 1), (6, 6)] {
+            tiles[r * width + c] = TileKind::Mc;
+        }
+        SystemConfig {
+            width,
+            tiles,
+            noc_clock_hz: 2.5e9,
+            gpu_clock_hz: 1.5e9,
+            cpu_clock_hz: 2.5e9,
+            die_mm: 20.0,
+            flit_bytes: 16,
+            line_bytes: 64,
+            // Abstracted Maxwell SM: 128 CUDA cores/SM, 1 MAC each per clock.
+            gpu_macs_per_cycle: 128,
+            l1_bytes: 64 * 1024,
+            l2_bytes_per_mc: 1024 * 1024,
+            mc_bw_bytes_per_cycle: 10.0,
+        }
+    }
+
+    /// A small 4x4 variant (12 GPU, 2 CPU, 2 MC) for tests and the
+    /// `design_custom_noc` example.
+    pub fn small_4x4() -> Self {
+        let width = 4;
+        let mut tiles = vec![TileKind::Gpu; width * width];
+        tiles[1 * width + 1] = TileKind::Cpu;
+        tiles[2 * width + 2] = TileKind::Cpu;
+        tiles[1 * width + 2] = TileKind::Mc;
+        tiles[2 * width + 1] = TileKind::Mc;
+        SystemConfig {
+            width,
+            tiles,
+            ..SystemConfig::paper_8x8()
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn tiles_of(&self, kind: TileKind) -> Vec<usize> {
+        (0..self.tiles.len())
+            .filter(|&i| self.tiles[i] == kind)
+            .collect()
+    }
+
+    pub fn gpus(&self) -> Vec<usize> {
+        self.tiles_of(TileKind::Gpu)
+    }
+
+    pub fn cpus(&self) -> Vec<usize> {
+        self.tiles_of(TileKind::Cpu)
+    }
+
+    pub fn mcs(&self) -> Vec<usize> {
+        self.tiles_of(TileKind::Mc)
+    }
+
+    /// Tile center position in mm (row-major id).
+    pub fn pos_mm(&self, tile: usize) -> (f64, f64) {
+        let pitch = self.die_mm / self.width as f64;
+        let r = (tile / self.width) as f64;
+        let c = (tile % self.width) as f64;
+        (pitch * (c + 0.5), pitch * (r + 0.5))
+    }
+
+    /// Euclidean distance between two tile centers (mm).
+    pub fn dist_mm(&self, a: usize, b: usize) -> f64 {
+        let (ax, ay) = self.pos_mm(a);
+        let (bx, by) = self.pos_mm(b);
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    }
+
+    /// Manhattan hop distance on the grid.
+    pub fn hop_dist(&self, a: usize, b: usize) -> usize {
+        let (ar, ac) = (a / self.width, a % self.width);
+        let (br, bc) = (b / self.width, b % self.width);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Aggregate GPU MAC throughput (MACs/s) used by the compute-time model.
+    pub fn gpu_total_macs_per_sec(&self) -> f64 {
+        self.gpus().len() as f64 * self.gpu_macs_per_cycle as f64 * self.gpu_clock_hz
+    }
+
+    /// Replace the tile assignment (used by the placement optimizer).
+    pub fn with_tiles(&self, tiles: Vec<TileKind>) -> Self {
+        assert_eq!(tiles.len(), self.tiles.len());
+        SystemConfig { tiles, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_composition() {
+        let s = SystemConfig::paper_8x8();
+        assert_eq!(s.num_tiles(), 64);
+        assert_eq!(s.gpus().len(), 56);
+        assert_eq!(s.cpus().len(), 4);
+        assert_eq!(s.mcs().len(), 4);
+    }
+
+    #[test]
+    fn cpus_central_mcs_quadrants() {
+        let s = SystemConfig::paper_8x8();
+        // every CPU within 1 hop of die center rows/cols 3..4
+        for c in s.cpus() {
+            let (r, col) = (c / 8, c % 8);
+            assert!((3..=4).contains(&r) && (3..=4).contains(&col));
+        }
+        // MCs one per quadrant
+        let quads: Vec<(bool, bool)> = s
+            .mcs()
+            .iter()
+            .map(|&m| ((m / 8) < 4, (m % 8) < 4))
+            .collect();
+        let mut uniq = quads.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn geometry() {
+        let s = SystemConfig::paper_8x8();
+        let (x, y) = s.pos_mm(0);
+        assert!((x - 1.25).abs() < 1e-9 && (y - 1.25).abs() < 1e-9);
+        // opposite corners are ~17.68 mm apart (within the 20 mm WI range)
+        let d = s.dist_mm(0, 63);
+        assert!((d - (2.0f64 * 17.5 * 17.5).sqrt()).abs() < 1e-9);
+        assert_eq!(s.hop_dist(0, 63), 14);
+        assert_eq!(s.hop_dist(9, 9), 0);
+    }
+
+    #[test]
+    fn small_variant() {
+        let s = SystemConfig::small_4x4();
+        assert_eq!(s.num_tiles(), 16);
+        assert_eq!(s.cpus().len(), 2);
+        assert_eq!(s.mcs().len(), 2);
+        assert_eq!(s.gpus().len(), 12);
+    }
+}

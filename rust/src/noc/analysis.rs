@@ -1,0 +1,261 @@
+//! Analytic link-utilization model — Eqns (3)-(5) of the paper.
+//!
+//! `U_k = Σ_i Σ_j f_ij · p_ijk` with `p_ijk` from deterministic shortest-
+//! path routing (BFS with lowest-id tie-break, matching `RouteSet`'s
+//! deterministic paths). This is the objective function evaluated inside
+//! the AMOSA loop, so it is written allocation-lean: one BFS per traffic
+//! source, then one parent-walk per destination.
+
+use super::topology::Topology;
+
+/// Sparse traffic-frequency matrix `f_ij` (flits/cycle between routers).
+#[derive(Debug, Clone, Default)]
+pub struct TrafficMatrix {
+    pub n: usize,
+    /// (src, dst, flits-per-cycle), grouped by src (not required, but
+    /// `from_entries` sorts to maximize BFS reuse).
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl TrafficMatrix {
+    pub fn from_entries(n: usize, mut entries: Vec<(u32, u32, f64)>) -> Self {
+        entries.retain(|e| e.2 > 0.0 && e.0 != e.1);
+        entries.sort_by_key(|e| (e.0, e.1));
+        // merge duplicates
+        let mut merged: Vec<(u32, u32, f64)> = Vec::with_capacity(entries.len());
+        for e in entries {
+            match merged.last_mut() {
+                Some(last) if last.0 == e.0 && last.1 == e.1 => last.2 += e.2,
+                _ => merged.push(e),
+            }
+        }
+        TrafficMatrix { n, entries: merged }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.2).sum()
+    }
+
+    /// Scale all frequencies by `s` (used to sweep injection rates).
+    pub fn scaled(&self, s: f64) -> Self {
+        TrafficMatrix {
+            n: self.n,
+            entries: self.entries.iter().map(|&(a, b, f)| (a, b, f * s)).collect(),
+        }
+    }
+}
+
+/// Result of the analytic evaluation.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Expected utilization per link (flits/cycle crossing it), Eqn 3.
+    pub link_util: Vec<f64>,
+    /// Mean link utilization Ū, Eqn 4.
+    pub u_mean: f64,
+    /// Std-dev of link utilizations σ, Eqn 5.
+    pub u_std: f64,
+    /// Traffic-weighted hop count Σ f_ij·h_ij (Ū numerator).
+    pub twhc: f64,
+    /// true iff every routed pair was reachable.
+    pub connected: bool,
+}
+
+/// Scratch buffers reused across evaluations (AMOSA calls this ~10^5
+/// times). Holds a CSR copy of the adjacency (flat, cache-friendly) plus
+/// BFS state and the utilization accumulator — `analyze_with` performs no
+/// heap allocation beyond the returned `Analysis`.
+#[derive(Debug, Clone)]
+pub struct AnalysisScratch {
+    dist: Vec<u32>,
+    parent_link: Vec<u32>,
+    queue: Vec<u32>,
+    util: Vec<f64>,
+}
+
+impl AnalysisScratch {
+    pub fn new(n: usize) -> Self {
+        AnalysisScratch {
+            dist: vec![0; n],
+            parent_link: vec![0; n],
+            queue: Vec::with_capacity(n),
+            util: Vec::new(),
+        }
+    }
+}
+
+/// Objective-only summary (no per-link vector) for the optimizer loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectiveSummary {
+    pub u_mean: f64,
+    pub u_std: f64,
+    pub twhc: f64,
+    pub connected: bool,
+}
+
+/// Evaluate Eqns (3)-(5) for `topo` under `traffic`.
+pub fn analyze(topo: &Topology, traffic: &TrafficMatrix) -> Analysis {
+    let mut scratch = AnalysisScratch::new(topo.n);
+    analyze_with(topo, traffic, &mut scratch)
+}
+
+pub fn analyze_with(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    scratch: &mut AnalysisScratch,
+) -> Analysis {
+    let s = analyze_objectives(topo, traffic, scratch);
+    Analysis {
+        link_util: scratch.util.clone(),
+        u_mean: s.u_mean,
+        u_std: s.u_std,
+        twhc: s.twhc,
+        connected: s.connected,
+    }
+}
+
+/// Allocation-free evaluation; per-link utilizations stay in `scratch`.
+pub fn analyze_objectives(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    scratch: &mut AnalysisScratch,
+) -> ObjectiveSummary {
+    let nl = topo.links.len();
+    scratch.util.clear();
+    scratch.util.resize(nl, 0.0);
+    let mut twhc = 0.0;
+    let mut connected = true;
+
+    let mut idx = 0;
+    let entries = &traffic.entries;
+    while idx < entries.len() {
+        let src = entries[idx].0;
+        // BFS once per source; deterministic lowest-id tie-break comes from
+        // adjacency order (stable across identical topologies).
+        bfs(topo, src as usize, scratch);
+        while idx < entries.len() && entries[idx].0 == src {
+            let (_, dst, f) = entries[idx];
+            idx += 1;
+            if scratch.dist[dst as usize] == u32::MAX {
+                connected = false;
+                continue;
+            }
+            twhc += f * scratch.dist[dst as usize] as f64;
+            // walk dst -> src along parent links
+            let mut cur = dst as usize;
+            while cur != src as usize {
+                let l = scratch.parent_link[cur] as usize;
+                scratch.util[l] += f;
+                let link = &topo.links[l];
+                cur = if link.a == cur { link.b } else { link.a };
+            }
+        }
+    }
+
+    let u_mean = if nl == 0 { 0.0 } else { scratch.util.iter().sum::<f64>() / nl as f64 };
+    let var = if nl == 0 {
+        0.0
+    } else {
+        scratch
+            .util
+            .iter()
+            .map(|u| (u - u_mean) * (u - u_mean))
+            .sum::<f64>()
+            / nl as f64
+    };
+    ObjectiveSummary { u_mean, u_std: var.sqrt(), twhc, connected }
+}
+
+fn bfs(topo: &Topology, src: usize, s: &mut AnalysisScratch) {
+    s.dist.clear();
+    s.dist.resize(topo.n, u32::MAX);
+    s.parent_link.clear();
+    s.parent_link.resize(topo.n, u32::MAX);
+    s.queue.clear();
+    s.dist[src] = 0;
+    s.queue.push(src as u32);
+    let mut head = 0;
+    while head < s.queue.len() {
+        let r = s.queue[head] as usize;
+        head += 1;
+        let d = s.dist[r] + 1;
+        for &(nbr, link) in topo.neighbors(r) {
+            if s.dist[nbr] == u32::MAX {
+                s.dist[nbr] = d;
+                s.parent_link[nbr] = link as u32;
+                s.queue.push(nbr as u32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    fn line3() -> Topology {
+        // 0 - 1 - 2
+        let mut t = Topology::new(3);
+        t.add_link(0, 1, 2.5);
+        t.add_link(1, 2, 2.5);
+        t
+    }
+
+    #[test]
+    fn single_flow_utilization() {
+        let t = line3();
+        let tm = TrafficMatrix::from_entries(3, vec![(0, 2, 0.5)]);
+        let a = analyze(&t, &tm);
+        assert!(a.connected);
+        assert_eq!(a.link_util, vec![0.5, 0.5]);
+        assert!((a.twhc - 1.0).abs() < 1e-12); // 0.5 * 2 hops
+        assert!((a.u_mean - 0.5).abs() < 1e-12);
+        assert!(a.u_std.abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetric_flows() {
+        let t = line3();
+        let tm = TrafficMatrix::from_entries(3, vec![(0, 1, 1.0), (2, 1, 3.0)]);
+        let a = analyze(&t, &tm);
+        assert_eq!(a.link_util, vec![1.0, 3.0]);
+        assert!((a.u_mean - 2.0).abs() < 1e-12);
+        assert!((a.u_std - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_entries_merged() {
+        let tm = TrafficMatrix::from_entries(3, vec![(0, 2, 0.25), (0, 2, 0.25)]);
+        assert_eq!(tm.entries.len(), 1);
+        assert!((tm.total() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_and_zero_traffic_dropped() {
+        let tm = TrafficMatrix::from_entries(3, vec![(1, 1, 9.0), (0, 2, 0.0)]);
+        assert!(tm.entries.is_empty());
+    }
+
+    #[test]
+    fn disconnection_reported() {
+        let mut t = line3();
+        t.remove_link(1); // cut 1-2
+        let tm = TrafficMatrix::from_entries(3, vec![(0, 2, 1.0)]);
+        assert!(!analyze(&t, &tm).connected);
+    }
+
+    #[test]
+    fn mesh_twhc_matches_manhattan() {
+        let sys = SystemConfig::paper_8x8();
+        let t = Topology::mesh(&sys);
+        let tm = TrafficMatrix::from_entries(64, vec![(0, 63, 2.0), (8, 10, 1.0)]);
+        let a = analyze(&t, &tm);
+        assert!((a.twhc - (2.0 * 14.0 + 1.0 * 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled() {
+        let tm = TrafficMatrix::from_entries(3, vec![(0, 2, 1.0)]).scaled(0.25);
+        assert!((tm.total() - 0.25).abs() < 1e-12);
+    }
+}

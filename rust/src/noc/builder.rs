@@ -1,0 +1,290 @@
+//! NoC instance builders — the four architectures the paper compares:
+//!
+//! * `mesh_opt`   — mesh with AMOSA-optimized CPU/MC placement, XY or
+//!   XY+YX routing (§5.2 baseline).
+//! * `het_noc`    — AMOSA-optimized irregular wireline topology; long
+//!   links are pipelined metal wires (§5.4's wireline-only ablation).
+//! * `wi_het_noc` — the same wireline optimization + wireless overlay:
+//!   dedicated CPU-MC channel 0, `n_wi` GPU-MC WIs on the remaining
+//!   channels, ALASH routing (§4.2).
+
+use super::analysis::TrafficMatrix;
+use super::routing::RouteSet;
+use super::topology::Topology;
+use super::wireless::WirelessSpec;
+use crate::model::{SystemConfig, TileKind};
+use crate::optim::amosa::{Amosa, AmosaConfig};
+use crate::optim::linkplace::LinkPlacement;
+use crate::optim::wiplace::build_wireless;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NocKind {
+    MeshXy,
+    MeshXyYx,
+    HetNoc,
+    WiHetNoc,
+}
+
+impl NocKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NocKind::MeshXy => "mesh_xy",
+            NocKind::MeshXyYx => "mesh_opt",
+            NocKind::HetNoc => "hetnoc",
+            NocKind::WiHetNoc => "wihetnoc",
+        }
+    }
+}
+
+/// A fully-built NoC ready for simulation.
+#[derive(Clone)]
+pub struct NocInstance {
+    pub kind: NocKind,
+    pub topo: Topology,
+    pub routes: RouteSet,
+    pub air: WirelessSpec,
+}
+
+/// Design-space knobs for the irregular architectures.
+#[derive(Debug, Clone)]
+pub struct DesignConfig {
+    /// Router port bound (paper optimum: 6).
+    pub k_max: usize,
+    /// GPU-MC wireless interfaces (paper optimum: 24).
+    pub n_wi: usize,
+    /// GPU-MC channels (paper optimum: 4; +1 dedicated CPU channel).
+    pub gpu_channels: usize,
+    /// Wireline link reach bound for the WiHetNoC design (§4.2.3: the
+    /// longest links are made wireless). `None` in the HetNoC ablation.
+    pub max_link_mm: Option<f64>,
+    /// AMOSA effort for the wireline optimization.
+    pub amosa: AmosaConfig,
+    pub seed: u64,
+}
+
+impl Default for DesignConfig {
+    fn default() -> Self {
+        DesignConfig {
+            k_max: 6,
+            n_wi: 24,
+            gpu_channels: 4,
+            max_link_mm: Some(7.6),
+            amosa: AmosaConfig {
+                initial_temp: 60.0,
+                final_temp: 0.05,
+                cooling: 0.88,
+                iters_per_temp: 400,
+                ..Default::default()
+            },
+            seed: 0xC0DE,
+        }
+    }
+}
+
+impl DesignConfig {
+    /// Low-effort variant for unit tests and smoke runs.
+    pub fn quick(seed: u64) -> Self {
+        DesignConfig {
+            amosa: AmosaConfig {
+                initial_temp: 30.0,
+                final_temp: 0.5,
+                cooling: 0.8,
+                iters_per_temp: 200,
+                seed,
+                ..Default::default()
+            },
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// Optimized mesh: XY or XY+YX routing over the standard mesh. The CPU/MC
+/// placement is the caller's `sys` (use `optim::optimize_placement` to
+/// derive the §5.2 placement).
+pub fn mesh_opt(sys: &SystemConfig, adaptive: bool) -> NocInstance {
+    let topo = Topology::mesh(sys);
+    let routes = if adaptive {
+        RouteSet::xy_yx(sys, &topo)
+    } else {
+        RouteSet::xy(sys, &topo)
+    };
+    NocInstance {
+        kind: if adaptive { NocKind::MeshXyYx } else { NocKind::MeshXy },
+        topo,
+        routes,
+        air: WirelessSpec::new(0),
+    }
+}
+
+/// Run the Eqn 6-9 wireline optimization and return the chosen topology.
+pub fn optimize_wireline(
+    sys: &SystemConfig,
+    traffic: &TrafficMatrix,
+    cfg: &DesignConfig,
+) -> Topology {
+    let num_links = Topology::mesh(sys).links.len();
+    let problem = LinkPlacement::new(sys, traffic, num_links, cfg.k_max)
+        .with_max_link_mm(cfg.max_link_mm);
+    let mut amosa_cfg = cfg.amosa.clone();
+    amosa_cfg.seed = cfg.seed;
+    let mut opt = Amosa::new(&problem, amosa_cfg);
+    opt.run();
+    // Balanced scalarization over (Ū, σ): the per-k_max EDP choice happens
+    // in the Fig 11 experiment; here we return the balanced knee point.
+    let best = opt.best_by(&[1.0, 1.0]);
+    problem.build_topology(&best.sol)
+}
+
+/// Wireline-only application-specific NoC (HetNoC): same design flow but
+/// the long-range shortcuts stay as pipelined metal wires (§5.4).
+pub fn het_noc(sys: &SystemConfig, traffic: &TrafficMatrix, cfg: &DesignConfig) -> NocInstance {
+    let cfg = DesignConfig { max_link_mm: None, ..cfg.clone() };
+    let topo = optimize_wireline(sys, traffic, &cfg);
+    let routes = RouteSet::shortest(&topo, Some(traffic));
+    NocInstance { kind: NocKind::HetNoc, topo, routes, air: WirelessSpec::new(0) }
+}
+
+/// The full WiHetNoC: optimized wireline + wireless overlay + ALASH.
+pub fn wi_het_noc(sys: &SystemConfig, traffic: &TrafficMatrix, cfg: &DesignConfig) -> NocInstance {
+    let topo = optimize_wireline(sys, traffic, cfg);
+    wi_het_noc_on(sys, traffic, cfg, topo)
+}
+
+/// WiHetNoC assembly on a given wireline topology (lets experiments reuse
+/// one expensive wireline optimization across WI-count sweeps).
+pub fn wi_het_noc_on(
+    sys: &SystemConfig,
+    traffic: &TrafficMatrix,
+    cfg: &DesignConfig,
+    topo: Topology,
+) -> NocInstance {
+    let air = build_wireless(
+        &topo,
+        traffic,
+        &sys.cpus(),
+        &sys.mcs(),
+        cfg.n_wi,
+        cfg.gpu_channels,
+    );
+    let routes = alash_routes(sys, &topo, &air, traffic);
+    NocInstance { kind: NocKind::WiHetNoc, topo, routes, air }
+}
+
+/// ALASH route construction with the paper's channel policy: CPU<->MC
+/// pairs ride the dedicated channel 0; everything else uses the GPU
+/// channels.
+pub fn alash_routes(
+    sys: &SystemConfig,
+    topo: &Topology,
+    air: &WirelessSpec,
+    traffic: &TrafficMatrix,
+) -> RouteSet {
+    let tiles = sys.tiles.clone();
+    let tiles2 = sys.tiles.clone();
+    let gpu_channels: Vec<usize> = (1..air.num_channels).collect();
+    let is_cpu_mc = move |s: usize, d: usize| {
+        matches!(
+            (tiles2[s], tiles2[d]),
+            (TileKind::Cpu, TileKind::Mc) | (TileKind::Mc, TileKind::Cpu)
+        )
+    };
+    RouteSet::alash_with(
+        topo,
+        air,
+        Some(traffic),
+        move |s, d| {
+            let pair = (tiles[s], tiles[d]);
+            match pair {
+                (TileKind::Cpu, TileKind::Mc) | (TileKind::Mc, TileKind::Cpu) => vec![0],
+                _ => gpu_channels.clone(),
+            }
+        },
+        // dedicated channel: CPU-MC always rides wireless (QoS isolation)
+        is_cpu_mc,
+        5,
+    )
+}
+
+/// Test/smoke helper: WiHetNoC with a tiny AMOSA budget and a generic
+/// many-to-few traffic matrix.
+pub fn wi_het_noc_quick(sys: &SystemConfig, seed: u64) -> NocInstance {
+    let tm = generic_many_to_few(sys);
+    wi_het_noc(sys, &tm, &DesignConfig::quick(seed))
+}
+
+/// Placeholder many-to-few matrix (uniform GPU<->MC + CPU<->MC) for tests
+/// that do not need the CNN-derived traffic.
+pub fn generic_many_to_few(sys: &SystemConfig) -> TrafficMatrix {
+    let mut e = Vec::new();
+    for &g in &sys.gpus() {
+        for &m in &sys.mcs() {
+            e.push((g as u32, m as u32, 0.002));
+            e.push((m as u32, g as u32, 0.006));
+        }
+    }
+    for &c in &sys.cpus() {
+        for &m in &sys.mcs() {
+            e.push((c as u32, m as u32, 0.001));
+            e.push((m as u32, c as u32, 0.002));
+        }
+    }
+    TrafficMatrix::from_entries(sys.num_tiles(), e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::routing::RoutingKind;
+    use crate::noc::analysis::analyze;
+    use crate::noc::routing::verify_lash;
+
+    #[test]
+    fn mesh_instances() {
+        let sys = SystemConfig::paper_8x8();
+        let xy = mesh_opt(&sys, false);
+        let ad = mesh_opt(&sys, true);
+        assert_eq!(xy.kind, NocKind::MeshXy);
+        assert_eq!(ad.routes.kind, RoutingKind::XyYx);
+        assert!(xy.air.is_empty());
+    }
+
+    #[test]
+    fn hetnoc_respects_constraints_and_beats_mesh() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = generic_many_to_few(&sys);
+        let cfg = DesignConfig::quick(7);
+        let inst = het_noc(&sys, &tm, &cfg);
+        assert!(inst.topo.is_connected());
+        assert_eq!(inst.topo.links.len(), 112);
+        assert!(inst.topo.k_max() <= cfg.k_max);
+        let mesh = Topology::mesh(&sys);
+        let (a_het, a_mesh) = (analyze(&inst.topo, &tm), analyze(&mesh, &tm));
+        assert!(a_het.u_mean < a_mesh.u_mean, "{} vs {}", a_het.u_mean, a_mesh.u_mean);
+    }
+
+    #[test]
+    fn wihetnoc_full_assembly() {
+        let sys = SystemConfig::paper_8x8();
+        let inst = wi_het_noc_quick(&sys, 9);
+        assert_eq!(inst.kind, NocKind::WiHetNoc);
+        // 4 CPU + 4 MC WIs on channel 0 + 24 GPU WIs
+        assert_eq!(inst.air.wis.len(), 8 + 24);
+        assert_eq!(inst.air.num_channels, 5);
+        // every CPU-MC pair has a single-hop air path on channel 0
+        for &c in &sys.cpus() {
+            for &m in &sys.mcs() {
+                let p = inst.routes.air_path(c, m);
+                assert!(p.is_some(), "CPU {c} -> MC {m} missing air path");
+            }
+        }
+        verify_lash(&inst.topo, &inst.routes).unwrap();
+    }
+
+    #[test]
+    fn wihetnoc_air_coverage_positive() {
+        let sys = SystemConfig::paper_8x8();
+        let inst = wi_het_noc_quick(&sys, 21);
+        assert!(inst.routes.air_coverage() > 0.05);
+    }
+}

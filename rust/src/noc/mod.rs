@@ -1,0 +1,17 @@
+//! Network-on-Chip substrate: topologies, routing (XY / XY+YX / LASH /
+//! ALASH), the mm-wave wireless overlay with its distributed MAC, the
+//! cycle-level simulator, and analytic link-utilization analysis (Eqns 3-5).
+
+pub mod analysis;
+pub mod builder;
+pub mod routing;
+pub mod sim;
+pub mod topology;
+pub mod wireless;
+
+pub use analysis::{analyze, Analysis};
+pub use builder::{het_noc, mesh_opt, wi_het_noc, NocInstance, NocKind};
+pub use routing::{Path, RouteSet, RoutingKind};
+pub use sim::{Message, MsgClass, NocSim, SimConfig, SimReport};
+pub use topology::{LinkId, Topology};
+pub use wireless::{WirelessSpec, Wi};

@@ -1,0 +1,264 @@
+//! Wireline topology graph: routers + bidirectional links with physical
+//! lengths, plus the constraint checks from the optimization formulation
+//! (Eqns 7-9): average/maximum router port count and full connectivity.
+
+use crate::model::SystemConfig;
+
+pub type LinkId = usize;
+
+/// A bidirectional wireline link between routers `a` and `b`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    /// Physical length in mm (Euclidean between tile centers).
+    pub length_mm: f64,
+    /// Traversal delay in NoC cycles. Short (neighbor) wires take 1 cycle;
+    /// long wires are pipelined at ~2.5 mm/cycle (HetNoC's repeated wires).
+    pub delay_cycles: u64,
+}
+
+/// Wireline connectivity graph over `n` routers.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n: usize,
+    pub links: Vec<Link>,
+    /// adjacency: per router, (neighbor, link id)
+    adj: Vec<Vec<(usize, LinkId)>>,
+}
+
+/// Wire pipeline reach per cycle (mm) at the 2.5 GHz NoC clock — repeated
+/// global wires at 28 nm do roughly 2-3 mm per 400 ps cycle.
+pub const MM_PER_CYCLE: f64 = 2.5;
+
+pub fn wire_delay_cycles(length_mm: f64) -> u64 {
+    ((length_mm / MM_PER_CYCLE).ceil() as u64).max(1)
+}
+
+impl Topology {
+    pub fn new(n: usize) -> Self {
+        Topology { n, links: Vec::new(), adj: vec![Vec::new(); n] }
+    }
+
+    /// Build from an explicit undirected edge list with geometry from `sys`.
+    pub fn from_edges(sys: &SystemConfig, edges: &[(usize, usize)]) -> Self {
+        let mut t = Topology::new(sys.num_tiles());
+        for &(a, b) in edges {
+            t.add_link_with_geometry(sys, a, b);
+        }
+        t
+    }
+
+    /// 2D mesh over the system grid (the baseline NoC).
+    pub fn mesh(sys: &SystemConfig) -> Self {
+        let w = sys.width;
+        let mut t = Topology::new(sys.num_tiles());
+        for r in 0..w {
+            for c in 0..w {
+                let id = r * w + c;
+                if c + 1 < w {
+                    t.add_link_with_geometry(sys, id, id + 1);
+                }
+                if r + 1 < w {
+                    t.add_link_with_geometry(sys, id, id + w);
+                }
+            }
+        }
+        t
+    }
+
+    pub fn add_link_with_geometry(&mut self, sys: &SystemConfig, a: usize, b: usize) -> LinkId {
+        let len = sys.dist_mm(a, b);
+        self.add_link(a, b, len)
+    }
+
+    pub fn add_link(&mut self, a: usize, b: usize, length_mm: f64) -> LinkId {
+        assert!(a != b, "self-link {a}");
+        assert!(a < self.n && b < self.n);
+        debug_assert!(!self.has_link(a, b), "duplicate link {a}-{b}");
+        let id = self.links.len();
+        self.links.push(Link { a, b, length_mm, delay_cycles: wire_delay_cycles(length_mm) });
+        self.adj[a].push((b, id));
+        self.adj[b].push((a, id));
+        id
+    }
+
+    /// Remove link by id (swap-remove; the moved link's id changes to `id`).
+    pub fn remove_link(&mut self, id: LinkId) {
+        let last = self.links.len() - 1;
+        let doomed = self.links[id];
+        self.adj[doomed.a].retain(|&(_, l)| l != id);
+        self.adj[doomed.b].retain(|&(_, l)| l != id);
+        if id != last {
+            let moved = self.links[last];
+            for &(r, old) in &[(moved.a, last), (moved.b, last)] {
+                let _ = old;
+                for e in self.adj[r].iter_mut() {
+                    if e.1 == last {
+                        e.1 = id;
+                    }
+                }
+            }
+            self.links[id] = moved;
+        }
+        self.links.pop();
+    }
+
+    pub fn has_link(&self, a: usize, b: usize) -> bool {
+        self.adj[a].iter().any(|&(nbr, _)| nbr == b)
+    }
+
+    pub fn link_between(&self, a: usize, b: usize) -> Option<LinkId> {
+        self.adj[a].iter().find(|&&(nbr, _)| nbr == b).map(|&(_, l)| l)
+    }
+
+    pub fn neighbors(&self, r: usize) -> &[(usize, LinkId)] {
+        &self.adj[r]
+    }
+
+    /// Inter-tile port count of router `r` (k_r in Eqn 8).
+    pub fn degree(&self, r: usize) -> usize {
+        self.adj[r].len()
+    }
+
+    /// Average port count (k_avg, Eqn 7).
+    pub fn k_avg(&self) -> f64 {
+        2.0 * self.links.len() as f64 / self.n as f64
+    }
+
+    /// Maximum port count (k_max, Eqn 8).
+    pub fn k_max(&self) -> usize {
+        (0..self.n).map(|r| self.degree(r)).max().unwrap_or(0)
+    }
+
+    /// Eqn 9: path exists between every pair.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(r) = stack.pop() {
+            for &(nbr, _) in &self.adj[r] {
+                if !seen[nbr] {
+                    seen[nbr] = true;
+                    count += 1;
+                    stack.push(nbr);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// BFS hop distances from `src` (u32::MAX if unreachable).
+    pub fn bfs_hops(&self, src: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.n];
+        let mut q = std::collections::VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(r) = q.pop_front() {
+            for &(nbr, _) in &self.adj[r] {
+                if dist[nbr] == u32::MAX {
+                    dist[nbr] = dist[r] + 1;
+                    q.push_back(nbr);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Minimum hop count between a pair (h_ij in Eqn 4).
+    pub fn hops(&self, a: usize, b: usize) -> u32 {
+        self.bfs_hops(a)[b]
+    }
+
+    /// Router pipeline depth: 3 stages, +1 output-arbitration stage for
+    /// routers with more than four inter-tile ports (§5, experimental setup).
+    pub fn router_delay(&self, r: usize) -> u64 {
+        if self.degree(r) > 4 { 4 } else { 3 }
+    }
+
+    /// Undirected edge list (for serialization / optimizer state).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        self.links.iter().map(|l| (l.a, l.b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    #[test]
+    fn mesh_link_count() {
+        let sys = SystemConfig::paper_8x8();
+        let t = Topology::mesh(&sys);
+        assert_eq!(t.links.len(), 2 * 7 * 8); // 112
+        assert!((t.k_avg() - 3.5).abs() < 1e-12);
+        assert_eq!(t.k_max(), 4);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn mesh_hops_match_manhattan() {
+        let sys = SystemConfig::paper_8x8();
+        let t = Topology::mesh(&sys);
+        for &(a, b) in &[(0usize, 63usize), (5, 40), (7, 56), (9, 9)] {
+            assert_eq!(t.hops(a, b) as usize, sys.hop_dist(a, b));
+        }
+    }
+
+    #[test]
+    fn add_remove_roundtrip() {
+        let sys = SystemConfig::paper_8x8();
+        let mut t = Topology::mesh(&sys);
+        let before = t.links.len();
+        let id = t.add_link_with_geometry(&sys, 0, 63);
+        assert!(t.has_link(0, 63));
+        assert_eq!(t.hops(0, 63), 1);
+        t.remove_link(id);
+        assert_eq!(t.links.len(), before);
+        assert!(!t.has_link(0, 63));
+        // adjacency still sane after swap-remove
+        for (li, l) in t.links.iter().enumerate() {
+            assert!(t.neighbors(l.a).iter().any(|&(n, i)| n == l.b && i == li));
+            assert!(t.neighbors(l.b).iter().any(|&(n, i)| n == l.a && i == li));
+        }
+    }
+
+    #[test]
+    fn disconnect_detected() {
+        let sys = SystemConfig::small_4x4();
+        let mut t = Topology::mesh(&sys);
+        // cut tile 0 off (it has exactly 2 links in the corner)
+        while t.degree(0) > 0 {
+            let id = t.neighbors(0)[0].1;
+            t.remove_link(id);
+        }
+        assert!(!t.is_connected());
+        assert_eq!(t.hops(0, 5), u32::MAX);
+    }
+
+    #[test]
+    fn long_wire_pipeline_stages() {
+        assert_eq!(wire_delay_cycles(2.5), 1);
+        assert_eq!(wire_delay_cycles(2.6), 2);
+        assert_eq!(wire_delay_cycles(17.7), 8);
+        // neighbor links on the 8x8 die are 2.5mm -> single cycle
+        let sys = SystemConfig::paper_8x8();
+        let t = Topology::mesh(&sys);
+        assert!(t.links.iter().all(|l| l.delay_cycles == 1));
+    }
+
+    #[test]
+    fn router_delay_extra_stage() {
+        let sys = SystemConfig::paper_8x8();
+        let mut t = Topology::mesh(&sys);
+        assert_eq!(t.router_delay(27), 3);
+        t.add_link_with_geometry(&sys, 27, 0);
+        // 27 is interior: 4 mesh ports + 1 = 5 -> extra stage
+        assert_eq!(t.router_delay(27), 4);
+    }
+}

@@ -1,0 +1,357 @@
+//! AMOSA — Archived Multi-Objective Simulated Annealing
+//! (Bandyopadhyay, Saha, Maulik, Deb [43]).
+//!
+//! Generic over a `Problem` (solution type + objective vector + perturb).
+//! The archive keeps mutually non-dominating solutions; acceptance of a
+//! perturbed solution follows the paper's amount-of-domination rule:
+//!
+//!   Δdom(a, b) = Π_i |f_i(a) - f_i(b)| / R_i   over objectives where they
+//!   differ, with R_i the objective range observed in the archive.
+//!
+//! All objectives are minimized. When the archive exceeds `hard_limit` it
+//! is thinned to `soft_limit` by greedy nearest-pair clustering in
+//! objective space.
+
+use crate::util::rng::Rng;
+
+/// A multi-objective optimization problem. Objectives are minimized.
+pub trait Problem {
+    type Sol: Clone;
+
+    /// Number of objectives (constant).
+    fn num_objectives(&self) -> usize;
+
+    /// Evaluate the objective vector.
+    fn objectives(&self, sol: &Self::Sol) -> Vec<f64>;
+
+    /// Produce a random feasible neighbor.
+    fn perturb(&self, sol: &Self::Sol, rng: &mut Rng) -> Self::Sol;
+
+    /// A random feasible starting solution.
+    fn initial(&self, rng: &mut Rng) -> Self::Sol;
+}
+
+#[derive(Debug, Clone)]
+pub struct AmosaConfig {
+    pub initial_temp: f64,
+    pub final_temp: f64,
+    /// Geometric cooling factor per temperature level.
+    pub cooling: f64,
+    /// Perturbations per temperature level.
+    pub iters_per_temp: usize,
+    pub soft_limit: usize,
+    pub hard_limit: usize,
+    pub seed: u64,
+}
+
+impl Default for AmosaConfig {
+    fn default() -> Self {
+        AmosaConfig {
+            initial_temp: 100.0,
+            final_temp: 0.01,
+            cooling: 0.9,
+            iters_per_temp: 500,
+            soft_limit: 24,
+            hard_limit: 36,
+            seed: 0xA05A,
+        }
+    }
+}
+
+/// An archived solution with its objective vector.
+#[derive(Debug, Clone)]
+pub struct Archived<S> {
+    pub sol: S,
+    pub obj: Vec<f64>,
+}
+
+/// `a` dominates `b` (all objectives <=, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+pub struct Amosa<'p, P: Problem> {
+    pub problem: &'p P,
+    pub cfg: AmosaConfig,
+    pub archive: Vec<Archived<P::Sol>>,
+    pub evaluations: u64,
+}
+
+impl<'p, P: Problem> Amosa<'p, P> {
+    pub fn new(problem: &'p P, cfg: AmosaConfig) -> Self {
+        Amosa { problem, cfg, archive: Vec::new(), evaluations: 0 }
+    }
+
+    /// Run the full annealing schedule; returns the final archive (the
+    /// near-Pareto front).
+    pub fn run(&mut self) -> &[Archived<P::Sol>] {
+        let mut rng = Rng::new(self.cfg.seed);
+        // Seed archive with a few random solutions.
+        for _ in 0..self.cfg.soft_limit.min(8) {
+            let s = self.problem.initial(&mut rng);
+            let o = self.eval(&s);
+            self.add_to_archive(Archived { sol: s, obj: o });
+        }
+        let mut current = self.archive[rng.below(self.archive.len())].clone();
+
+        let mut temp = self.cfg.initial_temp;
+        while temp > self.cfg.final_temp {
+            for _ in 0..self.cfg.iters_per_temp {
+                let cand_sol = self.problem.perturb(&current.sol, &mut rng);
+                let cand = Archived { obj: self.eval(&cand_sol), sol: cand_sol };
+                current = self.step(current, cand, temp, &mut rng);
+            }
+            temp *= self.cfg.cooling;
+        }
+        &self.archive
+    }
+
+    fn eval(&mut self, s: &P::Sol) -> Vec<f64> {
+        self.evaluations += 1;
+        self.problem.objectives(s)
+    }
+
+    /// One AMOSA acceptance step; returns the (possibly new) current point.
+    fn step(
+        &mut self,
+        current: Archived<P::Sol>,
+        cand: Archived<P::Sol>,
+        temp: f64,
+        rng: &mut Rng,
+    ) -> Archived<P::Sol> {
+        let ranges = self.objective_ranges();
+        if dominates(&current.obj, &cand.obj) {
+            // current (and possibly archive members) dominate the candidate:
+            // accept with probability from average amount-of-domination.
+            let mut dom_sum = delta_dom(&current.obj, &cand.obj, &ranges);
+            let mut k = 1;
+            for a in &self.archive {
+                if dominates(&a.obj, &cand.obj) {
+                    dom_sum += delta_dom(&a.obj, &cand.obj, &ranges);
+                    k += 1;
+                }
+            }
+            let avg = dom_sum / k as f64;
+            let p = 1.0 / (1.0 + (avg * temp).exp());
+            if rng.chance(p) {
+                cand
+            } else {
+                current
+            }
+        } else if dominates(&cand.obj, &current.obj) {
+            // candidate dominates current: accept; archive-dominance decides
+            // whether it also enters the archive.
+            self.add_to_archive(cand.clone());
+            cand
+        } else {
+            // mutually non-dominating w.r.t. current.
+            let dominated_by_archive = self
+                .archive
+                .iter()
+                .filter(|a| dominates(&a.obj, &cand.obj))
+                .count();
+            if dominated_by_archive > 0 {
+                let avg = self
+                    .archive
+                    .iter()
+                    .filter(|a| dominates(&a.obj, &cand.obj))
+                    .map(|a| delta_dom(&a.obj, &cand.obj, &ranges))
+                    .sum::<f64>()
+                    / dominated_by_archive as f64;
+                let p = 1.0 / (1.0 + (avg * temp).exp());
+                if rng.chance(p) {
+                    cand
+                } else {
+                    current
+                }
+            } else {
+                self.add_to_archive(cand.clone());
+                cand
+            }
+        }
+    }
+
+    fn objective_ranges(&self) -> Vec<f64> {
+        let m = self.problem.num_objectives();
+        let mut lo = vec![f64::INFINITY; m];
+        let mut hi = vec![f64::NEG_INFINITY; m];
+        for a in &self.archive {
+            for i in 0..m {
+                lo[i] = lo[i].min(a.obj[i]);
+                hi[i] = hi[i].max(a.obj[i]);
+            }
+        }
+        (0..m).map(|i| (hi[i] - lo[i]).max(1e-12)).collect()
+    }
+
+    /// Insert and keep the archive mutually non-dominating.
+    pub fn add_to_archive(&mut self, cand: Archived<P::Sol>) {
+        if self
+            .archive
+            .iter()
+            .any(|a| dominates(&a.obj, &cand.obj) || a.obj == cand.obj)
+        {
+            return;
+        }
+        self.archive.retain(|a| !dominates(&cand.obj, &a.obj));
+        self.archive.push(cand);
+        if self.archive.len() > self.cfg.hard_limit {
+            self.cluster_to(self.cfg.soft_limit);
+        }
+    }
+
+    /// Greedy clustering: repeatedly merge the closest pair (in normalized
+    /// objective space), keeping the member closer to the pair centroid.
+    fn cluster_to(&mut self, target: usize) {
+        let ranges = self.objective_ranges();
+        while self.archive.len() > target {
+            let mut best = (0usize, 1usize, f64::INFINITY);
+            for i in 0..self.archive.len() {
+                for j in (i + 1)..self.archive.len() {
+                    let d = dist(&self.archive[i].obj, &self.archive[j].obj, &ranges);
+                    if d < best.2 {
+                        best = (i, j, d);
+                    }
+                }
+            }
+            // drop the member of the closest pair with the more crowded
+            // neighborhood (approximate: drop j)
+            self.archive.swap_remove(best.1);
+        }
+    }
+
+    /// Best archive member by scalarization weight `w` over objectives.
+    pub fn best_by(&self, w: &[f64]) -> &Archived<P::Sol> {
+        self.archive
+            .iter()
+            .min_by(|a, b| {
+                let sa: f64 = a.obj.iter().zip(w).map(|(o, w)| o * w).sum();
+                let sb: f64 = b.obj.iter().zip(w).map(|(o, w)| o * w).sum();
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .expect("archive nonempty")
+    }
+}
+
+fn delta_dom(a: &[f64], b: &[f64], ranges: &[f64]) -> f64 {
+    let mut prod = 1.0;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).abs() / ranges[i];
+        if d > 0.0 {
+            prod *= d;
+        }
+    }
+    prod
+}
+
+fn dist(a: &[f64], b: &[f64], ranges: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .zip(ranges)
+        .map(|((x, y), r)| ((x - y) / r).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy biobjective problem: minimize (x^2, (x-2)^2) over x in [-5, 5];
+    /// Pareto front is x in [0, 2].
+    struct Toy;
+
+    impl Problem for Toy {
+        type Sol = f64;
+
+        fn num_objectives(&self) -> usize {
+            2
+        }
+
+        fn objectives(&self, x: &f64) -> Vec<f64> {
+            vec![x * x, (x - 2.0) * (x - 2.0)]
+        }
+
+        fn perturb(&self, x: &f64, rng: &mut Rng) -> f64 {
+            (x + (rng.f64() - 0.5)).clamp(-5.0, 5.0)
+        }
+
+        fn initial(&self, rng: &mut Rng) -> f64 {
+            rng.f64() * 10.0 - 5.0
+        }
+    }
+
+    #[test]
+    fn dominance() {
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn archive_stays_nondominated() {
+        let p = Toy;
+        let mut a = Amosa::new(&p, AmosaConfig { iters_per_temp: 50, ..Default::default() });
+        a.run();
+        for i in 0..a.archive.len() {
+            for j in 0..a.archive.len() {
+                if i != j {
+                    assert!(!dominates(&a.archive[i].obj, &a.archive[j].obj));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converges_to_pareto_front() {
+        let p = Toy;
+        let mut a = Amosa::new(&p, AmosaConfig::default());
+        a.run();
+        assert!(!a.archive.is_empty());
+        // all archive solutions should sit near [0, 2]
+        for m in &a.archive {
+            assert!(
+                (-0.25..=2.25).contains(&m.sol),
+                "solution {} not near Pareto set",
+                m.sol
+            );
+        }
+        // the extremes should be approached
+        let best0 = a.best_by(&[1.0, 0.0]);
+        assert!(best0.obj[0] < 0.1, "min f0 {:?}", best0.obj);
+        let best1 = a.best_by(&[0.0, 1.0]);
+        assert!(best1.obj[1] < 0.1, "min f1 {:?}", best1.obj);
+    }
+
+    #[test]
+    fn hard_limit_respected() {
+        let p = Toy;
+        let cfg = AmosaConfig { soft_limit: 5, hard_limit: 8, ..Default::default() };
+        let mut a = Amosa::new(&p, cfg);
+        a.run();
+        assert!(a.archive.len() <= 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = Toy;
+        let run = |seed| {
+            let mut a = Amosa::new(
+                &p,
+                AmosaConfig { seed, iters_per_temp: 20, ..Default::default() },
+            );
+            a.run();
+            a.archive.iter().map(|m| m.sol).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

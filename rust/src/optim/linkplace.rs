@@ -1,0 +1,230 @@
+//! Irregular wireline link placement — the constrained MOO of §4.2.1-4.2.2
+//! (Eqns 6-9): choose `L` undirected links over `R` routers minimizing
+//! (Ū, σ) under k_avg / k_max / connectivity constraints.
+//!
+//! Solutions are edge lists; perturbation rewires one random link to a new
+//! feasible endpoint pair (preserving L, the port bounds, and
+//! connectivity). Objective evaluation is the analytic Eqn 3-5 model in
+//! `noc::analysis`, sharing scratch buffers across the ~10^5 AMOSA
+//! evaluations.
+
+use std::cell::RefCell;
+
+use crate::model::SystemConfig;
+use crate::noc::analysis::{analyze_objectives, AnalysisScratch, TrafficMatrix};
+use crate::noc::topology::Topology;
+use crate::optim::amosa::Problem;
+use crate::util::rng::Rng;
+
+/// A candidate wireline connectivity: exactly `L` undirected edges.
+pub type LinkSolution = Vec<(usize, usize)>;
+
+pub struct LinkPlacement<'a> {
+    pub sys: &'a SystemConfig,
+    pub traffic: &'a TrafficMatrix,
+    /// Link budget L — fixed to the mesh's link count (no area overhead).
+    pub num_links: usize,
+    /// Maximum router port count (Eqn 8); swept 4..=7 in §5.3.1.
+    pub k_max: usize,
+    /// Average router port count bound (Eqn 7).
+    pub k_avg: f64,
+    /// Maximum wireline link length (mm). The WiHetNoC design restricts
+    /// wireline links to short/medium reach — long-range connectivity is
+    /// the wireless overlay's job (§4.2.3: "the longest links [are made]
+    /// wireless"). `None` = unrestricted (the HetNoC ablation, where long
+    /// pipelined metal wires stand in for the wireless links).
+    pub max_link_mm: Option<f64>,
+    scratch: RefCell<AnalysisScratch>,
+}
+
+impl<'a> LinkPlacement<'a> {
+    pub fn new(
+        sys: &'a SystemConfig,
+        traffic: &'a TrafficMatrix,
+        num_links: usize,
+        k_max: usize,
+    ) -> Self {
+        let n = sys.num_tiles();
+        LinkPlacement {
+            sys,
+            traffic,
+            num_links,
+            k_max,
+            k_avg: 4.0,
+            max_link_mm: None,
+            scratch: RefCell::new(AnalysisScratch::new(n)),
+        }
+    }
+
+    pub fn with_max_link_mm(mut self, mm: Option<f64>) -> Self {
+        self.max_link_mm = mm;
+        self
+    }
+
+    pub fn build_topology(&self, sol: &LinkSolution) -> Topology {
+        Topology::from_edges(self.sys, sol)
+    }
+
+    /// Feasibility: L links, degree bounds, connected (Eqns 7-9).
+    pub fn is_feasible(&self, sol: &LinkSolution) -> bool {
+        if sol.len() != self.num_links {
+            return false;
+        }
+        let t = self.build_topology(sol);
+        t.k_max() <= self.k_max && t.k_avg() <= self.k_avg + 1e-9 && t.is_connected()
+    }
+}
+
+impl<'a> Problem for LinkPlacement<'a> {
+    type Sol = LinkSolution;
+
+    fn num_objectives(&self) -> usize {
+        2
+    }
+
+    /// (Ū, σ) of Eqns 4-5. Infeasible (disconnected) solutions are fenced
+    /// with +inf so AMOSA never archives them.
+    fn objectives(&self, sol: &Self::Sol) -> Vec<f64> {
+        let topo = self.build_topology(sol);
+        let mut scratch = self.scratch.borrow_mut();
+        let a = analyze_objectives(&topo, self.traffic, &mut scratch);
+        if !a.connected {
+            return vec![f64::INFINITY, f64::INFINITY];
+        }
+        vec![a.u_mean, a.u_std]
+    }
+
+    /// Rewire one random link, keeping all constraints; falls back to the
+    /// unmodified solution if no feasible rewire is found in a few tries.
+    ///
+    /// Hot path (§Perf): the topology is built once and mutated in place —
+    /// remove a victim, trial-add endpoints, connectivity-check, restore
+    /// on failure — instead of rebuilding the graph per attempt.
+    fn perturb(&self, sol: &Self::Sol, rng: &mut Rng) -> Self::Sol {
+        let n = self.sys.num_tiles();
+        let mut topo = Topology::from_edges(self.sys, sol);
+        for _ in 0..16 {
+            let victim = rng.below(topo.links.len());
+            let (va, vb) = (topo.links[victim].a, topo.links[victim].b);
+            topo.remove_link(victim);
+            for _ in 0..64 {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a == b || topo.has_link(a, b) {
+                    continue;
+                }
+                if topo.degree(a) + 1 > self.k_max || topo.degree(b) + 1 > self.k_max {
+                    continue;
+                }
+                if let Some(mm) = self.max_link_mm {
+                    if self.sys.dist_mm(a, b) > mm {
+                        continue;
+                    }
+                }
+                let id = topo.add_link_with_geometry(self.sys, a, b);
+                if topo.is_connected() {
+                    return topo.edges();
+                }
+                topo.remove_link(id);
+            }
+            // no feasible replacement for this victim: restore and retry
+            topo.add_link_with_geometry(self.sys, va, vb);
+        }
+        sol.clone()
+    }
+
+    /// Start from the mesh (feasible by construction) with a few random
+    /// rewires for archive diversity.
+    fn initial(&self, rng: &mut Rng) -> Self::Sol {
+        let mesh = Topology::mesh(self.sys);
+        let mut sol: LinkSolution = mesh.edges();
+        debug_assert_eq!(sol.len(), self.num_links);
+        for _ in 0..8 {
+            sol = self.perturb(&sol, rng);
+        }
+        sol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::amosa::{Amosa, AmosaConfig};
+
+    fn uniform_many_to_few(sys: &SystemConfig) -> TrafficMatrix {
+        let mut e = Vec::new();
+        for &g in &sys.gpus() {
+            for &m in &sys.mcs() {
+                e.push((g as u32, m as u32, 0.01));
+                e.push((m as u32, g as u32, 0.03));
+            }
+        }
+        TrafficMatrix::from_entries(sys.num_tiles(), e)
+    }
+
+    #[test]
+    fn mesh_start_is_feasible() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = uniform_many_to_few(&sys);
+        let p = LinkPlacement::new(&sys, &tm, 112, 4);
+        let mesh: LinkSolution = Topology::mesh(&sys).edges();
+        assert!(p.is_feasible(&mesh));
+    }
+
+    #[test]
+    fn perturb_preserves_feasibility() {
+        let sys = SystemConfig::small_4x4();
+        let tm = uniform_many_to_few(&sys);
+        let p = LinkPlacement::new(&sys, &tm, 24, 5);
+        let mut rng = Rng::new(1);
+        let mut sol = p.initial(&mut rng);
+        for _ in 0..50 {
+            sol = p.perturb(&sol, &mut rng);
+            assert!(p.is_feasible(&sol));
+        }
+    }
+
+    #[test]
+    fn optimizer_beats_mesh_on_many_to_few() {
+        let sys = SystemConfig::small_4x4();
+        let tm = uniform_many_to_few(&sys);
+        let p = LinkPlacement::new(&sys, &tm, 24, 6);
+        let mesh_obj = p.objectives(&Topology::mesh(&sys).edges());
+        let cfg = AmosaConfig {
+            initial_temp: 50.0,
+            cooling: 0.8,
+            iters_per_temp: 120,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut a = Amosa::new(&p, cfg);
+        a.run();
+        let best = a.best_by(&[1.0, 1.0]);
+        // optimized irregular connectivity must improve mean utilization
+        assert!(
+            best.obj[0] < mesh_obj[0],
+            "U: opt {} vs mesh {}",
+            best.obj[0],
+            mesh_obj[0]
+        );
+    }
+
+    #[test]
+    fn infeasible_fenced() {
+        let sys = SystemConfig::small_4x4();
+        let tm = uniform_many_to_few(&sys);
+        let p = LinkPlacement::new(&sys, &tm, 24, 5);
+        // two disconnected cliques-ish: all edges among 0..8 only
+        let mut sol = Vec::new();
+        'outer: for a in 0..8usize {
+            for b in (a + 1)..8 {
+                sol.push((a, b));
+                if sol.len() == 24 {
+                    break 'outer;
+                }
+            }
+        }
+        let obj = p.objectives(&sol);
+        assert!(obj[0].is_infinite());
+    }
+}

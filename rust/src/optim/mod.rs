@@ -1,0 +1,14 @@
+//! Multi-objective design-space exploration: AMOSA (Archived Multi-
+//! Objective Simulated Annealing [43]) plus the paper's three placement
+//! problems — irregular wireline connectivity (Eqns 6-9), CPU/MC tile
+//! placement on the mesh, and wireless-interface placement [44].
+
+pub mod amosa;
+pub mod linkplace;
+pub mod placement;
+pub mod wiplace;
+
+pub use amosa::{Amosa, AmosaConfig, Archived, Problem};
+pub use linkplace::{LinkPlacement, LinkSolution};
+pub use placement::optimize_placement;
+pub use wiplace::place_wis;

@@ -1,0 +1,171 @@
+//! CPU/MC tile placement on the mesh (§5.2, following [49]): jointly
+//! minimize CPU-MC hop distance (CPU latency QoS) and the traffic-weighted
+//! hop count of the many-to-few GPU-MC traffic (throughput QoS).
+//!
+//! Solutions permute the tile-kind vector; perturbation swaps a CPU or MC
+//! tile with a random other tile. On a mesh, hop counts are Manhattan, so
+//! objectives are closed-form — no BFS needed.
+
+use crate::model::{SystemConfig, TileKind};
+use crate::optim::amosa::{Amosa, AmosaConfig, Problem};
+use crate::util::rng::Rng;
+
+pub struct MeshPlacement<'a> {
+    pub sys: &'a SystemConfig,
+    /// Relative MC->GPU traffic weight (reply-heavy asymmetry).
+    pub gpu_weight: f64,
+    /// Relative CPU<->MC traffic weight.
+    pub cpu_weight: f64,
+}
+
+impl<'a> MeshPlacement<'a> {
+    fn objective_pair(&self, tiles: &[TileKind]) -> (f64, f64) {
+        let w = self.sys.width;
+        let hop = |a: usize, b: usize| {
+            ((a / w).abs_diff(b / w) + (a % w).abs_diff(b % w)) as f64
+        };
+        let mut cpus = Vec::new();
+        let mut mcs = Vec::new();
+        let mut gpus = Vec::new();
+        for (i, t) in tiles.iter().enumerate() {
+            match t {
+                TileKind::Cpu => cpus.push(i),
+                TileKind::Mc => mcs.push(i),
+                TileKind::Gpu => gpus.push(i),
+            }
+        }
+        // CPU QoS: mean CPU-MC hop distance.
+        let mut cpu_mc = 0.0;
+        for &c in &cpus {
+            for &m in &mcs {
+                cpu_mc += hop(c, m);
+            }
+        }
+        cpu_mc /= (cpus.len() * mcs.len()).max(1) as f64;
+        // Throughput proxy: traffic-weighted GPU<->MC hop count.
+        let mut twhc = 0.0;
+        for &g in &gpus {
+            for &m in &mcs {
+                twhc += self.gpu_weight * hop(g, m);
+            }
+        }
+        twhc /= (gpus.len() * mcs.len()).max(1) as f64;
+        (self.cpu_weight * cpu_mc, twhc)
+    }
+}
+
+impl<'a> Problem for MeshPlacement<'a> {
+    type Sol = Vec<TileKind>;
+
+    fn num_objectives(&self) -> usize {
+        2
+    }
+
+    fn objectives(&self, tiles: &Self::Sol) -> Vec<f64> {
+        let (a, b) = self.objective_pair(tiles);
+        vec![a, b]
+    }
+
+    fn perturb(&self, tiles: &Self::Sol, rng: &mut Rng) -> Self::Sol {
+        let mut t = tiles.clone();
+        // swap a non-GPU tile with any other tile
+        let special: Vec<usize> = (0..t.len())
+            .filter(|&i| t[i] != TileKind::Gpu)
+            .collect();
+        let a = *rng.pick(&special);
+        let b = rng.below(t.len());
+        t.swap(a, b);
+        t
+    }
+
+    fn initial(&self, rng: &mut Rng) -> Self::Sol {
+        let mut t = self.sys.tiles.clone();
+        rng.shuffle(&mut t);
+        t
+    }
+}
+
+/// Optimize CPU/MC placement on the mesh; returns a `SystemConfig` with
+/// the best (balanced-scalarization) placement.
+pub fn optimize_placement(sys: &SystemConfig, seed: u64) -> SystemConfig {
+    let p = MeshPlacement { sys, gpu_weight: 1.0, cpu_weight: 1.0 };
+    let cfg = AmosaConfig {
+        initial_temp: 50.0,
+        cooling: 0.85,
+        iters_per_temp: 300,
+        seed,
+        ..Default::default()
+    };
+    let mut a = Amosa::new(&p, cfg);
+    a.run();
+    let best = a.best_by(&[1.0, 1.0]);
+    sys.with_tiles(best.sol.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_clusters_mcs_and_cpus_centrally() {
+        let sys = SystemConfig::paper_8x8();
+        let placed = optimize_placement(&sys, 11);
+        // composition preserved
+        assert_eq!(placed.cpus().len(), 4);
+        assert_eq!(placed.mcs().len(), 4);
+        assert_eq!(placed.gpus().len(), 56);
+        // optimized placement puts MCs well inside the die: mean MC->center
+        // distance must beat the worst case (corners) comfortably.
+        let center = 3.5;
+        let mean_mc_center: f64 = placed
+            .mcs()
+            .iter()
+            .map(|&m| {
+                let (r, c) = ((m / 8) as f64, (m % 8) as f64);
+                (r - center).abs() + (c - center).abs()
+            })
+            .sum::<f64>()
+            / 4.0;
+        assert!(mean_mc_center < 3.0, "MCs at mean center distance {mean_mc_center}");
+        // CPU-MC mean hops should be small (clustered)
+        let mut acc = 0.0;
+        for &c in &placed.cpus() {
+            for &m in &placed.mcs() {
+                acc += placed.hop_dist(c, m) as f64;
+            }
+        }
+        acc /= 16.0;
+        assert!(acc <= 4.0, "CPU-MC mean hops {acc}");
+    }
+
+    #[test]
+    fn objectives_reward_central_mcs() {
+        let sys = SystemConfig::paper_8x8();
+        let p = MeshPlacement { sys: &sys, gpu_weight: 1.0, cpu_weight: 1.0 };
+        // corners-MC layout
+        let mut corner = vec![TileKind::Gpu; 64];
+        for i in [0usize, 7, 56, 63] {
+            corner[i] = TileKind::Mc;
+        }
+        for i in [27usize, 28, 35, 36] {
+            corner[i] = TileKind::Cpu;
+        }
+        let central = sys.tiles.clone();
+        let oc = p.objectives(&corner);
+        let oz = p.objectives(&central);
+        assert!(oz[1] < oc[1], "central MCs should cut GPU twhc: {oz:?} vs {oc:?}");
+    }
+
+    #[test]
+    fn perturb_preserves_composition() {
+        let sys = SystemConfig::paper_8x8();
+        let p = MeshPlacement { sys: &sys, gpu_weight: 1.0, cpu_weight: 1.0 };
+        let mut rng = Rng::new(5);
+        let mut t = p.initial(&mut rng);
+        for _ in 0..100 {
+            t = p.perturb(&t, &mut rng);
+        }
+        assert_eq!(t.iter().filter(|&&k| k == TileKind::Cpu).count(), 4);
+        assert_eq!(t.iter().filter(|&&k| k == TileKind::Mc).count(), 4);
+    }
+}

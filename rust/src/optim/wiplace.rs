@@ -1,0 +1,210 @@
+//! Wireless-interface placement [44] (§4.2.3): given the optimized
+//! wireline topology and the traffic matrix, choose `n_wi` routers for
+//! GPU-MC wireless interfaces so the traffic-weighted hop count is
+//! minimized, then distribute them over the available channels.
+//!
+//! Greedy marginal-gain placement: repeatedly add the WI that most reduces
+//! Σ f_ij · h_ij, where wireless-equipped routers gain single-hop edges to
+//! every other WI (the channel assignment is refined afterwards round-robin
+//! by traffic so each channel carries a similar load — the MAC's request
+//! period grows with WIs per channel, which is what creates the paper's
+//! optimum at 24 WIs / 4 channels).
+
+use crate::noc::analysis::TrafficMatrix;
+use crate::noc::topology::Topology;
+use crate::noc::wireless::WirelessSpec;
+
+/// Place `n_wi` GPU-MC WIs on `channels` channels (channel ids start at
+/// `first_channel`, channel 0 being reserved for CPU-MC).
+///
+/// Returns WI host routers in placement order plus their channels.
+pub fn place_wis(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    n_wi: usize,
+    first_channel: usize,
+    channels: usize,
+) -> Vec<(usize, usize)> {
+    assert!(channels >= 1);
+    let n = topo.n;
+    // base all-pairs hop counts
+    let mut hops = vec![0u32; n * n];
+    for s in 0..n {
+        let d = topo.bfs_hops(s);
+        hops[s * n..(s + 1) * n].copy_from_slice(&d);
+    }
+
+    let mut wis: Vec<usize> = Vec::new();
+    let mut traffic_at = vec![0.0f64; n];
+    for &(s, d, f) in &traffic.entries {
+        traffic_at[s as usize] += f;
+        traffic_at[d as usize] += f;
+    }
+
+    for _ in 0..n_wi {
+        let mut best: Option<(usize, f64)> = None;
+        for cand in 0..n {
+            if wis.contains(&cand) {
+                continue;
+            }
+            let mut trial = wis.clone();
+            trial.push(cand);
+            let cost = twhc_with_wis(&hops, traffic, &trial, n);
+            let better = match best {
+                None => true,
+                Some((_, bc)) => {
+                    cost < bc - 1e-12
+                        || (cost < bc + 1e-12
+                            && traffic_at[cand] > traffic_at[best.unwrap().0])
+                }
+            };
+            if better {
+                best = Some((cand, cost));
+            }
+        }
+        wis.push(best.expect("candidate exists").0);
+    }
+
+    // Channel assignment: order WIs by local traffic and deal them
+    // round-robin so heavy WIs spread across channels.
+    let mut order: Vec<usize> = (0..wis.len()).collect();
+    order.sort_by(|&a, &b| {
+        traffic_at[wis[b]]
+            .partial_cmp(&traffic_at[wis[a]])
+            .unwrap()
+            .then(wis[a].cmp(&wis[b]))
+    });
+    let mut out = vec![(0usize, 0usize); wis.len()];
+    for (rank, &idx) in order.iter().enumerate() {
+        out[idx] = (wis[idx], first_channel + rank % channels);
+    }
+    out
+}
+
+/// Traffic-weighted hop count when `wis` routers are pairwise connected by
+/// single-hop wireless shortcuts: h'(s,d) = min(h(s,d), min_{a,b in WI}
+/// h(s,a) + 1 + h(b,d)). Exact via min over WI entry/exit points.
+fn twhc_with_wis(hops: &[u32], traffic: &TrafficMatrix, wis: &[usize], n: usize) -> f64 {
+    let mut total = 0.0;
+    for &(s, d, f) in &traffic.entries {
+        let (s, d) = (s as usize, d as usize);
+        let wire = hops[s * n + d];
+        let mut best = wire;
+        for &a in wis {
+            let head = hops[s * n + a];
+            if head + 1 >= best {
+                continue;
+            }
+            for &b in wis {
+                if a == b {
+                    continue;
+                }
+                let cand = head + 1 + hops[b * n + d];
+                if cand < best {
+                    best = cand;
+                }
+            }
+        }
+        total += f * best as f64;
+    }
+    total
+}
+
+/// Build the full WiHetNoC wireless spec: one WI per CPU and per MC on the
+/// dedicated channel 0, plus `n_wi` traffic-placed WIs on the remaining
+/// channels.
+pub fn build_wireless(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    cpus: &[usize],
+    mcs: &[usize],
+    n_wi: usize,
+    gpu_channels: usize,
+) -> WirelessSpec {
+    let mut spec = WirelessSpec::new(1 + gpu_channels);
+    for &c in cpus {
+        spec.add_wi(c, 0);
+    }
+    for &m in mcs {
+        spec.add_wi(m, 0);
+    }
+    if gpu_channels > 0 && n_wi > 0 {
+        for (router, channel) in place_wis(topo, traffic, n_wi, 1, gpu_channels) {
+            spec.add_wi(router, channel);
+        }
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    fn corner_traffic(n: usize) -> TrafficMatrix {
+        // heavy corner-to-corner flow: WIs should land at/near the corners
+        TrafficMatrix::from_entries(n, vec![(0, 63, 10.0), (63, 0, 10.0), (3, 4, 0.1)])
+    }
+
+    #[test]
+    fn wis_land_on_hot_endpoints() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let tm = corner_traffic(64);
+        let placed = place_wis(&topo, &tm, 2, 1, 1);
+        let routers: Vec<usize> = placed.iter().map(|p| p.0).collect();
+        assert!(routers.contains(&0) && routers.contains(&63), "{routers:?}");
+    }
+
+    #[test]
+    fn twhc_decreases_monotonically_with_wis() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let mut e = Vec::new();
+        for &g in &sys.gpus() {
+            for &m in &sys.mcs() {
+                e.push((g as u32, m as u32, 1.0));
+            }
+        }
+        let tm = TrafficMatrix::from_entries(64, e);
+        let mut hops = vec![0u32; 64 * 64];
+        for s in 0..64 {
+            hops[s * 64..(s + 1) * 64].copy_from_slice(&topo.bfs_hops(s));
+        }
+        let mut prev = twhc_with_wis(&hops, &tm, &[], 64);
+        for k in 1..=8 {
+            let placed = place_wis(&topo, &tm, k, 1, 4);
+            let routers: Vec<usize> = placed.iter().map(|p| p.0).collect();
+            let cur = twhc_with_wis(&hops, &tm, &routers, 64);
+            assert!(cur <= prev + 1e-9, "twhc up at k={k}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn channels_balanced() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let tm = corner_traffic(64);
+        let placed = place_wis(&topo, &tm, 8, 1, 4);
+        let mut per = [0usize; 5];
+        for &(_, c) in &placed {
+            assert!((1..=4).contains(&c));
+            per[c] += 1;
+        }
+        assert!(per[1..=4].iter().all(|&k| k == 2), "{per:?}");
+    }
+
+    #[test]
+    fn full_spec_has_dedicated_cpu_channel() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let tm = corner_traffic(64);
+        let spec = build_wireless(&topo, &tm, &sys.cpus(), &sys.mcs(), 8, 4);
+        assert_eq!(spec.on_channel(0).len(), 8); // 4 CPU + 4 MC
+        assert_eq!(spec.wis.len(), 16);
+        for &c in &sys.cpus() {
+            assert!(spec.wi_at(c, 0).is_some());
+        }
+    }
+}

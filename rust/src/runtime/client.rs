@@ -1,0 +1,148 @@
+//! PJRT client wrapper: HLO-text loading, executable cache, and typed
+//! execute helpers.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{Entry, Manifest};
+
+/// A compiled entry point plus its signature.
+pub struct Executable {
+    pub entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on f32 host tensors; returns one `Vec<f32>` per output.
+    ///
+    /// Outputs arrive as a single tuple literal (the AOT path lowers with
+    /// `return_tuple=True`); it is decomposed here.
+    pub fn run_f32(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (a, spec)) in args.iter().zip(&self.entry.inputs).enumerate() {
+            if a.len() != spec.elements() {
+                bail!(
+                    "{}: input {i} has {} elements, spec {:?} wants {}",
+                    self.entry.name,
+                    a.len(),
+                    spec.shape,
+                    spec.elements()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(a)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.entry.num_outputs {
+            bail!(
+                "{}: manifest says {} outputs, got {}",
+                self.entry.name,
+                self.entry.num_outputs,
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| p.to_vec::<f32>().map_err(|e| anyhow!("output {i}: {e:?}")))
+            .collect()
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache, manifest-driven.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`; build with `make artifacts`).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an entry (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), Executable { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load-and-run in one call.
+    pub fn run(&mut self, name: &str, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        self.cache[name].run_f32(args)
+    }
+
+    /// Entries available in the manifest.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.iter().map(|e| e.name.clone()).collect()
+    }
+}
+
+// NOTE: integration tests that require built artifacts live in
+// rust/tests/runtime_integration.rs (they are skipped gracefully when
+// artifacts/ has not been generated yet).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clean_error() {
+        let err = match Runtime::new("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

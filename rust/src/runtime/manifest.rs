@@ -1,0 +1,242 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT
+//! compiler and this runtime (entry-point signatures + per-layer model
+//! metadata). Parsed with the in-crate JSON codec.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point (e.g. `lenet_train_step`).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub model: Option<String>,
+    pub kind: String,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub num_params: usize,
+    pub num_outputs: usize,
+}
+
+/// Per-layer metadata (cross-checked against `model::cnn` by tests).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub weight_bytes: u64,
+    pub in_bytes: u64,
+    pub out_bytes: u64,
+    pub macs: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub batch: usize,
+    pub layers: Vec<LayerMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub entries: Vec<Entry>,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let batch = root
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            entries.push(parse_entry(e)?);
+        }
+        let mut models = Vec::new();
+        for m in root.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            models.push(parse_model(m)?);
+        }
+        Ok(Manifest { dir, batch, entries, models })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("entry '{name}' not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.path)
+    }
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for s in v.as_arr().ok_or_else(|| anyhow!("inputs not an array"))? {
+        let shape = s
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("input missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = s
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string();
+        if dtype != "float32" {
+            bail!("unsupported dtype {dtype} (runtime is f32-only)");
+        }
+        out.push(TensorSpec { shape, dtype });
+    }
+    Ok(out)
+}
+
+fn parse_entry(e: &Json) -> Result<Entry> {
+    Ok(Entry {
+        name: req_str(e, "name")?,
+        model: e.get("model").and_then(Json::as_str).map(str::to_string),
+        kind: req_str(e, "kind")?,
+        path: req_str(e, "path")?,
+        inputs: parse_specs(e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+        num_params: e.get("num_params").and_then(Json::as_usize).unwrap_or(0),
+        num_outputs: e
+            .get("num_outputs")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("entry missing num_outputs"))?,
+    })
+}
+
+fn parse_model(m: &Json) -> Result<ModelMeta> {
+    let mut layers = Vec::new();
+    for l in m.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
+        let dims = |key: &str| -> Vec<usize> {
+            l.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
+        let num = |key: &str| l.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        layers.push(LayerMeta {
+            name: req_str(l, "name")?,
+            kind: req_str(l, "kind")?,
+            in_shape: dims("in_shape"),
+            out_shape: dims("out_shape"),
+            weight_bytes: num("weight_bytes"),
+            in_bytes: num("in_bytes"),
+            out_bytes: num("out_bytes"),
+            macs: num("macs"),
+        });
+    }
+    Ok(ModelMeta {
+        name: req_str(m, "name")?,
+        batch: m.get("batch").and_then(Json::as_usize).unwrap_or(0),
+        layers,
+    })
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 4,
+      "entries": [
+        {"name": "m_train_step", "model": "m", "kind": "train_step",
+         "path": "m_train_step.hlo.txt",
+         "inputs": [{"shape": [5,5,1,16], "dtype": "float32"},
+                    {"shape": [16], "dtype": "float32"},
+                    {"shape": [4,33,33,1], "dtype": "float32"},
+                    {"shape": [4,10], "dtype": "float32"}],
+         "num_params": 2, "num_outputs": 3}
+      ],
+      "models": [
+        {"name": "m", "batch": 4, "layers": [
+          {"name": "C1", "kind": "conv", "in_shape": [33,33,1],
+           "out_shape": [29,29,16], "weight_bytes": 1664,
+           "in_bytes": 17424, "out_bytes": 86144, "macs": 2155600}
+        ]}
+      ],
+      "version": 1
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.batch, 4);
+        let e = m.entry("m_train_step").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[0].elements(), 400);
+        assert_eq!(e.num_outputs, 3);
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/m_train_step.hlo.txt"));
+        let model = m.model("m").unwrap();
+        assert_eq!(model.layers[0].out_shape, vec![29, 29, 16]);
+        assert_eq!(model.layers[0].macs, 2_155_600);
+    }
+
+    #[test]
+    fn rejects_unknown_entry() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.entry("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("float32", "bfloat16");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("{", PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("{}", PathBuf::from("/tmp")).is_err());
+    }
+}

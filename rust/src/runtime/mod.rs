@@ -1,0 +1,9 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them on the request path with no
+//! Python anywhere. Wraps the `xla` crate (PJRT C API, CPU plugin).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{Entry, Manifest, TensorSpec};

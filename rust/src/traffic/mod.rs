@@ -1,0 +1,8 @@
+//! CNN-training traffic model: per-layer message volumes, frequency
+//! matrices (f_ij), and concrete simulator traces (§5.1 of the paper).
+
+pub mod phases;
+pub mod trace;
+
+pub use phases::{model_phases, LayerPhase, TrafficModel};
+pub use trace::{phase_trace, training_trace, TraceConfig};

@@ -1,0 +1,271 @@
+//! Concrete message traces for the simulator, generated from
+//! `LayerPhase` volumes.
+//!
+//! Reads become 1-flit `ReadReq` messages (the simulator spawns the
+//! cache-line reply), writes become line-sized `WriteData` messages.
+//! Arrivals are Bernoulli-per-cycle thinned to the phase's rate; each GPU
+//! tile is active in staggered bursts (the Fig 7 temporal-locality
+//! wavefront), and addresses interleave across the MCs.
+
+use crate::model::SystemConfig;
+use crate::noc::sim::{Message, MsgClass};
+use crate::traffic::phases::LayerPhase;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Downsampling: keep this fraction of the phase's messages (and
+    /// duration) so experiment sweeps stay fast. 1.0 = full phase.
+    pub scale: f64,
+    /// Fraction of the phase during which a given GPU tile is actively
+    /// issuing (burst duty cycle; bursts are staggered round-robin).
+    pub burst_duty: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { scale: 1.0, burst_duty: 0.5, seed: 0x7ACE }
+    }
+}
+
+/// Generate the message trace for one phase, starting at `start_cycle`.
+/// Returns (messages, phase duration in cycles).
+pub fn phase_trace(
+    sys: &SystemConfig,
+    phase: &LayerPhase,
+    start_cycle: u64,
+    cfg: &TraceConfig,
+    rng: &mut Rng,
+) -> (Vec<Message>, u64) {
+    let dur = ((phase.duration_cycles as f64 * cfg.scale).ceil() as u64).max(16);
+    let line = sys.line_bytes;
+    let line_flits = sys.line_bytes / sys.flit_bytes + 1;
+    let gpus = sys.gpus();
+    let cpus = sys.cpus();
+    let mcs = sys.mcs();
+    let mut out = Vec::new();
+
+    let emit_cohort = |tiles: &[usize],
+                           reads: u64,
+                           writes: u64,
+                           bursty: bool,
+                           rng: &mut Rng,
+                           out: &mut Vec<Message>| {
+        let reads = (reads as f64 * cfg.scale).round() as u64;
+        let writes = (writes as f64 * cfg.scale).round() as u64;
+        for i in 0..reads {
+            let src_idx = (i as usize) % tiles.len();
+            let src = tiles[src_idx];
+            let dst = mcs[rng.below(mcs.len())];
+            let t = if bursty {
+                burst_time(dur, tiles.len(), src_idx, cfg.burst_duty, rng)
+            } else {
+                rng.below(dur as usize) as u64
+            };
+            out.push(Message { src, dst, flits: 1, class: MsgClass::ReadReq, inject_at: start_cycle + t });
+        }
+        // write-allocate: each written line is an RFO fill (ReadReq ->
+        // line reply) followed by the dirty-line writeback (WriteData ->
+        // ack) a little later.
+        for i in 0..writes {
+            let src_idx = (i as usize) % tiles.len();
+            let src = tiles[src_idx];
+            let dst = mcs[rng.below(mcs.len())];
+            let t = if bursty {
+                burst_time(dur, tiles.len(), src_idx, cfg.burst_duty, rng)
+            } else {
+                rng.below(dur as usize) as u64
+            };
+            out.push(Message { src, dst, flits: 1, class: MsgClass::ReadReq, inject_at: start_cycle + t });
+            let wb = t + 40 + rng.below(64) as u64; // dirty-eviction delay
+            out.push(Message {
+                src,
+                dst,
+                flits: line_flits,
+                class: MsgClass::WriteData,
+                inject_at: start_cycle + wb,
+            });
+        }
+    };
+
+    emit_cohort(
+        &gpus,
+        phase.gpu_read_bytes.div_ceil(line),
+        phase.gpu_write_bytes.div_ceil(line),
+        true,
+        rng,
+        &mut out,
+    );
+    emit_cohort(
+        &cpus,
+        phase.cpu_read_bytes.div_ceil(line),
+        phase.cpu_write_bytes.div_ceil(line),
+        false,
+        rng,
+        &mut out,
+    );
+
+    // core-core control (CPU <-> GPU launch/coherence), 1-flit messages
+    let cc = (phase.core_core_flits as f64 * cfg.scale).round() as u64;
+    for i in 0..cc {
+        let (src, dst) = if i % 2 == 0 {
+            (cpus[rng.below(cpus.len())], gpus[rng.below(gpus.len())])
+        } else {
+            (gpus[rng.below(gpus.len())], cpus[rng.below(cpus.len())])
+        };
+        out.push(Message {
+            src,
+            dst,
+            flits: 1,
+            class: MsgClass::Control,
+            inject_at: start_cycle + rng.below(dur as usize) as u64,
+        });
+    }
+
+    out.sort_by_key(|m| m.inject_at);
+    (out, dur)
+}
+
+/// Staggered burst schedule: tile `idx` of `n` is active during a window
+/// of `duty * dur` cycles whose start rotates with the tile index.
+fn burst_time(dur: u64, n: usize, idx: usize, duty: f64, rng: &mut Rng) -> u64 {
+    let window = ((dur as f64 * duty) as u64).max(1);
+    let offset = (dur - window) as f64 * (idx as f64 / n.max(1) as f64);
+    offset as u64 + rng.below(window as usize) as u64
+}
+
+/// Full-iteration trace: phases executed back-to-back. Returns the trace
+/// plus per-phase (start, end) windows (used by the per-layer experiments).
+pub fn training_trace(
+    sys: &SystemConfig,
+    phases: &[LayerPhase],
+    cfg: &TraceConfig,
+) -> (Vec<Message>, Vec<(u64, u64)>) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0u64;
+    let mut all = Vec::new();
+    let mut windows = Vec::new();
+    for p in phases {
+        let (mut msgs, dur) = phase_trace(sys, p, t, cfg, &mut rng);
+        all.append(&mut msgs);
+        windows.push((t, t + dur));
+        t += dur;
+    }
+    all.sort_by_key(|m| m.inject_at);
+    (all, windows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TileKind;
+    use crate::model::lenet;
+    use crate::traffic::phases::model_phases;
+
+    fn phase_fixture() -> (SystemConfig, Vec<LayerPhase>) {
+        let sys = SystemConfig::paper_8x8();
+        let tm = model_phases(&sys, &lenet(), 8);
+        (sys, tm.phases)
+    }
+
+    #[test]
+    fn trace_counts_match_volumes() {
+        let (sys, phases) = phase_fixture();
+        let p = &phases[0]; // C1 forward
+        let cfg = TraceConfig { scale: 1.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let (msgs, dur) = phase_trace(&sys, p, 0, &cfg, &mut rng);
+        let reads = msgs.iter().filter(|m| m.class == MsgClass::ReadReq).count() as u64;
+        let writes = msgs.iter().filter(|m| m.class == MsgClass::WriteData).count() as u64;
+        let read_lines = (p.gpu_read_bytes.div_ceil(sys.line_bytes))
+            + p.cpu_read_bytes.div_ceil(sys.line_bytes);
+        let write_lines = (p.gpu_write_bytes.div_ceil(sys.line_bytes))
+            + p.cpu_write_bytes.div_ceil(sys.line_bytes);
+        // write-allocate: each write line adds an RFO read request
+        assert_eq!(reads, read_lines + write_lines);
+        assert_eq!(writes, write_lines);
+        assert!(dur >= p.duration_cycles);
+        // all sources are GPU or CPU tiles, all dsts MCs (except control)
+        for m in &msgs {
+            if m.class != MsgClass::Control {
+                assert_ne!(sys.tiles[m.src], TileKind::Mc);
+                assert_eq!(sys.tiles[m.dst], TileKind::Mc);
+            }
+            if m.class != MsgClass::WriteData {
+                assert!(m.inject_at < dur);
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_reduces_messages_proportionally() {
+        let (sys, phases) = phase_fixture();
+        let p = &phases[0];
+        let mut rng = Rng::new(2);
+        let full = phase_trace(&sys, p, 0, &TraceConfig::default(), &mut rng).0.len();
+        let mut rng = Rng::new(2);
+        let half = phase_trace(
+            &sys,
+            p,
+            0,
+            &TraceConfig { scale: 0.5, ..Default::default() },
+            &mut rng,
+        )
+        .0
+        .len();
+        let ratio = half as f64 / full as f64;
+        assert!((0.4..=0.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn training_trace_phases_sequential() {
+        let (sys, phases) = phase_fixture();
+        let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+        let (msgs, windows) = training_trace(&sys, &phases, &cfg);
+        assert_eq!(windows.len(), phases.len());
+        for w in windows.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "windows must abut");
+        }
+        assert!(!msgs.is_empty());
+        // sorted by time
+        for m in msgs.windows(2) {
+            assert!(m[0].inject_at <= m[1].inject_at);
+        }
+    }
+
+    #[test]
+    fn bursts_stagger_gpu_activity() {
+        let (sys, phases) = phase_fixture();
+        let p = &phases[0];
+        let cfg = TraceConfig { scale: 0.25, burst_duty: 0.3, seed: 5 };
+        let mut rng = Rng::new(5);
+        let (msgs, dur) = phase_trace(&sys, p, 0, &cfg, &mut rng);
+        // first GPU tile's messages must concentrate early, last tile's late
+        let gpus = sys.gpus();
+        let mean_t = |tile: usize| -> f64 {
+            let v: Vec<f64> = msgs
+                .iter()
+                .filter(|m| m.src == tile)
+                .map(|m| m.inject_at as f64)
+                .collect();
+            v.iter().sum::<f64>() / v.len().max(1) as f64
+        };
+        let first = mean_t(gpus[0]);
+        let last = mean_t(*gpus.last().unwrap());
+        assert!(last > first, "stagger: first {first} last {last} dur {dur}");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let (sys, phases) = phase_fixture();
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let (a, _) = training_trace(&sys, &phases, &cfg);
+        let (b, _) = training_trace(&sys, &phases, &cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.src == y.src && x.dst == y.dst && x.inject_at == y.inject_at));
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny declarative CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown flags are errors; `--help` is synthesized from registered specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Parse `argv` against `specs`. Returns Err with a usage string on
+/// unknown options or a missing value.
+pub fn parse(argv: &[String], specs: &[ArgSpec]) -> Result<Args, String> {
+    let mut out = Args::default();
+    // seed defaults
+    for s in specs {
+        if let Some(d) = s.default {
+            out.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (key, inline) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            if key == "help" {
+                return Err(usage(specs));
+            }
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| format!("unknown option --{key}\n{}", usage(specs)))?;
+            if spec.is_flag {
+                if inline.is_some() {
+                    return Err(format!("--{key} is a flag and takes no value"));
+                }
+                out.flags.push(key);
+            } else {
+                let val = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{key} expects a value"))?
+                    }
+                };
+                out.values.insert(key, val);
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+pub fn usage(specs: &[ArgSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for spec in specs {
+        let kind = if spec.is_flag { "" } else { " <value>" };
+        let def = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{kind}  {}{def}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec { name: "steps", help: "n steps", default: Some("10"), is_flag: false },
+            ArgSpec { name: "verbose", help: "chatty", default: None, is_flag: true },
+            ArgSpec { name: "model", help: "model name", default: None, is_flag: false },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let a = parse(&sv(&["--model", "lenet"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&sv(&["--steps=42", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 42);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&sv(&["--model"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+        let a = parse(&sv(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+}

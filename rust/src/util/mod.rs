@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG, statistics, JSON codec, CLI parsing,
+//! and a property-testing mini-framework.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! `serde`/`clap`/`proptest`/`criterion` are unavailable; these modules
+//! provide the subsets this crate needs (see DESIGN.md §2, toolchain
+//! substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

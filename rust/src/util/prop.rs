@@ -1,0 +1,106 @@
+//! Property-testing mini-framework (proptest is not vendored).
+//!
+//! `run_prop` drives a seeded generator through N cases and, on failure,
+//! retries with a simple halving shrink over the generator's size budget,
+//! reporting the smallest failing seed/size it finds. Used by
+//! `rust/tests/noc_properties.rs` for routing/batching/state invariants.
+
+use crate::util::rng::Rng;
+
+/// Per-case generation context: an RNG plus a size budget generators can
+/// use to scale structures (shrinking lowers `size`).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// usize in [lo, hi], clamped by the size budget above lo.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = hi.min(lo + self.size);
+        self.rng.range(lo, hi_eff + 1)
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`; on failure, shrink the size budget
+/// and report the smallest failure. Panics (test failure) with details.
+pub fn run_prop<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
+        let full_size = 64;
+        let mut g = Gen::new(seed, full_size);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve the size budget while it still fails
+            let mut best = (full_size, msg);
+            let mut size = full_size / 2;
+            while size >= 1 {
+                let mut g = Gen::new(seed, size);
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 min size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        run_prop("add commutes", 50, 1, |g| {
+            let a = g.rng.below(1000) as i64;
+            let b = g.rng.below(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_bad_property() {
+        run_prop("always fails", 5, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sized_respects_budget() {
+        let mut g = Gen::new(3, 4);
+        for _ in 0..100 {
+            let v = g.sized(2, 100);
+            assert!((2..=6).contains(&v));
+        }
+    }
+}

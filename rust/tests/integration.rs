@@ -1,0 +1,144 @@
+//! Cross-module integration tests: the full design flow (traffic model ->
+//! AMOSA -> wireless overlay -> routing -> simulation -> energy) on both
+//! the paper system and the small 4x4 variant, plus experiment smoke runs.
+
+use wihetnoc::energy::network::network_energy_pj;
+use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::energy::system::{full_system_run, StallModel};
+use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::model::{cdbnet, lenet, SystemConfig};
+use wihetnoc::noc::builder::{het_noc, mesh_opt, wi_het_noc, DesignConfig};
+use wihetnoc::noc::routing::verify_lash;
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+
+#[test]
+fn full_design_flow_paper_system() {
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &lenet(), 32);
+    let fij = tm.fij(&sys);
+    let cfg = DesignConfig::quick(99);
+    let inst = wi_het_noc(&sys, &fij, &cfg);
+
+    // structural invariants
+    assert!(inst.topo.is_connected());
+    assert_eq!(inst.topo.links.len(), 112);
+    assert!(inst.topo.k_max() <= cfg.k_max);
+    assert!(inst.topo.k_avg() <= 4.0 + 1e-9);
+    assert_eq!(inst.air.wis.len(), 8 + cfg.n_wi);
+    verify_lash(&inst.topo, &inst.routes).expect("deadlock-free layering");
+    // wireline links respect the reach bound (long range goes wireless)
+    for l in &inst.topo.links {
+        assert!(l.length_mm <= cfg.max_link_mm.unwrap() + 1e-9);
+    }
+
+    // simulate an iteration and check conservation
+    let tcfg = TraceConfig { scale: 0.02, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+    let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .run(&trace);
+    // every injected message is delivered, plus one response per rd/wr
+    let responses = trace
+        .iter()
+        .filter(|m| m.class.spawns_response().is_some())
+        .count() as u64;
+    assert_eq!(rep.delivered_packets, trace.len() as u64 + responses);
+    assert_eq!(rep.undelivered, 0);
+    let e = network_energy_pj(&inst.topo, &rep, &EnergyParams::default());
+    assert!(e.total_pj() > 0.0 && e.wireless_pj > 0.0);
+}
+
+#[test]
+fn full_design_flow_small_system() {
+    // the methodology is system-size agnostic (§5: "can be used for any
+    // composition and system size")
+    let sys = SystemConfig::small_4x4();
+    let tm = model_phases(&sys, &cdbnet(), 16);
+    let fij = tm.fij(&sys);
+    let mut cfg = DesignConfig::quick(5);
+    cfg.n_wi = 4;
+    cfg.gpu_channels = 2;
+    let inst = wi_het_noc(&sys, &fij, &cfg);
+    assert!(inst.topo.is_connected());
+    assert_eq!(inst.topo.links.len(), 24);
+    assert_eq!(inst.air.wis.len(), 4 + 4);
+    verify_lash(&inst.topo, &inst.routes).unwrap();
+
+    let tcfg = TraceConfig { scale: 0.02, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+    let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .run(&trace);
+    assert!(rep.delivered_packets > 0);
+    assert_eq!(rep.undelivered, 0);
+}
+
+#[test]
+fn headline_orderings_hold_end_to_end() {
+    // The paper's headline claims, end to end at quick effort:
+    // latency(wihet) < latency(hetnoc) < latency(mesh), EDP(wihet) < mesh.
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &lenet(), 32);
+    let fij = tm.fij(&sys);
+    let cfg = DesignConfig::quick(42);
+    let mesh = mesh_opt(&sys, true);
+    let het = het_noc(&sys, &fij, &cfg);
+    let wihet = wi_het_noc(&sys, &fij, &cfg);
+
+    let tcfg = TraceConfig { scale: 0.05, ..Default::default() };
+    let run = |inst: &wihetnoc::noc::builder::NocInstance| {
+        let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+        NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace)
+    };
+    let (rm, rh, rw) = (run(&mesh), run(&het), run(&wihet));
+    assert!(
+        rw.latency.mean() < rm.latency.mean() && rh.latency.mean() < rm.latency.mean(),
+        "latency: wihet {} hetnoc {} mesh {}",
+        rw.latency.mean(),
+        rh.latency.mean(),
+        rm.latency.mean()
+    );
+
+    // full-system EDP ordering (Fig 19 claim)
+    let e = EnergyParams::default();
+    let s = StallModel::default();
+    let fm = full_system_run(&sys, &mesh, &tm, &tcfg, &e, &s);
+    let fw = full_system_run(&sys, &wihet, &tm, &tcfg, &e, &s);
+    assert!(fw.edp < fm.edp, "EDP: wihet {} vs mesh {}", fw.edp, fm.edp);
+    assert!(fw.exec_seconds <= fm.exec_seconds * 1.005);
+}
+
+#[test]
+fn experiments_all_smoke() {
+    // every figure harness runs and produces non-trivial output
+    let mut ctx = Ctx::new(Effort::Quick, 7);
+    for id in experiments::ALL {
+        let report = experiments::run(id, &mut ctx).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(report.len() > 100, "{id} output too short:\n{report}");
+        assert!(report.contains(match *id {
+            "table1" => "Table 1",
+            _ => "Fig",
+        }));
+    }
+    assert!(experiments::run("nope", &mut ctx).is_err());
+}
+
+#[test]
+fn manifest_cross_check_against_python_if_present() {
+    // When artifacts exist, the Python-side layer metadata must agree
+    // with the Rust derivation for *both* models (deeper check than the
+    // runtime_integration one: includes out_bytes and per-layer kinds).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let manifest = wihetnoc::runtime::Manifest::load(&dir).unwrap();
+    for spec in [lenet(), cdbnet()] {
+        let meta = manifest.model(&spec.name).unwrap();
+        for (m, l) in meta.layers.iter().zip(&spec.layers) {
+            assert_eq!(m.out_bytes, l.out_bytes(manifest.batch), "{}", l.name);
+            assert_eq!(m.kind, l.kind.as_str());
+        }
+    }
+}

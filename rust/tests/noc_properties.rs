@@ -1,0 +1,278 @@
+//! Property-based tests (via `util::prop`) over the NoC substrate's
+//! invariants: routing validity, LASH deadlock freedom, simulator
+//! conservation and monotonicity, AMOSA feasibility preservation, and
+//! traffic accounting — randomized topologies, traffic, and traces.
+
+use wihetnoc::model::{lenet, SystemConfig, TileKind};
+use wihetnoc::noc::analysis::{analyze, TrafficMatrix};
+use wihetnoc::noc::routing::{verify_lash, RouteSet};
+use wihetnoc::noc::sim::{Message, MsgClass, NocSim, SimConfig};
+use wihetnoc::noc::topology::Topology;
+use wihetnoc::noc::wireless::WirelessSpec;
+use wihetnoc::optim::linkplace::LinkPlacement;
+use wihetnoc::prop_assert;
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{phase_trace, TraceConfig};
+use wihetnoc::util::prop::{run_prop, Gen};
+use wihetnoc::util::rng::Rng;
+
+/// Random connected topology over the paper system: mesh + rewires.
+fn random_topology(g: &mut Gen, sys: &SystemConfig) -> Topology {
+    let fij = TrafficMatrix::from_entries(
+        sys.num_tiles(),
+        vec![(0, 1, 1.0)], // objectives unused here
+    );
+    let problem = LinkPlacement::new(sys, &fij, 112, 4 + g.rng.below(4));
+    let mut sol: Vec<(usize, usize)> = Topology::mesh(sys).edges();
+    let rewires = g.sized(0, 40);
+    for _ in 0..rewires {
+        sol = wihetnoc::optim::amosa::Problem::perturb(&problem, &sol, &mut g.rng);
+    }
+    Topology::from_edges(sys, &sol)
+}
+
+#[test]
+fn prop_shortest_routes_are_valid_chains() {
+    let sys = SystemConfig::paper_8x8();
+    run_prop("shortest routes chain src->dst", 25, 0x51, |g| {
+        let topo = random_topology(g, &sys);
+        let rs = RouteSet::shortest(&topo, None);
+        for _ in 0..50 {
+            let s = g.rng.below(64);
+            let d = g.rng.below(64);
+            let p = rs.primary(s, d);
+            let mut cur = s;
+            for h in &p.hops {
+                prop_assert!(h.from() == cur, "hop from {} != cur {}", h.from(), cur);
+                cur = h.to();
+            }
+            prop_assert!(cur == d, "path ends at {cur} not {d}");
+            prop_assert!(
+                p.hops.len() as u32 >= topo.hops(s, d),
+                "path shorter than BFS ({} < {})",
+                p.hops.len(),
+                topo.hops(s, d)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lash_layering_always_acyclic() {
+    let sys = SystemConfig::paper_8x8();
+    run_prop("LASH layers acyclic", 15, 0x1A, |g| {
+        let topo = random_topology(g, &sys);
+        let rs = RouteSet::shortest(&topo, None);
+        verify_lash(&topo, &rs).map_err(|e| format!("LASH: {e}"))
+    });
+}
+
+#[test]
+fn prop_alash_air_paths_valid_and_cheaper() {
+    let sys = SystemConfig::paper_8x8();
+    run_prop("ALASH air paths valid + enabled only when cheaper", 12, 0xA1, |g| {
+        let topo = Topology::mesh(&sys);
+        let mut air = WirelessSpec::new(1 + g.sized(1, 4));
+        let n_wi = 2 + g.sized(0, 10);
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..n_wi {
+            let r = g.rng.below(64);
+            let c = g.rng.below(air.num_channels);
+            if used.insert((r, c)) {
+                air.add_wi(r, c);
+            }
+        }
+        let chans: Vec<usize> = (0..air.num_channels).collect();
+        let rs = RouteSet::alash(&topo, &air, None, |_, _| chans.clone(), 5);
+        for s in 0..64 {
+            for d in 0..64 {
+                if let Some(p) = rs.air_path(s, d) {
+                    let mut cur = s;
+                    for h in &p.hops {
+                        prop_assert!(h.from() == cur, "air path broken at {cur}");
+                        cur = h.to();
+                    }
+                    prop_assert!(cur == d, "air path ends wrong");
+                    let wire = rs.primary(s, d);
+                    prop_assert!(
+                        p.zero_load_cost(&topo, &air, 5)
+                            < wire.zero_load_cost(&topo, &air, 5),
+                        "air path admitted but not cheaper for ({s},{d})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_conserves_messages_and_flits() {
+    let sys = SystemConfig::paper_8x8();
+    let topo = Topology::mesh(&sys);
+    let rs = RouteSet::xy_yx(&sys, &topo);
+    let air = WirelessSpec::new(0);
+    run_prop("simulator conservation", 20, 0x5C, |g| {
+        let n = g.sized(1, 400);
+        let mut trace = Vec::new();
+        let mut rng = Rng::new(g.rng.next_u64());
+        for _ in 0..n {
+            let src = rng.below(64);
+            let dst = rng.below(64);
+            let class = *rng.pick(&[
+                MsgClass::Control,
+                MsgClass::ReadReq,
+                MsgClass::WriteData,
+            ]);
+            trace.push(Message {
+                src,
+                dst,
+                flits: 1 + rng.below(8) as u64,
+                class,
+                inject_at: rng.below(500) as u64,
+            });
+        }
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let rep = sim.run(&trace);
+        let responses =
+            trace.iter().filter(|m| m.class.spawns_response().is_some()).count() as u64;
+        prop_assert!(
+            rep.delivered_packets == trace.len() as u64 + responses,
+            "delivered {} != {} + {}",
+            rep.delivered_packets,
+            trace.len(),
+            responses
+        );
+        prop_assert!(rep.undelivered == 0, "undelivered {}", rep.undelivered);
+        // latency at least the zero-load bound for every packet: mean must
+        // be >= min over per-hop floor (router >= 3 per hop)
+        prop_assert!(
+            rep.latency.count == rep.delivered_packets,
+            "latency samples mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_latency_monotone_in_load() {
+    // doubling every packet's size must not reduce mean latency
+    let sys = SystemConfig::paper_8x8();
+    let topo = Topology::mesh(&sys);
+    let rs = RouteSet::xy(&sys, &topo);
+    let air = WirelessSpec::new(0);
+    run_prop("latency monotone in packet size", 15, 0x10, |g| {
+        let mut rng = Rng::new(g.rng.next_u64());
+        let n = 50 + g.sized(0, 300);
+        let base: Vec<Message> = (0..n)
+            .map(|_| Message {
+                src: rng.below(64),
+                dst: rng.below(64),
+                flits: 1 + rng.below(4) as u64,
+                class: MsgClass::Control,
+                inject_at: rng.below(200) as u64,
+            })
+            .collect();
+        let heavy: Vec<Message> =
+            base.iter().map(|m| Message { flits: m.flits * 2, ..*m }).collect();
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let (a, b) = (sim.run(&base), sim.run(&heavy));
+        prop_assert!(
+            b.latency.mean() >= a.latency.mean(),
+            "heavier packets got faster: {} < {}",
+            b.latency.mean(),
+            a.latency.mean()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linkplace_perturb_preserves_all_constraints() {
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &lenet(), 32).fij(&sys);
+    run_prop("perturb keeps Eqn 7-9 constraints", 10, 0x11, |g| {
+        let k_max = 4 + g.rng.below(4);
+        let problem =
+            LinkPlacement::new(&sys, &tm, 112, k_max).with_max_link_mm(Some(7.6));
+        let mut sol = Topology::mesh(&sys).edges();
+        for _ in 0..g.sized(1, 60) {
+            sol = wihetnoc::optim::amosa::Problem::perturb(&problem, &sol, &mut g.rng);
+            let topo = Topology::from_edges(&sys, &sol);
+            prop_assert!(sol.len() == 112, "link budget broken: {}", sol.len());
+            prop_assert!(topo.is_connected(), "disconnected");
+            prop_assert!(topo.k_max() <= k_max, "k_max {} > {}", topo.k_max(), k_max);
+            prop_assert!(
+                topo.links.iter().all(|l| l.length_mm <= 7.6 + 1e-9),
+                "over-length link"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analysis_utilization_conserves_twhc() {
+    // sum of link utilizations == traffic-weighted hop count (Eqn 4 both
+    // ways), on random topologies and random many-to-few traffic
+    let sys = SystemConfig::paper_8x8();
+    run_prop("sum(U_k) == twhc", 20, 0xE4, |g| {
+        let topo = random_topology(g, &sys);
+        let mcs = sys.mcs();
+        let mut entries = Vec::new();
+        for _ in 0..g.sized(1, 80) {
+            let c = g.rng.below(64) as u32;
+            let m = mcs[g.rng.below(mcs.len())] as u32;
+            entries.push((c, m, g.rng.f64()));
+        }
+        let tm = TrafficMatrix::from_entries(64, entries);
+        let a = analyze(&topo, &tm);
+        let sum: f64 = a.link_util.iter().sum();
+        prop_assert!(
+            (sum - a.twhc).abs() < 1e-6 * a.twhc.max(1.0),
+            "sum U {} != twhc {}",
+            sum,
+            a.twhc
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_sources_match_cohorts() {
+    // generated traces only ever inject from the right tile kinds
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &lenet(), 32);
+    run_prop("trace cohort sources", 15, 0x7C, |g| {
+        let phase = &tm.phases[g.rng.below(tm.phases.len())];
+        let cfg = TraceConfig {
+            scale: 0.02 + g.rng.f64() * 0.05,
+            burst_duty: 0.2 + g.rng.f64() * 0.7,
+            seed: g.rng.next_u64(),
+        };
+        let mut rng = Rng::new(cfg.seed);
+        let (msgs, dur) = phase_trace(&sys, phase, 0, &cfg, &mut rng);
+        prop_assert!(dur > 0, "zero duration");
+        for m in &msgs {
+            match m.class {
+                MsgClass::ReadReq | MsgClass::WriteData => {
+                    prop_assert!(
+                        sys.tiles[m.dst] == TileKind::Mc,
+                        "memory msg to non-MC {}",
+                        m.dst
+                    );
+                    prop_assert!(sys.tiles[m.src] != TileKind::Mc, "MC as requester");
+                }
+                MsgClass::Control => {
+                    prop_assert!(
+                        sys.tiles[m.src] != TileKind::Mc && sys.tiles[m.dst] != TileKind::Mc,
+                        "control touching MC"
+                    );
+                }
+                _ => return Err("trace emitted a response class".into()),
+            }
+        }
+        Ok(())
+    });
+}

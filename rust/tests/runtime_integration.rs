@@ -1,0 +1,99 @@
+//! Runtime integration: load real AOT artifacts, execute them via PJRT,
+//! and train. Requires `make artifacts`; every test skips cleanly (with a
+//! loud message) when artifacts are missing so `cargo test` stays green on
+//! a fresh checkout.
+
+use wihetnoc::coordinator::{TrainConfig, Trainer};
+use wihetnoc::model::{cdbnet, lenet};
+use wihetnoc::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn micro_gemm_round_trip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    // matmul_micro: (8x8) @ (8x8) + 1
+    let eye: Vec<f32> = (0..64).map(|i| if i % 9 == 0 { 1.0 } else { 0.0 }).collect();
+    let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let out = rt.run("matmul_micro", &[x.clone(), eye]).unwrap();
+    assert_eq!(out.len(), 1);
+    let want: Vec<f32> = x.iter().map(|v| v + 1.0).collect();
+    assert_eq!(out[0], want);
+}
+
+#[test]
+fn manifest_matches_rust_model_derivation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    for spec in [lenet(), cdbnet()] {
+        let meta = rt.manifest.model(&spec.name).unwrap();
+        assert_eq!(meta.layers.len(), spec.layers.len(), "{}", spec.name);
+        for (m, l) in meta.layers.iter().zip(&spec.layers) {
+            assert_eq!(m.name, l.name);
+            assert_eq!(m.kind, l.kind.as_str());
+            assert_eq!(
+                m.out_shape,
+                vec![l.out_shape.0, l.out_shape.1, l.out_shape.2],
+                "{} {}",
+                spec.name,
+                l.name
+            );
+            assert_eq!(m.weight_bytes, l.weight_bytes(), "{} {}", spec.name, l.name);
+            assert_eq!(m.macs, l.macs(rt.manifest.batch), "{} {}", spec.name, l.name);
+            assert_eq!(m.in_bytes, l.in_bytes(rt.manifest.batch), "{} {}", spec.name, l.name);
+        }
+    }
+}
+
+#[test]
+fn lenet_forward_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let batch = rt.manifest.batch;
+    let spec = lenet();
+    let params = wihetnoc::coordinator::trainer::init_params(&spec, 42);
+    let mut args = params;
+    args.push(vec![0.1f32; batch * 33 * 33]);
+    let out = rt.run("lenet_forward", &args).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), batch * 10);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn lenet_training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let batch = rt.manifest.batch;
+    let mut trainer = Trainer::new(&mut rt, lenet(), 7).unwrap();
+    let cfg = TrainConfig { steps: 30, batch, seed: 11, log_every: 5 };
+    let log = trainer.train(&cfg).unwrap();
+    assert!(log.first_loss().is_finite());
+    assert!(
+        log.tail_mean(2) < log.first_loss(),
+        "loss {} -> {}",
+        log.first_loss(),
+        log.tail_mean(2)
+    );
+}
+
+#[test]
+fn wrong_arity_and_shape_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    assert!(rt.run("matmul_micro", &[vec![0.0f32; 64]]).is_err());
+    assert!(rt
+        .run("matmul_micro", &[vec![0.0f32; 64], vec![0.0f32; 63]])
+        .is_err());
+    assert!(rt.run("no_such_entry", &[]).is_err());
+}
