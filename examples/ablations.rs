@@ -7,27 +7,32 @@
 //!   A3  WiHetNoC, no dedicated CPU ch (+ wireless, shared channels only)
 //!   A4  WiHetNoC full                 (+ dedicated CPU-MC channel)
 //!
+//! A0-A2 come straight from `NocDesigner`; A3/A4 are assembled from the
+//! ingredient-level builder functions because the shared-channel variant
+//! is *not* a supported design point — that is the ablation.
+//!
 //! Run: `cargo run --release --example ablations`
 
 use wihetnoc::energy::network::message_edp;
 use wihetnoc::energy::params::EnergyParams;
-use wihetnoc::model::{lenet, SystemConfig};
-use wihetnoc::noc::builder::{
-    het_noc, mesh_opt, optimize_wireline, DesignConfig, NocInstance, NocKind,
-};
+use wihetnoc::noc::builder::{optimize_wireline, DesignConfig, NocDesigner, NocInstance, NocKind};
 use wihetnoc::noc::routing::RouteSet;
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::optim::wiplace::build_wireless;
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::{Scenario, WihetError};
 
-fn main() {
-    let sys = SystemConfig::paper_8x8();
-    let tm = model_phases(&sys, &lenet(), 32);
+fn main() -> Result<(), WihetError> {
+    let scenario = Scenario::paper().with_seed(42);
+    let sys = scenario.build_system()?;
+    let tm = model_phases(&sys, &scenario.model.spec(), scenario.batch);
     let fij = tm.fij(&sys);
-    let cfg = DesignConfig::quick(42);
+    let cfg = DesignConfig::quick(scenario.seed);
     let energy = EnergyParams::default();
     let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
+
+    let designer = || NocDesigner::new(sys.clone()).traffic(fij.clone()).seed(scenario.seed);
 
     // shared wireline topology for A3/A4 (one AMOSA run)
     let topo = optimize_wireline(&sys, &fij, &cfg);
@@ -48,9 +53,9 @@ fn main() {
     let a4 = NocInstance { kind: NocKind::WiHetNoc, topo, routes: a4_routes, air };
 
     let variants: Vec<(&str, NocInstance)> = vec![
-        ("A0 mesh XY", mesh_opt(&sys, false)),
-        ("A1 mesh XY+YX", mesh_opt(&sys, true)),
-        ("A2 HetNoC (wireline)", het_noc(&sys, &fij, &cfg)),
+        ("A0 mesh XY", designer().kind(NocKind::MeshXy).build()?),
+        ("A1 mesh XY+YX", designer().kind(NocKind::MeshXyYx).build()?),
+        ("A2 HetNoC (wireline)", designer().kind(NocKind::HetNoc).build()?),
         ("A3 wireless, shared ch", a3),
         ("A4 WiHetNoC full", a4),
     ];
@@ -73,4 +78,5 @@ fn main() {
         );
     }
     println!("\n(each row adds one design ingredient; the CPU-MC column is the dedicated channel's contribution: A4 vs A3 under load)");
+    Ok(())
 }

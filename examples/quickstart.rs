@@ -1,34 +1,43 @@
-//! Quickstart: design a WiHetNoC for the paper's 64-tile heterogeneous
-//! system, simulate one LeNet training iteration's traffic on it and on
-//! the optimized-mesh baseline, and print the comparison.
+//! Quickstart for the typed scenario API: describe the paper's 64-tile
+//! platform as a `Scenario`, design a WiHetNoC and the optimized-mesh
+//! baseline with `NocDesigner`, simulate one LeNet training iteration's
+//! traffic on both, and print the comparison.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use wihetnoc::energy::network::{message_edp, network_energy_pj};
 use wihetnoc::energy::params::EnergyParams;
-use wihetnoc::model::{lenet, SystemConfig};
-use wihetnoc::noc::builder::{mesh_opt, wi_het_noc, DesignConfig};
+use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::{Scenario, WihetError};
 
-fn main() {
-    // 1. the platform: 56 GPUs + 4 CPUs + 4 MCs on an 8x8 grid
-    let sys = SystemConfig::paper_8x8();
+fn main() -> Result<(), WihetError> {
+    // 1. the scenario: the paper's 8x8 chip (56 GPU + 4 CPU + 4 MC)
+    //    training LeNet. Swap the platform for "4x4" or "12x12:cpus=8,
+    //    mcs=8" and everything downstream follows.
+    let scenario = Scenario::paper().with_seed(42);
+    let sys = scenario.build_system()?;
 
     // 2. the workload: LeNet training traffic (per-layer fwd+bwd phases)
-    let tm = model_phases(&sys, &lenet(), 32);
+    let tm = model_phases(&sys, &scenario.model.spec(), scenario.batch);
     println!(
-        "LeNet iteration: {} phases, {:.1}% many-to-few traffic",
+        "{} iteration on {}: {} phases, {:.1}% many-to-few traffic",
+        scenario.model,
+        scenario.platform,
         tm.phases.len(),
         100.0 * tm.many_to_few_fraction(&sys)
     );
 
-    // 3. design the WiHetNoC (AMOSA wireline + wireless overlay + ALASH)
-    let fij = tm.fij(&sys);
-    let cfg = DesignConfig::quick(42); // DesignConfig::default() = paper effort
+    // 3. design both NoCs (AMOSA wireline + wireless overlay + ALASH for
+    //    the WiHetNoC; XY+YX routing for the mesh baseline), reusing the
+    //    traffic model already derived above
     let t0 = std::time::Instant::now();
-    let wihet = wi_het_noc(&sys, &fij, &cfg);
+    let designer = NocDesigner::new(sys.clone())
+        .traffic(tm.fij(&sys))
+        .seed(scenario.seed);
+    let wihet = designer.clone().build()?;
     println!(
         "designed WiHetNoC in {:.1}s: k_max={}, {} WIs on {} channels, {} virtual layers",
         t0.elapsed().as_secs_f64(),
@@ -37,9 +46,9 @@ fn main() {
         wihet.air.num_channels,
         wihet.routes.num_layers,
     );
+    let mesh = designer.kind(NocKind::MeshXyYx).build()?;
 
     // 4. simulate both NoCs on the same traffic
-    let mesh = mesh_opt(&sys, true);
     let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
     let energy = EnergyParams::default();
     println!("\n{:<10} {:>10} {:>10} {:>12} {:>12}", "noc", "latency", "cpu-mc", "pJ/packet", "msg EDP");
@@ -58,4 +67,5 @@ fn main() {
         );
     }
     println!("\n(expect WiHetNoC to win both latency columns and message EDP)");
+    Ok(())
 }

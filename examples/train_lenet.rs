@@ -9,12 +9,13 @@
 
 use wihetnoc::coordinator::cosim::cosimulate;
 use wihetnoc::coordinator::{TrainConfig, Trainer};
-use wihetnoc::model::{lenet, SystemConfig};
-use wihetnoc::noc::builder::{het_noc, mesh_opt, wi_het_noc, DesignConfig};
+use wihetnoc::model::lenet;
+use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::TraceConfig;
+use wihetnoc::Scenario;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
     let seed: u64 = std::env::var("SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
 
@@ -45,13 +46,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- phase 2: NoC co-simulation of this workload (Fig 19) ----
     println!("\nco-simulating the training iteration on mesh / HetNoC / WiHetNoC ...");
-    let sys = SystemConfig::paper_8x8();
+    let scenario = Scenario::paper().with_seed(seed).with_batch(batch);
+    let sys = scenario.build_system()?;
     let spec = lenet();
-    let tmfij = wihetnoc::traffic::phases::model_phases(&sys, &spec, batch).fij(&sys);
-    let dcfg = DesignConfig::quick(seed);
-    let mesh = mesh_opt(&sys, true);
-    let het = het_noc(&sys, &tmfij, &dcfg);
-    let wihet = wi_het_noc(&sys, &tmfij, &dcfg);
+    let designer = NocDesigner::for_scenario(&scenario)?; // derives the traffic once
+    let mesh = designer.clone().kind(NocKind::MeshXyYx).build()?;
+    let het = designer.clone().kind(NocKind::HetNoc).build()?;
+    let wihet = designer.build()?;
     let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
     let rep = cosimulate(&sys, &spec, batch, &[&mesh, &het, &wihet], &tcfg)?;
     println!("\n{:<10} {:>8} {:>8}   (normalized to mesh; paper: WiHetNoC 0.87 / 0.75)", "noc", "exec", "EDP");

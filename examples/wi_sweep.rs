@@ -1,31 +1,45 @@
 //! Standalone WI-count + channel-count sweep (the Fig 12/13 design-space
-//! exploration) with CSV output for plotting.
+//! exploration) with CSV output for plotting. Accepts an optional
+//! platform string so the sweep runs on any chip:
 //!
-//! Run: `cargo run --release --example wi_sweep [--effort full]`
+//! Run: `cargo run --release --example wi_sweep [PLATFORM] [--effort full]`
+//!      e.g. `... --example wi_sweep 12x12:cpus=8,mcs=8`
 
+use wihetnoc::experiments::{Ctx, Effort};
 use wihetnoc::energy::network::message_edp;
 use wihetnoc::energy::params::EnergyParams;
-use wihetnoc::experiments::{Ctx, Effort};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::traffic::trace::training_trace;
+use wihetnoc::{ModelId, Platform, Scenario, WihetError};
 
-fn main() {
-    let effort = if std::env::args().any(|a| a == "--effort=full" || a == "full") {
+fn main() -> Result<(), WihetError> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let effort = if args.iter().any(|a| a == "--effort=full" || a == "full") {
         Effort::Full
     } else {
         Effort::Quick
     };
-    let mut ctx = Ctx::new(effort, 42);
+    let platform: Platform = args
+        .iter()
+        .find(|a| !a.starts_with("--") && *a != "full")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(Platform::paper);
+    let scenario = Scenario::new(platform, ModelId::LeNet)
+        .with_effort(effort)
+        .with_seed(42);
+    let mut ctx = Ctx::for_scenario(&scenario)?;
     let energy = EnergyParams::default();
+    let max_wi = ctx.sys.num_tiles();
     println!("n_wi,channels,msg_edp,latency,wireless_util,fallback_rate");
     for channels in 1..=4usize {
         for n_wi in [4usize, 8, 12, 16, 24, 32, 40] {
-            if n_wi % channels != 0 {
+            if n_wi % channels != 0 || n_wi > max_wi {
                 continue;
             }
             let inst = ctx.wihet_variant(n_wi, channels);
             let sys = ctx.sys.clone();
-            let tm = ctx.traffic("lenet");
+            let tm = ctx.traffic(ModelId::LeNet);
             let cfg = ctx.trace_cfg();
             let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
             let rep =
@@ -42,4 +56,5 @@ fn main() {
             );
         }
     }
+    Ok(())
 }

@@ -9,6 +9,7 @@
 
 use wihetnoc::bench::Bencher;
 use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::noc::builder::NocKind;
 
 fn main() {
     let effort = match std::env::var("WIHETNOC_BENCH_EFFORT").as_deref() {
@@ -21,9 +22,9 @@ fn main() {
     let mut b = Bencher::quick();
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
-    let _ = ctx.instance("mesh_opt");
-    let _ = ctx.instance("hetnoc");
-    let _ = ctx.instance("wihetnoc");
+    let _ = ctx.instance(NocKind::MeshXyYx);
+    let _ = ctx.instance(NocKind::HetNoc);
+    let _ = ctx.instance(NocKind::WiHetNoc);
 
     for id in experiments::ALL {
         let mut report = String::new();

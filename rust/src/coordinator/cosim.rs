@@ -2,12 +2,11 @@
 //! while the traffic model + simulator evaluate the candidate NoCs on the
 //! same workload — the Fig 19 end-to-end loop.
 
-use anyhow::Result;
-
 use crate::energy::params::EnergyParams;
 use crate::energy::system::{full_system_run, FullSystemReport, StallModel};
 use crate::model::cnn::ModelSpec;
 use crate::model::SystemConfig;
+use crate::error::Result;
 use crate::noc::builder::NocInstance;
 use crate::traffic::phases::model_phases;
 use crate::traffic::trace::TraceConfig;

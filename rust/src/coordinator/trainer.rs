@@ -2,9 +2,9 @@
 //! train-step executable, and logs the loss curve. This is the "leader"
 //! loop — pure Rust + PJRT, no Python.
 
-use anyhow::{anyhow, bail, Result};
-
 use super::data::SyntheticDataset;
+use crate::error::Result;
+use crate::{wbail, werr};
 use crate::model::cnn::ModelSpec;
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
@@ -92,7 +92,7 @@ impl<'r> Trainer<'r> {
         let entry = runtime.manifest.entry(&entry_name)?.clone();
         let params = init_params(&spec, seed);
         if entry.num_params != params.len() {
-            bail!(
+            wbail!(
                 "manifest says {} params, model derives {}",
                 entry.num_params,
                 params.len()
@@ -102,7 +102,7 @@ impl<'r> Trainer<'r> {
         for (i, p) in params.iter().enumerate() {
             let want = entry.inputs[i].elements();
             if p.len() != want {
-                bail!("param {i}: {} elements vs manifest {}", p.len(), want);
+                wbail!("param {i}: {} elements vs manifest {}", p.len(), want);
             }
         }
         runtime.load(&entry_name)?;
@@ -117,12 +117,12 @@ impl<'r> Trainer<'r> {
         let mut out = self.runtime.run(&self.entry_name, &args)?;
         let loss = out
             .pop()
-            .ok_or_else(|| anyhow!("train_step returned nothing"))?
+            .ok_or_else(|| werr!("train_step returned nothing"))?
             .first()
             .copied()
-            .ok_or_else(|| anyhow!("empty loss output"))?;
+            .ok_or_else(|| werr!("empty loss output"))?;
         if out.len() != self.params.len() {
-            bail!("expected {} updated params, got {}", self.params.len(), out.len());
+            wbail!("expected {} updated params, got {}", self.params.len(), out.len());
         }
         self.params = out;
         Ok(loss)
@@ -140,7 +140,7 @@ impl<'r> Trainer<'r> {
             let loss = self.step(&x, &y)?;
             exec += te.elapsed().as_secs_f64();
             if !loss.is_finite() {
-                bail!("loss diverged to {loss} at step {step}");
+                wbail!("loss diverged to {loss} at step {step}");
             }
             let should_log = step == 0
                 || step + 1 == cfg.steps

@@ -1,0 +1,109 @@
+//! Crate-wide error type. Every fallible public entry point — platform
+//! construction, scenario parsing, NoC design, experiment dispatch, the
+//! PJRT runtime — returns `Result<_, WihetError>`; user input never
+//! panics the library.
+
+use std::fmt;
+
+/// Convenience alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, WihetError>;
+
+#[derive(Debug)]
+pub enum WihetError {
+    /// Unknown CNN workload name (see [`crate::scenario::ModelId`]).
+    UnknownModel(String),
+    /// Unknown NoC architecture name (see [`crate::noc::builder::NocKind`]).
+    UnknownNoc(String),
+    /// Unknown experiment id (see [`crate::experiments::ALL`]).
+    UnknownExperiment(String),
+    /// A `Platform` that cannot describe a buildable chip.
+    InvalidPlatform(String),
+    /// Design-space knobs outside the feasible region for the platform.
+    InvalidDesign(String),
+    /// Malformed CLI/scenario argument (bad effort, seed, scale, ...).
+    InvalidArg(String),
+    /// Runtime/artifact failures (manifest parsing, PJRT execution, ...).
+    Runtime(String),
+    /// PJRT is not usable in this build (e.g. the vendored `xla` stub is
+    /// linked instead of the real bindings). Callers may treat this as a
+    /// clean "skip", unlike [`WihetError::Runtime`].
+    RuntimeUnavailable(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WihetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WihetError::UnknownModel(m) => {
+                write!(f, "unknown model '{m}' (known models: lenet, cdbnet)")
+            }
+            WihetError::UnknownNoc(n) => write!(
+                f,
+                "unknown NoC '{n}' (known NoCs: mesh_xy, mesh_opt, hetnoc, wihetnoc)"
+            ),
+            WihetError::UnknownExperiment(e) => write!(
+                f,
+                "unknown experiment '{e}' (run `wihetnoc list` for the full set)"
+            ),
+            WihetError::InvalidPlatform(m) => write!(f, "invalid platform: {m}"),
+            WihetError::InvalidDesign(m) => write!(f, "invalid design: {m}"),
+            WihetError::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            WihetError::Runtime(m) => write!(f, "{m}"),
+            WihetError::RuntimeUnavailable(m) => {
+                write!(f, "PJRT runtime unavailable: {m}")
+            }
+            WihetError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WihetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WihetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WihetError {
+    fn from(e: std::io::Error) -> Self {
+        WihetError::Io(e)
+    }
+}
+
+/// `anyhow!`-style constructor for [`WihetError::Runtime`].
+#[macro_export]
+macro_rules! werr {
+    ($($arg:tt)*) => { $crate::error::WihetError::Runtime(format!($($arg)*)) };
+}
+
+/// `bail!`-style early return with a [`WihetError::Runtime`].
+#[macro_export]
+macro_rules! wbail {
+    ($($arg:tt)*) => { return Err($crate::werr!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_mentions_offender_and_hints() {
+        let e = WihetError::UnknownModel("resnet".into());
+        let s = e.to_string();
+        assert!(s.contains("resnet") && s.contains("lenet"));
+        let e = WihetError::UnknownNoc("torus".into());
+        assert!(e.to_string().contains("wihetnoc"));
+    }
+
+    #[test]
+    fn macros_build_runtime_errors() {
+        fn inner() -> crate::error::Result<()> {
+            wbail!("bad thing {}", 42);
+        }
+        let e = inner().unwrap_err();
+        assert!(matches!(e, WihetError::Runtime(_)));
+        assert!(e.to_string().contains("bad thing 42"));
+    }
+}

@@ -6,8 +6,9 @@ use crate::coordinator::cosim::cosimulate;
 use crate::energy::network::message_edp;
 use crate::energy::params::EnergyParams;
 use crate::model::cnn::Pass;
-use crate::noc::builder::NocInstance;
+use crate::noc::builder::{NocInstance, NocKind};
 use crate::noc::sim::{NocSim, SimConfig};
+use crate::scenario::ModelId;
 use crate::traffic::trace::phase_trace;
 use crate::util::rng::Rng;
 
@@ -22,18 +23,17 @@ struct PerLayer {
 
 /// Simulate every phase of `model` on the three NoCs; returns per-layer
 /// latency and message EDP (mesh placement used for the mesh).
-fn per_layer(ctx: &mut Ctx, model: &str) -> PerLayer {
+fn per_layer(ctx: &mut Ctx, model: ModelId) -> PerLayer {
     let energy = EnergyParams::default();
-    let names = ["mesh_opt", "hetnoc", "wihetnoc"];
+    let kinds = [NocKind::MeshXyYx, NocKind::HetNoc, NocKind::WiHetNoc];
     let mut tags = Vec::new();
     let mut flits = Vec::new();
-    let mut latency = vec![Vec::new(); names.len()];
-    let mut edp = vec![Vec::new(); names.len()];
-    for (ni, name) in names.iter().enumerate() {
-        let inst: NocInstance = ctx.instance_cloned(name);
-        let sys = ctx.sys_for(name);
-        let tag = if name.starts_with("mesh") { "mesh" } else { "wihet" };
-        let tm = ctx.traffic_on(model, &sys, tag);
+    let mut latency = vec![Vec::new(); kinds.len()];
+    let mut edp = vec![Vec::new(); kinds.len()];
+    for (ni, kind) in kinds.iter().enumerate() {
+        let inst: NocInstance = ctx.instance_cloned(*kind);
+        let sys = ctx.sys_for(*kind);
+        let tm = ctx.traffic_on(model, &sys);
         let cfg = ctx.trace_cfg();
         let mut rng = Rng::new(ctx.seed ^ 17);
         for p in &tm.phases {
@@ -95,7 +95,7 @@ fn render_per_layer(
 /// Paper: HetNoC ~23% lower, WiHetNoC ~42% lower on average.
 pub fn fig17(ctx: &mut Ctx) -> String {
     let mut out = String::new();
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let pl = per_layer(ctx, model);
         out.push_str(&render_per_layer(
             &format!("Fig 17 ({model}) — normalized network latency vs mesh"),
@@ -112,7 +112,7 @@ pub fn fig17(ctx: &mut Ctx) -> String {
 /// mesh. Paper: HetNoC ~0.56-0.58, WiHetNoC ~0.40-0.42.
 pub fn fig18(ctx: &mut Ctx) -> String {
     let mut out = String::new();
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let pl = per_layer(ctx, model);
         out.push_str(&render_per_layer(
             &format!("Fig 18 ({model}) — normalized network EDP vs mesh"),
@@ -133,17 +133,19 @@ pub fn fig19(ctx: &mut Ctx) -> String {
     );
     out.push_str("  model    noc        exec    EDP     paper exec / EDP\n");
     let cfg = ctx.trace_cfg();
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let spec = ctx.spec(model);
         // NOTE: the mesh is evaluated on its own optimized placement, the
         // irregular NoCs on the WiHetNoC placement, exactly as designed.
-        let mesh = ctx.instance_cloned("mesh_opt");
-        let het = ctx.instance_cloned("hetnoc");
-        let wihet = ctx.instance_cloned("wihetnoc");
-        let mesh_sys = ctx.sys_for("mesh_opt");
+        let mesh = ctx.instance_cloned(NocKind::MeshXyYx);
+        let het = ctx.instance_cloned(NocKind::HetNoc);
+        let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
+        let mesh_sys = ctx.sys_for(NocKind::MeshXyYx);
         let sys = ctx.sys.clone();
-        let mesh_rep = cosimulate(&mesh_sys, &spec, ctx.batch, &[&mesh], &cfg).unwrap();
-        let irr = cosimulate(&sys, &spec, ctx.batch, &[&het, &wihet], &cfg).unwrap();
+        let mesh_rep = cosimulate(&mesh_sys, &spec, ctx.batch(), &[&mesh], &cfg)
+            .expect("cosimulate is infallible on in-memory inputs");
+        let irr = cosimulate(&sys, &spec, ctx.batch(), &[&het, &wihet], &cfg)
+            .expect("cosimulate is infallible on in-memory inputs");
         let base = &mesh_rep.per_noc[0];
         for (i, name, paper) in [(0usize, "HetNoC", "0.92 / 0.85"), (1, "WiHetNoC", "0.87 / 0.75")] {
             let r = &irr.per_noc[i];
@@ -171,7 +173,7 @@ mod tests {
         // Traffic-weighted aggregates (the paper's means): WiHetNoC must
         // beat the mesh on both latency and message EDP.
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let pl = per_layer(&mut ctx, "lenet");
+        let pl = per_layer(&mut ctx, ModelId::LeNet);
         let wmean = |v: &Vec<f64>| {
             let wt: f64 = pl.flits.iter().sum();
             v.iter().zip(&pl.flits).map(|(x, w)| x * w).sum::<f64>() / wt

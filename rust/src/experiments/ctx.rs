@@ -2,51 +2,67 @@
 //! topologies, traffic models, NoC instances) across figures so `all`
 //! reuses one design per configuration — exactly like the paper, where a
 //! single WiHetNoC is designed and then evaluated everywhere.
+//!
+//! Every cache is keyed by *typed* values: traffic by
+//! [`ScenarioKey`] (workload x concrete tile placement), instances by
+//! [`NocKind`]. Two placements can never alias a cache entry the way the
+//! old string tags could.
 
 use std::collections::HashMap;
 
+use crate::error::WihetError;
 use crate::model::cnn::ModelSpec;
-use crate::model::{cdbnet, lenet, SystemConfig};
+use crate::model::SystemConfig;
 use crate::noc::analysis::TrafficMatrix;
 use crate::noc::builder::{
     alash_routes, het_noc, mesh_opt, optimize_wireline, wi_het_noc_on, DesignConfig, NocInstance,
+    NocKind,
 };
 use crate::noc::routing::RouteSet;
 use crate::noc::topology::Topology;
 use crate::optim::placement::optimize_placement;
 use crate::optim::wiplace::build_wireless;
+use crate::scenario::{ModelId, Scenario, ScenarioKey};
 use crate::traffic::phases::{model_phases, TrafficModel};
 use crate::traffic::trace::TraceConfig;
 
-/// Simulation/optimization effort level.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Effort {
-    /// CI-grade: tiny AMOSA budgets, heavily downsampled traces.
-    Quick,
-    /// Paper-grade: full budgets (used for EXPERIMENTS.md numbers).
-    Full,
-}
+pub use crate::scenario::Effort;
 
 pub struct Ctx {
     pub effort: Effort,
     pub seed: u64,
-    pub batch: usize,
+    /// Training batch size. Private: the traffic cache is derived from
+    /// it (and `ScenarioKey` does not carry it), so it is fixed at
+    /// construction — mutating it mid-session would serve stale
+    /// matrices.
+    batch: usize,
+    /// Design-input workload (the paper designs on LeNet's traffic).
+    /// Private for the same reason: the `wireline` and `instances`
+    /// caches are derived from it.
+    model: ModelId,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     pub sys: SystemConfig,
     /// AMOSA-optimized CPU/MC placement for the mesh baseline.
     mesh_sys: Option<SystemConfig>,
-    traffic: HashMap<(String, String), TrafficModel>, // (model, sys tag)
-    wireline: HashMap<usize, Topology>,               // per k_max
-    instances: HashMap<String, NocInstance>,
+    traffic: HashMap<ScenarioKey, TrafficModel>,
+    wireline: HashMap<usize, Topology>, // per k_max
+    instances: HashMap<NocKind, NocInstance>,
 }
 
 impl Ctx {
+    /// Context on the paper's 8x8 platform with the LeNet design workload.
     pub fn new(effort: Effort, seed: u64) -> Self {
+        Ctx::on_platform(SystemConfig::paper_8x8(), effort, seed)
+    }
+
+    /// Context on an explicit tile grid.
+    pub fn on_platform(sys: SystemConfig, effort: Effort, seed: u64) -> Self {
         Ctx {
             effort,
             seed,
             batch: 32,
-            sys: SystemConfig::paper_8x8(),
+            model: ModelId::LeNet,
+            sys,
             mesh_sys: None,
             traffic: HashMap::new(),
             wireline: HashMap::new(),
@@ -54,19 +70,32 @@ impl Ctx {
         }
     }
 
-    pub fn spec(&self, model: &str) -> ModelSpec {
-        match model {
-            "lenet" => lenet(),
-            "cdbnet" => cdbnet(),
-            other => panic!("unknown model {other}"),
-        }
+    /// Context for a typed scenario: validates and builds the platform,
+    /// and adopts the scenario's workload/effort/seed/batch.
+    pub fn for_scenario(sc: &Scenario) -> Result<Ctx, WihetError> {
+        let sys = sc.platform.build()?;
+        let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
+        ctx.model = sc.model;
+        ctx.batch = sc.batch;
+        Ok(ctx)
+    }
+
+    /// The design-input workload this context was built for.
+    pub fn model(&self) -> ModelId {
+        self.model
+    }
+
+    /// The batch size the traffic models are derived at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn spec(&self, model: ModelId) -> ModelSpec {
+        model.spec()
     }
 
     pub fn design_cfg(&self) -> DesignConfig {
-        match self.effort {
-            Effort::Quick => DesignConfig::quick(self.seed),
-            Effort::Full => DesignConfig { seed: self.seed, ..DesignConfig::default() },
-        }
+        DesignConfig::scaled(&self.sys, self.effort, self.seed)
     }
 
     pub fn trace_cfg(&self) -> TraceConfig {
@@ -88,25 +117,33 @@ impl Ctx {
         self.mesh_sys.clone().unwrap()
     }
 
-    /// Traffic model for `model` on a given system placement.
-    pub fn traffic_on(&mut self, model: &str, sys: &SystemConfig, tag: &str) -> TrafficModel {
-        let key = (model.to_string(), tag.to_string());
+    /// Traffic model for `model` on a given system placement. The cache
+    /// key is derived from the placement itself, so distinct placements
+    /// can never serve each other's (stale) matrices.
+    pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> TrafficModel {
+        let key = ScenarioKey::new(model, sys);
         if !self.traffic.contains_key(&key) {
-            let spec = self.spec(model);
-            self.traffic
-                .insert(key.clone(), model_phases(sys, &spec, self.batch));
+            let spec = model.spec();
+            self.traffic.insert(key, model_phases(sys, &spec, self.batch));
         }
         self.traffic[&key].clone()
     }
 
-    pub fn traffic(&mut self, model: &str) -> TrafficModel {
+    pub fn traffic(&mut self, model: ModelId) -> TrafficModel {
         let sys = self.sys.clone();
-        self.traffic_on(model, &sys, "wihet")
+        self.traffic_on(model, &sys)
     }
 
-    /// Aggregate LeNet f_ij on the WiHetNoC placement (the design input —
-    /// the paper optimizes on the traffic pattern, not per-layer).
-    pub fn fij(&mut self, model: &str) -> TrafficMatrix {
+    /// Number of distinct (workload, placement) traffic models cached —
+    /// exposed for cache-correctness tests.
+    pub fn cached_traffic_models(&self) -> usize {
+        self.traffic.len()
+    }
+
+    /// Aggregate f_ij of the design workload on the WiHetNoC placement
+    /// (the design input — the paper optimizes on the traffic pattern,
+    /// not per-layer).
+    pub fn fij(&mut self, model: ModelId) -> TrafficMatrix {
         let sys = self.sys.clone();
         self.traffic(model).fij(&sys)
     }
@@ -114,7 +151,8 @@ impl Ctx {
     /// Optimized irregular wireline topology for `k_max` (cached).
     pub fn wireline(&mut self, k_max: usize) -> Topology {
         if !self.wireline.contains_key(&k_max) {
-            let fij = self.fij("lenet");
+            let model = self.model;
+            let fij = self.fij(model);
             let mut cfg = self.design_cfg();
             cfg.k_max = k_max;
             cfg.seed = self.seed.wrapping_add(k_max as u64);
@@ -124,52 +162,52 @@ impl Ctx {
         self.wireline[&k_max].clone()
     }
 
-    /// The four headline NoC instances, cached by name:
-    /// "mesh_xy", "mesh_opt" (XY+YX), "hetnoc", "wihetnoc".
-    pub fn instance(&mut self, name: &str) -> &NocInstance {
-        if !self.instances.contains_key(name) {
-            let inst = match name {
-                "mesh_xy" => {
+    /// The four headline NoC instances, cached by kind.
+    pub fn instance(&mut self, kind: NocKind) -> &NocInstance {
+        if !self.instances.contains_key(&kind) {
+            let model = self.model;
+            let inst = match kind {
+                NocKind::MeshXy => {
                     let sys = self.mesh_sys();
                     mesh_opt(&sys, false)
                 }
-                "mesh_opt" => {
+                NocKind::MeshXyYx => {
                     let sys = self.mesh_sys();
                     mesh_opt(&sys, true)
                 }
-                "hetnoc" => {
-                    let fij = self.fij("lenet");
+                NocKind::HetNoc => {
+                    let fij = self.fij(model);
                     let cfg = self.design_cfg();
                     het_noc(&self.sys, &fij, &cfg)
                 }
-                "wihetnoc" => {
+                NocKind::WiHetNoc => {
                     let topo = self.wireline(self.design_cfg().k_max);
-                    let fij = self.fij("lenet");
+                    let fij = self.fij(model);
                     let cfg = self.design_cfg();
                     wi_het_noc_on(&self.sys, &fij, &cfg, topo)
                 }
-                other => panic!("unknown instance {other}"),
             };
-            self.instances.insert(name.to_string(), inst);
+            self.instances.insert(kind, inst);
         }
-        &self.instances[name]
+        &self.instances[&kind]
     }
 
     /// Owned copy of a cached instance (for call sites that also need
     /// `&mut self` while holding the instance).
-    pub fn instance_cloned(&mut self, name: &str) -> NocInstance {
-        self.instance(name).clone()
+    pub fn instance_cloned(&mut self, kind: NocKind) -> NocInstance {
+        self.instance(kind).clone()
     }
 
     /// WiHetNoC variant with a custom WI count / channel count on the
     /// cached k_max=default wireline topology (Figs 12-13 sweeps).
     pub fn wihet_variant(&mut self, n_wi: usize, gpu_channels: usize) -> NocInstance {
         let topo = self.wireline(self.design_cfg().k_max);
-        let fij = self.fij("lenet");
+        let model = self.model;
+        let fij = self.fij(model);
         let air = build_wireless(&topo, &fij, &self.sys.cpus(), &self.sys.mcs(), n_wi, gpu_channels);
         let routes: RouteSet = alash_routes(&self.sys, &topo, &air, &fij);
         NocInstance {
-            kind: crate::noc::builder::NocKind::WiHetNoc,
+            kind: NocKind::WiHetNoc,
             topo,
             routes,
             air,
@@ -177,10 +215,11 @@ impl Ctx {
     }
 
     /// The system placement an instance should be simulated on.
-    pub fn sys_for(&mut self, name: &str) -> SystemConfig {
-        match name {
-            "mesh_xy" | "mesh_opt" => self.mesh_sys(),
-            _ => self.sys.clone(),
+    pub fn sys_for(&mut self, kind: NocKind) -> SystemConfig {
+        if kind.uses_mesh_placement() {
+            self.mesh_sys()
+        } else {
+            self.sys.clone()
         }
     }
 }
@@ -192,8 +231,8 @@ mod tests {
     #[test]
     fn ctx_caches_instances() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let a = ctx.instance("mesh_xy").topo.links.len();
-        let b = ctx.instance("mesh_xy").topo.links.len();
+        let a = ctx.instance(NocKind::MeshXy).topo.links.len();
+        let b = ctx.instance(NocKind::MeshXy).topo.links.len();
         assert_eq!(a, b);
         assert_eq!(a, 112);
     }
@@ -215,5 +254,42 @@ mod tests {
         let v = ctx.wihet_variant(8, 2);
         assert_eq!(v.air.num_channels, 3);
         assert_eq!(v.air.wis.len(), 8 + 8);
+    }
+
+    #[test]
+    fn traffic_cache_keyed_by_placement_not_tag() {
+        // Regression: the old cache was keyed by (model, string tag), so
+        // two placements sharing a tag returned stale matrices.
+        let mut ctx = Ctx::new(Effort::Quick, 4);
+        let wihet_sys = ctx.sys.clone();
+        let mut tiles = wihet_sys.tiles.clone();
+        tiles.swap(0, 27); // move a CPU to the corner: same tag, new placement
+        let other_sys = wihet_sys.with_tiles(tiles);
+        let _ = ctx.traffic_on(ModelId::LeNet, &wihet_sys);
+        assert_eq!(ctx.cached_traffic_models(), 1);
+        let _ = ctx.traffic_on(ModelId::LeNet, &wihet_sys);
+        assert_eq!(ctx.cached_traffic_models(), 1, "same placement must hit");
+        let _ = ctx.traffic_on(ModelId::LeNet, &other_sys);
+        assert_eq!(
+            ctx.cached_traffic_models(),
+            2,
+            "distinct placement must not alias"
+        );
+        let _ = ctx.traffic_on(ModelId::CdbNet, &wihet_sys);
+        assert_eq!(ctx.cached_traffic_models(), 3);
+    }
+
+    #[test]
+    fn for_scenario_builds_non_paper_platforms() {
+        let sc = crate::scenario::Scenario::new(
+            "4x4".parse().unwrap(),
+            ModelId::CdbNet,
+        )
+        .with_seed(9);
+        let mut ctx = Ctx::for_scenario(&sc).unwrap();
+        assert_eq!(ctx.sys.num_tiles(), 16);
+        assert_eq!(ctx.model, ModelId::CdbNet);
+        let inst = ctx.instance_cloned(NocKind::MeshXyYx);
+        assert_eq!(inst.topo.links.len(), 24);
     }
 }

@@ -16,14 +16,17 @@ pub mod compare_figs; // fig17, fig18, fig19
 
 pub use ctx::{Ctx, Effort};
 
+use crate::error::WihetError;
+
 /// All experiment ids in paper order.
 pub const ALL: &[&str] = &[
     "table1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
 ];
 
-/// Dispatch one experiment by id; returns its printable report.
-pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, String> {
+/// Dispatch one experiment by id; returns its printable report. Unknown
+/// ids are a typed [`WihetError::UnknownExperiment`], never a panic.
+pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, WihetError> {
     match id {
         "table1" => Ok(table1::run(ctx)),
         "fig5" => Ok(traffic_figs::fig5(ctx)),
@@ -41,6 +44,6 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, String> {
         "fig17" => Ok(compare_figs::fig17(ctx)),
         "fig18" => Ok(compare_figs::fig18(ctx)),
         "fig19" => Ok(compare_figs::fig19(ctx)),
-        other => Err(format!("unknown experiment '{other}' (try: {})", ALL.join(", "))),
+        other => Err(WihetError::UnknownExperiment(other.to_string())),
     }
 }

@@ -8,23 +8,26 @@ use crate::noc::topology::Topology;
 use crate::optim::amosa::{Amosa, AmosaConfig};
 use crate::optim::linkplace::LinkPlacement;
 
-/// Fig 8: link utilizations of the optimized mesh under LeNet traffic,
-/// normalized to the mean. Paper: MC-adjacent links reach ~6-7x mean.
+/// Fig 8: link utilizations of the optimized mesh under the scenario's
+/// design workload (paper: LeNet), normalized to the mean. Paper:
+/// MC-adjacent links reach ~6-7x mean.
 pub fn fig8(ctx: &mut Ctx) -> String {
+    let model = ctx.model();
     let sys = ctx.mesh_sys();
-    let tm = ctx.traffic_on("lenet", &sys, "mesh");
+    let tm = ctx.traffic_on(model, &sys);
     let fij = tm.fij(&sys);
     let topo = Topology::mesh(&sys);
     let a = analyze(&topo, &fij);
     let mean = a.u_mean.max(1e-30);
 
-    let mut out = String::from(
-        "Fig 8 — optimized mesh link utilization / mean (LeNet). Paper: MC links 6-7x mean\n\n",
+    let mut out = format!(
+        "Fig 8 — optimized mesh link utilization / mean ({model}). Paper: MC links 6-7x mean\n\n",
     );
     // per-tile kind map + hottest links
     let w = sys.width;
+    let h = sys.height();
     out.push_str("  tile map (C=CPU, M=MC, .=GPU):\n");
-    for r in 0..w {
+    for r in 0..h {
         out.push_str("    ");
         for c in 0..w {
             let ch = match sys.tiles[r * w + c] {
@@ -77,8 +80,9 @@ pub fn fig8(ctx: &mut Ctx) -> String {
 /// mesh (XY, XY+YX) vs WiHetNoC wireline candidates (k_max 4..7).
 /// Paper: mesh is >= 2x worse on both.
 pub fn fig9(ctx: &mut Ctx) -> String {
+    let model = ctx.model();
     let mesh_sys = ctx.mesh_sys();
-    let mesh_tm = ctx.traffic_on("lenet", &mesh_sys, "mesh");
+    let mesh_tm = ctx.traffic_on(model, &mesh_sys);
     let mesh_fij = mesh_tm.fij(&mesh_sys);
     let mesh = Topology::mesh(&mesh_sys);
     let a_mesh = analyze(&mesh, &mesh_fij);
@@ -92,7 +96,7 @@ pub fn fig9(ctx: &mut Ctx) -> String {
         a.u_std * 0.85
     };
 
-    let fij = ctx.fij("lenet");
+    let fij = ctx.fij(model);
     let mut out = String::from(
         "Fig 9 — traffic-weighted hop count & σ(U): mesh vs WiHetNoC candidates\n\n",
     );
@@ -126,7 +130,8 @@ pub fn fig9(ctx: &mut Ctx) -> String {
 /// final WiHetNoC configuration. Paper: both objectives fall as k_max
 /// grows, with diminishing returns by 7.
 pub fn fig10(ctx: &mut Ctx) -> String {
-    let fij = ctx.fij("lenet");
+    let model = ctx.model();
+    let fij = ctx.fij(model);
     let sys = ctx.sys.clone();
     let num_links = Topology::mesh(&sys).links.len();
     let mut out = String::from(
@@ -162,7 +167,8 @@ pub fn fig10(ctx: &mut Ctx) -> String {
 /// Analytic helper shared with tests: (twhc, σ) of an instance's wireline
 /// topology under the LeNet fij.
 pub fn wireline_objectives(ctx: &mut Ctx, k_max: usize) -> (f64, f64) {
-    let fij = ctx.fij("lenet");
+    let model = ctx.model();
+    let fij = ctx.fij(model);
     let topo = ctx.wireline(k_max);
     let a = analyze(&topo, &fij);
     (a.twhc, a.u_std)
@@ -170,8 +176,9 @@ pub fn wireline_objectives(ctx: &mut Ctx, k_max: usize) -> (f64, f64) {
 
 /// Mesh XY objectives on the mesh placement (baseline for ratios).
 pub fn mesh_objectives(ctx: &mut Ctx) -> (f64, f64) {
+    let model = ctx.model();
     let sys = ctx.mesh_sys();
-    let tm = ctx.traffic_on("lenet", &sys, "mesh");
+    let tm = ctx.traffic_on(model, &sys);
     let fij = tm.fij(&sys);
     let a = analyze(&Topology::mesh(&sys), &fij);
     (a.twhc, a.u_std)

@@ -9,11 +9,13 @@ use crate::noc::routing::RouteSet;
 use crate::noc::sim::{NocSim, SimConfig, SimReport};
 use crate::traffic::trace::training_trace;
 
-/// Simulate one full training iteration of LeNet on `inst`; returns the
-/// sim report (shared by the parameter sweeps).
+/// Simulate one full training iteration of the scenario's design
+/// workload (paper: LeNet) on `inst`; returns the sim report (shared by
+/// the parameter sweeps).
 pub fn sim_iteration(ctx: &mut Ctx, inst: &NocInstance) -> SimReport {
+    let model = ctx.model();
     let sys = ctx.sys.clone();
-    let tm = ctx.traffic("lenet");
+    let tm = ctx.traffic(model);
     let cfg = ctx.trace_cfg();
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
@@ -29,7 +31,8 @@ pub fn fig11(ctx: &mut Ctx) -> String {
     let mut rows = Vec::new();
     for k_max in 4..=7 {
         let topo = ctx.wireline(k_max);
-        let fij = ctx.fij("lenet");
+        let model = ctx.model();
+        let fij = ctx.fij(model);
         let routes = RouteSet::shortest(&topo, Some(&fij));
         let inst = NocInstance {
             kind: crate::noc::builder::NocKind::HetNoc,

@@ -2,10 +2,11 @@
 //! asserted against the paper's entries in model::cnn tests).
 
 use super::ctx::Ctx;
+use crate::scenario::ModelId;
 
 pub fn run(ctx: &mut Ctx) -> String {
     let mut out = String::from("Table 1 — layer configurations (derived)\n");
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let spec = ctx.spec(model);
         out.push_str(&format!(
             "\n{} (input {}x{}x{}):\n",
@@ -26,8 +27,8 @@ pub fn run(ctx: &mut Ctx) -> String {
         out.push_str(&format!(
             "  total weights: {}  | fwd MACs @batch {}: {}\n",
             spec.layers.iter().map(|l| l.weight_count()).sum::<u64>(),
-            ctx.batch,
-            spec.total_macs(ctx.batch),
+            ctx.batch(),
+            spec.total_macs(ctx.batch()),
         ));
     }
     out.push_str("\npaper check: LeNet C1 29x29x16, C2 11x11x16, C3 1x1x128; CDBNet C1 31x31x32, C2 15x15x32, C3 7x7x64 — asserted in model::cnn::tests.\n");

@@ -4,7 +4,9 @@ use super::common::normalize_to_max;
 use super::ctx::Ctx;
 use crate::model::cnn::Pass;
 use crate::model::TileKind;
+use crate::noc::builder::NocKind;
 use crate::noc::sim::{NocSim, SimConfig};
+use crate::scenario::ModelId;
 use crate::traffic::trace::phase_trace;
 use crate::util::rng::Rng;
 
@@ -15,7 +17,7 @@ pub fn fig5(ctx: &mut Ctx) -> String {
         "Fig 5 — normalized injection rate per layer (paper: conv > pool > FC)\n",
     );
     let sys = ctx.sys.clone();
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let tm = ctx.traffic(model);
         for pass in [Pass::Forward, Pass::Backward] {
             let phases = tm.pass_phases(pass);
@@ -35,12 +37,12 @@ pub fn fig5(ctx: &mut Ctx) -> String {
 pub fn fig6(ctx: &mut Ctx) -> String {
     let mut out = String::from("Fig 6 — traffic breakdown per layer (flit shares)\n");
     let sys = ctx.sys.clone();
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let tm = ctx.traffic(model);
         out.push_str(&format!(
             "\n{model}: many-to-few = {:.1}% (paper: {}%)\n",
             100.0 * tm.many_to_few_fraction(&sys),
-            if model == "lenet" { 93 } else { 89 },
+            if model == ModelId::LeNet { 93 } else { 89 },
         ));
         out.push_str("  layer(pass)   core->MC  MC->core  core-core  MC->core/core->MC\n");
         for p in &tm.phases {
@@ -68,7 +70,7 @@ pub fn fig6(ctx: &mut Ctx) -> String {
 /// (waves), demonstrating the need for dedicated CPU-MC links.
 pub fn fig7(ctx: &mut Ctx) -> String {
     let sys = ctx.sys.clone();
-    let tm = ctx.traffic("lenet");
+    let tm = ctx.traffic(ModelId::LeNet);
     let mut out = String::from(
         "Fig 7 — temporal locality of MC accesses (LeNet fwd; '#' = tile sent/received in bin)\n",
     );
@@ -123,7 +125,7 @@ fn bar(v: f64) -> String {
 
 /// Simulated (not just modeled) injection ordering — used by tests to tie
 /// the Fig 5 model to actual simulator behavior.
-pub fn simulated_phase_latency(ctx: &mut Ctx, model: &str, tag: &str, pass: Pass) -> f64 {
+pub fn simulated_phase_latency(ctx: &mut Ctx, model: ModelId, tag: &str, pass: Pass) -> f64 {
     let sys = ctx.sys.clone();
     let tm = ctx.traffic(model);
     let phase = tm
@@ -134,7 +136,7 @@ pub fn simulated_phase_latency(ctx: &mut Ctx, model: &str, tag: &str, pass: Pass
     let mut rng = Rng::new(ctx.seed);
     let cfg = ctx.trace_cfg();
     let (msgs, _) = phase_trace(&sys, phase, 0, &cfg, &mut rng);
-    let inst = ctx.instance("mesh_xy");
+    let inst = ctx.instance(NocKind::MeshXy);
     let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
     sim.run(&msgs).latency.mean()
 }

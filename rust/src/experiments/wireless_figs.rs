@@ -3,18 +3,20 @@
 use super::ctx::Ctx;
 use super::param_figs::sim_iteration;
 use crate::model::cnn::Pass;
+use crate::noc::builder::NocKind;
 use crate::noc::sim::{NocSim, SimConfig, SimReport};
+use crate::scenario::ModelId;
 use crate::traffic::trace::{phase_trace, training_trace};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
-/// Simulate one LeNet iteration on a named cached instance, using the
-/// placement that instance was designed for.
-fn sim_named(ctx: &mut Ctx, name: &str) -> SimReport {
-    let inst = ctx.instance_cloned(name);
-    let sys = ctx.sys_for(name);
-    let tag = if name.starts_with("mesh") { "mesh" } else { "wihet" };
-    let tm = ctx.traffic_on("lenet", &sys, tag);
+/// Simulate one design-workload iteration on a cached instance, using
+/// the placement that instance was designed for.
+fn sim_kind(ctx: &mut Ctx, kind: NocKind) -> SimReport {
+    let model = ctx.model();
+    let inst = ctx.instance_cloned(kind);
+    let sys = ctx.sys_for(kind);
+    let tm = ctx.traffic_on(model, &sys);
     let cfg = ctx.trace_cfg();
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace)
@@ -24,12 +26,12 @@ fn sim_named(ctx: &mut Ctx, name: &str) -> SimReport {
 /// injection window by increasing rate multipliers until mean latency
 /// exceeds `LAT_BOUND`; the network throughput is the delivered flits/
 /// cycle of the last stable point.
-pub fn saturation_throughput(ctx: &mut Ctx, name: &str) -> (f64, f64) {
+pub fn saturation_throughput(ctx: &mut Ctx, kind: NocKind) -> (f64, f64) {
     const LAT_BOUND: f64 = 300.0;
     let mut best = (0.0f64, 0.0f64); // (throughput, rate)
     for step in 1..=32 {
         let rate = 0.25 * step as f64;
-        let rep = sim_at_rate(ctx, name, rate);
+        let rep = sim_at_rate(ctx, kind, rate);
         if rep.latency.mean() > LAT_BOUND {
             break;
         }
@@ -38,12 +40,13 @@ pub fn saturation_throughput(ctx: &mut Ctx, name: &str) -> (f64, f64) {
     best
 }
 
-/// Simulate one LeNet iteration with injection times compressed by `rate`.
-pub fn sim_at_rate(ctx: &mut Ctx, name: &str, rate: f64) -> SimReport {
-    let inst = ctx.instance_cloned(name);
-    let sys = ctx.sys_for(name);
-    let tag = if name.starts_with("mesh") { "mesh" } else { "wihet" };
-    let tm = ctx.traffic_on("lenet", &sys, tag);
+/// Simulate one design-workload iteration with injection times
+/// compressed by `rate`.
+pub fn sim_at_rate(ctx: &mut Ctx, kind: NocKind, rate: f64) -> SimReport {
+    let model = ctx.model();
+    let inst = ctx.instance_cloned(kind);
+    let sys = ctx.sys_for(kind);
+    let tm = ctx.traffic_on(model, &sys);
     let cfg = ctx.trace_cfg();
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     let compressed: Vec<_> = trace
@@ -60,18 +63,18 @@ pub fn sim_at_rate(ctx: &mut Ctx, name: &str, rate: f64) -> SimReport {
 /// Fig 14: CPU-MC latency and overall throughput, optimized mesh vs
 /// WiHetNoC. Paper: ~1.8x latency reduction, ~2.2x throughput.
 pub fn fig14(ctx: &mut Ctx) -> String {
-    let (mesh_thr, mesh_rate) = saturation_throughput(ctx, "mesh_opt");
-    let (wihet_thr, wihet_rate) = saturation_throughput(ctx, "wihetnoc");
+    let (mesh_thr, mesh_rate) = saturation_throughput(ctx, NocKind::MeshXyYx);
+    let (wihet_thr, wihet_rate) = saturation_throughput(ctx, NocKind::WiHetNoc);
     // Two operating points: the workload's nominal rate (x1 — where the
     // CNN actually drives the chip, and where the mesh sits at its
     // saturation edge), and 75% of the common sustainable load (finite-
     // queue regime comparable to the paper's reported latencies).
     let nominal = 1.0;
     let light = (mesh_rate.min(wihet_rate) * 0.75).max(0.25);
-    let mesh_nom = sim_at_rate(ctx, "mesh_opt", nominal);
-    let wihet_nom = sim_at_rate(ctx, "wihetnoc", nominal);
-    let mesh_lt = sim_at_rate(ctx, "mesh_opt", light);
-    let wihet_lt = sim_at_rate(ctx, "wihetnoc", light);
+    let mesh_nom = sim_at_rate(ctx, NocKind::MeshXyYx, nominal);
+    let wihet_nom = sim_at_rate(ctx, NocKind::WiHetNoc, nominal);
+    let mesh_lt = sim_at_rate(ctx, NocKind::MeshXyYx, light);
+    let wihet_lt = sim_at_rate(ctx, NocKind::WiHetNoc, light);
 
     let thr_ratio = wihet_thr / mesh_thr.max(1e-9);
     let r = |a: f64, b: f64| a / b.max(1e-9);
@@ -110,8 +113,8 @@ pub fn fig14(ctx: &mut Ctx) -> String {
 /// the mesh mean. Paper: 20% of mesh links >2x mean; WiHetNoC has none,
 /// and >90% of WiHetNoC links sit below the mesh mean.
 pub fn fig15(ctx: &mut Ctx) -> String {
-    let mesh_util = sim_named(ctx, "mesh_opt").link_utilization();
-    let wihet = ctx.instance_cloned("wihetnoc");
+    let mesh_util = sim_kind(ctx, NocKind::MeshXyYx).link_utilization();
+    let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
     let wihet_util = sim_iteration(ctx, &wihet).link_utilization();
 
     let mesh_mean = stats::mean(&mesh_util).max(1e-30);
@@ -141,11 +144,11 @@ pub fn fig15(ctx: &mut Ctx) -> String {
 /// Fig 6 traffic asymmetry (the MAC allocates bandwidth on demand).
 pub fn fig16(ctx: &mut Ctx) -> String {
     let sys = ctx.sys.clone();
-    let inst = ctx.instance_cloned("wihetnoc");
+    let inst = ctx.instance_cloned(NocKind::WiHetNoc);
     let mut out = String::from(
         "Fig 16 — WI utilization asymmetry per layer (MC->core : core->MC over wireless)\n",
     );
-    for model in ["lenet", "cdbnet"] {
+    for model in ModelId::ALL {
         let tm = ctx.traffic(model);
         out.push_str(&format!(
             "\n{model}:\n  layer(pass)   air MC->core   air core->MC   ratio   Fig6 traffic ratio\n"
@@ -186,8 +189,8 @@ mod tests {
         // mesh near saturation). At very light load the dedicated
         // channel's MAC overhead makes wireless slower — expected.
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let mesh = sim_at_rate(&mut ctx, "mesh_opt", 3.0);
-        let wihet = sim_at_rate(&mut ctx, "wihetnoc", 3.0);
+        let mesh = sim_at_rate(&mut ctx, NocKind::MeshXyYx, 3.0);
+        let wihet = sim_at_rate(&mut ctx, NocKind::WiHetNoc, 3.0);
         assert!(
             wihet.cpu_mc_latency.mean() < mesh.cpu_mc_latency.mean(),
             "cpu-mc: wihet {} vs mesh {}",
@@ -205,8 +208,8 @@ mod tests {
     #[test]
     fn fig14_wihetnoc_higher_saturation_throughput() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let (mesh_thr, _) = saturation_throughput(&mut ctx, "mesh_opt");
-        let (wihet_thr, _) = saturation_throughput(&mut ctx, "wihetnoc");
+        let (mesh_thr, _) = saturation_throughput(&mut ctx, NocKind::MeshXyYx);
+        let (wihet_thr, _) = saturation_throughput(&mut ctx, NocKind::WiHetNoc);
         assert!(
             wihet_thr > mesh_thr,
             "saturation: wihet {wihet_thr} vs mesh {mesh_thr}"
@@ -216,8 +219,8 @@ mod tests {
     #[test]
     fn fig15_wihetnoc_balances_links() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let mesh_util = sim_named(&mut ctx, "mesh_opt").link_utilization();
-        let wihet = ctx.instance_cloned("wihetnoc");
+        let mesh_util = sim_kind(&mut ctx, NocKind::MeshXyYx).link_utilization();
+        let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
         let wihet_util = sim_iteration(&mut ctx, &wihet).link_utilization();
         let mesh_mean = stats::mean(&mesh_util);
         let frac_over = |xs: &[f64]| {

@@ -2,10 +2,45 @@
 //!
 //! Reproduction of Choi et al., *On-Chip Communication Network for
 //! Efficient Training of Deep Convolutional Networks on Heterogeneous
-//! Manycore Systems* (IEEE TC 2017). See DESIGN.md for the system
-//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//! Manycore Systems* (IEEE TC 2017), generalized beyond the paper's 8x8
+//! chip by a typed scenario API.
 //!
-//! Architecture (three layers, Python never on the request path):
+//! ## The typed API
+//!
+//! Three pillars describe any evaluation:
+//!
+//! * [`Platform`] — *what chip*: a `width x height` grid with a CPU/GPU/MC
+//!   mix and a placement policy, validated at construction. Parses from
+//!   strings: `"8x8"` (the paper's 56 GPU / 4 CPU / 4 MC die), `"4x4"`,
+//!   `"12x12:cpus=8,mcs=8,placement=corners"`, ...
+//! * [`Scenario`] — *what experiment*: platform + workload ([`ModelId`]) +
+//!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch. The
+//!   single input to design, simulation, and the experiment harnesses.
+//! * [`noc::builder::NocDesigner`] — *how to build it*: a fluent builder
+//!   that runs the paper's design flow (AMOSA wireline optimization,
+//!   wireless overlay, ALASH routing) with knobs scaled to the platform.
+//!
+//! Every fallible entry point returns [`WihetError`]; user input (model
+//! names, NoC names, experiment ids, platform strings) never panics.
+//!
+//! ```no_run
+//! use wihetnoc::noc::builder::{NocDesigner, NocKind};
+//! use wihetnoc::{ModelId, Platform, Scenario, WihetError};
+//!
+//! // The paper's chip ...
+//! let paper = Scenario::paper();
+//! // ... or any platform you can describe:
+//! let edge: Platform = "4x4:cpus=2,mcs=2".parse()?;
+//! let scenario = Scenario::new(edge, ModelId::CdbNet).with_seed(7);
+//! let wihet = NocDesigner::for_scenario(&scenario)?.build()?;
+//! let mesh = NocDesigner::for_scenario(&scenario)?.kind(NocKind::MeshXyYx).build()?;
+//! # let _ = (paper, wihet, mesh);
+//! # Ok::<(), WihetError>(())
+//! ```
+//!
+//! ## Architecture
+//!
+//! Three layers; Python is never on the request path:
 //! * **L1/L2 (build-time Python)**: Pallas conv/pool/dense kernels and the
 //!   LeNet/CDBNet training step in JAX, AOT-lowered to HLO text under
 //!   `artifacts/` by `make artifacts`.
@@ -13,14 +48,23 @@
 //!   the NoC toolchain — traffic model, AMOSA design-space optimizer,
 //!   cycle-level simulator, energy model — evaluates mesh / HetNoC /
 //!   WiHetNoC architectures running that workload.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
 
 pub mod bench;
 pub mod coordinator;
 pub mod energy;
+pub mod error;
 pub mod experiments;
 pub mod model;
 pub mod noc;
 pub mod optim;
 pub mod runtime;
+pub mod scenario;
 pub mod traffic;
 pub mod util;
+
+pub use error::WihetError;
+pub use model::{Platform, PlacementPolicy};
+pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};

@@ -3,21 +3,26 @@
 //! Subcommands:
 //!   experiment <id|all>     regenerate a paper table/figure (table1, fig5..fig19)
 //!   train                   train a CNN through the PJRT artifacts (L3 path)
-//!   design                  run the WiHetNoC design flow and print the result
-//!   simulate                simulate one training iteration on a chosen NoC
+//!   design                  run the NoC design flow on any platform and print the result
+//!   simulate                simulate one training iteration on a chosen NoC/platform
 //!   list                    list experiments and manifest entries
+//!
+//! Platforms are typed: `--system 8x8` (the paper chip), `--system 4x4`,
+//! `--system 12x12:cpus=8,mcs=8,placement=corners`, ... Unknown models,
+//! NoCs, experiments, and malformed platforms are reported as errors —
+//! never panics.
 
 use std::process::ExitCode;
 
 use wihetnoc::coordinator::{TrainConfig, Trainer};
 use wihetnoc::experiments::{self, Ctx, Effort};
-use wihetnoc::model::SystemConfig;
 use wihetnoc::noc::analysis::analyze;
-use wihetnoc::noc::builder::{wi_het_noc, DesignConfig};
+use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
+use wihetnoc::{ModelId, Platform, Scenario, WihetError};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +54,7 @@ fn main() -> ExitCode {
 fn top_usage() -> String {
     "wihetnoc — WiHetNoC reproduction (Choi et al., IEEE TC 2017)\n\
      usage: wihetnoc <experiment|train|design|simulate|list> [options]\n\
+     platforms are typed: --system 8x8 | 4x4 | 12x12:cpus=8,mcs=8,placement=corners\n\
      run `wihetnoc <command> --help` for command options"
         .to_string()
 }
@@ -65,13 +71,32 @@ fn common_specs() -> Vec<ArgSpec> {
     ]
 }
 
+const SYSTEM_HELP: &str = "platform: WxH[:cpus=N,mcs=N,placement=centered|corners]";
+
+fn system_spec() -> ArgSpec {
+    ArgSpec { name: "system", help: SYSTEM_HELP, default: Some("8x8"), is_flag: false }
+}
+
+fn model_spec() -> ArgSpec {
+    ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false }
+}
+
+fn str_err(e: WihetError) -> String {
+    e.to_string()
+}
+
+/// Parse the common typed pieces into a `Scenario`.
+fn scenario_from(args: &Args) -> Result<Scenario, String> {
+    let platform: Platform = args.get_or("system", "8x8").parse().map_err(str_err)?;
+    let model: ModelId = args.get_or("model", "lenet").parse().map_err(str_err)?;
+    let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
+    let seed = args.get_u64("seed", 42)?;
+    Ok(Scenario::new(platform, model).with_effort(effort).with_seed(seed))
+}
+
 fn ctx_from(args: &Args) -> Result<Ctx, String> {
     let seed = args.get_u64("seed", 42)?;
-    let effort = match args.get_or("effort", "quick").as_str() {
-        "quick" => Effort::Quick,
-        "full" => Effort::Full,
-        other => return Err(format!("--effort must be quick|full, got {other}")),
-    };
+    let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     Ok(Ctx::new(effort, seed))
 }
 
@@ -93,7 +118,7 @@ fn cmd_experiment(argv: &[String]) -> Result<(), String> {
     };
     for id in ids {
         let t0 = std::time::Instant::now();
-        let report = experiments::run(id, &mut ctx)?;
+        let report = experiments::run(id, &mut ctx).map_err(str_err)?;
         println!("{report}");
         println!("[{id} done in {:.1}s]\n", t0.elapsed().as_secs_f64());
     }
@@ -103,7 +128,7 @@ fn cmd_experiment(argv: &[String]) -> Result<(), String> {
 fn cmd_train(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.extend([
-        ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false },
+        model_spec(),
         ArgSpec { name: "steps", help: "training steps", default: Some("100"), is_flag: false },
         ArgSpec {
             name: "artifacts",
@@ -113,17 +138,13 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         },
     ]);
     let args = parse(argv, &specs)?;
-    let model = args.get_or("model", "lenet");
+    let model: ModelId = args.get_or("model", "lenet").parse().map_err(str_err)?;
     let steps = args.get_usize("steps", 100)?;
     let seed = args.get_u64("seed", 42)?;
     let mut rt = Runtime::new(args.get_or("artifacts", "artifacts")).map_err(|e| format!("{e:#}"))?;
     let batch = rt.manifest.batch;
     println!("platform: {} | model: {model} | batch: {batch} | steps: {steps}", rt.platform());
-    let spec = match model.as_str() {
-        "lenet" => wihetnoc::model::lenet(),
-        "cdbnet" => wihetnoc::model::cdbnet(),
-        other => return Err(format!("unknown model {other}")),
-    };
+    let spec = model.spec();
     let mut trainer = Trainer::new(&mut rt, spec, seed).map_err(|e| format!("{e:#}"))?;
     let cfg = TrainConfig { steps, batch, seed, log_every: (steps / 20).max(1) };
     let log = trainer.train(&cfg).map_err(|e| format!("{e:#}"))?;
@@ -144,27 +165,51 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
 fn cmd_design(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.extend([
-        ArgSpec { name: "kmax", help: "router port bound", default: Some("6"), is_flag: false },
-        ArgSpec { name: "nwi", help: "GPU-MC wireless interfaces", default: Some("24"), is_flag: false },
-        ArgSpec { name: "channels", help: "GPU-MC channels", default: Some("4"), is_flag: false },
+        system_spec(),
+        model_spec(),
+        ArgSpec {
+            name: "noc",
+            help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
+            default: Some("wihetnoc"),
+            is_flag: false,
+        },
+        ArgSpec { name: "kmax", help: "router port bound (default: scaled)", default: None, is_flag: false },
+        ArgSpec { name: "nwi", help: "GPU-MC wireless interfaces (default: scaled)", default: None, is_flag: false },
+        ArgSpec { name: "channels", help: "GPU-MC channels (default: scaled)", default: None, is_flag: false },
     ]);
     let args = parse(argv, &specs)?;
-    let mut ctx = ctx_from(&args)?;
-    let sys = SystemConfig::paper_8x8();
-    let fij = ctx.fij("lenet");
-    let mut cfg = match ctx.effort {
-        Effort::Quick => DesignConfig::quick(ctx.seed),
-        Effort::Full => DesignConfig { seed: ctx.seed, ..DesignConfig::default() },
-    };
-    cfg.k_max = args.get_usize("kmax", 6)?;
-    cfg.n_wi = args.get_usize("nwi", 24)?;
-    cfg.gpu_channels = args.get_usize("channels", 4)?;
+    let noc: NocKind = args.get_or("noc", "wihetnoc").parse().map_err(str_err)?;
+    let scenario = scenario_from(&args)?.with_noc(noc);
+    let mut designer = NocDesigner::for_scenario(&scenario).map_err(str_err)?;
+    if args.get("kmax").is_some() {
+        designer = designer.k_max(args.get_usize("kmax", 0)?);
+    }
+    if args.get("nwi").is_some() {
+        designer = designer.n_wi(args.get_usize("nwi", 0)?);
+    }
+    if args.get("channels").is_some() {
+        designer = designer.gpu_channels(args.get_usize("channels", 0)?);
+    }
+    let sys = designer.system().clone();
+    let cfg = designer.config().clone();
+    let fij = designer
+        .traffic_matrix()
+        .expect("for_scenario always derives traffic")
+        .clone();
     println!(
-        "designing WiHetNoC: k_max={} n_wi={} channels={}+1 ...",
-        cfg.k_max, cfg.n_wi, cfg.gpu_channels
+        "designing {} on {} ({} GPU / {} CPU / {} MC, workload {}): k_max={} n_wi={} channels={}+1 ...",
+        scenario.noc,
+        scenario.platform,
+        sys.gpus().len(),
+        sys.cpus().len(),
+        sys.mcs().len(),
+        scenario.model,
+        cfg.k_max,
+        cfg.n_wi,
+        cfg.gpu_channels
     );
     let t0 = std::time::Instant::now();
-    let inst = wi_het_noc(&sys, &fij, &cfg);
+    let inst = designer.build().map_err(str_err)?;
     let a = analyze(&inst.topo, &fij);
     println!(
         "done in {:.1}s: {} links (k_max {} k_avg {:.2}), {} WIs, {} virtual layers",
@@ -183,38 +228,45 @@ fn cmd_design(argv: &[String]) -> Result<(), String> {
         100.0 * inst.routes.air_coverage(),
         inst.air.total_area_mm2(),
     );
-    println!("\nWI placement (router, channel):");
-    for wi in &inst.air.wis {
-        print!(" ({},{})", wi.router, wi.channel);
+    if !inst.air.wis.is_empty() {
+        println!("\nWI placement (router, channel):");
+        for wi in &inst.air.wis {
+            print!(" ({},{})", wi.router, wi.channel);
+        }
+        println!();
     }
-    println!();
     Ok(())
 }
 
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.extend([
+        system_spec(),
+        model_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
             default: Some("wihetnoc"),
             is_flag: false,
         },
-        ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false },
         ArgSpec { name: "scale", help: "trace downsampling", default: Some("0.05"), is_flag: false },
     ]);
     let args = parse(argv, &specs)?;
-    let mut ctx = ctx_from(&args)?;
-    let name = args.get_or("noc", "wihetnoc");
-    let model = args.get_or("model", "lenet");
-    let inst = ctx.instance_cloned(&name);
-    let sys = ctx.sys_for(&name);
-    let tag = if name.starts_with("mesh") { "mesh" } else { "wihet" };
-    let tm = ctx.traffic_on(&model, &sys, tag);
+    let noc: NocKind = args.get_or("noc", "wihetnoc").parse().map_err(str_err)?;
+    let scenario = scenario_from(&args)?.with_noc(noc);
+    let mut ctx = Ctx::for_scenario(&scenario).map_err(str_err)?;
+    let inst = ctx.instance_cloned(noc);
+    let sys = ctx.sys_for(noc);
+    let tm = ctx.traffic_on(scenario.model, &sys);
     let mut cfg = ctx.trace_cfg();
     cfg.scale = args.get_f64("scale", 0.05)?;
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
-    println!("simulating {name} on {model}: {} messages ...", trace.len());
+    println!(
+        "simulating {noc} on {} ({}): {} messages ...",
+        scenario.model,
+        scenario.platform,
+        trace.len()
+    );
     let t0 = std::time::Instant::now();
     let rep =
         NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace);
@@ -241,6 +293,7 @@ fn cmd_list(argv: &[String]) -> Result<(), String> {
     }];
     let args = parse(argv, &specs)?;
     println!("experiments: {}", experiments::ALL.join(", "));
+    println!("models: lenet, cdbnet | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc");
     match Runtime::new(args.get_or("artifacts", "artifacts")) {
         Ok(rt) => {
             println!("artifact entries ({}):", rt.manifest.dir.display());

@@ -1,8 +1,11 @@
-//! CNN workload descriptions (paper Table 1) and the heterogeneous
-//! manycore system configuration (paper Table 2 / §5).
+//! CNN workload descriptions (paper Table 1), the heterogeneous manycore
+//! system configuration (paper Table 2 / §5), and the typed [`Platform`]
+//! descriptor that generalizes it to arbitrary grids and core mixes.
 
 pub mod cnn;
+pub mod platform;
 pub mod system;
 
 pub use cnn::{cdbnet, lenet, Layer, LayerKind, ModelSpec, Pass};
+pub use platform::{Platform, PlacementPolicy};
 pub use system::{SystemConfig, TileKind};

@@ -1,0 +1,348 @@
+//! Parameterized platform descriptor — the typed generalization of
+//! `SystemConfig::paper_8x8`.
+//!
+//! A [`Platform`] is *what you ask for* (grid shape, core mix, placement
+//! policy); [`Platform::build`] validates it and produces the concrete
+//! [`SystemConfig`] tile grid. Presets parse from strings (`"8x8"`,
+//! `"4x4"`, `"12x12"`) and custom mixes use a key=value suffix:
+//!
+//! ```text
+//! 8x8                                  paper platform (56 GPU / 4 CPU / 4 MC)
+//! 4x4                                  16 tiles, 2 CPUs, 2 MCs
+//! 12x12:cpus=8,mcs=8                   custom core mix
+//! 6x4:cpus=2,mcs=4,placement=corners   rectangular grid, MCs at the corners
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::model::system::{SystemConfig, TileKind};
+
+/// Where the non-GPU tiles go on the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementPolicy {
+    /// Paper §5.2: CPUs in the central block, MCs at the quadrant centers.
+    Centered,
+    /// CPUs central, MCs pushed to the die corners (a common DRAM-PHY
+    /// floorplan constraint).
+    Corners,
+}
+
+impl PlacementPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Centered => "centered",
+            PlacementPolicy::Corners => "corners",
+        }
+    }
+}
+
+impl FromStr for PlacementPolicy {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "centered" | "paper" => Ok(PlacementPolicy::Centered),
+            "corners" => Ok(PlacementPolicy::Corners),
+            other => Err(WihetError::InvalidPlatform(format!(
+                "unknown placement policy '{other}' (centered, corners)"
+            ))),
+        }
+    }
+}
+
+/// A heterogeneous manycore platform description: `width x height` tiles,
+/// `cpus` CPU tiles and `mcs` memory controllers placed by `placement`,
+/// GPUs everywhere else. Validated by [`Platform::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Platform {
+    pub width: usize,
+    pub height: usize,
+    pub cpus: usize,
+    pub mcs: usize,
+    pub placement: PlacementPolicy,
+}
+
+impl Platform {
+    /// The paper's experimental platform: 8x8, 4 CPUs, 4 MCs, centered.
+    pub fn paper() -> Self {
+        Platform { width: 8, height: 8, cpus: 4, mcs: 4, placement: PlacementPolicy::Centered }
+    }
+
+    /// A `width x height` grid with the core mix scaled the way the paper
+    /// scales it: one CPU and one MC per ~16 tiles (minimum 2 of each).
+    pub fn grid(width: usize, height: usize) -> Self {
+        let n = width * height;
+        let special = (n / 16).max(2);
+        Platform { width, height, cpus: special, mcs: special, placement: PlacementPolicy::Centered }
+    }
+
+    pub fn with_cpus(mut self, cpus: usize) -> Self {
+        self.cpus = cpus;
+        self
+    }
+
+    pub fn with_mcs(mut self, mcs: usize) -> Self {
+        self.mcs = mcs;
+        self
+    }
+
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Reject shapes that cannot describe a working chip.
+    pub fn validate(&self) -> Result<(), WihetError> {
+        let err = |m: String| Err(WihetError::InvalidPlatform(m));
+        if self.width < 2 || self.height < 2 {
+            return err(format!(
+                "grid must be at least 2x2, got {}x{}",
+                self.width, self.height
+            ));
+        }
+        if self.num_tiles() > 4096 {
+            return err(format!(
+                "{}x{} = {} tiles exceeds the 4096-tile simulator bound",
+                self.width,
+                self.height,
+                self.num_tiles()
+            ));
+        }
+        if self.cpus == 0 || self.mcs == 0 {
+            return err("need at least 1 CPU and 1 MC tile".into());
+        }
+        if self.cpus + self.mcs > self.num_tiles() - 2 {
+            return err(format!(
+                "{} CPUs + {} MCs leaves fewer than 2 GPU tiles on {} total",
+                self.cpus,
+                self.mcs,
+                self.num_tiles()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate and materialize the tile grid. Clocks, link widths, and
+    /// energy-relevant constants inherit the paper's Table 2 values; the
+    /// die keeps the paper's 2.5 mm tile pitch scaled to `width`.
+    pub fn build(&self) -> Result<SystemConfig, WihetError> {
+        self.validate()?;
+        let (w, h) = (self.width, self.height);
+        let n = w * h;
+        let mut tiles = vec![TileKind::Gpu; n];
+        let mut free = vec![true; n];
+        // Die center in tile coordinates.
+        let (cr, cc) = ((h as f64 - 1.0) / 2.0, (w as f64 - 1.0) / 2.0);
+        // Nearest free tile to an anchor. Anchors at quadrant centers sit
+        // equidistant from four tiles; ties break *outward* (max distance
+        // from the die center, then lowest id), which reproduces the
+        // paper's exact MC choice — (1,1),(1,6),(6,1),(6,6) on 8x8 —
+        // rather than collapsing every quadrant toward the middle.
+        let nearest_free = |free: &[bool], ar: f64, ac: f64| -> usize {
+            let mut best = 0usize;
+            let mut best_key = (f64::INFINITY, f64::NEG_INFINITY);
+            for (id, ok) in free.iter().enumerate() {
+                if !*ok {
+                    continue;
+                }
+                let (r, c) = ((id / w) as f64, (id % w) as f64);
+                let d = (r - ar).powi(2) + (c - ac).powi(2);
+                let out = (r - cr).powi(2) + (c - cc).powi(2);
+                if d + 1e-9 < best_key.0
+                    || ((d - best_key.0).abs() <= 1e-9 && out > best_key.1 + 1e-9)
+                {
+                    best_key = (d, out);
+                    best = id;
+                }
+            }
+            best
+        };
+        // CPUs cluster at the die center under both policies (§5.2: CPU
+        // QoS is served by keeping the latency-critical cores central).
+        for _ in 0..self.cpus {
+            let id = nearest_free(&free, cr, cc);
+            free[id] = false;
+            tiles[id] = TileKind::Cpu;
+        }
+        let anchors: [(f64, f64); 4] = match self.placement {
+            PlacementPolicy::Centered => [
+                (h as f64 / 4.0 - 0.5, w as f64 / 4.0 - 0.5),
+                (h as f64 / 4.0 - 0.5, 3.0 * w as f64 / 4.0 - 0.5),
+                (3.0 * h as f64 / 4.0 - 0.5, w as f64 / 4.0 - 0.5),
+                (3.0 * h as f64 / 4.0 - 0.5, 3.0 * w as f64 / 4.0 - 0.5),
+            ],
+            PlacementPolicy::Corners => [
+                (0.0, 0.0),
+                (0.0, (w - 1) as f64),
+                ((h - 1) as f64, 0.0),
+                ((h - 1) as f64, (w - 1) as f64),
+            ],
+        };
+        for i in 0..self.mcs {
+            let (ar, ac) = anchors[i % anchors.len()];
+            let id = nearest_free(&free, ar, ac);
+            free[id] = false;
+            tiles[id] = TileKind::Mc;
+        }
+        // Keep the paper's 2.5 mm tile pitch so wireless range and wire
+        // delay stay physically meaningful at every grid size.
+        let die_mm = 2.5 * w as f64;
+        Ok(SystemConfig { width: w, tiles, die_mm, ..SystemConfig::paper_8x8() })
+    }
+}
+
+impl fmt::Display for Platform {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{}:cpus={},mcs={},placement={}",
+            self.width,
+            self.height,
+            self.cpus,
+            self.mcs,
+            self.placement.as_str()
+        )
+    }
+}
+
+impl FromStr for Platform {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let s = s.trim();
+        let (grid, opts) = match s.split_once(':') {
+            Some((g, o)) => (g, Some(o)),
+            None => (s, None),
+        };
+        let bad_grid = || {
+            WihetError::InvalidPlatform(format!(
+                "bad grid '{grid}' (expected WIDTHxHEIGHT, e.g. 8x8)"
+            ))
+        };
+        let (ws, hs) = grid
+            .to_ascii_lowercase()
+            .split_once('x')
+            .map(|(a, b)| (a.trim().to_string(), b.trim().to_string()))
+            .ok_or_else(bad_grid)?;
+        let width: usize = ws.parse().map_err(|_| bad_grid())?;
+        let height: usize = hs.parse().map_err(|_| bad_grid())?;
+        let mut p = Platform::grid(width, height);
+        // 8x8 is the paper preset exactly (grid() scaling agrees: 4 + 4).
+        if let Some(opts) = opts {
+            for tok in opts.split(',') {
+                let tok = tok.trim();
+                if tok.is_empty() {
+                    continue;
+                }
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    WihetError::InvalidPlatform(format!(
+                        "bad platform option '{tok}' (expected key=value)"
+                    ))
+                })?;
+                let uint = |v: &str, k: &str| {
+                    v.trim().parse::<usize>().map_err(|_| {
+                        WihetError::InvalidPlatform(format!("{k} expects an integer, got '{v}'"))
+                    })
+                };
+                match k.trim().to_ascii_lowercase().as_str() {
+                    "cpus" => p.cpus = uint(v, "cpus")?,
+                    "mcs" => p.mcs = uint(v, "mcs")?,
+                    "placement" => p.placement = v.parse()?,
+                    other => {
+                        return Err(WihetError::InvalidPlatform(format!(
+                            "unknown platform option '{other}' (cpus, mcs, placement)"
+                        )))
+                    }
+                }
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_paper_composition() {
+        let sys = "8x8".parse::<Platform>().unwrap().build().unwrap();
+        assert_eq!(sys.num_tiles(), 64);
+        assert_eq!(sys.gpus().len(), 56);
+        assert_eq!(sys.cpus().len(), 4);
+        assert_eq!(sys.mcs().len(), 4);
+        assert!((sys.die_mm - 20.0).abs() < 1e-9);
+        // CPUs land in the paper's central 2x2 block
+        for c in sys.cpus() {
+            let (r, col) = (c / 8, c % 8);
+            assert!((3..=4).contains(&r) && (3..=4).contains(&col), "CPU at {c}");
+        }
+        // one MC per quadrant
+        let mut quads: Vec<(bool, bool)> =
+            sys.mcs().iter().map(|&m| ((m / 8) < 4, (m % 8) < 4)).collect();
+        quads.sort();
+        quads.dedup();
+        assert_eq!(quads.len(), 4);
+    }
+
+    #[test]
+    fn paper_preset_is_placement_exact() {
+        // "8x8" must reproduce SystemConfig::paper_8x8 tile-for-tile so
+        // `--system 8x8` and the experiment harness evaluate the SAME
+        // chip (placement_key equality implies identical caches too).
+        let built = Platform::paper().build().unwrap();
+        let seed = SystemConfig::paper_8x8();
+        assert_eq!(built.tiles, seed.tiles);
+        assert_eq!(built.placement_key(), seed.placement_key());
+        assert_eq!(built.width, seed.width);
+    }
+
+    #[test]
+    fn presets_scale_core_mix() {
+        let p4 = "4x4".parse::<Platform>().unwrap();
+        assert_eq!((p4.cpus, p4.mcs), (2, 2));
+        let p12 = "12x12".parse::<Platform>().unwrap();
+        assert_eq!((p12.cpus, p12.mcs), (9, 9));
+        let sys = p12.build().unwrap();
+        assert_eq!(sys.num_tiles(), 144);
+        assert_eq!(sys.gpus().len(), 144 - 18);
+    }
+
+    #[test]
+    fn custom_mix_and_rectangular() {
+        let p: Platform = "6x4:cpus=2,mcs=4,placement=corners".parse().unwrap();
+        assert_eq!((p.width, p.height, p.cpus, p.mcs), (6, 4, 2, 4));
+        let sys = p.build().unwrap();
+        assert_eq!(sys.num_tiles(), 24);
+        assert_eq!(sys.mcs(), vec![0, 5, 18, 23]); // the four corners
+        assert_eq!(sys.cpus().len(), 2);
+    }
+
+    #[test]
+    fn invalid_shapes_are_typed_errors() {
+        for bad in [
+            "0x4", "axb", "8", "8x8:cpus=100", "8x8:cpus=0", "2x2:cpus=2,mcs=2",
+            "8x8:frequency=3", "8x8:cpus", "70x70",
+        ] {
+            let e = bad.parse::<Platform>().unwrap_err();
+            assert!(
+                matches!(e, WihetError::InvalidPlatform(_)),
+                "{bad} -> {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        let p: Platform = "6x4:cpus=2,mcs=4,placement=corners".parse().unwrap();
+        let q: Platform = p.to_string().parse().unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -4,7 +4,7 @@
 //! 4 MC tiles (each MC = 1 MB shared-L2 slice + DRAM port). The NoC clock
 //! is 2.5 GHz; links are 128-bit, so one flit = 16 B moves per link-cycle.
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum TileKind {
     Gpu,
     Cpu,
@@ -90,9 +90,9 @@ impl SystemConfig {
     pub fn small_4x4() -> Self {
         let width = 4;
         let mut tiles = vec![TileKind::Gpu; width * width];
-        tiles[1 * width + 1] = TileKind::Cpu;
+        tiles[width + 1] = TileKind::Cpu;
         tiles[2 * width + 2] = TileKind::Cpu;
-        tiles[1 * width + 2] = TileKind::Mc;
+        tiles[width + 2] = TileKind::Mc;
         tiles[2 * width + 1] = TileKind::Mc;
         SystemConfig {
             width,
@@ -103,6 +103,23 @@ impl SystemConfig {
 
     pub fn num_tiles(&self) -> usize {
         self.tiles.len()
+    }
+
+    /// Grid height in tiles (tiles are row-major over `width` columns).
+    pub fn height(&self) -> usize {
+        self.tiles.len() / self.width
+    }
+
+    /// Order-sensitive fingerprint of the tile-kind assignment. Two
+    /// `SystemConfig`s with different placements (or grid shapes) hash
+    /// differently; used by typed cache keys (`ScenarioKey`).
+    pub fn placement_key(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        self.width.hash(&mut h);
+        self.tiles.hash(&mut h);
+        h.finish()
     }
 
     pub fn tiles_of(&self, kind: TileKind) -> Vec<usize> {
@@ -200,6 +217,17 @@ mod tests {
         assert!((d - (2.0f64 * 17.5 * 17.5).sqrt()).abs() < 1e-9);
         assert_eq!(s.hop_dist(0, 63), 14);
         assert_eq!(s.hop_dist(9, 9), 0);
+    }
+
+    #[test]
+    fn placement_keys_track_placement() {
+        let s = SystemConfig::paper_8x8();
+        assert_eq!(s.placement_key(), SystemConfig::paper_8x8().placement_key());
+        assert_eq!(s.height(), 8);
+        let mut tiles = s.tiles.clone();
+        tiles.swap(0, 27);
+        assert_ne!(s.placement_key(), s.with_tiles(tiles).placement_key());
+        assert_ne!(s.placement_key(), SystemConfig::small_4x4().placement_key());
     }
 
     #[test]

@@ -8,16 +8,22 @@
 //!   dedicated CPU-MC channel 0, `n_wi` GPU-MC WIs on the remaining
 //!   channels, ALASH routing (§4.2).
 
+use std::fmt;
+use std::str::FromStr;
+
 use super::analysis::TrafficMatrix;
 use super::routing::RouteSet;
 use super::topology::Topology;
 use super::wireless::WirelessSpec;
+use crate::error::WihetError;
 use crate::model::{SystemConfig, TileKind};
 use crate::optim::amosa::{Amosa, AmosaConfig};
 use crate::optim::linkplace::LinkPlacement;
 use crate::optim::wiplace::build_wireless;
+use crate::scenario::{Effort, Scenario};
+use crate::traffic::phases::model_phases;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NocKind {
     MeshXy,
     MeshXyYx,
@@ -26,12 +32,42 @@ pub enum NocKind {
 }
 
 impl NocKind {
+    /// Every architecture the paper compares, in report order.
+    pub const ALL: [NocKind; 4] =
+        [NocKind::MeshXy, NocKind::MeshXyYx, NocKind::HetNoc, NocKind::WiHetNoc];
+
     pub fn as_str(&self) -> &'static str {
         match self {
             NocKind::MeshXy => "mesh_xy",
             NocKind::MeshXyYx => "mesh_opt",
             NocKind::HetNoc => "hetnoc",
             NocKind::WiHetNoc => "wihetnoc",
+        }
+    }
+
+    /// Whether this architecture is simulated on the AMOSA-optimized mesh
+    /// placement (true) or the WiHetNoC placement (false).
+    pub fn uses_mesh_placement(&self) -> bool {
+        matches!(self, NocKind::MeshXy | NocKind::MeshXyYx)
+    }
+}
+
+impl fmt::Display for NocKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+impl FromStr for NocKind {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "mesh_xy" => Ok(NocKind::MeshXy),
+            "mesh_opt" | "mesh_xyyx" | "mesh" => Ok(NocKind::MeshXyYx),
+            "hetnoc" => Ok(NocKind::HetNoc),
+            "wihetnoc" => Ok(NocKind::WiHetNoc),
+            other => Err(WihetError::UnknownNoc(other.to_string())),
         }
     }
 }
@@ -96,6 +132,28 @@ impl DesignConfig {
             seed,
             ..Default::default()
         }
+    }
+
+    /// Effort-dependent budget with the wireless knobs scaled to the
+    /// platform. Chips smaller than the paper's 64 tiles scale the WI
+    /// budget down (3/8 of the tiles, ~6 WIs per channel); larger chips
+    /// keep the paper's 24 WIs / 4 channels, because that optimum is
+    /// spectrum-limited, not die-size-limited — the mm-wave band yields
+    /// the 4+1 channels regardless of tile count, and beyond ~6 WIs per
+    /// channel the MAC token latency erodes the shortcut gain (Fig 12).
+    /// The wireline reach bound scales with the tile pitch. On the 8x8
+    /// paper platform this reproduces `DesignConfig::default()` exactly.
+    pub fn scaled(sys: &SystemConfig, effort: Effort, seed: u64) -> Self {
+        let mut cfg = match effort {
+            Effort::Quick => DesignConfig::quick(seed),
+            Effort::Full => DesignConfig { seed, ..DesignConfig::default() },
+        };
+        let n = sys.num_tiles();
+        cfg.n_wi = cfg.n_wi.min((3 * n) / 8).max(2);
+        cfg.gpu_channels = cfg.gpu_channels.min((cfg.n_wi / 6).max(1));
+        let pitch = sys.die_mm / sys.width as f64;
+        cfg.max_link_mm = cfg.max_link_mm.map(|m| m.max(3.0 * pitch + 0.1));
+        cfg
     }
 }
 
@@ -232,6 +290,151 @@ pub fn generic_many_to_few(sys: &SystemConfig) -> TrafficMatrix {
     TrafficMatrix::from_entries(sys.num_tiles(), e)
 }
 
+/// Fluent builder over the four architectures: pick a platform (or a full
+/// [`Scenario`]), adjust the design knobs, and [`NocDesigner::build`] a
+/// validated [`NocInstance`]. Infeasible knob combinations surface as
+/// [`WihetError::InvalidDesign`] instead of panicking mid-optimization.
+///
+/// ```no_run
+/// use wihetnoc::{ModelId, Platform, Scenario};
+/// use wihetnoc::noc::builder::NocDesigner;
+///
+/// let scenario = Scenario::new("4x4".parse::<Platform>()?, ModelId::CdbNet);
+/// let noc = NocDesigner::for_scenario(&scenario)?.k_max(5).build()?;
+/// assert!(noc.topo.is_connected());
+/// # Ok::<(), wihetnoc::WihetError>(())
+/// ```
+#[derive(Clone)]
+pub struct NocDesigner {
+    sys: SystemConfig,
+    kind: NocKind,
+    cfg: DesignConfig,
+    traffic: Option<TrafficMatrix>,
+}
+
+impl NocDesigner {
+    /// Designer over an explicit tile grid, defaulting to a WiHetNoC with
+    /// platform-scaled quick-effort knobs and the generic many-to-few
+    /// traffic (replace via [`NocDesigner::traffic`]).
+    pub fn new(sys: SystemConfig) -> Self {
+        let cfg = DesignConfig::scaled(&sys, Effort::Quick, 0xC0DE);
+        NocDesigner { sys, kind: NocKind::WiHetNoc, cfg, traffic: None }
+    }
+
+    /// Designer for a full scenario: builds the platform, derives the
+    /// CNN training traffic at the scenario's batch size, and scales the
+    /// design knobs to the platform.
+    pub fn for_scenario(sc: &Scenario) -> Result<Self, WihetError> {
+        let sys = sc.platform.build()?;
+        let spec = sc.model.spec();
+        let fij = model_phases(&sys, &spec, sc.batch).fij(&sys);
+        let cfg = DesignConfig::scaled(&sys, sc.effort, sc.seed);
+        Ok(NocDesigner { sys, kind: sc.noc, cfg, traffic: Some(fij) })
+    }
+
+    pub fn kind(mut self, kind: NocKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Design-input traffic matrix (defaults to the scenario workload or,
+    /// for [`NocDesigner::new`], a generic many-to-few pattern).
+    pub fn traffic(mut self, fij: TrafficMatrix) -> Self {
+        self.traffic = Some(fij);
+        self
+    }
+
+    pub fn k_max(mut self, k_max: usize) -> Self {
+        self.cfg.k_max = k_max;
+        self
+    }
+
+    pub fn n_wi(mut self, n_wi: usize) -> Self {
+        self.cfg.n_wi = n_wi;
+        self
+    }
+
+    pub fn gpu_channels(mut self, gpu_channels: usize) -> Self {
+        self.cfg.gpu_channels = gpu_channels;
+        self
+    }
+
+    pub fn max_link_mm(mut self, bound: Option<f64>) -> Self {
+        self.cfg.max_link_mm = bound;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self.cfg.amosa.seed = seed;
+        self
+    }
+
+    /// Replace the whole design configuration (keeps the other builder
+    /// state).
+    pub fn design_cfg(mut self, cfg: DesignConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn system(&self) -> &SystemConfig {
+        &self.sys
+    }
+
+    pub fn config(&self) -> &DesignConfig {
+        &self.cfg
+    }
+
+    /// The design-input traffic, if one has been derived or supplied.
+    pub fn traffic_matrix(&self) -> Option<&TrafficMatrix> {
+        self.traffic.as_ref()
+    }
+
+    fn validate(&self) -> Result<(), WihetError> {
+        let err = |m: String| Err(WihetError::InvalidDesign(m));
+        let n = self.sys.num_tiles();
+        if self.kind.uses_mesh_placement() {
+            return Ok(());
+        }
+        if !(3..=16).contains(&self.cfg.k_max) {
+            return err(format!(
+                "k_max {} outside the feasible router-radix range 3..=16",
+                self.cfg.k_max
+            ));
+        }
+        if self.kind == NocKind::WiHetNoc {
+            if self.cfg.n_wi == 0 || self.cfg.n_wi > n {
+                return err(format!(
+                    "n_wi {} outside 1..={n} for a {n}-tile platform",
+                    self.cfg.n_wi
+                ));
+            }
+            if self.cfg.gpu_channels == 0 || self.cfg.gpu_channels > self.cfg.n_wi {
+                return err(format!(
+                    "gpu_channels {} outside 1..=n_wi ({})",
+                    self.cfg.gpu_channels, self.cfg.n_wi
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the knobs and run the design flow for the chosen kind.
+    pub fn build(self) -> Result<NocInstance, WihetError> {
+        self.validate()?;
+        let tm = match self.traffic {
+            Some(ref t) => t.clone(),
+            None => generic_many_to_few(&self.sys),
+        };
+        Ok(match self.kind {
+            NocKind::MeshXy => mesh_opt(&self.sys, false),
+            NocKind::MeshXyYx => mesh_opt(&self.sys, true),
+            NocKind::HetNoc => het_noc(&self.sys, &tm, &self.cfg),
+            NocKind::WiHetNoc => wi_het_noc(&self.sys, &tm, &self.cfg),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,5 +489,70 @@ mod tests {
         let sys = SystemConfig::paper_8x8();
         let inst = wi_het_noc_quick(&sys, 21);
         assert!(inst.routes.air_coverage() > 0.05);
+    }
+
+    #[test]
+    fn nockind_parse_roundtrip() {
+        for k in NocKind::ALL {
+            assert_eq!(k.as_str().parse::<NocKind>().unwrap(), k);
+            assert_eq!(format!("{k}"), k.as_str());
+        }
+        assert_eq!("mesh".parse::<NocKind>().unwrap(), NocKind::MeshXyYx);
+        assert!(matches!(
+            "torus".parse::<NocKind>(),
+            Err(WihetError::UnknownNoc(_))
+        ));
+    }
+
+    #[test]
+    fn scaled_cfg_matches_default_on_paper_platform() {
+        let sys = SystemConfig::paper_8x8();
+        let cfg = DesignConfig::scaled(&sys, Effort::Full, 0xC0DE);
+        let def = DesignConfig::default();
+        assert_eq!(cfg.n_wi, def.n_wi);
+        assert_eq!(cfg.gpu_channels, def.gpu_channels);
+        assert_eq!(cfg.k_max, def.k_max);
+        assert!((cfg.max_link_mm.unwrap() - def.max_link_mm.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn designer_builds_mesh_without_amosa() {
+        let inst = NocDesigner::new(SystemConfig::paper_8x8())
+            .kind(NocKind::MeshXy)
+            .build()
+            .unwrap();
+        assert_eq!(inst.kind, NocKind::MeshXy);
+        assert_eq!(inst.topo.links.len(), 112);
+    }
+
+    #[test]
+    fn designer_rejects_infeasible_knobs() {
+        let mk = || NocDesigner::new(SystemConfig::small_4x4());
+        for bad in [
+            mk().k_max(2),
+            mk().k_max(99),
+            mk().n_wi(0),
+            mk().n_wi(17),
+            mk().n_wi(4).gpu_channels(5),
+            mk().gpu_channels(0),
+        ] {
+            assert!(
+                matches!(bad.build(), Err(WihetError::InvalidDesign(_))),
+                "expected InvalidDesign"
+            );
+        }
+    }
+
+    #[test]
+    fn designer_scales_to_small_platform() {
+        let inst = NocDesigner::new(SystemConfig::small_4x4())
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(inst.kind, NocKind::WiHetNoc);
+        assert!(inst.topo.is_connected());
+        // 2 CPU + 2 MC WIs on channel 0, scaled GPU WIs on the rest
+        assert!(inst.air.wis.len() >= 4 + 2);
+        assert!(inst.air.num_channels >= 2);
     }
 }

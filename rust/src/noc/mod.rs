@@ -10,7 +10,7 @@ pub mod topology;
 pub mod wireless;
 
 pub use analysis::{analyze, Analysis};
-pub use builder::{het_noc, mesh_opt, wi_het_noc, NocInstance, NocKind};
+pub use builder::{het_noc, mesh_opt, wi_het_noc, NocDesigner, NocInstance, NocKind};
 pub use routing::{Path, RouteSet, RoutingKind};
 pub use sim::{Message, MsgClass, NocSim, SimConfig, SimReport};
 pub use topology::{LinkId, Topology};

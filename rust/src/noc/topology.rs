@@ -49,17 +49,19 @@ impl Topology {
         t
     }
 
-    /// 2D mesh over the system grid (the baseline NoC).
+    /// 2D mesh over the system grid (the baseline NoC). Handles
+    /// rectangular `width x height` grids.
     pub fn mesh(sys: &SystemConfig) -> Self {
         let w = sys.width;
+        let h = sys.height();
         let mut t = Topology::new(sys.num_tiles());
-        for r in 0..w {
+        for r in 0..h {
             for c in 0..w {
                 let id = r * w + c;
                 if c + 1 < w {
                     t.add_link_with_geometry(sys, id, id + 1);
                 }
-                if r + 1 < w {
+                if r + 1 < h {
                     t.add_link_with_geometry(sys, id, id + w);
                 }
             }

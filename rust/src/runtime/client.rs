@@ -4,12 +4,19 @@
 //! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
 //! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate this file compiles against lives in `rust/vendor/xla`.
+//! In hermetic environments that is a stub whose client constructor
+//! returns a clear [`WihetError`]; swap the vendor directory for the real
+//! xla-rs bindings (same API surface) to execute artifacts for real. The
+//! NoC toolchain — design, simulation, experiments — never touches this
+//! module.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
-
 use super::manifest::{Entry, Manifest};
+use crate::error::{Result, WihetError};
+use crate::{wbail, werr};
 
 /// A compiled entry point plus its signature.
 pub struct Executable {
@@ -24,7 +31,7 @@ impl Executable {
     /// `return_tuple=True`); it is decomposed here.
     pub fn run_f32(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         if args.len() != self.entry.inputs.len() {
-            bail!(
+            wbail!(
                 "{}: expected {} inputs, got {}",
                 self.entry.name,
                 self.entry.inputs.len(),
@@ -34,7 +41,7 @@ impl Executable {
         let mut literals = Vec::with_capacity(args.len());
         for (i, (a, spec)) in args.iter().zip(&self.entry.inputs).enumerate() {
             if a.len() != spec.elements() {
-                bail!(
+                wbail!(
                     "{}: input {i} has {} elements, spec {:?} wants {}",
                     self.entry.name,
                     a.len(),
@@ -46,24 +53,24 @@ impl Executable {
             literals.push(
                 xla::Literal::vec1(a)
                     .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?,
+                    .map_err(|e| werr!("reshape input {i}: {e:?}"))?,
             );
         }
         let result = self
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+            .map_err(|e| werr!("execute {}: {e:?}", self.entry.name))?;
         let first = result
             .into_iter()
             .next()
             .and_then(|d| d.into_iter().next())
-            .ok_or_else(|| anyhow!("no output buffer"))?;
+            .ok_or_else(|| werr!("no output buffer"))?;
         let lit = first
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            .map_err(|e| werr!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| werr!("untuple: {e:?}"))?;
         if parts.len() != self.entry.num_outputs {
-            bail!(
+            wbail!(
                 "{}: manifest says {} outputs, got {}",
                 self.entry.name,
                 self.entry.num_outputs,
@@ -73,7 +80,7 @@ impl Executable {
         parts
             .iter()
             .enumerate()
-            .map(|(i, p)| p.to_vec::<f32>().map_err(|e| anyhow!("output {i}: {e:?}")))
+            .map(|(i, p)| p.to_vec::<f32>().map_err(|e| werr!("output {i}: {e:?}")))
             .collect()
     }
 }
@@ -90,7 +97,11 @@ impl Runtime {
     /// `manifest.json`; build with `make artifacts`).
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        // A failed client construction means PJRT itself is unusable in
+        // this build (most commonly: the vendored xla stub is linked) —
+        // typed so callers can skip instead of failing.
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| WihetError::RuntimeUnavailable(format!("PJRT cpu client: {e:?}")))?;
         Ok(Runtime { manifest, client, cache: HashMap::new() })
     }
 
@@ -104,14 +115,14 @@ impl Runtime {
             let entry = self.manifest.entry(name)?.clone();
             let path = self.manifest.hlo_path(&entry);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| werr!("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            .map_err(|e| werr!("parse {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                .map_err(|e| werr!("compile {name}: {e:?}"))?;
             self.cache.insert(name.to_string(), Executable { entry, exe });
         }
         Ok(&self.cache[name])

@@ -4,9 +4,9 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::Result;
 use crate::util::json::{self, Json};
+use crate::{wbail, werr};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
@@ -65,21 +65,21 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+            .map_err(|e| werr!("reading {path:?} — run `make artifacts` first: {e}"))?;
         Self::parse(&text, dir)
     }
 
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let root = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let root = json::parse(text).map_err(|e| werr!("manifest JSON: {e}"))?;
         let batch = root
             .get("batch")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+            .ok_or_else(|| werr!("manifest missing batch"))?;
         let mut entries = Vec::new();
         for e in root
             .get("entries")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .ok_or_else(|| werr!("manifest missing entries"))?
         {
             entries.push(parse_entry(e)?);
         }
@@ -94,14 +94,14 @@ impl Manifest {
         self.entries
             .iter()
             .find(|e| e.name == name)
-            .ok_or_else(|| anyhow!("entry '{name}' not in manifest"))
+            .ok_or_else(|| werr!("entry '{name}' not in manifest"))
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
         self.models
             .iter()
             .find(|m| m.name == name)
-            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+            .ok_or_else(|| werr!("model '{name}' not in manifest"))
     }
 
     pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
@@ -111,13 +111,13 @@ impl Manifest {
 
 fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
     let mut out = Vec::new();
-    for s in v.as_arr().ok_or_else(|| anyhow!("inputs not an array"))? {
+    for s in v.as_arr().ok_or_else(|| werr!("inputs not an array"))? {
         let shape = s
             .get("shape")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("input missing shape"))?
+            .ok_or_else(|| werr!("input missing shape"))?
             .iter()
-            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .map(|x| x.as_usize().ok_or_else(|| werr!("bad dim")))
             .collect::<Result<Vec<_>>>()?;
         let dtype = s
             .get("dtype")
@@ -125,7 +125,7 @@ fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
             .unwrap_or("float32")
             .to_string();
         if dtype != "float32" {
-            bail!("unsupported dtype {dtype} (runtime is f32-only)");
+            wbail!("unsupported dtype {dtype} (runtime is f32-only)");
         }
         out.push(TensorSpec { shape, dtype });
     }
@@ -138,12 +138,12 @@ fn parse_entry(e: &Json) -> Result<Entry> {
         model: e.get("model").and_then(Json::as_str).map(str::to_string),
         kind: req_str(e, "kind")?,
         path: req_str(e, "path")?,
-        inputs: parse_specs(e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+        inputs: parse_specs(e.get("inputs").ok_or_else(|| werr!("no inputs"))?)?,
         num_params: e.get("num_params").and_then(Json::as_usize).unwrap_or(0),
         num_outputs: e
             .get("num_outputs")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("entry missing num_outputs"))?,
+            .ok_or_else(|| werr!("entry missing num_outputs"))?,
     })
 }
 
@@ -179,7 +179,7 @@ fn req_str(v: &Json, key: &str) -> Result<String> {
     v.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| anyhow!("missing field '{key}'"))
+        .ok_or_else(|| werr!("missing field '{key}'"))
 }
 
 #[cfg(test)]

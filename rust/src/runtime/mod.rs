@@ -1,6 +1,9 @@
 //! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
 //! `python/compile/aot.py`) and executes them on the request path with no
-//! Python anywhere. Wraps the `xla` crate (PJRT C API, CPU plugin).
+//! Python anywhere. Wraps the `xla` crate (PJRT C API, CPU plugin) —
+//! vendored as a stub under `rust/vendor/xla` in hermetic builds; swap in
+//! the real xla-rs bindings to execute artifacts. All entry points return
+//! `Result<_, WihetError>`.
 
 pub mod client;
 pub mod manifest;

@@ -1,0 +1,224 @@
+//! Typed scenario description — the single input to design, simulation,
+//! and the experiment harnesses.
+//!
+//! A [`Scenario`] bundles *what chip* ([`Platform`]), *what workload*
+//! ([`ModelId`]), *what interconnect* ([`NocKind`]) and *how hard to try*
+//! ([`Effort`] + seed). Everything downstream — [`crate::noc::builder::NocDesigner`],
+//! [`crate::experiments::Ctx`], the CLI — consumes a `Scenario` instead of
+//! ad-hoc strings, so an unknown model or a malformed platform is a
+//! [`WihetError`] at the boundary rather than a `panic!` deep inside.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::model::cnn::{cdbnet, lenet, ModelSpec};
+use crate::model::platform::Platform;
+use crate::model::SystemConfig;
+use crate::noc::builder::NocKind;
+
+/// The CNN workloads of the paper (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    LeNet,
+    CdbNet,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 2] = [ModelId::LeNet, ModelId::CdbNet];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelId::LeNet => "lenet",
+            ModelId::CdbNet => "cdbnet",
+        }
+    }
+
+    /// The layer-by-layer workload description for this model.
+    pub fn spec(&self) -> ModelSpec {
+        match self {
+            ModelId::LeNet => lenet(),
+            ModelId::CdbNet => cdbnet(),
+        }
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+impl FromStr for ModelId {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lenet" => Ok(ModelId::LeNet),
+            "cdbnet" => Ok(ModelId::CdbNet),
+            other => Err(WihetError::UnknownModel(other.to_string())),
+        }
+    }
+}
+
+/// Simulation/optimization effort level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Effort {
+    /// CI-grade: tiny AMOSA budgets, heavily downsampled traces.
+    Quick,
+    /// Paper-grade: full budgets (used for EXPERIMENTS.md numbers).
+    Full,
+}
+
+impl Effort {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Effort::Quick => "quick",
+            Effort::Full => "full",
+        }
+    }
+}
+
+impl fmt::Display for Effort {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+impl FromStr for Effort {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "quick" => Ok(Effort::Quick),
+            "full" => Ok(Effort::Full),
+            other => Err(WihetError::InvalidArg(format!(
+                "effort must be quick|full, got '{other}'"
+            ))),
+        }
+    }
+}
+
+/// One fully-specified evaluation scenario: platform x workload x NoC x
+/// effort/seed. Construct with [`Scenario::new`] and the `with_*` setters.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Scenario {
+    pub platform: Platform,
+    pub model: ModelId,
+    pub noc: NocKind,
+    pub effort: Effort,
+    pub seed: u64,
+    /// Training batch size the traffic model is derived at.
+    pub batch: usize,
+}
+
+impl Scenario {
+    /// A scenario with the crate defaults: WiHetNoC, quick effort,
+    /// seed 42, batch 32.
+    pub fn new(platform: Platform, model: ModelId) -> Self {
+        Scenario {
+            platform,
+            model,
+            noc: NocKind::WiHetNoc,
+            effort: Effort::Quick,
+            seed: 42,
+            batch: 32,
+        }
+    }
+
+    /// The paper's headline scenario: LeNet on the 8x8 chip, WiHetNoC.
+    pub fn paper() -> Self {
+        Scenario::new(Platform::paper(), ModelId::LeNet)
+    }
+
+    pub fn with_noc(mut self, noc: NocKind) -> Self {
+        self.noc = noc;
+        self
+    }
+
+    pub fn with_effort(mut self, effort: Effort) -> Self {
+        self.effort = effort;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Build the concrete tile grid this scenario runs on.
+    pub fn build_system(&self) -> Result<SystemConfig, WihetError> {
+        self.platform.build()
+    }
+}
+
+/// Typed cache key: a workload on one concrete tile placement. Two
+/// placements that happen to share a human-readable tag hash differently,
+/// which is what makes [`crate::experiments::Ctx`]'s traffic cache safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScenarioKey {
+    pub model: ModelId,
+    /// Fingerprint of the tile-kind assignment (see
+    /// [`SystemConfig::placement_key`]).
+    pub placement: u64,
+}
+
+impl ScenarioKey {
+    pub fn new(model: ModelId, sys: &SystemConfig) -> Self {
+        ScenarioKey { model, placement: sys.placement_key() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_parse_roundtrip() {
+        for m in ModelId::ALL {
+            assert_eq!(m.as_str().parse::<ModelId>().unwrap(), m);
+            assert_eq!(format!("{m}"), m.as_str());
+        }
+        assert!(matches!(
+            "resnet".parse::<ModelId>(),
+            Err(WihetError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn effort_parse() {
+        assert_eq!("quick".parse::<Effort>().unwrap(), Effort::Quick);
+        assert_eq!("FULL".parse::<Effort>().unwrap(), Effort::Full);
+        assert!("medium".parse::<Effort>().is_err());
+    }
+
+    #[test]
+    fn scenario_defaults_and_setters() {
+        let sc = Scenario::paper().with_seed(7).with_batch(16);
+        assert_eq!(sc.model, ModelId::LeNet);
+        assert_eq!(sc.noc, NocKind::WiHetNoc);
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.batch, 16);
+        let sys = sc.build_system().unwrap();
+        assert_eq!(sys.num_tiles(), 64);
+    }
+
+    #[test]
+    fn keys_distinguish_placements() {
+        let sys = SystemConfig::paper_8x8();
+        let mut tiles = sys.tiles.clone();
+        tiles.swap(0, 27); // move a CPU to the corner
+        let other = sys.with_tiles(tiles);
+        let a = ScenarioKey::new(ModelId::LeNet, &sys);
+        let b = ScenarioKey::new(ModelId::LeNet, &other);
+        let c = ScenarioKey::new(ModelId::CdbNet, &sys);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
+    }
+}

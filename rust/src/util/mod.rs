@@ -1,10 +1,11 @@
 //! Shared utilities: deterministic RNG, statistics, JSON codec, CLI parsing,
 //! and a property-testing mini-framework.
 //!
-//! The offline build environment vendors only the `xla` crate closure, so
-//! `serde`/`clap`/`proptest`/`criterion` are unavailable; these modules
-//! provide the subsets this crate needs (see DESIGN.md §2, toolchain
-//! substitutions).
+//! The build is hermetic: the only dependency is the vendored `xla` crate
+//! (`rust/vendor/xla`, a stub unless the real xla-rs bindings are swapped
+//! in), so `serde`/`clap`/`proptest`/`criterion` are unavailable; these
+//! modules provide the subsets this crate needs (see DESIGN.md §2,
+//! toolchain substitutions).
 
 pub mod cli;
 pub mod json;

@@ -6,6 +6,7 @@
 use wihetnoc::coordinator::{TrainConfig, Trainer};
 use wihetnoc::model::{cdbnet, lenet};
 use wihetnoc::runtime::Runtime;
+use wihetnoc::WihetError;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -17,10 +18,23 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     }
 }
 
+/// Artifacts present *and* real PJRT bindings linked; skips loudly when
+/// the build uses the vendored `xla` stub (see rust/vendor/xla).
+fn runtime_for_tests() -> Option<Runtime> {
+    let dir = artifacts_dir()?;
+    match Runtime::new(dir) {
+        Ok(rt) => Some(rt),
+        Err(WihetError::RuntimeUnavailable(m)) => {
+            eprintln!("SKIP: {m} — swap rust/vendor/xla for xla-rs to run PJRT tests");
+            None
+        }
+        Err(e) => panic!("runtime init failed: {e}"),
+    }
+}
+
 #[test]
 fn micro_gemm_round_trip() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(dir).unwrap();
+    let Some(mut rt) = runtime_for_tests() else { return };
     assert_eq!(rt.platform(), "cpu");
     // matmul_micro: (8x8) @ (8x8) + 1
     let eye: Vec<f32> = (0..64).map(|i| if i % 9 == 0 { 1.0 } else { 0.0 }).collect();
@@ -33,10 +47,11 @@ fn micro_gemm_round_trip() {
 
 #[test]
 fn manifest_matches_rust_model_derivation() {
+    // manifest-only: runs even against the xla stub
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::new(dir).unwrap();
+    let manifest = wihetnoc::runtime::Manifest::load(&dir).unwrap();
     for spec in [lenet(), cdbnet()] {
-        let meta = rt.manifest.model(&spec.name).unwrap();
+        let meta = manifest.model(&spec.name).unwrap();
         assert_eq!(meta.layers.len(), spec.layers.len(), "{}", spec.name);
         for (m, l) in meta.layers.iter().zip(&spec.layers) {
             assert_eq!(m.name, l.name);
@@ -49,16 +64,15 @@ fn manifest_matches_rust_model_derivation() {
                 l.name
             );
             assert_eq!(m.weight_bytes, l.weight_bytes(), "{} {}", spec.name, l.name);
-            assert_eq!(m.macs, l.macs(rt.manifest.batch), "{} {}", spec.name, l.name);
-            assert_eq!(m.in_bytes, l.in_bytes(rt.manifest.batch), "{} {}", spec.name, l.name);
+            assert_eq!(m.macs, l.macs(manifest.batch), "{} {}", spec.name, l.name);
+            assert_eq!(m.in_bytes, l.in_bytes(manifest.batch), "{} {}", spec.name, l.name);
         }
     }
 }
 
 #[test]
 fn lenet_forward_runs() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(dir).unwrap();
+    let Some(mut rt) = runtime_for_tests() else { return };
     let batch = rt.manifest.batch;
     let spec = lenet();
     let params = wihetnoc::coordinator::trainer::init_params(&spec, 42);
@@ -72,8 +86,7 @@ fn lenet_forward_runs() {
 
 #[test]
 fn lenet_training_reduces_loss() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(dir).unwrap();
+    let Some(mut rt) = runtime_for_tests() else { return };
     let batch = rt.manifest.batch;
     let mut trainer = Trainer::new(&mut rt, lenet(), 7).unwrap();
     let cfg = TrainConfig { steps: 30, batch, seed: 11, log_every: 5 };
@@ -89,8 +102,7 @@ fn lenet_training_reduces_loss() {
 
 #[test]
 fn wrong_arity_and_shape_rejected() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(dir).unwrap();
+    let Some(mut rt) = runtime_for_tests() else { return };
     assert!(rt.run("matmul_micro", &[vec![0.0f32; 64]]).is_err());
     assert!(rt
         .run("matmul_micro", &[vec![0.0f32; 64], vec![0.0f32; 63]])

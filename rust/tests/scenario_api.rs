@@ -1,0 +1,126 @@
+//! End-to-end tests of the typed scenario API: platform parsing, scenario
+//! construction, the `NocDesigner` flow on non-paper platforms, typed
+//! errors instead of panics, and experiment dispatch smoke coverage.
+
+use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::noc::builder::{NocDesigner, NocKind};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::{ModelId, Platform, Scenario, WihetError};
+
+#[test]
+fn design_and_simulate_non_8x8_platform() {
+    // The acceptance scenario: a platform the paper never built — a
+    // rectangular 6x4 chip with corner MCs — designed and simulated end
+    // to end through the typed API only.
+    let platform: Platform = "6x4:cpus=2,mcs=4,placement=corners".parse().unwrap();
+    let scenario = Scenario::new(platform, ModelId::CdbNet)
+        .with_seed(13)
+        .with_batch(16);
+    let sys = scenario.build_system().unwrap();
+    assert_eq!(sys.num_tiles(), 24);
+    assert_eq!(sys.height(), 4);
+
+    let inst = NocDesigner::for_scenario(&scenario).unwrap().build().unwrap();
+    assert_eq!(inst.kind, NocKind::WiHetNoc);
+    assert!(inst.topo.is_connected());
+    assert_eq!(inst.topo.links.len(), 2 * 6 * 4 - 6 - 4); // mesh link budget
+
+    let tm = model_phases(&sys, &scenario.model.spec(), scenario.batch);
+    let tcfg = TraceConfig { scale: 0.02, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &tcfg);
+    let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .run(&trace);
+    assert!(rep.delivered_packets > 0);
+    assert_eq!(rep.undelivered, 0);
+}
+
+#[test]
+fn ctx_runs_experiment_on_4x4_platform() {
+    let scenario = Scenario::new("4x4".parse().unwrap(), ModelId::LeNet).with_seed(5);
+    let mut ctx = Ctx::for_scenario(&scenario).unwrap();
+    let report = experiments::run("fig5", &mut ctx).unwrap();
+    assert!(report.contains("Fig 5"));
+    assert!(report.contains("C1"));
+}
+
+// NOTE: the every-id dispatch smoke test (all of `experiments::ALL` at
+// Effort::Quick through one shared Ctx, asserting non-empty reports)
+// lives in tests/integration.rs::experiments_all_smoke.
+
+#[test]
+fn unknown_names_are_errors_not_panics() {
+    let mut ctx = Ctx::new(Effort::Quick, 1);
+    assert!(matches!(
+        experiments::run("fig99", &mut ctx),
+        Err(WihetError::UnknownExperiment(_))
+    ));
+    assert!(matches!(
+        "resnet".parse::<ModelId>(),
+        Err(WihetError::UnknownModel(_))
+    ));
+    assert!(matches!(
+        "torus".parse::<NocKind>(),
+        Err(WihetError::UnknownNoc(_))
+    ));
+    assert!(matches!(
+        "9x9x9".parse::<Platform>(),
+        Err(WihetError::InvalidPlatform(_))
+    ));
+    assert!(matches!(
+        "hard".parse::<Effort>(),
+        Err(WihetError::InvalidArg(_))
+    ));
+}
+
+#[test]
+fn invalid_scenarios_fail_at_the_boundary() {
+    // a platform with no room for GPUs is rejected before any design work
+    let p = Platform::grid(2, 2).with_cpus(2).with_mcs(2);
+    let sc = Scenario::new(p, ModelId::LeNet);
+    assert!(matches!(
+        Ctx::for_scenario(&sc),
+        Err(WihetError::InvalidPlatform(_))
+    ));
+    assert!(matches!(
+        NocDesigner::for_scenario(&sc),
+        Err(WihetError::InvalidPlatform(_))
+    ));
+    // infeasible design knobs on a valid platform
+    let good = Scenario::new("4x4".parse().unwrap(), ModelId::LeNet);
+    let designer = NocDesigner::for_scenario(&good).unwrap().n_wi(1000);
+    assert!(matches!(
+        designer.build(),
+        Err(WihetError::InvalidDesign(_))
+    ));
+}
+
+#[test]
+fn scenario_roundtrips_through_platform_strings() {
+    for s in ["8x8", "4x4", "12x12", "6x4:cpus=3,mcs=2", "5x5:placement=corners"] {
+        let p: Platform = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+        let q: Platform = p.to_string().parse().unwrap();
+        assert_eq!(p, q, "{s}");
+        let sys = p.build().unwrap();
+        assert_eq!(sys.num_tiles(), p.num_tiles());
+        assert_eq!(sys.cpus().len(), p.cpus);
+        assert_eq!(sys.mcs().len(), p.mcs);
+    }
+}
+
+#[test]
+fn designer_respects_explicit_knobs() {
+    let scenario = Scenario::new("8x8".parse().unwrap(), ModelId::LeNet).with_seed(11);
+    let inst = NocDesigner::for_scenario(&scenario)
+        .unwrap()
+        .k_max(5)
+        .n_wi(8)
+        .gpu_channels(2)
+        .build()
+        .unwrap();
+    assert!(inst.topo.k_max() <= 5);
+    // 4 CPU + 4 MC WIs on channel 0, 8 GPU WIs on channels 1..=2
+    assert_eq!(inst.air.wis.len(), 8 + 8);
+    assert_eq!(inst.air.num_channels, 3);
+}
