@@ -34,8 +34,8 @@ fn main() -> Result<(), WihetError> {
 
     let designer = || NocDesigner::new(sys.clone()).traffic(fij.clone()).seed(scenario.seed);
 
-    // shared wireline topology for A3/A4 (one AMOSA run)
-    let topo = optimize_wireline(&sys, &fij, &cfg);
+    // shared wireline topology for A3/A4 (one AMOSA run, zero copies)
+    let topo = std::sync::Arc::new(optimize_wireline(&sys, &fij, &cfg));
     let air = build_wireless(&topo, &fij, &sys.cpus(), &sys.mcs(), cfg.n_wi, cfg.gpu_channels);
 
     // A3: wireless but no dedicated-channel policy — every pair may use

@@ -68,6 +68,14 @@ fn main() {
             std::hint::black_box(sim.run(&trace).delivered_packets);
         },
     );
+    let mut ws = wihetnoc::noc::sim::SimWorkspace::new();
+    b.bench_items(
+        &format!("sim/lenet iteration explicit-ws ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            std::hint::black_box(sim.run_in(&trace, &mut ws).delivered_packets);
+        },
+    );
 
     // --- PJRT train step (needs artifacts) ---
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -6,10 +6,26 @@
 //! Effort is controlled by WIHETNOC_BENCH_EFFORT=quick|full (default
 //! quick, so `cargo bench` completes in minutes; EXPERIMENTS.md numbers
 //! use full).
+//!
+//! Every run also updates `BENCH_sim.json` (override the path with
+//! WIHETNOC_BENCH_JSON) with per-experiment medians/MADs plus sim-core
+//! microbenches, keyed by WIHETNOC_BENCH_LABEL (default `current`).
+//! Record the pre-change numbers under the `baseline` label:
+//!
+//! ```sh
+//! WIHETNOC_BENCH_LABEL=baseline cargo bench --bench paper_benches  # before
+//! cargo bench --bench paper_benches                                # after
+//! ```
 
-use wihetnoc::bench::Bencher;
+use wihetnoc::bench::{merge_run, Bencher};
 use wihetnoc::experiments::{self, Ctx, Effort};
-use wihetnoc::noc::builder::NocKind;
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::builder::{mesh_opt, NocKind};
+use wihetnoc::noc::sim::{NocSim, SimConfig, SimWorkspace};
+use wihetnoc::traffic::phases::model_phases;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::util::exec::thread_count;
+use wihetnoc::util::json::Json;
 
 fn main() {
     let effort = match std::env::var("WIHETNOC_BENCH_EFFORT").as_deref() {
@@ -17,9 +33,39 @@ fn main() {
         _ => Effort::Quick,
     };
     let seed = 42;
-    println!("== paper benches (effort {effort:?}, seed {seed}) ==\n");
+    let threads = thread_count();
+    println!("== paper benches (effort {effort:?}, seed {seed}, {threads} threads) ==\n");
     let mut ctx = Ctx::new(effort, seed);
     let mut b = Bencher::quick();
+
+    // --- sim-core microbenches (workspace reuse + calendar queue) ---
+    let sys = SystemConfig::paper_8x8();
+    let tm = model_phases(&sys, &wihetnoc::model::lenet(), 32);
+    let trace_cfg = TraceConfig { scale: 0.1, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &trace_cfg);
+    let inst = mesh_opt(&sys, true);
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    let packets = sim.run(&trace).delivered_packets;
+    let mut ws = SimWorkspace::new();
+    b.bench_items(
+        &format!("simcore/iteration reuse ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            std::hint::black_box(sim.run_in(&trace, &mut ws).delivered_packets);
+        },
+    );
+    b.bench_items(
+        &format!("simcore/iteration fresh-ws ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            // allocation baseline: a brand-new workspace per run (the
+            // convenience `run` path reuses a thread-local one)
+            let mut fresh = SimWorkspace::new();
+            std::hint::black_box(sim.run_in(&trace, &mut fresh).delivered_packets);
+        },
+    );
+
+    // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
     let _ = ctx.instance(NocKind::MeshXyYx);
@@ -34,4 +80,19 @@ fn main() {
         println!("\n{report}\n{}\n", "-".repeat(72));
     }
     println!("== done: {} experiments ==", experiments::ALL.len());
+
+    // --- machine-readable trajectory: BENCH_sim.json ---
+    let path = std::env::var("WIHETNOC_BENCH_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());
+    let label = std::env::var("WIHETNOC_BENCH_LABEL").unwrap_or_else(|_| "current".into());
+    let run = b.to_json(&[
+        ("effort", Json::Str(format!("{effort:?}").to_lowercase())),
+        ("seed", Json::Num(seed as f64)),
+        ("threads", Json::Num(threads as f64)),
+    ]);
+    let existing = std::fs::read_to_string(&path).unwrap_or_default();
+    let doc = merge_run(&existing, &label, run);
+    match std::fs::write(&path, doc.dump() + "\n") {
+        Ok(()) => println!("wrote {path} (label '{label}')"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

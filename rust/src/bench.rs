@@ -3,8 +3,17 @@
 //!
 //! Methodology: warmup runs, then `samples` timed batches; reports
 //! median and MAD so stray scheduler noise does not skew results.
+//!
+//! Results are machine-readable: [`Bencher::to_json`] serializes the
+//! run, and [`merge_run`] folds it into a `BENCH_sim.json` document that
+//! keeps one entry per label — record a `baseline` run before a perf
+//! change and re-bench afterwards to get a committed before/after pair
+//! (see README §Performance).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::{self, Json};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -17,6 +26,19 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("median_ns".into(), Json::Num(self.median_ns));
+        m.insert("mad_ns".into(), Json::Num(self.mad_ns));
+        m.insert("samples".into(), Json::Num(self.samples as f64));
+        m.insert(
+            "items".into(),
+            self.items.map(Json::Num).unwrap_or(Json::Null),
+        );
+        Json::Obj(m)
+    }
+
     pub fn report(&self) -> String {
         let per_item = self
             .items
@@ -99,6 +121,49 @@ impl Bencher {
         self.results.push(r);
         self.results.last().unwrap()
     }
+
+    /// Serialize this run: `{"results": [...], <meta key/values>}`.
+    pub fn to_json(&self, meta: &[(&str, Json)]) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "results".into(),
+            Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+        );
+        for (k, v) in meta {
+            m.insert((*k).into(), v.clone());
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Fold a labeled run into a `BENCH_sim.json` document (creating the
+/// skeleton if `existing` is empty/invalid). The document keeps one run
+/// per label in `runs`, so `baseline` survives later `current` updates:
+///
+/// ```json
+/// {"schema": 1, "runs": [{"label": "baseline", ...}, {"label": "current", ...}]}
+/// ```
+pub fn merge_run(existing: &str, label: &str, run: Json) -> Json {
+    let mut doc = match json::parse(existing) {
+        Ok(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    doc.insert("schema".into(), Json::Num(1.0));
+    let mut runs: Vec<Json> = match doc.remove("runs") {
+        Some(Json::Arr(v)) => v,
+        _ => Vec::new(),
+    };
+    runs.retain(|r| r.get("label").and_then(Json::as_str) != Some(label));
+    let run = match run {
+        Json::Obj(mut m) => {
+            m.insert("label".into(), Json::Str(label.to_string()));
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    runs.push(run);
+    doc.insert("runs".into(), Json::Arr(runs));
+    Json::Obj(doc)
 }
 
 #[cfg(test)]
@@ -124,5 +189,27 @@ mod tests {
         assert!(fmt_ns(1500.0).contains("µs"));
         assert!(fmt_ns(2.5e6).contains("ms"));
         assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_roundtrip_and_label_merge() {
+        let mut b = Bencher { warmup: 0, samples: 1, results: Vec::new() };
+        b.bench("x", || {});
+        let run = b.to_json(&[("effort", Json::Str("quick".into()))]);
+        assert_eq!(run.get("effort").and_then(Json::as_str), Some("quick"));
+        // first write becomes the baseline of an empty document
+        let doc = merge_run("", "baseline", run.clone());
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 1);
+        // a current run lands next to it ...
+        let doc = merge_run(&doc.dump(), "current", run.clone());
+        assert_eq!(doc.get("runs").and_then(Json::as_arr).unwrap().len(), 2);
+        // ... and re-benching replaces current while baseline survives
+        let doc = merge_run(&doc.dump(), "current", run);
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("label").and_then(Json::as_str), Some("baseline"));
+        assert_eq!(runs[1].get("label").and_then(Json::as_str), Some("current"));
+        assert!(json::parse(&doc.dump()).is_ok());
     }
 }

@@ -30,6 +30,10 @@ impl CosimReport {
 }
 
 /// Evaluate `nocs` under one training iteration of `spec` at `batch`.
+///
+/// Each NoC's full-system run regenerates its traces from the same seed,
+/// so the runs are independent and fan out over
+/// [`crate::util::exec::par_map`] workers; results keep input order.
 pub fn cosimulate(
     sys: &SystemConfig,
     spec: &ModelSpec,
@@ -40,10 +44,10 @@ pub fn cosimulate(
     let tm = model_phases(sys, spec, batch);
     let energy = EnergyParams::default();
     let stall = StallModel::default();
-    let per_noc = nocs
-        .iter()
-        .map(|inst| full_system_run(sys, inst, &tm, trace_cfg, &energy, &stall))
-        .collect();
+    let per_noc =
+        crate::util::exec::par_map(nocs, |_, inst| {
+            full_system_run(sys, inst, &tm, trace_cfg, &energy, &stall)
+        });
     Ok(CosimReport { per_noc })
 }
 

@@ -1,15 +1,23 @@
 //! Figs 17-19: head-to-head evaluation — mesh vs HetNoC vs WiHetNoC,
 //! per-layer network metrics and full-system execution/EDP.
+//!
+//! §Perf: trace generation stays serial (it shares one RNG stream per
+//! NoC, which pins the report bytes), and the (NoC x layer) simulation
+//! matrix fans out over [`par_map`] workers.
+
+use std::sync::Arc;
 
 use super::ctx::Ctx;
 use crate::coordinator::cosim::cosimulate;
 use crate::energy::network::message_edp;
 use crate::energy::params::EnergyParams;
 use crate::model::cnn::Pass;
+use crate::model::SystemConfig;
 use crate::noc::builder::{NocInstance, NocKind};
-use crate::noc::sim::{NocSim, SimConfig};
+use crate::noc::sim::{Message, NocSim, SimConfig};
 use crate::scenario::ModelId;
 use crate::traffic::trace::phase_trace;
+use crate::util::exec::par_map;
 use crate::util::rng::Rng;
 
 struct PerLayer {
@@ -21,6 +29,14 @@ struct PerLayer {
     edp: Vec<Vec<f64>>,
 }
 
+/// One (NoC, layer) simulation job, prepared serially and run on any
+/// worker.
+struct LayerJob {
+    inst: Arc<NocInstance>,
+    sys: Arc<SystemConfig>,
+    msgs: Vec<Message>,
+}
+
 /// Simulate every phase of `model` on the three NoCs; returns per-layer
 /// latency and message EDP (mesh placement used for the mesh).
 fn per_layer(ctx: &mut Ctx, model: ModelId) -> PerLayer {
@@ -28,18 +44,16 @@ fn per_layer(ctx: &mut Ctx, model: ModelId) -> PerLayer {
     let kinds = [NocKind::MeshXyYx, NocKind::HetNoc, NocKind::WiHetNoc];
     let mut tags = Vec::new();
     let mut flits = Vec::new();
-    let mut latency = vec![Vec::new(); kinds.len()];
-    let mut edp = vec![Vec::new(); kinds.len()];
+    let mut jobs: Vec<LayerJob> = Vec::new();
+    let mut layers_per_kind = 0usize;
     for (ni, kind) in kinds.iter().enumerate() {
-        let inst: NocInstance = ctx.instance_cloned(*kind);
+        let inst = ctx.instance_arc(*kind);
         let sys = ctx.sys_for(*kind);
         let tm = ctx.traffic_on(model, &sys);
         let cfg = ctx.trace_cfg();
         let mut rng = Rng::new(ctx.seed ^ 17);
         for p in &tm.phases {
             let (msgs, _) = phase_trace(&sys, p, 0, &cfg, &mut rng);
-            let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
-                .run(&msgs);
             if ni == 0 {
                 tags.push(format!(
                     "{}{}",
@@ -48,9 +62,23 @@ fn per_layer(ctx: &mut Ctx, model: ModelId) -> PerLayer {
                 ));
                 flits.push(p.total_flits(&sys) as f64);
             }
-            latency[ni].push(rep.latency.mean());
-            edp[ni].push(message_edp(&inst.topo, &rep, &energy));
+            jobs.push(LayerJob { inst: inst.clone(), sys: sys.clone(), msgs });
         }
+        if ni == 0 {
+            layers_per_kind = jobs.len();
+        }
+    }
+    let results = par_map(&jobs, |_, j| {
+        let rep = NocSim::new(&j.sys, &j.inst.topo, &j.inst.routes, &j.inst.air, SimConfig::default())
+            .run(&j.msgs);
+        (rep.latency.mean(), message_edp(&j.inst.topo, &rep, &energy))
+    });
+    let mut latency = vec![Vec::new(); kinds.len()];
+    let mut edp = vec![Vec::new(); kinds.len()];
+    for (i, (lat, e)) in results.into_iter().enumerate() {
+        let ni = i / layers_per_kind.max(1);
+        latency[ni].push(lat);
+        edp[ni].push(e);
     }
     PerLayer { tags, flits, latency, edp }
 }
@@ -137,9 +165,9 @@ pub fn fig19(ctx: &mut Ctx) -> String {
         let spec = ctx.spec(model);
         // NOTE: the mesh is evaluated on its own optimized placement, the
         // irregular NoCs on the WiHetNoC placement, exactly as designed.
-        let mesh = ctx.instance_cloned(NocKind::MeshXyYx);
-        let het = ctx.instance_cloned(NocKind::HetNoc);
-        let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
+        let mesh = ctx.instance_arc(NocKind::MeshXyYx);
+        let het = ctx.instance_arc(NocKind::HetNoc);
+        let wihet = ctx.instance_arc(NocKind::WiHetNoc);
         let mesh_sys = ctx.sys_for(NocKind::MeshXyYx);
         let sys = ctx.sys.clone();
         let mesh_rep = cosimulate(&mesh_sys, &spec, ctx.batch(), &[&mesh], &cfg)
@@ -186,5 +214,16 @@ mod tests {
         let mesh_edp = wmean(&pl.edp[0]);
         let wihet_edp = wmean(&pl.edp[2]);
         assert!(wihet_edp < mesh_edp, "edp wihet {wihet_edp} vs mesh {mesh_edp}");
+    }
+
+    #[test]
+    fn per_layer_matrix_is_complete() {
+        // every NoC row carries one entry per (layer, pass) phase
+        let mut ctx = Ctx::new(Effort::Quick, 2);
+        let pl = per_layer(&mut ctx, ModelId::LeNet);
+        assert!(!pl.tags.is_empty());
+        for row in pl.latency.iter().chain(pl.edp.iter()) {
+            assert_eq!(row.len(), pl.tags.len());
+        }
     }
 }

@@ -7,8 +7,15 @@
 //! [`ScenarioKey`] (workload x concrete tile placement), instances by
 //! [`NocKind`]. Two placements can never alias a cache entry the way the
 //! old string tags could.
+//!
+//! §Perf: every hot accessor hands out an `Arc` handle to the cached
+//! value — a cache *hit* never deep-copies a `TrafficModel`, `Topology`,
+//! `SystemConfig`, or `NocInstance` (route sets are O(n²) paths; the old
+//! per-call clones dominated sweep time). `Arc` (not `Rc`) so handles
+//! flow straight into [`crate::util::exec::par_map`] workers.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::error::WihetError;
 use crate::model::cnn::ModelSpec;
@@ -41,12 +48,13 @@ pub struct Ctx {
     /// caches are derived from it.
     model: ModelId,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
-    pub sys: SystemConfig,
+    /// Shared handle — cloning it is pointer-cheap.
+    pub sys: Arc<SystemConfig>,
     /// AMOSA-optimized CPU/MC placement for the mesh baseline.
-    mesh_sys: Option<SystemConfig>,
-    traffic: HashMap<ScenarioKey, TrafficModel>,
-    wireline: HashMap<usize, Topology>, // per k_max
-    instances: HashMap<NocKind, NocInstance>,
+    mesh_sys: Option<Arc<SystemConfig>>,
+    traffic: HashMap<ScenarioKey, Arc<TrafficModel>>,
+    wireline: HashMap<usize, Arc<Topology>>, // per k_max
+    instances: HashMap<NocKind, Arc<NocInstance>>,
 }
 
 impl Ctx {
@@ -62,7 +70,7 @@ impl Ctx {
             seed,
             batch: 32,
             model: ModelId::LeNet,
-            sys,
+            sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
             wireline: HashMap::new(),
@@ -109,27 +117,29 @@ impl Ctx {
         }
     }
 
-    /// Mesh-baseline system (AMOSA CPU/MC placement, cached).
-    pub fn mesh_sys(&mut self) -> SystemConfig {
+    /// Mesh-baseline system (AMOSA CPU/MC placement, cached; shared
+    /// handle on hits).
+    pub fn mesh_sys(&mut self) -> Arc<SystemConfig> {
         if self.mesh_sys.is_none() {
-            self.mesh_sys = Some(optimize_placement(&self.sys, self.seed));
+            self.mesh_sys = Some(Arc::new(optimize_placement(&self.sys, self.seed)));
         }
         self.mesh_sys.clone().unwrap()
     }
 
     /// Traffic model for `model` on a given system placement. The cache
     /// key is derived from the placement itself, so distinct placements
-    /// can never serve each other's (stale) matrices.
-    pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> TrafficModel {
+    /// can never serve each other's (stale) matrices. Hits return a
+    /// shared handle, never a copy.
+    pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
         let key = ScenarioKey::new(model, sys);
         if !self.traffic.contains_key(&key) {
             let spec = model.spec();
-            self.traffic.insert(key, model_phases(sys, &spec, self.batch));
+            self.traffic.insert(key, Arc::new(model_phases(sys, &spec, self.batch)));
         }
         self.traffic[&key].clone()
     }
 
-    pub fn traffic(&mut self, model: ModelId) -> TrafficModel {
+    pub fn traffic(&mut self, model: ModelId) -> Arc<TrafficModel> {
         let sys = self.sys.clone();
         self.traffic_on(model, &sys)
     }
@@ -148,8 +158,9 @@ impl Ctx {
         self.traffic(model).fij(&sys)
     }
 
-    /// Optimized irregular wireline topology for `k_max` (cached).
-    pub fn wireline(&mut self, k_max: usize) -> Topology {
+    /// Optimized irregular wireline topology for `k_max` (cached; shared
+    /// handle on hits).
+    pub fn wireline(&mut self, k_max: usize) -> Arc<Topology> {
         if !self.wireline.contains_key(&k_max) {
             let model = self.model;
             let fij = self.fij(model);
@@ -157,7 +168,7 @@ impl Ctx {
             cfg.k_max = k_max;
             cfg.seed = self.seed.wrapping_add(k_max as u64);
             let topo = optimize_wireline(&self.sys, &fij, &cfg);
-            self.wireline.insert(k_max, topo);
+            self.wireline.insert(k_max, Arc::new(topo));
         }
         self.wireline[&k_max].clone()
     }
@@ -187,41 +198,52 @@ impl Ctx {
                     wi_het_noc_on(&self.sys, &fij, &cfg, topo)
                 }
             };
-            self.instances.insert(kind, inst);
+            self.instances.insert(kind, Arc::new(inst));
         }
         &self.instances[&kind]
     }
 
-    /// Owned copy of a cached instance (for call sites that also need
-    /// `&mut self` while holding the instance).
-    pub fn instance_cloned(&mut self, kind: NocKind) -> NocInstance {
-        self.instance(kind).clone()
+    /// Shared handle to a cached instance (for call sites that also need
+    /// `&mut self` while holding the instance, and for `par_map` jobs).
+    /// Replaces the old deep-cloning `instance_cloned`.
+    pub fn instance_arc(&mut self, kind: NocKind) -> Arc<NocInstance> {
+        self.instance(kind);
+        self.instances[&kind].clone()
     }
 
     /// WiHetNoC variant with a custom WI count / channel count on the
-    /// cached k_max=default wireline topology (Figs 12-13 sweeps).
+    /// cached k_max=default wireline topology (Figs 12-13 sweeps). The
+    /// wireline graph is shared with the cache, not copied.
     pub fn wihet_variant(&mut self, n_wi: usize, gpu_channels: usize) -> NocInstance {
         let topo = self.wireline(self.design_cfg().k_max);
         let model = self.model;
         let fij = self.fij(model);
-        let air = build_wireless(&topo, &fij, &self.sys.cpus(), &self.sys.mcs(), n_wi, gpu_channels);
-        let routes: RouteSet = alash_routes(&self.sys, &topo, &air, &fij);
-        NocInstance {
-            kind: NocKind::WiHetNoc,
-            topo,
-            routes,
-            air,
-        }
+        variant_on(&self.sys, topo, &fij, n_wi, gpu_channels)
     }
 
-    /// The system placement an instance should be simulated on.
-    pub fn sys_for(&mut self, kind: NocKind) -> SystemConfig {
+    /// The system placement an instance should be simulated on (shared
+    /// handle).
+    pub fn sys_for(&mut self, kind: NocKind) -> Arc<SystemConfig> {
         if kind.uses_mesh_placement() {
             self.mesh_sys()
         } else {
             self.sys.clone()
         }
     }
+}
+
+/// Assemble a WiHetNoC variant (WI count x GPU channels) on a shared
+/// wireline topology. Pure — safe to call from `par_map` jobs.
+pub fn variant_on(
+    sys: &SystemConfig,
+    topo: Arc<Topology>,
+    fij: &TrafficMatrix,
+    n_wi: usize,
+    gpu_channels: usize,
+) -> NocInstance {
+    let air = build_wireless(&topo, fij, &sys.cpus(), &sys.mcs(), n_wi, gpu_channels);
+    let routes: RouteSet = alash_routes(sys, &topo, &air, fij);
+    NocInstance { kind: NocKind::WiHetNoc, topo, routes, air }
 }
 
 #[cfg(test)]
@@ -235,6 +257,23 @@ mod tests {
         let b = ctx.instance(NocKind::MeshXy).topo.links.len();
         assert_eq!(a, b);
         assert_eq!(a, 112);
+    }
+
+    #[test]
+    fn cache_hits_share_not_copy() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let t1 = ctx.wireline(4);
+        let t2 = ctx.wireline(4);
+        assert!(Arc::ptr_eq(&t1, &t2), "wireline hit must share the graph");
+        let m1 = ctx.traffic(ModelId::LeNet);
+        let m2 = ctx.traffic(ModelId::LeNet);
+        assert!(Arc::ptr_eq(&m1, &m2), "traffic hit must share the model");
+        let i1 = ctx.instance_arc(NocKind::MeshXy);
+        let i2 = ctx.instance_arc(NocKind::MeshXy);
+        assert!(Arc::ptr_eq(&i1, &i2), "instance hit must share");
+        let s1 = ctx.mesh_sys();
+        let s2 = ctx.sys_for(NocKind::MeshXy);
+        assert!(Arc::ptr_eq(&s1, &s2), "mesh placement hit must share");
     }
 
     #[test]
@@ -254,6 +293,9 @@ mod tests {
         let v = ctx.wihet_variant(8, 2);
         assert_eq!(v.air.num_channels, 3);
         assert_eq!(v.air.wis.len(), 8 + 8);
+        // the variant rides the cached wireline graph, not a copy
+        let cached = ctx.wireline(ctx.design_cfg().k_max);
+        assert!(Arc::ptr_eq(&v.topo, &cached));
     }
 
     #[test]
@@ -289,7 +331,7 @@ mod tests {
         let mut ctx = Ctx::for_scenario(&sc).unwrap();
         assert_eq!(ctx.sys.num_tiles(), 16);
         assert_eq!(ctx.model, ModelId::CdbNet);
-        let inst = ctx.instance_cloned(NocKind::MeshXyYx);
+        let inst = ctx.instance_arc(NocKind::MeshXyYx);
         assert_eq!(inst.topo.links.len(), 24);
     }
 }

@@ -1,25 +1,39 @@
 //! Figs 11-13: WiHetNoC parameter selection — router port bound k_max,
 //! WI count, and channel count.
+//!
+//! §Perf: each sweep designs its candidates serially (they share the
+//! cached wireline optimization) and then fans the simulations out over
+//! [`par_map`] workers. Jobs are pure — instance + precomputed trace in,
+//! metrics out — so reports are byte-identical at any `WIHETNOC_THREADS`.
 
-use super::ctx::Ctx;
+use super::ctx::{variant_on, Ctx};
 use crate::energy::network::message_edp;
 use crate::energy::params::EnergyParams;
 use crate::noc::builder::NocInstance;
 use crate::noc::routing::RouteSet;
-use crate::noc::sim::{NocSim, SimConfig, SimReport};
+use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
 use crate::traffic::trace::training_trace;
+use crate::util::exec::par_map;
 
 /// Simulate one full training iteration of the scenario's design
 /// workload (paper: LeNet) on `inst`; returns the sim report (shared by
 /// the parameter sweeps).
 pub fn sim_iteration(ctx: &mut Ctx, inst: &NocInstance) -> SimReport {
+    let trace = design_trace(ctx);
+    run_trace(ctx, inst, &trace)
+}
+
+/// The design-workload iteration trace on the WiHetNoC placement.
+fn design_trace(ctx: &mut Ctx) -> Vec<Message> {
     let model = ctx.model();
     let sys = ctx.sys.clone();
     let tm = ctx.traffic(model);
     let cfg = ctx.trace_cfg();
-    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
-    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
-    sim.run(&trace)
+    training_trace(&sys, &tm.phases, &cfg).0
+}
+
+fn run_trace(ctx: &Ctx, inst: &NocInstance, trace: &[Message]) -> SimReport {
+    NocSim::new(&ctx.sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(trace)
 }
 
 /// Fig 11: network EDP vs k_max. Paper: optimum at k_max = 6 (EDP worsens
@@ -28,22 +42,29 @@ pub fn fig11(ctx: &mut Ctx) -> String {
     let energy = EnergyParams::default();
     let mut out = String::from("Fig 11 — network EDP vs router port bound k_max (paper optimum: 6)\n\n");
     out.push_str("  k_max   msg EDP (pJ*cyc)   mean latency   norm\n");
-    let mut rows = Vec::new();
-    for k_max in 4..=7 {
-        let topo = ctx.wireline(k_max);
-        let model = ctx.model();
-        let fij = ctx.fij(model);
-        let routes = RouteSet::shortest(&topo, Some(&fij));
-        let inst = NocInstance {
-            kind: crate::noc::builder::NocKind::HetNoc,
-            topo,
-            routes,
-            air: crate::noc::wireless::WirelessSpec::new(0),
-        };
-        let rep = sim_iteration(ctx, &inst);
-        let edp = message_edp(&inst.topo, &rep, &energy);
-        rows.push((k_max, edp, rep.latency.mean()));
-    }
+    // the per-k_max designs come from (or land in) the shared cache ...
+    let insts: Vec<(usize, NocInstance)> = (4..=7)
+        .map(|k_max| {
+            let topo = ctx.wireline(k_max);
+            let model = ctx.model();
+            let fij = ctx.fij(model);
+            let routes = RouteSet::shortest(&topo, Some(&fij));
+            let inst = NocInstance {
+                kind: crate::noc::builder::NocKind::HetNoc,
+                topo,
+                routes,
+                air: crate::noc::wireless::WirelessSpec::new(0),
+            };
+            (k_max, inst)
+        })
+        .collect();
+    // ... and the simulations fan out
+    let trace = design_trace(ctx);
+    let ctx_ref: &Ctx = ctx;
+    let rows: Vec<(usize, f64, f64)> = par_map(&insts, |_, (k_max, inst)| {
+        let rep = run_trace(ctx_ref, inst, &trace);
+        (*k_max, message_edp(&inst.topo, &rep, &energy), rep.latency.mean())
+    });
     let best = rows.iter().cloned().fold(f64::INFINITY, |m, r| m.min(r.1));
     for (k, edp, lat) in &rows {
         out.push_str(&format!(
@@ -63,14 +84,24 @@ pub fn fig12(ctx: &mut Ctx) -> String {
         "Fig 12 — EDP & wireless utilization vs GPU-MC WI count (paper optimum: 24)\n\n",
     );
     out.push_str("  n_wi   msg EDP (pJ*cyc)   wireless util   air fallback\n");
-    for n_wi in [8usize, 16, 24, 32, 40] {
-        let inst = ctx.wihet_variant(n_wi, 4);
-        let rep = sim_iteration(ctx, &inst);
-        let edp = message_edp(&inst.topo, &rep, &energy);
-        out.push_str(&format!(
-            "  {n_wi:<5}  {edp:>12.1}       {:>6.2}%         {:>6.2}%\n",
+    let topo = ctx.wireline(ctx.design_cfg().k_max);
+    let model = ctx.model();
+    let fij = ctx.fij(model);
+    let trace = design_trace(ctx);
+    let ctx_ref: &Ctx = ctx;
+    let wi_counts = [8usize, 16, 24, 32, 40];
+    let rows = par_map(&wi_counts, |_, &n_wi| {
+        let inst = variant_on(&ctx_ref.sys, topo.clone(), &fij, n_wi, 4);
+        let rep = run_trace(ctx_ref, &inst, &trace);
+        (
+            message_edp(&inst.topo, &rep, &energy),
             100.0 * rep.wireless_utilization(),
             100.0 * rep.air_fallbacks as f64 / rep.delivered_packets.max(1) as f64,
+        )
+    });
+    for (n_wi, (edp, util, fb)) in wi_counts.iter().zip(&rows) {
+        out.push_str(&format!(
+            "  {n_wi:<5}  {edp:>12.1}       {util:>6.2}%         {fb:>6.2}%\n",
         ));
     }
     out.push_str("\n(MAC request period grows with WIs/channel: beyond 6 per channel the access latency erodes the shortcut gain)\n");
@@ -85,14 +116,22 @@ pub fn fig13(ctx: &mut Ctx) -> String {
         "Fig 13 — EDP & wireless utilization vs channel count (6 WIs/channel; paper plateau: 4)\n\n",
     );
     out.push_str("  channels   n_wi   msg EDP (pJ*cyc)   wireless util\n");
-    for channels in 1..=4usize {
+    let topo = ctx.wireline(ctx.design_cfg().k_max);
+    let model = ctx.model();
+    let fij = ctx.fij(model);
+    let trace = design_trace(ctx);
+    let ctx_ref: &Ctx = ctx;
+    let channel_counts: Vec<usize> = (1..=4).collect();
+    let rows = par_map(&channel_counts, |_, &channels| {
         let n_wi = channels * 6;
-        let inst = ctx.wihet_variant(n_wi, channels);
-        let rep = sim_iteration(ctx, &inst);
-        let edp = message_edp(&inst.topo, &rep, &energy);
+        let inst = variant_on(&ctx_ref.sys, topo.clone(), &fij, n_wi, channels);
+        let rep = run_trace(ctx_ref, &inst, &trace);
+        (message_edp(&inst.topo, &rep, &energy), 100.0 * rep.wireless_utilization())
+    });
+    for (channels, (edp, util)) in channel_counts.iter().zip(&rows) {
+        let n_wi = channels * 6;
         out.push_str(&format!(
-            "  {channels:<9}  {n_wi:<5}  {edp:>12.1}       {:>6.2}%\n",
-            100.0 * rep.wireless_utilization(),
+            "  {channels:<9}  {n_wi:<5}  {edp:>12.1}       {util:>6.2}%\n",
         ));
     }
     out

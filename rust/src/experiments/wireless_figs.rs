@@ -1,25 +1,53 @@
 //! Figs 14-16: WiHetNoC network characteristics vs the optimized mesh.
+//!
+//! §Perf: the Fig 14 saturation ladder evaluates its injection-rate
+//! points in thread-count-sized chunks through [`par_map`] — the chunk
+//! boundary preserves the serial early-exit semantics (the reported
+//! saturation point is the last stable rate before the first unstable
+//! one), so results are identical at any `WIHETNOC_THREADS`.
+
+use std::sync::Arc;
 
 use super::ctx::Ctx;
 use super::param_figs::sim_iteration;
 use crate::model::cnn::Pass;
-use crate::noc::builder::NocKind;
-use crate::noc::sim::{NocSim, SimConfig, SimReport};
+use crate::model::SystemConfig;
+use crate::noc::builder::{NocInstance, NocKind};
+use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
 use crate::scenario::ModelId;
 use crate::traffic::trace::{phase_trace, training_trace};
+use crate::util::exec::{par_map, thread_count};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
 /// Simulate one design-workload iteration on a cached instance, using
 /// the placement that instance was designed for.
 fn sim_kind(ctx: &mut Ctx, kind: NocKind) -> SimReport {
+    let (inst, sys, trace) = kind_setup(ctx, kind);
+    run_on(&sys, &inst, &trace)
+}
+
+/// Cached instance + its placement + the design-iteration trace.
+fn kind_setup(ctx: &mut Ctx, kind: NocKind) -> (Arc<NocInstance>, Arc<SystemConfig>, Vec<Message>) {
     let model = ctx.model();
-    let inst = ctx.instance_cloned(kind);
+    let inst = ctx.instance_arc(kind);
     let sys = ctx.sys_for(kind);
     let tm = ctx.traffic_on(model, &sys);
     let cfg = ctx.trace_cfg();
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
-    NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace)
+    (inst, sys, trace)
+}
+
+fn run_on(sys: &SystemConfig, inst: &NocInstance, trace: &[Message]) -> SimReport {
+    NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(trace)
+}
+
+/// `trace` with injection times compressed by `rate`.
+fn compress(trace: &[Message], rate: f64) -> Vec<Message> {
+    trace
+        .iter()
+        .map(|m| Message { inject_at: (m.inject_at as f64 / rate) as u64, ..*m })
+        .collect()
 }
 
 /// Saturation throughput (Fig 14 methodology): compress the trace's
@@ -28,14 +56,22 @@ fn sim_kind(ctx: &mut Ctx, kind: NocKind) -> SimReport {
 /// cycle of the last stable point.
 pub fn saturation_throughput(ctx: &mut Ctx, kind: NocKind) -> (f64, f64) {
     const LAT_BOUND: f64 = 300.0;
+    let (inst, sys, trace) = kind_setup(ctx, kind);
+    let rates: Vec<f64> = (1..=32).map(|step| 0.25 * step as f64).collect();
     let mut best = (0.0f64, 0.0f64); // (throughput, rate)
-    for step in 1..=32 {
-        let rate = 0.25 * step as f64;
-        let rep = sim_at_rate(ctx, kind, rate);
-        if rep.latency.mean() > LAT_BOUND {
+    for chunk in rates.chunks(thread_count().max(1)) {
+        let reps = par_map(chunk, |_, &rate| run_on(&sys, &inst, &compress(&trace, rate)));
+        let mut saturated = false;
+        for (&rate, rep) in chunk.iter().zip(&reps) {
+            if rep.latency.mean() > LAT_BOUND {
+                saturated = true;
+                break;
+            }
+            best = (rep.throughput(), rate);
+        }
+        if saturated {
             break;
         }
-        best = (rep.throughput(), rate);
     }
     best
 }
@@ -43,21 +79,8 @@ pub fn saturation_throughput(ctx: &mut Ctx, kind: NocKind) -> (f64, f64) {
 /// Simulate one design-workload iteration with injection times
 /// compressed by `rate`.
 pub fn sim_at_rate(ctx: &mut Ctx, kind: NocKind, rate: f64) -> SimReport {
-    let model = ctx.model();
-    let inst = ctx.instance_cloned(kind);
-    let sys = ctx.sys_for(kind);
-    let tm = ctx.traffic_on(model, &sys);
-    let cfg = ctx.trace_cfg();
-    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
-    let compressed: Vec<_> = trace
-        .iter()
-        .map(|m| crate::noc::sim::Message {
-            inject_at: (m.inject_at as f64 / rate) as u64,
-            ..*m
-        })
-        .collect();
-    NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
-        .run(&compressed)
+    let (inst, sys, trace) = kind_setup(ctx, kind);
+    run_on(&sys, &inst, &compress(&trace, rate))
 }
 
 /// Fig 14: CPU-MC latency and overall throughput, optimized mesh vs
@@ -71,10 +94,28 @@ pub fn fig14(ctx: &mut Ctx) -> String {
     // queue regime comparable to the paper's reported latencies).
     let nominal = 1.0;
     let light = (mesh_rate.min(wihet_rate) * 0.75).max(0.25);
-    let mesh_nom = sim_at_rate(ctx, NocKind::MeshXyYx, nominal);
-    let wihet_nom = sim_at_rate(ctx, NocKind::WiHetNoc, nominal);
-    let mesh_lt = sim_at_rate(ctx, NocKind::MeshXyYx, light);
-    let wihet_lt = sim_at_rate(ctx, NocKind::WiHetNoc, light);
+    // the four operating-point sims are independent: fan them out
+    let points = [
+        (NocKind::MeshXyYx, nominal),
+        (NocKind::WiHetNoc, nominal),
+        (NocKind::MeshXyYx, light),
+        (NocKind::WiHetNoc, light),
+    ];
+    let setups: Vec<_> = points
+        .iter()
+        .map(|&(kind, rate)| {
+            let (inst, sys, trace) = kind_setup(ctx, kind);
+            (inst, sys, trace, rate)
+        })
+        .collect();
+    let mut reps = par_map(&setups, |_, (inst, sys, trace, rate)| {
+        run_on(sys, inst, &compress(trace, *rate))
+    })
+    .into_iter();
+    let mesh_nom = reps.next().expect("four operating points");
+    let wihet_nom = reps.next().expect("four operating points");
+    let mesh_lt = reps.next().expect("four operating points");
+    let wihet_lt = reps.next().expect("four operating points");
 
     let thr_ratio = wihet_thr / mesh_thr.max(1e-9);
     let r = |a: f64, b: f64| a / b.max(1e-9);
@@ -114,7 +155,7 @@ pub fn fig14(ctx: &mut Ctx) -> String {
 /// and >90% of WiHetNoC links sit below the mesh mean.
 pub fn fig15(ctx: &mut Ctx) -> String {
     let mesh_util = sim_kind(ctx, NocKind::MeshXyYx).link_utilization();
-    let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
+    let wihet = ctx.instance_arc(NocKind::WiHetNoc);
     let wihet_util = sim_iteration(ctx, &wihet).link_utilization();
 
     let mesh_mean = stats::mean(&mesh_util).max(1e-30);
@@ -144,7 +185,7 @@ pub fn fig15(ctx: &mut Ctx) -> String {
 /// Fig 6 traffic asymmetry (the MAC allocates bandwidth on demand).
 pub fn fig16(ctx: &mut Ctx) -> String {
     let sys = ctx.sys.clone();
-    let inst = ctx.instance_cloned(NocKind::WiHetNoc);
+    let inst = ctx.instance_arc(NocKind::WiHetNoc);
     let mut out = String::from(
         "Fig 16 — WI utilization asymmetry per layer (MC->core : core->MC over wireless)\n",
     );
@@ -155,13 +196,21 @@ pub fn fig16(ctx: &mut Ctx) -> String {
         ));
         let mut rng = Rng::new(ctx.seed ^ 16);
         let cfg = ctx.trace_cfg();
-        for p in &tm.phases {
-            if p.pass == Pass::Backward && p.tag != "C1" && p.tag != "P1" && p.tag != "F1" {
-                continue; // keep the report compact: all fwd + 3 bwd layers
-            }
-            let (msgs, _) = phase_trace(&sys, p, 0, &cfg, &mut rng);
-            let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
-                .run(&msgs);
+        // trace generation shares one rng stream (order matters for
+        // byte-identical reports), then the phase sims fan out
+        let phases: Vec<_> = tm
+            .phases
+            .iter()
+            .filter(|p| {
+                p.pass == Pass::Forward || p.tag == "C1" || p.tag == "P1" || p.tag == "F1"
+            })
+            .collect();
+        let traces: Vec<Vec<Message>> = phases
+            .iter()
+            .map(|p| phase_trace(&sys, p, 0, &cfg, &mut rng).0)
+            .collect();
+        let reps = par_map(&traces, |_, msgs| run_on(&sys, &inst, msgs));
+        for (p, rep) in phases.iter().zip(&reps) {
             let ratio = rep.air_flits_from_mc as f64 / rep.air_flits_to_mc.max(1) as f64;
             out.push_str(&format!(
                 "  {:<5}({:<3})   {:>10}   {:>10}   {:>5.2}   {:>5.2}\n",
@@ -220,7 +269,7 @@ mod tests {
     fn fig15_wihetnoc_balances_links() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
         let mesh_util = sim_kind(&mut ctx, NocKind::MeshXyYx).link_utilization();
-        let wihet = ctx.instance_cloned(NocKind::WiHetNoc);
+        let wihet = ctx.instance_arc(NocKind::WiHetNoc);
         let wihet_util = sim_iteration(&mut ctx, &wihet).link_utilization();
         let mesh_mean = stats::mean(&mesh_util);
         let frac_over = |xs: &[f64]| {
@@ -232,5 +281,24 @@ mod tests {
             frac_over(&wihet_util),
             frac_over(&mesh_util)
         );
+    }
+
+    #[test]
+    fn saturation_chunking_matches_serial_scan() {
+        // chunked parallel ladder must report the same operating point a
+        // fully serial scan would
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let (thr, rate) = saturation_throughput(&mut ctx, NocKind::MeshXyYx);
+        const LAT_BOUND: f64 = 300.0;
+        let mut serial = (0.0f64, 0.0f64);
+        for step in 1..=32 {
+            let r = 0.25 * step as f64;
+            let rep = sim_at_rate(&mut ctx, NocKind::MeshXyYx, r);
+            if rep.latency.mean() > LAT_BOUND {
+                break;
+            }
+            serial = (rep.throughput(), r);
+        }
+        assert_eq!((thr, rate), serial);
     }
 }

@@ -255,7 +255,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let noc: NocKind = args.get_or("noc", "wihetnoc").parse().map_err(str_err)?;
     let scenario = scenario_from(&args)?.with_noc(noc);
     let mut ctx = Ctx::for_scenario(&scenario).map_err(str_err)?;
-    let inst = ctx.instance_cloned(noc);
+    let inst = ctx.instance_arc(noc);
     let sys = ctx.sys_for(noc);
     let tm = ctx.traffic_on(scenario.model, &sys);
     let mut cfg = ctx.trace_cfg();

@@ -10,6 +10,7 @@
 
 use std::fmt;
 use std::str::FromStr;
+use std::sync::Arc;
 
 use super::analysis::TrafficMatrix;
 use super::routing::RouteSet;
@@ -73,10 +74,15 @@ impl FromStr for NocKind {
 }
 
 /// A fully-built NoC ready for simulation.
+///
+/// The wireline topology is behind an `Arc` so experiment sweeps can
+/// assemble many instances (WI-count / channel variants) over one
+/// optimized topology — and hand instances across `par_map` workers —
+/// without deep-copying the graph.
 #[derive(Clone)]
 pub struct NocInstance {
     pub kind: NocKind,
-    pub topo: Topology,
+    pub topo: Arc<Topology>,
     pub routes: RouteSet,
     pub air: WirelessSpec,
 }
@@ -169,7 +175,7 @@ pub fn mesh_opt(sys: &SystemConfig, adaptive: bool) -> NocInstance {
     };
     NocInstance {
         kind: if adaptive { NocKind::MeshXyYx } else { NocKind::MeshXy },
-        topo,
+        topo: Arc::new(topo),
         routes,
         air: WirelessSpec::new(0),
     }
@@ -200,22 +206,23 @@ pub fn het_noc(sys: &SystemConfig, traffic: &TrafficMatrix, cfg: &DesignConfig) 
     let cfg = DesignConfig { max_link_mm: None, ..cfg.clone() };
     let topo = optimize_wireline(sys, traffic, &cfg);
     let routes = RouteSet::shortest(&topo, Some(traffic));
-    NocInstance { kind: NocKind::HetNoc, topo, routes, air: WirelessSpec::new(0) }
+    NocInstance { kind: NocKind::HetNoc, topo: Arc::new(topo), routes, air: WirelessSpec::new(0) }
 }
 
 /// The full WiHetNoC: optimized wireline + wireless overlay + ALASH.
 pub fn wi_het_noc(sys: &SystemConfig, traffic: &TrafficMatrix, cfg: &DesignConfig) -> NocInstance {
     let topo = optimize_wireline(sys, traffic, cfg);
-    wi_het_noc_on(sys, traffic, cfg, topo)
+    wi_het_noc_on(sys, traffic, cfg, Arc::new(topo))
 }
 
-/// WiHetNoC assembly on a given wireline topology (lets experiments reuse
-/// one expensive wireline optimization across WI-count sweeps).
+/// WiHetNoC assembly on a given (shared) wireline topology — lets
+/// experiments reuse one expensive wireline optimization across WI-count
+/// sweeps without copying the graph per variant.
 pub fn wi_het_noc_on(
     sys: &SystemConfig,
     traffic: &TrafficMatrix,
     cfg: &DesignConfig,
-    topo: Topology,
+    topo: Arc<Topology>,
 ) -> NocInstance {
     let air = build_wireless(
         &topo,

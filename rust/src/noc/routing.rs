@@ -180,8 +180,10 @@ impl RouteSet {
     pub fn shortest(topo: &Topology, traffic: Option<&TrafficMatrix>) -> RouteSet {
         let n = topo.n;
         let mut cand = vec![Vec::new(); n * n];
+        let mut scratch = DijkstraScratch::new(n);
+        let mut parent = vec![u32::MAX; n];
         for s in 0..n {
-            let (parent, _) = dijkstra(topo, s);
+            dijkstra_into(topo, s, &mut parent, &mut scratch);
             for d in 0..n {
                 let hops = walk_parents(topo, &parent, s, d);
                 cand[s * n + d].push(Path::new(hops, 0));
@@ -227,8 +229,16 @@ impl RouteSet {
             return rs;
         }
         let n = topo.n;
-        // Precompute per-router wireline distance (cost, parent) maps once.
-        let all: Vec<(Vec<u32>, Vec<u64>)> = (0..n).map(|s| dijkstra(topo, s)).collect();
+        // Precompute per-router wireline parent maps once, reusing one
+        // Dijkstra scratch (heap + cost vector) across all sources.
+        let mut scratch = DijkstraScratch::new(n);
+        let all: Vec<Vec<u32>> = (0..n)
+            .map(|s| {
+                let mut parent = vec![u32::MAX; n];
+                dijkstra_into(topo, s, &mut parent, &mut scratch);
+                parent
+            })
+            .collect();
         for s in 0..n {
             for d in 0..n {
                 if s == d {
@@ -249,8 +259,8 @@ impl RouteSet {
                             if wa.router == wb.router {
                                 continue;
                             }
-                            let head = walk_parents(topo, &all[s].0, s, wa.router);
-                            let tail = walk_parents(topo, &all[wb.router].0, wb.router, d);
+                            let head = walk_parents(topo, &all[s], s, wa.router);
+                            let tail = walk_parents(topo, &all[wb.router], wb.router, d);
                             if (head.is_empty() && s != wa.router)
                                 || (tail.is_empty() && wb.router != d)
                             {
@@ -351,13 +361,32 @@ fn mesh_walk(topo: &Topology, w: usize, s: usize, d: usize, x_first: bool) -> Ve
     hops
 }
 
-/// Dijkstra over link delays + per-hop router delay; returns (parent link
-/// per node, cost per node). Deterministic lowest-cost-then-id order.
-fn dijkstra(topo: &Topology, src: usize) -> (Vec<u32>, Vec<u64>) {
+/// Reusable Dijkstra working set: the cost vector and the frontier heap
+/// survive across the all-source loops in [`RouteSet::shortest`] and
+/// [`RouteSet::alash_with`], which would otherwise reallocate both once
+/// per source (2n allocations per route-set build).
+struct DijkstraScratch {
+    cost: Vec<u64>,
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl DijkstraScratch {
+    fn new(n: usize) -> Self {
+        DijkstraScratch { cost: Vec::with_capacity(n), heap: BinaryHeap::with_capacity(n) }
+    }
+}
+
+/// Dijkstra over link delays + per-hop router delay; writes the parent
+/// link per node into `parent`. Deterministic lowest-cost-then-id order.
+fn dijkstra_into(topo: &Topology, src: usize, parent: &mut [u32], scratch: &mut DijkstraScratch) {
     let n = topo.n;
-    let mut cost = vec![u64::MAX; n];
-    let mut parent = vec![u32::MAX; n];
-    let mut heap = BinaryHeap::new();
+    debug_assert_eq!(parent.len(), n);
+    parent.fill(u32::MAX);
+    let cost = &mut scratch.cost;
+    cost.clear();
+    cost.resize(n, u64::MAX);
+    let heap = &mut scratch.heap;
+    heap.clear();
     cost[src] = 0;
     heap.push(Reverse((0u64, src)));
     while let Some(Reverse((c, r))) = heap.pop() {
@@ -373,7 +402,6 @@ fn dijkstra(topo: &Topology, src: usize) -> (Vec<u32>, Vec<u64>) {
             }
         }
     }
-    (parent, cost)
 }
 
 fn walk_parents(topo: &Topology, parent: &[u32], src: usize, dst: usize) -> Vec<Hop> {

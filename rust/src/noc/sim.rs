@@ -20,7 +20,29 @@
 //! wireline shortest path from that router; otherwise it pays the request
 //! period (one slot per WI on the channel) and occupies the channel for
 //! its serialization time.
+//!
+//! ## Performance (§Perf)
+//!
+//! The hot path is engineered for the sweep workloads (thousands of
+//! `run` calls over the same platform in AMOSA loops and figure
+//! harnesses):
+//!
+//! * [`SimWorkspace`] owns every per-run buffer — the event queue, the
+//!   flight arena, and the per-link/per-channel busy vectors — so
+//!   repeated runs allocate nothing. [`NocSim::run`] transparently
+//!   reuses a thread-local workspace; [`NocSim::run_in`] takes an
+//!   explicit one.
+//! * The event queue is a bucketed **calendar queue**: event times are
+//!   near-monotonic with small deltas (link delays, MAC slots, MC
+//!   service), so push/pop are O(1) amortized instead of the binary
+//!   heap's O(log n). FIFO order among same-cycle events reproduces the
+//!   old heap's global-sequence tie-break exactly, keeping runs
+//!   deterministic and byte-identical across workspace reuse.
+//! * In-flight message state is stored as structure-of-arrays, and the
+//!   CPU/GPU↔MC pair classification is a precomputed per-(src,dst)
+//!   table instead of a per-delivery match over tile kinds.
 
+use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -111,7 +133,7 @@ pub struct SimReport {
     /// Wireless flits by direction: to an MC (core->MC) / from an MC.
     pub air_flits_to_mc: u64,
     pub air_flits_from_mc: u64,
-    /// Messages not delivered when the horizon cut the run.
+    /// Messages (not events) not delivered when the horizon cut the run.
     pub undelivered: u64,
 }
 
@@ -142,8 +164,8 @@ enum Event {
 }
 
 impl Event {
-    /// Pack into a u64 (kind << 48 | hop << 32 | idx) so heap entries are
-    /// a flat `(time, seq, packed)` triple — no side payload storage.
+    /// Pack into a u64 (kind << 48 | hop << 32 | idx) so queue entries are
+    /// flat integers — no side payload storage.
     #[inline]
     fn pack(self) -> u64 {
         match self {
@@ -164,31 +186,204 @@ impl Event {
     }
 }
 
-/// Time-ordered event queue; ties broken by insertion order so runs are
-/// fully deterministic.
-struct EventQueue {
-    heap: BinaryHeap<Reverse<(u64, u64, u64)>>,
-    seq: u64,
+/// Bucket count of the calendar queue (one bucket per cycle, power of
+/// two). Event deltas (router pipeline, link drain, MAC request, MC
+/// service) are orders of magnitude below this, so virtually every push
+/// lands in the in-window buckets; the rare far-future event (a trace
+/// inject deep in the schedule) overflows into a small binary heap.
+const CAL_BUCKETS: usize = 4096;
+const CAL_MASK: usize = CAL_BUCKETS - 1;
+
+/// Occupancy-summary words (64 buckets per `u64` word; CAL_BUCKETS/64
+/// words fit one summary `u64` exactly).
+const CAL_WORDS: usize = CAL_BUCKETS / 64;
+
+/// Time-ordered event queue: a calendar of per-cycle buckets over a
+/// sliding window, with a heap for events beyond it. Same-cycle events
+/// pop in global insertion order (the old heap's `(time, seq)`
+/// tie-break), so runs are fully deterministic.
+///
+/// A two-level occupancy bitmap (bit per bucket + one summary word)
+/// lets `pop` jump straight to the next pending cycle instead of
+/// scanning empty buckets, so sparse traces (light-load sweeps with
+/// long idle gaps) stay O(1)-ish per event too.
+struct CalendarQueue {
+    /// `(time, packed event)` entries; index = `time & CAL_MASK`. Every
+    /// entry's time lies in `[cur, cur + CAL_BUCKETS)` (later times live
+    /// in `far`), so each non-empty bucket holds exactly one time value:
+    /// `cur + ring_distance`.
+    buckets: Vec<Vec<(u64, u64)>>,
+    /// Bit per bucket: non-empty. `occ_sum`: bit per word of `occ`.
+    occ: Vec<u64>,
+    occ_sum: u64,
+    /// Events at `cur`, in insertion order; drained by `ready_pos`.
+    ready: Vec<u64>,
+    ready_pos: usize,
+    /// The cycle currently being served.
+    cur: u64,
+    /// Whether `cur` has been primed (lets time 0 be served).
+    started: bool,
+    len: usize,
+    /// Events at `t >= cur + CAL_BUCKETS`, ordered by `(t, seq)`.
+    far: BinaryHeap<Reverse<(u64, u64, u64)>>,
+    far_seq: u64,
 }
 
-impl EventQueue {
-    fn new(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap * 2), seq: 0 }
+impl CalendarQueue {
+    fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..CAL_BUCKETS).map(|_| Vec::new()).collect(),
+            occ: vec![0; CAL_WORDS],
+            occ_sum: 0,
+            ready: Vec::new(),
+            ready_pos: 0,
+            cur: 0,
+            started: false,
+            len: 0,
+            far: BinaryHeap::new(),
+            far_seq: 0,
+        }
+    }
+
+    /// Clear state while keeping every allocation (buckets, ready, heap).
+    fn reset(&mut self) {
+        if self.len != 0 {
+            // a horizon cut can leave entries behind
+            for b in &mut self.buckets {
+                b.clear();
+            }
+            self.far.clear();
+        }
+        self.occ.fill(0);
+        self.occ_sum = 0;
+        self.ready.clear();
+        self.ready_pos = 0;
+        self.cur = 0;
+        self.started = false;
+        self.len = 0;
+        self.far_seq = 0;
+    }
+
+    #[inline]
+    fn mark(&mut self, bi: usize) {
+        let w = bi >> 6;
+        self.occ[w] |= 1 << (bi & 63);
+        self.occ_sum |= 1 << w;
+    }
+
+    #[inline]
+    fn unmark(&mut self, bi: usize) {
+        let w = bi >> 6;
+        self.occ[w] &= !(1 << (bi & 63));
+        if self.occ[w] == 0 {
+            self.occ_sum &= !(1 << w);
+        }
+    }
+
+    /// Nearest occupied bucket at ring distance >= 0 from `from`.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        let w0 = from >> 6;
+        let in_word = self.occ[w0] & (!0u64 << (from & 63));
+        if in_word != 0 {
+            return Some((w0 << 6) + in_word.trailing_zeros() as usize);
+        }
+        for step in 1..=CAL_WORDS {
+            let w = (w0 + step) & (CAL_WORDS - 1);
+            if self.occ_sum & (1 << w) != 0 {
+                // lowest set bit = nearest in ring order (for the fully
+                // wrapped word w == w0, its remaining bits are < from)
+                return Some((w << 6) + self.occ[w].trailing_zeros() as usize);
+            }
+        }
+        None
     }
 
     #[inline]
     fn push(&mut self, t: u64, ev: Event) {
-        self.heap.push(Reverse((t, self.seq, ev.pack())));
-        self.seq += 1;
+        let p = ev.pack();
+        self.len += 1;
+        if self.started && t <= self.cur {
+            // same-cycle follow-up (Inject -> Hop, local delivery):
+            // append after everything already scheduled at `cur`.
+            debug_assert!(t == self.cur, "event scheduled in the past");
+            self.ready.push(p);
+        } else if t < self.cur + CAL_BUCKETS as u64 {
+            let bi = (t as usize) & CAL_MASK;
+            if self.buckets[bi].is_empty() {
+                self.mark(bi);
+            }
+            self.buckets[bi].push((t, p));
+        } else {
+            self.far.push(Reverse((t, self.far_seq, p)));
+            self.far_seq += 1;
+        }
     }
 
-    #[inline]
+    /// Move far-future events that now fall inside the window into their
+    /// buckets. Heap order `(t, seq)` keeps per-bucket insertion order
+    /// consistent with global sequence.
+    fn pull_far(&mut self) {
+        let bound = self.cur + CAL_BUCKETS as u64;
+        while let Some(&Reverse((t, _, _))) = self.far.peek() {
+            if t >= bound {
+                break;
+            }
+            let Reverse((t, _, p)) = self.far.pop().expect("peeked");
+            let bi = (t as usize) & CAL_MASK;
+            if self.buckets[bi].is_empty() {
+                self.mark(bi);
+            }
+            self.buckets[bi].push((t, p));
+        }
+    }
+
     fn pop(&mut self) -> Option<(u64, Event)> {
-        self.heap.pop().map(|Reverse((t, _, p))| (t, Event::unpack(p)))
-    }
-
-    fn len(&self) -> usize {
-        self.heap.len()
+        if self.len == 0 {
+            return None;
+        }
+        while self.ready_pos >= self.ready.len() {
+            self.ready.clear();
+            self.ready_pos = 0;
+            if !self.started {
+                self.started = true; // consider cycle 0 itself first
+            } else {
+                self.cur += 1;
+            }
+            // Land `cur` on the next pending event time: the nearest
+            // occupied bucket in ring order (its single time value is
+            // `cur + distance`, and every far event is farther away), or
+            // the earliest far event when the window is empty.
+            loop {
+                self.pull_far();
+                let from = (self.cur as usize) & CAL_MASK;
+                if let Some(bi) = self.next_occupied(from) {
+                    let d = (bi + CAL_BUCKETS - from) & CAL_MASK;
+                    self.cur += d as u64;
+                    break;
+                }
+                let &Reverse((t, _, _)) =
+                    self.far.peek().expect("len > 0 with empty window and empty far heap");
+                self.cur = t;
+            }
+            let cur = self.cur;
+            let bi = (cur as usize) & CAL_MASK;
+            let ready = &mut self.ready;
+            self.buckets[bi].retain(|&(t, p)| {
+                if t == cur {
+                    ready.push(p);
+                    false
+                } else {
+                    true
+                }
+            });
+            if self.buckets[bi].is_empty() {
+                self.unmark(bi);
+            }
+        }
+        let p = self.ready[self.ready_pos];
+        self.ready_pos += 1;
+        self.len -= 1;
+        Some((self.cur, Event::unpack(p)))
     }
 }
 
@@ -203,13 +398,130 @@ struct RouteRef {
     idx: u8,
 }
 
-struct InFlight {
-    msg: Message,
-    route: RouteRef,
+/// In-flight message state, structure-of-arrays: the hop handler touches
+/// `flits`/`dst`/`route` only, the delivery handler adds `src`/`class`/
+/// `inject_at` — neither drags the other's cache lines around.
+#[derive(Default)]
+struct Flights {
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    flits: Vec<u64>,
+    class: Vec<MsgClass>,
+    inject_at: Vec<u64>,
+    route: Vec<RouteRef>,
 }
 
-/// The simulator. Owns per-run mutable state; `topo`/`routes`/`air` are
-/// borrowed per `run`.
+impl Flights {
+    fn clear(&mut self) {
+        self.src.clear();
+        self.dst.clear();
+        self.flits.clear();
+        self.class.clear();
+        self.inject_at.clear();
+        self.route.clear();
+    }
+
+    fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    fn push(&mut self, m: &Message) -> u32 {
+        let idx = self.src.len() as u32;
+        self.src.push(m.src as u32);
+        self.dst.push(m.dst as u32);
+        self.flits.push(m.flits);
+        self.class.push(m.class);
+        self.inject_at.push(m.inject_at);
+        self.route.push(RouteRef { src: m.src as u32, dst: m.dst as u32, idx: 0 });
+        idx
+    }
+}
+
+/// CPU/GPU<->MC pair classification values (see `SimWorkspace::pair_kind`).
+const PAIR_NONE: u8 = 0;
+const PAIR_CPU_MC: u8 = 1;
+const PAIR_GPU_MC: u8 = 2;
+
+/// Reusable per-run state. One workspace serves any number of runs on any
+/// platform — buffers are cleared (never freed) between runs, and the
+/// pair-classification table is rebuilt only when the tile layout
+/// actually changes. Results are independent of workspace history.
+#[derive(Default)]
+pub struct SimWorkspace {
+    queue: Option<CalendarQueue>,
+    flights: Flights,
+    link_busy_until: Vec<u64>,
+    chan_busy_until: Vec<u64>,
+    /// Per-(src,dst) pair class (`src * n + dst`): PAIR_CPU_MC /
+    /// PAIR_GPU_MC / PAIR_NONE.
+    pair_kind: Vec<u8>,
+    pair_n: usize,
+    pair_sig: u64,
+}
+
+impl SimWorkspace {
+    pub fn new() -> Self {
+        SimWorkspace::default()
+    }
+
+    fn prepare(&mut self, sys: &SystemConfig, num_links: usize, num_chans: usize) {
+        match &mut self.queue {
+            Some(q) => q.reset(),
+            None => self.queue = Some(CalendarQueue::new()),
+        }
+        self.flights.clear();
+        self.link_busy_until.clear();
+        self.link_busy_until.resize(num_links, 0);
+        self.chan_busy_until.clear();
+        self.chan_busy_until.resize(num_chans, 0);
+        let n = sys.num_tiles();
+        let sig = tiles_signature(sys);
+        if self.pair_n != n || self.pair_sig != sig {
+            self.pair_kind.clear();
+            self.pair_kind.resize(n * n, PAIR_NONE);
+            for s in 0..n {
+                for d in 0..n {
+                    self.pair_kind[s * n + d] = match (sys.tiles[s], sys.tiles[d]) {
+                        (TileKind::Cpu, TileKind::Mc) | (TileKind::Mc, TileKind::Cpu) => {
+                            PAIR_CPU_MC
+                        }
+                        (TileKind::Gpu, TileKind::Mc) | (TileKind::Mc, TileKind::Gpu) => {
+                            PAIR_GPU_MC
+                        }
+                        _ => PAIR_NONE,
+                    };
+                }
+            }
+            self.pair_n = n;
+            self.pair_sig = sig;
+        }
+    }
+}
+
+/// FNV-1a over the tile-kind vector — cheap change detection for the
+/// cached pair table when one workspace serves several placements.
+fn tiles_signature(sys: &SystemConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in &sys.tiles {
+        let b = match t {
+            TileKind::Cpu => 1u8,
+            TileKind::Gpu => 2,
+            TileKind::Mc => 3,
+        };
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+thread_local! {
+    /// Workspace behind [`NocSim::run`]: every run on this thread reuses
+    /// one arena, so sweeps allocate nothing per run even through the
+    /// convenience API (and each `par_map` worker gets its own).
+    static TLS_WORKSPACE: RefCell<SimWorkspace> = RefCell::new(SimWorkspace::new());
+}
+
+/// The simulator. Owns per-run mutable state via a [`SimWorkspace`];
+/// `topo`/`routes`/`air` are borrowed per `run`.
 pub struct NocSim<'a> {
     pub sys: &'a SystemConfig,
     pub topo: &'a Topology,
@@ -229,10 +541,19 @@ impl<'a> NocSim<'a> {
         NocSim { sys, topo, routes, air, cfg }
     }
 
-    /// Run the trace to completion (or the configured horizon).
+    /// Run the trace to completion (or the configured horizon), reusing
+    /// this thread's workspace.
     pub fn run(&self, trace: &[Message]) -> SimReport {
+        TLS_WORKSPACE.with(|ws| self.run_in(trace, &mut ws.borrow_mut()))
+    }
+
+    /// Run the trace using an explicit, reusable workspace. The result is
+    /// identical whatever the workspace previously simulated.
+    pub fn run_in(&self, trace: &[Message], ws: &mut SimWorkspace) -> SimReport {
         let nl = self.topo.links.len();
         let nch = self.air.num_channels.max(1);
+        let n = self.sys.num_tiles();
+        ws.prepare(self.sys, nl, nch);
         let mut report = SimReport {
             link_busy: vec![0; nl],
             link_flits: vec![0; nl],
@@ -241,44 +562,52 @@ impl<'a> NocSim<'a> {
             air_flits: vec![0; nch],
             ..SimReport::default()
         };
-        let mut link_busy_until = vec![0u64; nl];
-        let mut chan_busy_until = vec![0u64; nch];
+        let SimWorkspace {
+            queue,
+            flights: fl,
+            link_busy_until,
+            chan_busy_until,
+            pair_kind,
+            ..
+        } = ws;
+        let q = queue.as_mut().expect("prepare() primed the queue");
 
-        let mut flights: Vec<InFlight> = Vec::with_capacity(trace.len() * 2);
-        let mut q = EventQueue::new(trace.len() * 2);
         for m in trace {
-            let idx = flights.len() as u32;
-            flights.push(InFlight {
-                msg: *m,
-                route: RouteRef { src: m.src as u32, dst: m.dst as u32, idx: 0 },
-            });
+            let idx = fl.push(m);
             q.push(m.inject_at, Event::Inject(idx));
         }
 
         while let Some((t, ev)) = q.pop() {
             if self.cfg.horizon > 0 && t > self.cfg.horizon {
-                report.undelivered += (q.len() as u64) + 1;
+                // Count undelivered *messages*, not queued events.
+                report.undelivered = fl.len() as u64 - report.delivered_packets;
                 break;
             }
             match ev {
                 Event::Inject(idx) => {
-                    let (src, dst) = {
-                        let m = &flights[idx as usize].msg;
-                        (m.src, m.dst)
-                    };
+                    let i = idx as usize;
+                    let (src, dst) = (fl.src[i] as usize, fl.dst[i] as usize);
                     if src == dst {
                         q.push(t, Event::Deliver { idx });
                         continue;
                     }
-                    let cand = self.choose_path(src, dst, t, &link_busy_until, &chan_busy_until);
-                    flights[idx as usize].route =
-                        RouteRef { src: src as u32, dst: dst as u32, idx: cand };
+                    let dedicated = pair_kind[src * n + dst] == PAIR_CPU_MC;
+                    let cand = self.choose_path(
+                        src,
+                        dst,
+                        t,
+                        link_busy_until,
+                        chan_busy_until,
+                        dedicated,
+                    );
+                    fl.route[i] = RouteRef { src: src as u32, dst: dst as u32, idx: cand };
                     q.push(t, Event::Hop { idx, hop: 0 });
                 }
                 Event::Hop { idx, hop } => {
-                    let flits = flights[idx as usize].msg.flits;
-                    let dst = flights[idx as usize].msg.dst;
-                    let rr = flights[idx as usize].route;
+                    let i = idx as usize;
+                    let flits = fl.flits[i];
+                    let dst = fl.dst[i] as usize;
+                    let rr = fl.route[i];
                     let path: &Path = &self.routes.candidates(rr.src as usize, rr.dst as usize)
                         [rr.idx as usize];
                     let h = path.hops[hop as usize];
@@ -312,15 +641,14 @@ impl<'a> NocSim<'a> {
                             // queue before abandoning their channel — the
                             // wireline alternative is GPU-congested, which
                             // the zero-load estimate cannot see.
-                            let dedicated = self
-                                .pair_kind(flights[idx as usize].msg.src, dst)
-                                == Some(TileKind::Cpu);
+                            let dedicated =
+                                pair_kind[fl.src[i] as usize * n + dst] == PAIR_CPU_MC;
                             let wire_alt = self.routes.primary(from, dst).cost_est
                                 * if dedicated { 4 } else { 1 };
                             if wait > 0 && wait + mac + ser > wire_alt {
                                 report.air_fallbacks += 1;
                                 // re-root on the wireline primary from here
-                                flights[idx as usize].route =
+                                fl.route[i] =
                                     RouteRef { src: from as u32, dst: dst as u32, idx: 0 };
                                 if self.routes.primary(from, dst).hops.is_empty() {
                                     q.push(ready, Event::Deliver { idx });
@@ -337,7 +665,7 @@ impl<'a> NocSim<'a> {
                             if self.sys.tiles[dst] == TileKind::Mc {
                                 report.air_flits_to_mc += flits;
                             }
-                            if self.sys.tiles[flights[idx as usize].msg.src] == TileKind::Mc {
+                            if self.sys.tiles[fl.src[i] as usize] == TileKind::Mc {
                                 report.air_flits_from_mc += flits;
                             }
                             let arrive = start + ser;
@@ -351,38 +679,36 @@ impl<'a> NocSim<'a> {
                     }
                 }
                 Event::Deliver { idx } => {
-                    let m = flights[idx as usize].msg;
+                    let i = idx as usize;
+                    let (src, dst) = (fl.src[i] as usize, fl.dst[i] as usize);
+                    let flits = fl.flits[i];
                     // tail serialization at ejection
-                    let done = t + m.flits.saturating_sub(1);
-                    let lat = (done - m.inject_at) as f64;
+                    let done = t + flits.saturating_sub(1);
+                    let lat = (done - fl.inject_at[i]) as f64;
                     report.latency.push(lat);
-                    match self.pair_kind(m.src, m.dst) {
-                        Some(TileKind::Cpu) => report.cpu_mc_latency.push(lat),
-                        Some(TileKind::Gpu) => report.gpu_mc_latency.push(lat),
+                    match pair_kind[src * n + dst] {
+                        PAIR_CPU_MC => report.cpu_mc_latency.push(lat),
+                        PAIR_GPU_MC => report.gpu_mc_latency.push(lat),
                         _ => {}
                     }
                     report.delivered_packets += 1;
-                    report.delivered_flits += m.flits;
+                    report.delivered_flits += flits;
                     if done > report.cycles {
                         report.cycles = done;
                     }
-                    if let Some(resp) = m.class.spawns_response() {
-                        let flits = match resp {
+                    if let Some(resp) = fl.class[i].spawns_response() {
+                        let rflits = match resp {
                             MsgClass::ReadReply => self.cfg.line_flits,
                             _ => 1,
                         };
                         let r = Message {
-                            src: m.dst,
-                            dst: m.src,
-                            flits,
+                            src: dst,
+                            dst: src,
+                            flits: rflits,
                             class: resp,
                             inject_at: done + self.cfg.mc_service_cycles,
                         };
-                        let ridx = flights.len() as u32;
-                        flights.push(InFlight {
-                            msg: r,
-                            route: RouteRef { src: r.src as u32, dst: r.dst as u32, idx: 0 },
-                        });
+                        let ridx = fl.push(&r);
                         q.push(r.inject_at, Event::Inject(ridx));
                     }
                 }
@@ -401,6 +727,7 @@ impl<'a> NocSim<'a> {
         now: u64,
         link_busy_until: &[u64],
         chan_busy_until: &[u64],
+        dedicated: bool,
     ) -> u8 {
         let cands = self.routes.candidates(src, dst);
         match self.routes.kind {
@@ -409,7 +736,6 @@ impl<'a> NocSim<'a> {
                 // queue still leaves it cheaper than the wireline path;
                 // CPU<->MC pairs always ride their dedicated channel
                 // (contention there is only other CPU-MC traffic).
-                let dedicated = self.pair_kind(src, dst) == Some(TileKind::Cpu);
                 let wire_cost = cands[0].cost_est;
                 for (i, p) in cands.iter().enumerate().skip(1) {
                     if let Some(Hop::Air { channel, .. }) =
@@ -436,15 +762,6 @@ impl<'a> NocSim<'a> {
                     .unwrap_or(0)
             }
             _ => 0,
-        }
-    }
-
-    fn pair_kind(&self, src: usize, dst: usize) -> Option<TileKind> {
-        let (a, b) = (self.sys.tiles[src], self.sys.tiles[dst]);
-        match (a, b) {
-            (TileKind::Cpu, TileKind::Mc) | (TileKind::Mc, TileKind::Cpu) => Some(TileKind::Cpu),
-            (TileKind::Gpu, TileKind::Mc) | (TileKind::Mc, TileKind::Gpu) => Some(TileKind::Gpu),
-            _ => None,
         }
     }
 }
@@ -591,6 +908,26 @@ mod tests {
     }
 
     #[test]
+    fn horizon_counts_undelivered_messages_not_events() {
+        // Regression: the old counter summed remaining *events*
+        // (`q.len() + 1`); the report now counts messages. Three
+        // messages: one delivered before the cut, one cut mid-flight
+        // (many queued hops over its lifetime), one never injected.
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let cfg = SimConfig { horizon: 30, ..SimConfig::default() };
+        let sim = NocSim::new(&sys, &topo, &rs, &air, cfg);
+        let tr = [
+            Message { src: 0, dst: 1, flits: 1, class: MsgClass::Control, inject_at: 0 },
+            Message { src: 0, dst: 63, flits: 1, class: MsgClass::Control, inject_at: 0 },
+            Message { src: 5, dst: 6, flits: 1, class: MsgClass::Control, inject_at: 5000 },
+        ];
+        let rep = sim.run(&tr);
+        assert_eq!(rep.delivered_packets, 1);
+        assert_eq!(rep.undelivered, 2);
+    }
+
+    #[test]
     fn deterministic_repeat() {
         let (sys, topo, _) = mesh_setup();
         let rs = RouteSet::xy_yx(&sys, &topo);
@@ -610,6 +947,76 @@ mod tests {
         let b = sim.run(&tr);
         assert_eq!(a.latency.sum, b.latency.sum);
         assert_eq!(a.link_busy, b.link_busy);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_runs() {
+        // One workspace across different traces, platforms, and a horizon
+        // cut mid-sequence must reproduce fresh-workspace results.
+        let (sys, topo, _) = mesh_setup();
+        let rs = RouteSet::xy_yx(&sys, &topo);
+        let air = WirelessSpec::new(0);
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let tr: Vec<Message> = (0..300)
+            .map(|i| Message {
+                src: (i * 11) % 64,
+                dst: (i * 17 + 3) % 64,
+                flits: 1 + (i % 7) as u64,
+                class: if i % 3 == 0 { MsgClass::ReadReq } else { MsgClass::Control },
+                inject_at: (i / 2) as u64,
+            })
+            .filter(|m| m.src != m.dst)
+            .collect();
+        let fresh = sim.run_in(&tr, &mut SimWorkspace::new());
+        let mut ws = SimWorkspace::new();
+        // dirty the workspace: a horizon-cut run and a different platform
+        let cut = NocSim::new(
+            &sys,
+            &topo,
+            &rs,
+            &air,
+            SimConfig { horizon: 10, ..SimConfig::default() },
+        );
+        let _ = cut.run_in(&tr, &mut ws);
+        let small = SystemConfig::small_4x4();
+        let small_topo = Topology::mesh(&small);
+        let small_rs = RouteSet::xy(&small, &small_topo);
+        let _ = NocSim::new(&small, &small_topo, &small_rs, &air, SimConfig::default())
+            .run_in(&[Message { src: 0, dst: 15, flits: 2, class: MsgClass::Control, inject_at: 0 }], &mut ws);
+        let reused = sim.run_in(&tr, &mut ws);
+        assert_eq!(fresh.latency.sum, reused.latency.sum);
+        assert_eq!(fresh.latency.count, reused.latency.count);
+        assert_eq!(fresh.delivered_flits, reused.delivered_flits);
+        assert_eq!(fresh.link_busy, reused.link_busy);
+        assert_eq!(fresh.cycles, reused.cycles);
+    }
+
+    #[test]
+    fn calendar_queue_orders_like_a_heap() {
+        // Interleaved near/far/same-cycle pushes must come out in
+        // (time, insertion order). Far pushes exercise the overflow heap.
+        let mut q = CalendarQueue::new();
+        let far_t = CAL_BUCKETS as u64 + 50;
+        q.push(5, Event::Inject(0));
+        q.push(far_t, Event::Inject(1));
+        q.push(5, Event::Inject(2));
+        q.push(0, Event::Inject(3));
+        q.push(far_t, Event::Inject(4));
+        q.push(far_t + 1, Event::Inject(5));
+        let mut got = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            if let Event::Inject(i) = ev {
+                got.push((t, i));
+            }
+            // same-cycle follow-up scheduled mid-drain keeps FIFO order
+            if got.len() == 1 {
+                q.push(0, Event::Inject(9));
+            }
+        }
+        assert_eq!(
+            got,
+            vec![(0, 3), (0, 9), (5, 0), (5, 2), (far_t, 1), (far_t, 4), (far_t + 1, 5)]
+        );
     }
 
     #[test]

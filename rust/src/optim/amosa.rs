@@ -21,8 +21,18 @@ pub trait Problem {
     /// Number of objectives (constant).
     fn num_objectives(&self) -> usize;
 
-    /// Evaluate the objective vector.
-    fn objectives(&self, sol: &Self::Sol) -> Vec<f64>;
+    /// Evaluate the objective vector into `out` (`out.len() ==
+    /// num_objectives()`). This is the annealer's inner loop — called
+    /// ~10^5 times per design — so implementations write into the
+    /// caller's buffer instead of allocating a `Vec` per evaluation.
+    fn objectives_into(&self, sol: &Self::Sol, out: &mut [f64]);
+
+    /// Convenience allocating wrapper around [`Problem::objectives_into`].
+    fn objectives(&self, sol: &Self::Sol) -> Vec<f64> {
+        let mut out = vec![0.0; self.num_objectives()];
+        self.objectives_into(sol, &mut out);
+        out
+    }
 
     /// Produce a random feasible neighbor.
     fn perturb(&self, sol: &Self::Sol, rng: &mut Rng) -> Self::Sol;
@@ -93,13 +103,22 @@ impl<'p, P: Problem> Amosa<'p, P> {
 
     /// Run the full annealing schedule; returns the final archive (the
     /// near-Pareto front).
+    ///
+    /// §Perf: the candidate objective vector and the normalization ranges
+    /// live in two buffers reused across all iterations — an `Archived`
+    /// (and its owned `Vec`) is built only when a candidate is actually
+    /// accepted or archived.
     pub fn run(&mut self) -> &[Archived<P::Sol>] {
         let mut rng = Rng::new(self.cfg.seed);
+        let m = self.problem.num_objectives();
+        let mut cand_obj = vec![0.0; m];
+        let mut ranges = vec![0.0; m];
         // Seed archive with a few random solutions.
         for _ in 0..self.cfg.soft_limit.min(8) {
             let s = self.problem.initial(&mut rng);
-            let o = self.eval(&s);
-            self.add_to_archive(Archived { sol: s, obj: o });
+            self.evaluations += 1;
+            self.problem.objectives_into(&s, &mut cand_obj);
+            self.add_to_archive(Archived { sol: s, obj: cand_obj.clone() });
         }
         let mut current = self.archive[rng.below(self.archive.len())].clone();
 
@@ -107,49 +126,50 @@ impl<'p, P: Problem> Amosa<'p, P> {
         while temp > self.cfg.final_temp {
             for _ in 0..self.cfg.iters_per_temp {
                 let cand_sol = self.problem.perturb(&current.sol, &mut rng);
-                let cand = Archived { obj: self.eval(&cand_sol), sol: cand_sol };
-                current = self.step(current, cand, temp, &mut rng);
+                self.evaluations += 1;
+                self.problem.objectives_into(&cand_sol, &mut cand_obj);
+                self.objective_ranges_into(&mut ranges);
+                current = self.step(current, cand_sol, &cand_obj, &ranges, temp, &mut rng);
             }
             temp *= self.cfg.cooling;
         }
         &self.archive
     }
 
-    fn eval(&mut self, s: &P::Sol) -> Vec<f64> {
-        self.evaluations += 1;
-        self.problem.objectives(s)
-    }
-
     /// One AMOSA acceptance step; returns the (possibly new) current point.
+    /// `cand_obj`/`ranges` are borrowed scratch — the candidate is only
+    /// materialized as an `Archived` on acceptance.
     fn step(
         &mut self,
         current: Archived<P::Sol>,
-        cand: Archived<P::Sol>,
+        cand_sol: P::Sol,
+        cand_obj: &[f64],
+        ranges: &[f64],
         temp: f64,
         rng: &mut Rng,
     ) -> Archived<P::Sol> {
-        let ranges = self.objective_ranges();
-        if dominates(&current.obj, &cand.obj) {
+        if dominates(&current.obj, cand_obj) {
             // current (and possibly archive members) dominate the candidate:
             // accept with probability from average amount-of-domination.
-            let mut dom_sum = delta_dom(&current.obj, &cand.obj, &ranges);
+            let mut dom_sum = delta_dom(&current.obj, cand_obj, ranges);
             let mut k = 1;
             for a in &self.archive {
-                if dominates(&a.obj, &cand.obj) {
-                    dom_sum += delta_dom(&a.obj, &cand.obj, &ranges);
+                if dominates(&a.obj, cand_obj) {
+                    dom_sum += delta_dom(&a.obj, cand_obj, ranges);
                     k += 1;
                 }
             }
             let avg = dom_sum / k as f64;
             let p = 1.0 / (1.0 + (avg * temp).exp());
             if rng.chance(p) {
-                cand
+                Archived { sol: cand_sol, obj: cand_obj.to_vec() }
             } else {
                 current
             }
-        } else if dominates(&cand.obj, &current.obj) {
+        } else if dominates(cand_obj, &current.obj) {
             // candidate dominates current: accept; archive-dominance decides
             // whether it also enters the archive.
+            let cand = Archived { sol: cand_sol, obj: cand_obj.to_vec() };
             self.add_to_archive(cand.clone());
             cand
         } else {
@@ -157,40 +177,48 @@ impl<'p, P: Problem> Amosa<'p, P> {
             let dominated_by_archive = self
                 .archive
                 .iter()
-                .filter(|a| dominates(&a.obj, &cand.obj))
+                .filter(|a| dominates(&a.obj, cand_obj))
                 .count();
             if dominated_by_archive > 0 {
                 let avg = self
                     .archive
                     .iter()
-                    .filter(|a| dominates(&a.obj, &cand.obj))
-                    .map(|a| delta_dom(&a.obj, &cand.obj, &ranges))
+                    .filter(|a| dominates(&a.obj, cand_obj))
+                    .map(|a| delta_dom(&a.obj, cand_obj, ranges))
                     .sum::<f64>()
                     / dominated_by_archive as f64;
                 let p = 1.0 / (1.0 + (avg * temp).exp());
                 if rng.chance(p) {
-                    cand
+                    Archived { sol: cand_sol, obj: cand_obj.to_vec() }
                 } else {
                     current
                 }
             } else {
+                let cand = Archived { sol: cand_sol, obj: cand_obj.to_vec() };
                 self.add_to_archive(cand.clone());
                 cand
             }
         }
     }
 
-    fn objective_ranges(&self) -> Vec<f64> {
-        let m = self.problem.num_objectives();
-        let mut lo = vec![f64::INFINITY; m];
-        let mut hi = vec![f64::NEG_INFINITY; m];
-        for a in &self.archive {
-            for i in 0..m {
-                lo[i] = lo[i].min(a.obj[i]);
-                hi[i] = hi[i].max(a.obj[i]);
+    fn objective_ranges_into(&self, out: &mut [f64]) {
+        // objective-major over a bounded archive (<= hard_limit entries):
+        // allocation-free for any objective count
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for a in &self.archive {
+                lo = lo.min(a.obj[i]);
+                hi = hi.max(a.obj[i]);
             }
+            *o = (hi - lo).max(1e-12);
         }
-        (0..m).map(|i| (hi[i] - lo[i]).max(1e-12)).collect()
+    }
+
+    fn objective_ranges(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.problem.num_objectives()];
+        self.objective_ranges_into(&mut out);
+        out
     }
 
     /// Insert and keep the archive mutually non-dominating.
@@ -277,8 +305,9 @@ mod tests {
             2
         }
 
-        fn objectives(&self, x: &f64) -> Vec<f64> {
-            vec![x * x, (x - 2.0) * (x - 2.0)]
+        fn objectives_into(&self, x: &f64, out: &mut [f64]) {
+            out[0] = x * x;
+            out[1] = (x - 2.0) * (x - 2.0);
         }
 
         fn perturb(&self, x: &f64, rng: &mut Rng) -> f64 {

@@ -84,14 +84,17 @@ impl<'a> Problem for LinkPlacement<'a> {
 
     /// (Ū, σ) of Eqns 4-5. Infeasible (disconnected) solutions are fenced
     /// with +inf so AMOSA never archives them.
-    fn objectives(&self, sol: &Self::Sol) -> Vec<f64> {
+    fn objectives_into(&self, sol: &Self::Sol, out: &mut [f64]) {
         let topo = self.build_topology(sol);
         let mut scratch = self.scratch.borrow_mut();
         let a = analyze_objectives(&topo, self.traffic, &mut scratch);
         if !a.connected {
-            return vec![f64::INFINITY, f64::INFINITY];
+            out[0] = f64::INFINITY;
+            out[1] = f64::INFINITY;
+        } else {
+            out[0] = a.u_mean;
+            out[1] = a.u_std;
         }
-        vec![a.u_mean, a.u_std]
     }
 
     /// Rewire one random link, keeping all constraints; falls back to the

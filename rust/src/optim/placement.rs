@@ -61,9 +61,10 @@ impl<'a> Problem for MeshPlacement<'a> {
         2
     }
 
-    fn objectives(&self, tiles: &Self::Sol) -> Vec<f64> {
+    fn objectives_into(&self, tiles: &Self::Sol, out: &mut [f64]) {
         let (a, b) = self.objective_pair(tiles);
-        vec![a, b]
+        out[0] = a;
+        out[1] = b;
     }
 
     fn perturb(&self, tiles: &Self::Sol, rng: &mut Rng) -> Self::Sol {

@@ -1,0 +1,131 @@
+//! Deterministic scoped-thread fan-out for the experiment harnesses.
+//!
+//! [`par_map`] runs one job per input item across a small worker pool and
+//! returns the results **in input order**, so a sweep produces
+//! byte-identical reports whatever the thread count — the property the
+//! serial-vs-parallel equivalence tests pin down. Each worker owns index
+//! stripe `k, k + T, k + 2T, ...`; there is no shared mutable state, no
+//! locks, and no cross-thread result channel whose arrival order could
+//! leak into the output. Jobs that need randomness must derive their seed
+//! from the item or its index (never from a shared RNG), which is how
+//! every call site in `experiments/` is written.
+//!
+//! The pool size comes from `WIHETNOC_THREADS` (default: the machine's
+//! available parallelism). Set `WIHETNOC_THREADS=1` to force serial
+//! execution.
+
+/// Worker count: `WIHETNOC_THREADS` if set to a positive integer,
+/// otherwise the machine's available parallelism.
+pub fn thread_count() -> usize {
+    thread_count_from(std::env::var("WIHETNOC_THREADS").ok().as_deref())
+}
+
+/// Parse a thread-count override; `None`/invalid/zero fall back to the
+/// available parallelism. Split out of [`thread_count`] so the policy is
+/// testable without touching process-global env state.
+pub fn thread_count_from(var: Option<&str>) -> usize {
+    match var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Map `f` over `items` on the default pool (see [`thread_count`]).
+/// Results are joined in index order; a panicking job propagates.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    par_map_threads(thread_count(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count — the entry point the
+/// determinism tests drive with 1, 2, and 8 workers.
+pub fn par_map_threads<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let f = &f;
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|k| {
+                scope.spawn(move || {
+                    let mut out = Vec::with_capacity(n / threads + 1);
+                    let mut i = k;
+                    while i < n {
+                        out.push((i, f(i, &items[i])));
+                        i += threads;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par_map worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every index striped to exactly one worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        for threads in [1, 2, 3, 8, 200] {
+            let out = par_map_threads(threads, &items, |i, &x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn serial_equals_parallel() {
+        // index-derived pseudo-work must be identical at every pool size
+        let items: Vec<u64> = (0..57).map(|i| i * 31 + 7).collect();
+        let job = |i: usize, &x: &u64| {
+            let mut rng = crate::util::rng::Rng::new(x ^ i as u64);
+            (0..100).map(|_| rng.next_u64() & 0xFF).sum::<u64>()
+        };
+        let serial = par_map_threads(1, &items, job);
+        for threads in [2, 8] {
+            assert_eq!(par_map_threads(threads, &items, job), serial);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map_threads(8, &none, |_, &x| x).is_empty());
+        assert_eq!(par_map_threads(8, &[42u32], |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn thread_count_parsing() {
+        assert_eq!(thread_count_from(Some("3")), 3);
+        assert_eq!(thread_count_from(Some(" 8 ")), 8);
+        let auto = thread_count_from(None);
+        assert!(auto >= 1);
+        assert_eq!(thread_count_from(Some("0")), auto);
+        assert_eq!(thread_count_from(Some("bogus")), auto);
+    }
+}

@@ -8,6 +8,7 @@
 //! toolchain substitutions).
 
 pub mod cli;
+pub mod exec;
 pub mod json;
 pub mod prop;
 pub mod rng;
