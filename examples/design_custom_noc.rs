@@ -30,7 +30,7 @@ fn run_platform(platform: Platform, model: ModelId, batch: usize) -> Result<(), 
         sys.mcs().len()
     );
 
-    let tm = model_phases(&sys, &model.spec(), batch);
+    let tm = model_phases(&sys, &scenario.model.spec(), batch);
     let fij = tm.fij(&sys);
 
     // the designer scales k_max/n_wi/channels with the platform; nudge

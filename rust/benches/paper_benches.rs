@@ -26,6 +26,8 @@ use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
 use wihetnoc::util::exec::thread_count;
 use wihetnoc::util::json::Json;
+use wihetnoc::workload::{lower_id, MappingPolicy};
+use wihetnoc::{ModelId, Platform};
 
 fn main() {
     let effort = match std::env::var("WIHETNOC_BENCH_EFFORT").as_deref() {
@@ -64,6 +66,33 @@ fn main() {
             std::hint::black_box(sim.run_in(&trace, &mut fresh).delivered_packets);
         },
     );
+
+    // --- workload lowering microbench (ISSUE 3) ---
+    // a non-paper workload on a non-paper platform: alexnet lowered onto
+    // a 144-tile chip under both mapping families
+    let big: Platform = "12x12:cpus=8,mcs=8,placement=corners"
+        .parse()
+        .expect("well-formed platform");
+    let big_sys = big.build().expect("12x12 builds");
+    let alexnet: ModelId = "alexnet".parse().expect("preset exists");
+    for mapping in [
+        MappingPolicy::default(),
+        MappingPolicy::LayerPipelined { stages: 4 },
+    ] {
+        let phases = lower_id(&alexnet, &mapping, &big_sys, 32)
+            .expect("alexnet lowers on 12x12")
+            .phases
+            .len();
+        b.bench_items(
+            &format!("workload_lower/alexnet@12x12 {mapping} ({phases} phases)"),
+            Some(phases as f64),
+            &mut || {
+                std::hint::black_box(
+                    lower_id(&alexnet, &mapping, &big_sys, 32).expect("lowers").phases.len(),
+                );
+            },
+        );
+    }
 
     // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the

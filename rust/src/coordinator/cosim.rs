@@ -4,11 +4,10 @@
 
 use crate::energy::params::EnergyParams;
 use crate::energy::system::{full_system_run, FullSystemReport, StallModel};
-use crate::model::cnn::ModelSpec;
 use crate::model::SystemConfig;
 use crate::error::Result;
 use crate::noc::builder::NocInstance;
-use crate::traffic::phases::model_phases;
+use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
 
 #[derive(Debug, Clone)]
@@ -29,24 +28,26 @@ impl CosimReport {
     }
 }
 
-/// Evaluate `nocs` under one training iteration of `spec` at `batch`.
+/// Evaluate `nocs` under one training iteration of the lowered workload
+/// `tm` (produced by `crate::traffic::model_phases` or, for mapped /
+/// skip-connected workloads, `crate::workload::lower`). Taking the
+/// traffic model — not a `ModelSpec` — keeps co-simulation on the same
+/// lowering pipeline as every other consumer.
 ///
 /// Each NoC's full-system run regenerates its traces from the same seed,
 /// so the runs are independent and fan out over
 /// [`crate::util::exec::par_map`] workers; results keep input order.
 pub fn cosimulate(
     sys: &SystemConfig,
-    spec: &ModelSpec,
-    batch: usize,
+    tm: &TrafficModel,
     nocs: &[&NocInstance],
     trace_cfg: &TraceConfig,
 ) -> Result<CosimReport> {
-    let tm = model_phases(sys, spec, batch);
     let energy = EnergyParams::default();
     let stall = StallModel::default();
     let per_noc =
         crate::util::exec::par_map(nocs, |_, inst| {
-            full_system_run(sys, inst, &tm, trace_cfg, &energy, &stall)
+            full_system_run(sys, inst, tm, trace_cfg, &energy, &stall)
         });
     Ok(CosimReport { per_noc })
 }
@@ -56,15 +57,16 @@ mod tests {
     use super::*;
     use crate::model::lenet;
     use crate::noc::builder::{mesh_opt, wi_het_noc_quick};
+    use crate::traffic::phases::model_phases;
 
     #[test]
     fn wihetnoc_beats_mesh_end_to_end() {
         let sys = SystemConfig::paper_8x8();
-        let spec = lenet();
+        let tm = model_phases(&sys, &lenet(), 32);
         let mesh = mesh_opt(&sys, true);
         let wihet = wi_het_noc_quick(&sys, 17);
         let cfg = TraceConfig { scale: 0.05, ..Default::default() };
-        let rep = cosimulate(&sys, &spec, 32, &[&mesh, &wihet], &cfg).unwrap();
+        let rep = cosimulate(&sys, &tm, &[&mesh, &wihet], &cfg).unwrap();
         assert_eq!(rep.per_noc.len(), 2);
         // WiHetNoC must not be slower, and must cut EDP
         let exec = rep.exec_vs_baseline(1);

@@ -12,6 +12,9 @@ pub type Result<T> = std::result::Result<T, WihetError>;
 pub enum WihetError {
     /// Unknown CNN workload name (see [`crate::scenario::ModelId`]).
     UnknownModel(String),
+    /// Malformed workload-DSL spec (see [`crate::workload::ArchSpec`]);
+    /// the display includes the full grammar.
+    InvalidSpec(String),
     /// Unknown NoC architecture name (see [`crate::noc::builder::NocKind`]).
     UnknownNoc(String),
     /// Unknown experiment id (see [`crate::experiments::ALL`]).
@@ -35,7 +38,17 @@ impl fmt::Display for WihetError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             WihetError::UnknownModel(m) => {
-                write!(f, "unknown model '{m}' (known models: lenet, cdbnet)")
+                write!(
+                    f,
+                    "unknown model '{m}'. Known presets: {}. Custom architectures are \
+                     accepted as a workload-DSL string, e.g. \
+                     \"conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10\"\n{}",
+                    crate::workload::preset_names().join(", "),
+                    crate::workload::GRAMMAR
+                )
+            }
+            WihetError::InvalidSpec(m) => {
+                write!(f, "invalid workload spec: {m}\n{}", crate::workload::GRAMMAR)
             }
             WihetError::UnknownNoc(n) => write!(
                 f,
@@ -90,9 +103,16 @@ mod tests {
 
     #[test]
     fn display_mentions_offender_and_hints() {
-        let e = WihetError::UnknownModel("resnet".into());
+        let e = WihetError::UnknownModel("transformer".into());
         let s = e.to_string();
-        assert!(s.contains("resnet") && s.contains("lenet"));
+        assert!(s.contains("transformer") && s.contains("lenet"));
+        // the message lists every preset and carries the DSL grammar
+        for hint in ["alexnet", "vgg11", "resnet-lite", "conv:KxKxC", "dense:N"] {
+            assert!(s.contains(hint), "missing '{hint}' in: {s}");
+        }
+        let e = WihetError::InvalidSpec("conv expects KxKxC, got 'conv:3'".into());
+        let s = e.to_string();
+        assert!(s.contains("conv:3") && s.contains("skip:D"), "{s}");
         let e = WihetError::UnknownNoc("torus".into());
         assert!(e.to_string().contains("wihetnoc"));
     }

@@ -49,7 +49,7 @@ fn per_layer(ctx: &mut Ctx, model: ModelId) -> PerLayer {
     for (ni, kind) in kinds.iter().enumerate() {
         let inst = ctx.instance_arc(*kind);
         let sys = ctx.sys_for(*kind);
-        let tm = ctx.traffic_on(model, &sys);
+        let tm = ctx.traffic_on(model.clone(), &sys);
         let cfg = ctx.trace_cfg();
         let mut rng = Rng::new(ctx.seed ^ 17);
         for p in &tm.phases {
@@ -124,7 +124,7 @@ fn render_per_layer(
 pub fn fig17(ctx: &mut Ctx) -> String {
     let mut out = String::new();
     for model in ModelId::ALL {
-        let pl = per_layer(ctx, model);
+        let pl = per_layer(ctx, model.clone());
         out.push_str(&render_per_layer(
             &format!("Fig 17 ({model}) — normalized network latency vs mesh"),
             "paper means: HetNoC ~0.77-0.78, WiHetNoC ~0.58",
@@ -141,7 +141,7 @@ pub fn fig17(ctx: &mut Ctx) -> String {
 pub fn fig18(ctx: &mut Ctx) -> String {
     let mut out = String::new();
     for model in ModelId::ALL {
-        let pl = per_layer(ctx, model);
+        let pl = per_layer(ctx, model.clone());
         out.push_str(&render_per_layer(
             &format!("Fig 18 ({model}) — normalized network EDP vs mesh"),
             "paper means: HetNoC ~0.56-0.58, WiHetNoC ~0.40-0.42",
@@ -162,17 +162,20 @@ pub fn fig19(ctx: &mut Ctx) -> String {
     out.push_str("  model    noc        exec    EDP     paper exec / EDP\n");
     let cfg = ctx.trace_cfg();
     for model in ModelId::ALL {
-        let spec = ctx.spec(model);
         // NOTE: the mesh is evaluated on its own optimized placement, the
         // irregular NoCs on the WiHetNoC placement, exactly as designed.
+        // Traffic comes from the Ctx's lowering (mapping- and
+        // skip-aware), the same pipeline every other figure consumes.
         let mesh = ctx.instance_arc(NocKind::MeshXyYx);
         let het = ctx.instance_arc(NocKind::HetNoc);
         let wihet = ctx.instance_arc(NocKind::WiHetNoc);
         let mesh_sys = ctx.sys_for(NocKind::MeshXyYx);
         let sys = ctx.sys.clone();
-        let mesh_rep = cosimulate(&mesh_sys, &spec, ctx.batch(), &[&mesh], &cfg)
+        let mesh_tm = ctx.traffic_on(model.clone(), &mesh_sys);
+        let tm = ctx.traffic_on(model.clone(), &sys);
+        let mesh_rep = cosimulate(&mesh_sys, &mesh_tm, &[&mesh], &cfg)
             .expect("cosimulate is infallible on in-memory inputs");
-        let irr = cosimulate(&sys, &spec, ctx.batch(), &[&het, &wihet], &cfg)
+        let irr = cosimulate(&sys, &tm, &[&het, &wihet], &cfg)
             .expect("cosimulate is infallible on in-memory inputs");
         let base = &mesh_rep.per_noc[0];
         for (i, name, paper) in [(0usize, "HetNoC", "0.92 / 0.85"), (1, "WiHetNoC", "0.87 / 0.75")] {

@@ -4,9 +4,9 @@
 //! single WiHetNoC is designed and then evaluated everywhere.
 //!
 //! Every cache is keyed by *typed* values: traffic by
-//! [`ScenarioKey`] (workload x concrete tile placement), instances by
-//! [`NocKind`]. Two placements can never alias a cache entry the way the
-//! old string tags could.
+//! [`ScenarioKey`] (workload x mapping x concrete tile placement),
+//! instances by [`NocKind`]. Two placements (or mappings) can never
+//! alias a cache entry the way the old string tags could.
 //!
 //! §Perf: every hot accessor hands out an `Arc` handle to the cached
 //! value — a cache *hit* never deep-copies a `TrafficModel`, `Topology`,
@@ -30,8 +30,10 @@ use crate::noc::topology::Topology;
 use crate::optim::placement::optimize_placement;
 use crate::optim::wiplace::build_wireless;
 use crate::scenario::{ModelId, Scenario, ScenarioKey};
-use crate::traffic::phases::{model_phases, TrafficModel};
+use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
+use crate::util::exec::par_map;
+use crate::workload::{lower_id, MappingPolicy};
 
 pub use crate::scenario::Effort;
 
@@ -47,6 +49,9 @@ pub struct Ctx {
     /// Private for the same reason: the `wireline` and `instances`
     /// caches are derived from it.
     model: ModelId,
+    /// How workloads are laid out on the tiles (part of every traffic
+    /// cache key). Private: fixed at construction like `batch`.
+    mapping: MappingPolicy,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     /// Shared handle — cloning it is pointer-cheap.
     pub sys: Arc<SystemConfig>,
@@ -70,6 +75,7 @@ impl Ctx {
             seed,
             batch: 32,
             model: ModelId::LeNet,
+            mapping: MappingPolicy::default(),
             sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
@@ -79,18 +85,27 @@ impl Ctx {
     }
 
     /// Context for a typed scenario: validates and builds the platform,
-    /// and adopts the scenario's workload/effort/seed/batch.
+    /// and adopts the scenario's workload/mapping/effort/seed/batch. An
+    /// unmappable scenario (e.g. more replicas than GPU tiles) fails
+    /// here, at the boundary.
     pub fn for_scenario(sc: &Scenario) -> Result<Ctx, WihetError> {
         let sys = sc.platform.build()?;
+        sc.mapping.validate_for(&sys, sc.batch)?;
         let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
-        ctx.model = sc.model;
+        ctx.model = sc.model.clone();
         ctx.batch = sc.batch;
+        ctx.mapping = sc.mapping;
         Ok(ctx)
     }
 
     /// The design-input workload this context was built for.
     pub fn model(&self) -> ModelId {
-        self.model
+        self.model.clone()
+    }
+
+    /// The mapping policy every traffic model is lowered with.
+    pub fn mapping(&self) -> MappingPolicy {
+        self.mapping
     }
 
     /// The batch size the traffic models are derived at.
@@ -126,15 +141,23 @@ impl Ctx {
         self.mesh_sys.clone().unwrap()
     }
 
-    /// Traffic model for `model` on a given system placement. The cache
-    /// key is derived from the placement itself, so distinct placements
-    /// can never serve each other's (stale) matrices. Hits return a
-    /// shared handle, never a copy.
+    /// Traffic model for `model` on a given system placement, lowered
+    /// with the context's mapping policy. The cache key is derived from
+    /// the placement (and mapping) itself, so distinct placements or
+    /// mappings can never serve each other's (stale) matrices. Hits
+    /// return a shared handle, never a copy.
+    ///
+    /// `sys` must offer at least the GPU tiles the context's mapping was
+    /// validated against (every placement a `Ctx` derives — the §5.2
+    /// placement and its mesh-optimized permutation — preserves tile
+    /// counts, so this holds for all internal callers; handing in an
+    /// unrelated smaller chip is a caller bug and panics).
     pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
-        let key = ScenarioKey::new(model, sys);
+        let key = ScenarioKey::with_mapping(model, sys, self.mapping);
         if !self.traffic.contains_key(&key) {
-            let spec = model.spec();
-            self.traffic.insert(key, Arc::new(model_phases(sys, &spec, self.batch)));
+            let tm = lower_id(&key.model, &self.mapping, sys, self.batch)
+                .expect("mapping validated at construction fits every Ctx-derived placement");
+            self.traffic.insert(key.clone(), Arc::new(tm));
         }
         self.traffic[&key].clone()
     }
@@ -161,22 +184,47 @@ impl Ctx {
     /// Optimized irregular wireline topology for `k_max` (cached; shared
     /// handle on hits).
     pub fn wireline(&mut self, k_max: usize) -> Arc<Topology> {
-        if !self.wireline.contains_key(&k_max) {
-            let model = self.model;
+        self.wirelines(&[k_max]).pop().expect("one k_max in, one topology out")
+    }
+
+    /// Optimized wireline topologies for several `k_max` values at once.
+    /// Missing cache entries are optimized **in parallel** over
+    /// [`par_map`] workers — each `k_max` is an independent AMOSA run
+    /// with its own derived seed (`seed + k_max`, exactly what the serial
+    /// path used), so the resulting topologies are byte-identical at any
+    /// `WIHETNOC_THREADS`. Returns one shared handle per requested
+    /// `k_max`, in input order.
+    pub fn wirelines(&mut self, k_maxes: &[usize]) -> Vec<Arc<Topology>> {
+        let mut missing: Vec<usize> = k_maxes
+            .iter()
+            .copied()
+            .filter(|k| !self.wireline.contains_key(k))
+            .collect();
+        missing.sort_unstable();
+        missing.dedup();
+        if !missing.is_empty() {
+            let model = self.model();
             let fij = self.fij(model);
-            let mut cfg = self.design_cfg();
-            cfg.k_max = k_max;
-            cfg.seed = self.seed.wrapping_add(k_max as u64);
-            let topo = optimize_wireline(&self.sys, &fij, &cfg);
-            self.wireline.insert(k_max, Arc::new(topo));
+            let base_cfg = self.design_cfg();
+            let sys = self.sys.clone();
+            let seed = self.seed;
+            let topos = par_map(&missing, |_, &k_max| {
+                let mut cfg = base_cfg.clone();
+                cfg.k_max = k_max;
+                cfg.seed = seed.wrapping_add(k_max as u64);
+                optimize_wireline(&sys, &fij, &cfg)
+            });
+            for (k_max, topo) in missing.into_iter().zip(topos) {
+                self.wireline.insert(k_max, Arc::new(topo));
+            }
         }
-        self.wireline[&k_max].clone()
+        k_maxes.iter().map(|k| self.wireline[k].clone()).collect()
     }
 
     /// The four headline NoC instances, cached by kind.
     pub fn instance(&mut self, kind: NocKind) -> &NocInstance {
         if !self.instances.contains_key(&kind) {
-            let model = self.model;
+            let model = self.model.clone();
             let inst = match kind {
                 NocKind::MeshXy => {
                     let sys = self.mesh_sys();
@@ -216,7 +264,7 @@ impl Ctx {
     /// wireline graph is shared with the cache, not copied.
     pub fn wihet_variant(&mut self, n_wi: usize, gpu_channels: usize) -> NocInstance {
         let topo = self.wireline(self.design_cfg().k_max);
-        let model = self.model;
+        let model = self.model.clone();
         let fij = self.fij(model);
         variant_on(&self.sys, topo, &fij, n_wi, gpu_channels)
     }

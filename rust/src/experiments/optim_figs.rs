@@ -14,7 +14,7 @@ use crate::optim::linkplace::LinkPlacement;
 pub fn fig8(ctx: &mut Ctx) -> String {
     let model = ctx.model();
     let sys = ctx.mesh_sys();
-    let tm = ctx.traffic_on(model, &sys);
+    let tm = ctx.traffic_on(model.clone(), &sys);
     let fij = tm.fij(&sys);
     let topo = Topology::mesh(&sys);
     let a = analyze(&topo, &fij);
@@ -82,7 +82,7 @@ pub fn fig8(ctx: &mut Ctx) -> String {
 pub fn fig9(ctx: &mut Ctx) -> String {
     let model = ctx.model();
     let mesh_sys = ctx.mesh_sys();
-    let mesh_tm = ctx.traffic_on(model, &mesh_sys);
+    let mesh_tm = ctx.traffic_on(model.clone(), &mesh_sys);
     let mesh_fij = mesh_tm.fij(&mesh_sys);
     let mesh = Topology::mesh(&mesh_sys);
     let a_mesh = analyze(&mesh, &mesh_fij);
@@ -110,6 +110,9 @@ pub fn fig9(ctx: &mut Ctx) -> String {
         a_mesh.twhc, sigma_xyyx
     ));
     let mut best_ratio = f64::INFINITY;
+    // the four per-k_max AMOSA candidates are independent — design any
+    // missing ones in parallel before walking the (now cached) set
+    ctx.wirelines(&[4, 5, 6, 7]);
     for k_max in 4..=7 {
         let topo = ctx.wireline(k_max);
         let a = analyze(&topo, &fij);

@@ -42,12 +42,17 @@ pub fn fig11(ctx: &mut Ctx) -> String {
     let energy = EnergyParams::default();
     let mut out = String::from("Fig 11 — network EDP vs router port bound k_max (paper optimum: 6)\n\n");
     out.push_str("  k_max   msg EDP (pJ*cyc)   mean latency   norm\n");
-    // the per-k_max designs come from (or land in) the shared cache ...
-    let insts: Vec<(usize, NocInstance)> = (4..=7)
-        .map(|k_max| {
-            let topo = ctx.wireline(k_max);
-            let model = ctx.model();
-            let fij = ctx.fij(model);
+    // the per-k_max AMOSA designs are independent: any not already in
+    // the shared cache are optimized in parallel (Ctx::wirelines fans
+    // them out over par_map, deterministically per k_max) ...
+    let k_range: Vec<usize> = (4..=7).collect();
+    let topos = ctx.wirelines(&k_range);
+    let model = ctx.model();
+    let fij = ctx.fij(model);
+    let insts: Vec<(usize, NocInstance)> = k_range
+        .iter()
+        .zip(topos)
+        .map(|(&k_max, topo)| {
             let routes = RouteSet::shortest(&topo, Some(&fij));
             let inst = NocInstance {
                 kind: crate::noc::builder::NocKind::HetNoc,

@@ -18,7 +18,7 @@ pub fn fig5(ctx: &mut Ctx) -> String {
     );
     let sys = ctx.sys.clone();
     for model in ModelId::ALL {
-        let tm = ctx.traffic(model);
+        let tm = ctx.traffic(model.clone());
         for pass in [Pass::Forward, Pass::Backward] {
             let phases = tm.pass_phases(pass);
             let rates: Vec<f64> = phases.iter().map(|p| p.injection_rate(&sys)).collect();
@@ -38,7 +38,7 @@ pub fn fig6(ctx: &mut Ctx) -> String {
     let mut out = String::from("Fig 6 — traffic breakdown per layer (flit shares)\n");
     let sys = ctx.sys.clone();
     for model in ModelId::ALL {
-        let tm = ctx.traffic(model);
+        let tm = ctx.traffic(model.clone());
         out.push_str(&format!(
             "\n{model}: many-to-few = {:.1}% (paper: {}%)\n",
             100.0 * tm.many_to_few_fraction(&sys),

@@ -190,7 +190,7 @@ pub fn fig16(ctx: &mut Ctx) -> String {
         "Fig 16 — WI utilization asymmetry per layer (MC->core : core->MC over wireless)\n",
     );
     for model in ModelId::ALL {
-        let tm = ctx.traffic(model);
+        let tm = ctx.traffic(model.clone());
         out.push_str(&format!(
             "\n{model}:\n  layer(pass)   air MC->core   air core->MC   ratio   Fig6 traffic ratio\n"
         ));

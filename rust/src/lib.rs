@@ -7,13 +7,19 @@
 //!
 //! ## The typed API
 //!
-//! Three pillars describe any evaluation:
+//! Four pillars describe any evaluation:
 //!
 //! * [`Platform`] — *what chip*: a `width x height` grid with a CPU/GPU/MC
 //!   mix and a placement policy, validated at construction. Parses from
 //!   strings: `"8x8"` (the paper's 56 GPU / 4 CPU / 4 MC die), `"4x4"`,
 //!   `"12x12:cpus=8,mcs=8,placement=corners"`, ...
-//! * [`Scenario`] — *what experiment*: platform + workload ([`ModelId`]) +
+//! * [`ModelId`] — *what workload*: a named preset (`lenet`, `cdbnet`,
+//!   `alexnet`, `vgg11`, `resnet-lite`) or any CNN written in the
+//!   [`workload`] architecture DSL (`"conv:5x5x20 pool:2 ... dense:10"`),
+//!   mapped onto the tiles by a [`MappingPolicy`] (data-parallel
+//!   replicas or pipelined layer stages) and lowered to NoC traffic by
+//!   [`workload::lower`].
+//! * [`Scenario`] — *what experiment*: platform + workload + mapping +
 //!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch. The
 //!   single input to design, simulation, and the experiment harnesses.
 //! * [`noc::builder::NocDesigner`] — *how to build it*: a fluent builder
@@ -64,7 +70,9 @@ pub mod runtime;
 pub mod scenario;
 pub mod traffic;
 pub mod util;
+pub mod workload;
 
 pub use error::WihetError;
 pub use model::{Platform, PlacementPolicy};
 pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};
+pub use workload::{ArchSpec, MappingPolicy};

@@ -22,7 +22,8 @@ use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
-use wihetnoc::{ModelId, Platform, Scenario, WihetError};
+use wihetnoc::workload::preset_names;
+use wihetnoc::{MappingPolicy, ModelId, Platform, Scenario, WihetError};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -78,7 +79,22 @@ fn system_spec() -> ArgSpec {
 }
 
 fn model_spec() -> ArgSpec {
-    ArgSpec { name: "model", help: "lenet|cdbnet", default: Some("lenet"), is_flag: false }
+    ArgSpec {
+        name: "model",
+        help: "lenet|cdbnet|alexnet|vgg11|resnet-lite, or a workload-DSL spec \
+               (e.g. \"conv:5x5x20 pool:2 dense:10\")",
+        default: Some("lenet"),
+        is_flag: false,
+    }
+}
+
+fn mapping_spec() -> ArgSpec {
+    ArgSpec {
+        name: "mapping",
+        help: "data[:replicas]|pipeline[:stages] — how layers map onto tiles",
+        default: Some("data:1"),
+        is_flag: false,
+    }
 }
 
 fn str_err(e: WihetError) -> String {
@@ -89,9 +105,14 @@ fn str_err(e: WihetError) -> String {
 fn scenario_from(args: &Args) -> Result<Scenario, String> {
     let platform: Platform = args.get_or("system", "8x8").parse().map_err(str_err)?;
     let model: ModelId = args.get_or("model", "lenet").parse().map_err(str_err)?;
+    let mapping: MappingPolicy =
+        args.get_or("mapping", "data:1").parse().map_err(str_err)?;
     let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     let seed = args.get_u64("seed", 42)?;
-    Ok(Scenario::new(platform, model).with_effort(effort).with_seed(seed))
+    Ok(Scenario::new(platform, model)
+        .with_mapping(mapping)
+        .with_effort(effort)
+        .with_seed(seed))
 }
 
 fn ctx_from(args: &Args) -> Result<Ctx, String> {
@@ -167,6 +188,7 @@ fn cmd_design(argv: &[String]) -> Result<(), String> {
     specs.extend([
         system_spec(),
         model_spec(),
+        mapping_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -243,6 +265,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     specs.extend([
         system_spec(),
         model_spec(),
+        mapping_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -257,14 +280,15 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut ctx = Ctx::for_scenario(&scenario).map_err(str_err)?;
     let inst = ctx.instance_arc(noc);
     let sys = ctx.sys_for(noc);
-    let tm = ctx.traffic_on(scenario.model, &sys);
+    let tm = ctx.traffic_on(scenario.model.clone(), &sys);
     let mut cfg = ctx.trace_cfg();
     cfg.scale = args.get_f64("scale", 0.05)?;
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     println!(
-        "simulating {noc} on {} ({}): {} messages ...",
+        "simulating {noc} on {} ({}, mapping {}): {} messages ...",
         scenario.model,
         scenario.platform,
+        scenario.mapping,
         trace.len()
     );
     let t0 = std::time::Instant::now();
@@ -293,7 +317,10 @@ fn cmd_list(argv: &[String]) -> Result<(), String> {
     }];
     let args = parse(argv, &specs)?;
     println!("experiments: {}", experiments::ALL.join(", "));
-    println!("models: lenet, cdbnet | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc");
+    println!(
+        "models: {} — or any workload-DSL spec | mappings: data[:replicas], pipeline[:stages] | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc",
+        preset_names().join(", ")
+    );
     match Runtime::new(args.get_or("artifacts", "artifacts")) {
         Ok(rt) => {
             println!("artifact entries ({}):", rt.manifest.dir.display());

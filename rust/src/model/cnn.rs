@@ -48,7 +48,7 @@ pub enum Pass {
 /// (H, W, C) per-sample tensor shape.
 pub type Shape3 = (usize, usize, usize);
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
     pub name: String,
     pub kind: LayerKind,
@@ -122,7 +122,7 @@ impl Layer {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSpec {
     pub name: String,
     pub input_shape: Shape3,

@@ -22,7 +22,6 @@ use crate::optim::amosa::{Amosa, AmosaConfig};
 use crate::optim::linkplace::LinkPlacement;
 use crate::optim::wiplace::build_wireless;
 use crate::scenario::{Effort, Scenario};
-use crate::traffic::phases::model_phases;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NocKind {
@@ -328,13 +327,14 @@ impl NocDesigner {
         NocDesigner { sys, kind: NocKind::WiHetNoc, cfg, traffic: None }
     }
 
-    /// Designer for a full scenario: builds the platform, derives the
-    /// CNN training traffic at the scenario's batch size, and scales the
+    /// Designer for a full scenario: builds the platform, lowers the CNN
+    /// workload (preset or DSL spec, under the scenario's mapping policy)
+    /// to training traffic at the scenario's batch size, and scales the
     /// design knobs to the platform.
     pub fn for_scenario(sc: &Scenario) -> Result<Self, WihetError> {
         let sys = sc.platform.build()?;
-        let spec = sc.model.spec();
-        let fij = model_phases(&sys, &spec, sc.batch).fij(&sys);
+        let fij =
+            crate::workload::lower_id(&sc.model, &sc.mapping, &sys, sc.batch)?.fij(&sys);
         let cfg = DesignConfig::scaled(&sys, sc.effort, sc.seed);
         Ok(NocDesigner { sys, kind: sc.noc, cfg, traffic: Some(fij) })
     }

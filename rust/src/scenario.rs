@@ -2,61 +2,132 @@
 //! and the experiment harnesses.
 //!
 //! A [`Scenario`] bundles *what chip* ([`Platform`]), *what workload*
-//! ([`ModelId`]), *what interconnect* ([`NocKind`]) and *how hard to try*
-//! ([`Effort`] + seed). Everything downstream — [`crate::noc::builder::NocDesigner`],
+//! ([`ModelId`] — a named preset or an inline architecture-DSL spec),
+//! *how it is mapped* ([`MappingPolicy`]), *what interconnect*
+//! ([`NocKind`]) and *how hard to try* ([`Effort`] + seed). Everything
+//! downstream — [`crate::noc::builder::NocDesigner`],
 //! [`crate::experiments::Ctx`], the CLI — consumes a `Scenario` instead of
 //! ad-hoc strings, so an unknown model or a malformed platform is a
 //! [`WihetError`] at the boundary rather than a `panic!` deep inside.
 
 use std::fmt;
 use std::str::FromStr;
+use std::sync::Arc;
 
 use crate::error::WihetError;
 use crate::model::cnn::{cdbnet, lenet, ModelSpec};
 use crate::model::platform::Platform;
 use crate::model::SystemConfig;
 use crate::noc::builder::NocKind;
+use crate::workload::{preset, ArchSpec, MappingPolicy};
 
-/// The CNN workloads of the paper (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// A CNN workload: one of the named presets, or a custom architecture
+/// parsed from the workload DSL (see [`crate::workload::GRAMMAR`]).
+///
+/// `LeNet`/`CdbNet` are the paper's Table 1 models; `AlexNet`, `Vgg11`,
+/// and `ResNetLite` open non-paper workloads. `Custom` carries a
+/// validated [`ArchSpec`] behind an `Arc`, so `ModelId` stays cheap to
+/// clone and hash (cache keys hash the spec by content).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum ModelId {
     LeNet,
     CdbNet,
+    AlexNet,
+    Vgg11,
+    ResNetLite,
+    /// Invariant: the spec shape-checks ([`ArchSpec::shapes`] succeeds).
+    /// Construct via [`ModelId::custom`] or string parsing — both
+    /// validate; hand-building an invalid `ArchSpec` into this variant
+    /// voids the crate's no-panic guarantee ([`ModelId::spec`] and the
+    /// traffic caches `expect` the invariant).
+    Custom(Arc<ArchSpec>),
 }
 
 impl ModelId {
+    /// The CNN workloads of the paper (Table 1) — what the paper-figure
+    /// harnesses iterate.
     pub const ALL: [ModelId; 2] = [ModelId::LeNet, ModelId::CdbNet];
+
+    /// Every named preset, in menu order.
+    pub const PRESETS: [ModelId; 5] = [
+        ModelId::LeNet,
+        ModelId::CdbNet,
+        ModelId::AlexNet,
+        ModelId::Vgg11,
+        ModelId::ResNetLite,
+    ];
 
     pub fn as_str(&self) -> &'static str {
         match self {
             ModelId::LeNet => "lenet",
             ModelId::CdbNet => "cdbnet",
+            ModelId::AlexNet => "alexnet",
+            ModelId::Vgg11 => "vgg11",
+            ModelId::ResNetLite => "resnet-lite",
+            ModelId::Custom(_) => "custom",
+        }
+    }
+
+    /// A custom workload from a validated architecture spec.
+    pub fn custom(arch: ArchSpec) -> Result<ModelId, WihetError> {
+        arch.shapes()?;
+        Ok(ModelId::Custom(Arc::new(arch)))
+    }
+
+    /// The architecture description of this workload (DSL form).
+    pub fn arch(&self) -> ArchSpec {
+        match self {
+            ModelId::Custom(a) => (**a).clone(),
+            named => preset(named.as_str()).expect("built-in presets exist"),
         }
     }
 
     /// The layer-by-layer workload description for this model.
     pub fn spec(&self) -> ModelSpec {
         match self {
+            // Table 1 straight from the source (the DSL presets are
+            // asserted equal to these in workload::presets tests).
             ModelId::LeNet => lenet(),
             ModelId::CdbNet => cdbnet(),
+            ModelId::Custom(a) => {
+                a.shapes().expect("custom specs are validated at construction").spec
+            }
+            named => named.arch().shapes().expect("built-in presets are valid").spec,
         }
     }
 }
 
 impl fmt::Display for ModelId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.pad(self.as_str())
+        match self {
+            // custom workloads display as their (round-trippable) DSL
+            ModelId::Custom(a) => fmt::Display::fmt(a, f),
+            named => f.pad(named.as_str()),
+        }
     }
 }
 
 impl FromStr for ModelId {
     type Err = WihetError;
 
+    /// Preset name, or — when the string looks like a DSL spec (contains
+    /// `:` or several items) — a full architecture spec.
     fn from_str(s: &str) -> Result<Self, WihetError> {
-        match s.trim().to_ascii_lowercase().as_str() {
+        let t = s.trim();
+        match t.to_ascii_lowercase().replace('_', "-").as_str() {
             "lenet" => Ok(ModelId::LeNet),
             "cdbnet" => Ok(ModelId::CdbNet),
-            other => Err(WihetError::UnknownModel(other.to_string())),
+            "alexnet" => Ok(ModelId::AlexNet),
+            "vgg11" => Ok(ModelId::Vgg11),
+            "resnet-lite" => Ok(ModelId::ResNetLite),
+            other => {
+                if other.contains(':') || other.split_whitespace().count() > 1 {
+                    // ArchSpec::from_str already shape-validates
+                    Ok(ModelId::Custom(Arc::new(t.parse::<ArchSpec>()?)))
+                } else {
+                    Err(WihetError::UnknownModel(t.to_string()))
+                }
+            }
         }
     }
 }
@@ -99,12 +170,15 @@ impl FromStr for Effort {
     }
 }
 
-/// One fully-specified evaluation scenario: platform x workload x NoC x
-/// effort/seed. Construct with [`Scenario::new`] and the `with_*` setters.
+/// One fully-specified evaluation scenario: platform x workload x mapping
+/// x NoC x effort/seed. Construct with [`Scenario::new`] and the `with_*`
+/// setters.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Scenario {
     pub platform: Platform,
     pub model: ModelId,
+    /// How the workload's layers are laid out on the platform's tiles.
+    pub mapping: MappingPolicy,
     pub noc: NocKind,
     pub effort: Effort,
     pub seed: u64,
@@ -113,12 +187,13 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// A scenario with the crate defaults: WiHetNoC, quick effort,
-    /// seed 42, batch 32.
+    /// A scenario with the crate defaults: identity mapping (`data:1`),
+    /// WiHetNoC, quick effort, seed 42, batch 32.
     pub fn new(platform: Platform, model: ModelId) -> Self {
         Scenario {
             platform,
             model,
+            mapping: MappingPolicy::default(),
             noc: NocKind::WiHetNoc,
             effort: Effort::Quick,
             seed: 42,
@@ -129,6 +204,11 @@ impl Scenario {
     /// The paper's headline scenario: LeNet on the 8x8 chip, WiHetNoC.
     pub fn paper() -> Self {
         Scenario::new(Platform::paper(), ModelId::LeNet)
+    }
+
+    pub fn with_mapping(mut self, mapping: MappingPolicy) -> Self {
+        self.mapping = mapping;
+        self
     }
 
     pub fn with_noc(mut self, noc: NocKind) -> Self {
@@ -157,20 +237,27 @@ impl Scenario {
     }
 }
 
-/// Typed cache key: a workload on one concrete tile placement. Two
-/// placements that happen to share a human-readable tag hash differently,
-/// which is what makes [`crate::experiments::Ctx`]'s traffic cache safe.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Typed cache key: a workload, mapped one way, on one concrete tile
+/// placement. Two placements that happen to share a human-readable tag
+/// hash differently, which is what makes [`crate::experiments::Ctx`]'s
+/// traffic cache safe; two mappings of the same workload never alias
+/// either.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ScenarioKey {
     pub model: ModelId,
     /// Fingerprint of the tile-kind assignment (see
     /// [`SystemConfig::placement_key`]).
     pub placement: u64,
+    pub mapping: MappingPolicy,
 }
 
 impl ScenarioKey {
     pub fn new(model: ModelId, sys: &SystemConfig) -> Self {
-        ScenarioKey { model, placement: sys.placement_key() }
+        ScenarioKey::with_mapping(model, sys, MappingPolicy::default())
+    }
+
+    pub fn with_mapping(model: ModelId, sys: &SystemConfig, mapping: MappingPolicy) -> Self {
+        ScenarioKey { model, placement: sys.placement_key(), mapping }
     }
 }
 
@@ -180,14 +267,43 @@ mod tests {
 
     #[test]
     fn model_parse_roundtrip() {
-        for m in ModelId::ALL {
+        for m in ModelId::PRESETS {
             assert_eq!(m.as_str().parse::<ModelId>().unwrap(), m);
             assert_eq!(format!("{m}"), m.as_str());
         }
+        assert_eq!("resnet_lite".parse::<ModelId>().unwrap(), ModelId::ResNetLite);
         assert!(matches!(
             "resnet".parse::<ModelId>(),
             Err(WihetError::UnknownModel(_))
         ));
+    }
+
+    #[test]
+    fn custom_specs_parse_and_roundtrip() {
+        let m: ModelId = "conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10"
+            .parse()
+            .unwrap();
+        assert!(matches!(m, ModelId::Custom(_)));
+        assert_eq!(m.spec().num_classes, 10);
+        // Display emits the canonical DSL, which parses back to the same id
+        let again: ModelId = m.to_string().parse().unwrap();
+        assert_eq!(again, m);
+        // malformed specs are InvalidSpec, not UnknownModel
+        assert!(matches!(
+            "conv:3x3".parse::<ModelId>(),
+            Err(WihetError::InvalidSpec(_))
+        ));
+    }
+
+    #[test]
+    fn presets_have_specs() {
+        for m in ModelId::PRESETS {
+            let spec = m.spec();
+            assert!(!spec.layers.is_empty(), "{m}");
+            assert_eq!(spec.name, m.as_str());
+            let arch = m.arch();
+            assert_eq!(arch.name, m.as_str());
+        }
     }
 
     #[test]
@@ -199,17 +315,22 @@ mod tests {
 
     #[test]
     fn scenario_defaults_and_setters() {
-        let sc = Scenario::paper().with_seed(7).with_batch(16);
+        let sc = Scenario::paper()
+            .with_seed(7)
+            .with_batch(16)
+            .with_mapping(MappingPolicy::LayerPipelined { stages: 3 });
         assert_eq!(sc.model, ModelId::LeNet);
         assert_eq!(sc.noc, NocKind::WiHetNoc);
         assert_eq!(sc.seed, 7);
         assert_eq!(sc.batch, 16);
+        assert_eq!(sc.mapping, MappingPolicy::LayerPipelined { stages: 3 });
+        assert!(Scenario::paper().mapping.is_identity());
         let sys = sc.build_system().unwrap();
         assert_eq!(sys.num_tiles(), 64);
     }
 
     #[test]
-    fn keys_distinguish_placements() {
+    fn keys_distinguish_placements_and_mappings() {
         let sys = SystemConfig::paper_8x8();
         let mut tiles = sys.tiles.clone();
         tiles.swap(0, 27); // move a CPU to the corner
@@ -217,8 +338,14 @@ mod tests {
         let a = ScenarioKey::new(ModelId::LeNet, &sys);
         let b = ScenarioKey::new(ModelId::LeNet, &other);
         let c = ScenarioKey::new(ModelId::CdbNet, &sys);
+        let d = ScenarioKey::with_mapping(
+            ModelId::LeNet,
+            &sys,
+            MappingPolicy::DataParallel { replicas: 4 },
+        );
         assert_ne!(a, b);
         assert_ne!(a, c);
+        assert_ne!(a, d, "mapping must be part of the key");
         assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
     }
 }

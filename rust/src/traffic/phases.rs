@@ -70,6 +70,11 @@ pub struct LayerPhase {
     pub core_core_flits: u64,
     /// Phase duration in NoC cycles (zero-contention execution model).
     pub duration_cycles: u64,
+    /// GPU tiles that compute (and inject) during this phase. Empty means
+    /// *all* GPU tiles of the system — the legacy behaviour and the
+    /// data-parallel mapping; the layer-pipelined mapping restricts each
+    /// phase to its stage's tile slice.
+    pub gpu_tiles: Vec<usize>,
 }
 
 impl LayerPhase {
@@ -121,24 +126,72 @@ pub struct TrafficModel {
 }
 
 /// Build the per-layer forward+backward phase list for `spec`.
+///
+/// This is the identity-mapping path: every GPU tile participates in
+/// every phase. The workload subsystem (`crate::workload::lower`) builds
+/// the same phases through [`layer_volumes`]/[`finish_phase`] and
+/// adjusts the volumes for non-trivial mappings and skip connections.
 pub fn model_phases(sys: &SystemConfig, spec: &ModelSpec, batch: usize) -> TrafficModel {
     let mut phases = Vec::new();
     for l in &spec.layers {
-        phases.push(build_phase(sys, spec, l, batch, Pass::Forward));
+        let v = layer_volumes(l, batch, Pass::Forward);
+        phases.push(finish_phase(
+            sys,
+            l,
+            Pass::Forward,
+            v,
+            ExtraVolumes::default(),
+            1.0,
+            Vec::new(),
+        ));
     }
     for l in spec.layers.iter().rev() {
-        phases.push(build_phase(sys, spec, l, batch, Pass::Backward));
+        let v = layer_volumes(l, batch, Pass::Backward);
+        phases.push(finish_phase(
+            sys,
+            l,
+            Pass::Backward,
+            v,
+            ExtraVolumes::default(),
+            1.0,
+            Vec::new(),
+        ));
     }
     TrafficModel { model: spec.name.clone(), batch, phases }
 }
 
-fn build_phase(
-    sys: &SystemConfig,
-    _spec: &ModelSpec,
-    l: &crate::model::cnn::Layer,
-    batch: usize,
-    pass: Pass,
-) -> LayerPhase {
+/// Mapping-induced extra bytes (replica weight traffic, skip-connection
+/// reads). Applied *after* the CPU orchestration overhead — extra weight
+/// fetches and residual adds reuse the kernels already launched, so they
+/// add data volume, not descriptor traffic. Keeping them separate is what
+/// makes the conservation invariants exact: `data:R` adds precisely
+/// `(R-1) * 4 * weight_bytes` per weighted GPU layer, nothing more.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExtraVolumes {
+    pub gpu_read: u64,
+    pub gpu_write: u64,
+    pub cpu_read: u64,
+    pub cpu_write: u64,
+}
+
+/// Raw per-layer byte volumes and MAC count for one pass, before CPU
+/// orchestration overheads and before any mapping adjustment. The
+/// lowering pass derives [`ExtraVolumes`] (replica weight traffic,
+/// skip-connection reads) and hands both to [`finish_phase`].
+#[derive(Debug, Clone, Copy)]
+pub struct LayerVolumes {
+    pub gpu_read: u64,
+    pub gpu_write: u64,
+    pub cpu_read: u64,
+    pub cpu_write: u64,
+    pub macs: u64,
+    /// Dense layers run on the CPUs (§5.1).
+    pub on_cpu: bool,
+}
+
+/// First-principles volume accounting for one layer x pass (the doc
+/// comment at the top of this module).
+pub fn layer_volumes(l: &crate::model::cnn::Layer, batch: usize, pass: Pass) -> LayerVolumes {
     let on_cpu = l.kind == LayerKind::Dense;
     let (mut gr, mut gw, mut cr, mut cw) = (0u64, 0u64, 0u64, 0u64);
     match pass {
@@ -171,27 +224,65 @@ fn build_phase(
             }
         }
     }
+    let macs = match pass {
+        Pass::Forward => l.macs(batch),
+        Pass::Backward => l.bwd_macs(batch),
+    };
+    LayerVolumes { gpu_read: gr, gpu_write: gw, cpu_read: cr, cpu_write: cw, macs, on_cpu }
+}
+
+/// Turn [`LayerVolumes`] (+[`ExtraVolumes`]) into a [`LayerPhase`]: CPU
+/// orchestration overheads, launch/coherence control flits, and the
+/// duration model.
+///
+/// `gpu_share` is the fraction of the chip's aggregate GPU throughput
+/// computing this phase (1.0 = all GPU tiles; a pipeline stage passes its
+/// tile fraction). `gpu_tiles` restricts the injecting tiles (empty =
+/// all). With zero extras, `gpu_share = 1.0`, and empty `gpu_tiles` this
+/// reproduces the legacy phase byte-for-byte.
+pub fn finish_phase(
+    sys: &SystemConfig,
+    l: &crate::model::cnn::Layer,
+    pass: Pass,
+    v: LayerVolumes,
+    extra: ExtraVolumes,
+    gpu_share: f64,
+    gpu_tiles: Vec<usize>,
+) -> LayerPhase {
+    let LayerVolumes {
+        gpu_read: mut gr,
+        gpu_write: mut gw,
+        cpu_read: mut cr,
+        cpu_write: mut cw,
+        macs,
+        on_cpu,
+    } = v;
     // CPU orchestration of GPU layers: flags/descriptors/prefetch
     if !on_cpu {
         cr += ((gr + gw) as f64 * CPU_ORCHESTRATION_FRACTION) as u64;
         cw += (gw as f64 * CPU_ORCHESTRATION_FRACTION * 0.25) as u64;
     }
-    // per-layer kernel-launch control: CPU -> each GPU tile and back
-    let n_gpu = sys.gpus().len() as u64;
+    gr += extra.gpu_read;
+    gw += extra.gpu_write;
+    cr += extra.cpu_read;
+    cw += extra.cpu_write;
+    // per-layer kernel-launch control: CPU -> each participating GPU tile
+    // and back
+    let n_gpu = if gpu_tiles.is_empty() {
+        sys.gpus().len() as u64
+    } else {
+        gpu_tiles.len() as u64
+    };
     let launch_flits = if on_cpu { 0 } else { 4 * n_gpu };
     let lines = (gr + gw + cr + cw).div_ceil(sys.line_bytes);
     let core_core = launch_flits + (lines as f64 * COHERENCE_FLITS_PER_LINE) as u64;
 
     // duration: compute- or bandwidth-limited, x stall factor
-    let macs = match pass {
-        Pass::Forward => l.macs(batch),
-        Pass::Backward => l.bwd_macs(batch),
-    };
     let compute_cycles = if on_cpu {
         let cpu_macs_per_sec = sys.cpus().len() as f64 * CPU_MACS_PER_CYCLE as f64 * sys.cpu_clock_hz;
         (macs as f64 / cpu_macs_per_sec * sys.noc_clock_hz).ceil() as u64
     } else {
-        (macs as f64 / sys.gpu_total_macs_per_sec() * sys.noc_clock_hz).ceil() as u64
+        (macs as f64 / (sys.gpu_total_macs_per_sec() * gpu_share) * sys.noc_clock_hz).ceil() as u64
     };
     let mc_bw_bytes_per_cycle = sys.mcs().len() as f64 * sys.mc_bw_bytes_per_cycle;
     let mem_cycles = ((gr + gw + cr + cw) as f64 / mc_bw_bytes_per_cycle).ceil() as u64;
@@ -209,6 +300,7 @@ fn build_phase(
         cpu_write_bytes: cw,
         core_core_flits: core_core,
         duration_cycles: duration.max(1),
+        gpu_tiles,
     }
 }
 
@@ -230,14 +322,28 @@ impl TrafficModel {
         m2f as f64 / total.max(1) as f64
     }
 
+    /// Total bytes moved between cores and MCs over the iteration (GPU +
+    /// CPU reads and writes). The conservation invariant the workload
+    /// lowering tests pin down: mappings redistribute this total, they
+    /// never create or lose bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.phases
+            .iter()
+            .map(|p| {
+                p.gpu_read_bytes + p.gpu_write_bytes + p.cpu_read_bytes + p.cpu_write_bytes
+            })
+            .sum()
+    }
+
     /// Aggregate f_ij matrix (flits/cycle) over the whole iteration —
     /// the input to the Eqn 6 optimization.
     ///
-    /// GPU traffic is spread uniformly over GPU tiles and address-
-    /// interleaved over MCs; CPU traffic over CPU tiles; core-core control
-    /// flows CPU->GPU.
+    /// GPU traffic is spread uniformly over the phase's participating GPU
+    /// tiles (all GPU tiles unless a mapping restricted the phase) and
+    /// address-interleaved over MCs; CPU traffic over CPU tiles;
+    /// core-core control flows CPU->GPU.
     pub fn fij(&self, sys: &SystemConfig) -> TrafficMatrix {
-        let gpus = sys.gpus();
+        let all_gpus = sys.gpus();
         let cpus = sys.cpus();
         let mcs = sys.mcs();
         let n = sys.num_tiles();
@@ -245,6 +351,8 @@ impl TrafficModel {
         let line_flits = sys.line_bytes / sys.flit_bytes + 1;
         let mut acc = vec![0.0f64; n * n];
         for p in &self.phases {
+            let gpus: &[usize] =
+                if p.gpu_tiles.is_empty() { &all_gpus } else { &p.gpu_tiles };
             let g_reads = p.gpu_read_bytes.div_ceil(sys.line_bytes);
             let g_writes = p.gpu_write_bytes.div_ceil(sys.line_bytes);
             let c_reads = p.cpu_read_bytes.div_ceil(sys.line_bytes);
@@ -254,7 +362,7 @@ impl TrafficModel {
             let mc_to_g = (g_reads * line_flits + g_writes * (line_flits + 1)) as f64;
             let c_to_mc = (c_reads + c_writes * (1 + line_flits)) as f64;
             let mc_to_c = (c_reads * line_flits + c_writes * (line_flits + 1)) as f64;
-            for &g in &gpus {
+            for &g in gpus {
                 for &m in &mcs {
                     let share = 1.0 / (gpus.len() * mcs.len()) as f64;
                     acc[g * n + m] += g_to_mc * share;
@@ -270,7 +378,7 @@ impl TrafficModel {
             }
             let cc = p.core_core_flits as f64;
             for &c in &cpus {
-                for &g in &gpus {
+                for &g in gpus {
                     let share = 0.5 / (cpus.len() * gpus.len()) as f64;
                     acc[c * n + g] += cc * share;
                     acc[g * n + c] += cc * share;

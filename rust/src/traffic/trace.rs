@@ -41,7 +41,10 @@ pub fn phase_trace(
     let dur = ((phase.duration_cycles as f64 * cfg.scale).ceil() as u64).max(16);
     let line = sys.line_bytes;
     let line_flits = sys.line_bytes / sys.flit_bytes + 1;
-    let gpus = sys.gpus();
+    let all_gpus = sys.gpus();
+    // mapping-restricted phases inject only from their assigned GPU tiles
+    let gpus: &[usize] =
+        if phase.gpu_tiles.is_empty() { &all_gpus } else { &phase.gpu_tiles };
     let cpus = sys.cpus();
     let mcs = sys.mcs();
     let mut out = Vec::new();
@@ -90,7 +93,7 @@ pub fn phase_trace(
     };
 
     emit_cohort(
-        &gpus,
+        gpus,
         phase.gpu_read_bytes.div_ceil(line),
         phase.gpu_write_bytes.div_ceil(line),
         true,

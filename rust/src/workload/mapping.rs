@@ -1,0 +1,166 @@
+//! Mapping policies: which tiles compute which layers on a given
+//! platform.
+//!
+//! The paper evaluates exactly one mapping — every GPU tile works on
+//! every layer (our `data:1`). The policies here generalize that:
+//!
+//! * [`MappingPolicy::DataParallel`] `{ replicas }` — the batch is split
+//!   across `replicas` model replicas; all GPU tiles stay active on every
+//!   layer, but each replica reads its own copy of the weights and writes
+//!   its own weight gradient, and the CPUs reduce `replicas` gradient
+//!   shards per weighted layer. `replicas = 1` is the identity mapping
+//!   and lowers byte-identically to the legacy pipeline.
+//! * [`MappingPolicy::LayerPipelined`] `{ stages }` — GPU-resident layers
+//!   are partitioned into `stages` contiguous stages balanced by MACs and
+//!   each stage owns a contiguous slice of the GPU tiles; only that slice
+//!   injects traffic (and computes) during the stage's phases. Total
+//!   bytes are conserved — the mapping redistributes traffic, it never
+//!   creates or loses it. A stage count above the workload's GPU layer
+//!   count is clamped to it at lowering time (a 3-GPU-layer net under
+//!   `pipeline:8` runs 3 stages): the bound depends on the workload, not
+//!   the platform, so [`MappingPolicy::validate_for`] cannot check it.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::model::SystemConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MappingPolicy {
+    /// `replicas` model replicas, batch split across them.
+    DataParallel { replicas: usize },
+    /// GPU layers partitioned into `stages` pipeline stages.
+    LayerPipelined { stages: usize },
+}
+
+impl Default for MappingPolicy {
+    /// The paper's mapping: one replica over all GPU tiles.
+    fn default() -> Self {
+        MappingPolicy::DataParallel { replicas: 1 }
+    }
+}
+
+impl MappingPolicy {
+    /// Whether this mapping lowers identically to the legacy
+    /// (unmapped) traffic pipeline.
+    pub fn is_identity(&self) -> bool {
+        matches!(self, MappingPolicy::DataParallel { replicas: 1 })
+    }
+
+    /// Reject mappings that cannot be laid out on `sys` at `batch`.
+    pub fn validate_for(&self, sys: &SystemConfig, batch: usize) -> Result<(), WihetError> {
+        let n_gpu = sys.gpus().len();
+        let err = |m: String| Err(WihetError::InvalidArg(m));
+        match *self {
+            MappingPolicy::DataParallel { replicas } => {
+                if replicas == 0 {
+                    return err("data-parallel mapping needs at least 1 replica".into());
+                }
+                if replicas > n_gpu {
+                    return err(format!(
+                        "data:{replicas} exceeds the {n_gpu} GPU tiles of the platform"
+                    ));
+                }
+                if replicas > batch {
+                    return err(format!(
+                        "data:{replicas} exceeds the batch size {batch} (every replica needs at least one sample)"
+                    ));
+                }
+            }
+            MappingPolicy::LayerPipelined { stages } => {
+                if stages == 0 {
+                    return err("pipelined mapping needs at least 1 stage".into());
+                }
+                if stages > n_gpu {
+                    return err(format!(
+                        "pipeline:{stages} exceeds the {n_gpu} GPU tiles of the platform"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for MappingPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            MappingPolicy::DataParallel { replicas } => write!(f, "data:{replicas}"),
+            MappingPolicy::LayerPipelined { stages } => write!(f, "pipeline:{stages}"),
+        }
+    }
+}
+
+impl FromStr for MappingPolicy {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let t = s.trim().to_ascii_lowercase();
+        let (head, arg) = match t.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (t.as_str(), None),
+        };
+        let count = |arg: Option<&str>, default: usize, what: &str| match arg {
+            None => Ok(default),
+            Some(a) => a.trim().parse::<usize>().map_err(|_| {
+                WihetError::InvalidArg(format!("{what} expects an integer, got '{a}'"))
+            }),
+        };
+        match head {
+            "data" => Ok(MappingPolicy::DataParallel {
+                replicas: count(arg, 1, "data:<replicas>")?,
+            }),
+            "pipeline" => Ok(MappingPolicy::LayerPipelined {
+                stages: count(arg, 2, "pipeline:<stages>")?,
+            }),
+            other => Err(WihetError::InvalidArg(format!(
+                "unknown mapping '{other}' (data[:replicas] | pipeline[:stages])"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["data:1", "data:4", "pipeline:2", "pipeline:6"] {
+            let m: MappingPolicy = s.parse().unwrap();
+            assert_eq!(m.to_string(), s);
+            assert_eq!(m.to_string().parse::<MappingPolicy>().unwrap(), m);
+        }
+        assert_eq!(
+            "data".parse::<MappingPolicy>().unwrap(),
+            MappingPolicy::DataParallel { replicas: 1 }
+        );
+        assert_eq!(
+            "pipeline".parse::<MappingPolicy>().unwrap(),
+            MappingPolicy::LayerPipelined { stages: 2 }
+        );
+        assert!("rings".parse::<MappingPolicy>().is_err());
+        assert!("data:x".parse::<MappingPolicy>().is_err());
+    }
+
+    #[test]
+    fn identity_detection() {
+        assert!(MappingPolicy::default().is_identity());
+        assert!(!MappingPolicy::DataParallel { replicas: 2 }.is_identity());
+        assert!(!MappingPolicy::LayerPipelined { stages: 1 }.is_identity());
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let sys = SystemConfig::paper_8x8(); // 56 GPUs
+        assert!(MappingPolicy::DataParallel { replicas: 1 }.validate_for(&sys, 32).is_ok());
+        assert!(MappingPolicy::DataParallel { replicas: 56 }.validate_for(&sys, 64).is_ok());
+        assert!(MappingPolicy::DataParallel { replicas: 57 }.validate_for(&sys, 64).is_err());
+        assert!(MappingPolicy::DataParallel { replicas: 0 }.validate_for(&sys, 32).is_err());
+        assert!(MappingPolicy::DataParallel { replicas: 33 }.validate_for(&sys, 32).is_err());
+        assert!(MappingPolicy::LayerPipelined { stages: 4 }.validate_for(&sys, 32).is_ok());
+        assert!(MappingPolicy::LayerPipelined { stages: 0 }.validate_for(&sys, 32).is_err());
+        assert!(MappingPolicy::LayerPipelined { stages: 57 }.validate_for(&sys, 32).is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! The workload subsystem: from CNN architecture descriptions to NoC
+//! traffic, for *any* network on *any* platform.
+//!
+//! The paper's design flow starts from the traffic of exactly two
+//! networks (LeNet, CDBNet, Table 1). This module replaces that
+//! hardcoded world with a three-stage pipeline:
+//!
+//! ```text
+//!   ArchSpec ("conv:5x5x20 pool:2 ... dense:10", or a named preset)
+//!      │  shape inference + validation          (workload::spec)
+//!      ▼
+//!   ModelSpec layer chain + SkipEdges
+//!      │  MappingPolicy: which tiles compute    (workload::mapping)
+//!      │  which layers (data-parallel replicas,
+//!      │  layer-pipelined stages)
+//!      ▼
+//!   TrafficModel phases                          (workload::lower)
+//!      │  existing machinery, unchanged
+//!      ▼
+//!   fij matrices → AMOSA design   /   traces → NocSim
+//! ```
+//!
+//! Lowering with the identity mapping (`data:1`) short-circuits to the
+//! legacy `traffic::model_phases` path, so the paper's scenarios stay
+//! byte-identical. Non-trivial mappings adjust the per-layer volumes
+//! (replica weight traffic, skip-connection reads) and restrict which
+//! GPU tiles inject each phase (`LayerPhase::gpu_tiles`); totals obey
+//! exact conservation laws pinned by `tests/workload_lower.rs`.
+//!
+//! Entry points: parse a [`ArchSpec`] (or pick a [`presets`] name via
+//! [`crate::scenario::ModelId`]), choose a [`MappingPolicy`], then
+//! [`lower`]/[`lower_id`] onto a platform.
+
+pub mod lower;
+pub mod mapping;
+pub mod presets;
+pub mod spec;
+
+pub use lower::{lower, lower_id, lower_spec};
+pub use mapping::MappingPolicy;
+pub use presets::{preset, preset_names, PRESETS};
+pub use spec::{ArchSpec, LayerDef, ShapedArch, SkipEdge, GRAMMAR};

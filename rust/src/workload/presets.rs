@@ -1,0 +1,128 @@
+//! Named architecture presets, defined *in* the DSL so every preset also
+//! exercises the parser.
+//!
+//! `lenet` and `cdbnet` reproduce the paper's Table 1 models exactly
+//! (field-for-field equal to `model::cnn::lenet()`/`cdbnet()`, pinned by
+//! tests). The other three open non-paper workloads at the 32x32 scale
+//! this toolchain's traffic model is calibrated for:
+//!
+//! * `alexnet`     — AlexNet-style conv/LRN stack (CIFAR-scale).
+//! * `vgg11`       — VGG-11: 8 conv + 3 dense layers.
+//! * `resnet-lite` — a small residual network; its `skip:2` items become
+//!   [`super::spec::SkipEdge`]s that the lowering pass turns into extra
+//!   save/restore traffic.
+
+use super::spec::ArchSpec;
+
+/// `(name, dsl)` for every built-in preset, in menu order.
+pub const PRESETS: &[(&str, &str)] = &[
+    (
+        "lenet",
+        "input:33x33x1 conv:5x5x16 pool:2,ceil conv:5x5x16 pool:2 conv:5x5x128 dense:10",
+    ),
+    (
+        "cdbnet",
+        "input:31x31x3 conv:5x5x32,same pool:3/2 lrn conv:5x5x32,same pool:3/2,avg \
+         conv:5x5x64,same pool:7/7,avg dense:10",
+    ),
+    (
+        "alexnet",
+        "input:32x32x3 conv:3x3x64,same pool:2 lrn conv:5x5x192,same pool:2 \
+         conv:3x3x384,same conv:3x3x256,same conv:3x3x256,same pool:2 \
+         dense:1024 dense:512 dense:10",
+    ),
+    (
+        "vgg11",
+        "input:32x32x3 conv:3x3x64,same pool:2 conv:3x3x128,same pool:2 \
+         conv:3x3x256,same conv:3x3x256,same pool:2 conv:3x3x512,same conv:3x3x512,same pool:2 \
+         conv:3x3x512,same conv:3x3x512,same pool:2 dense:512 dense:512 dense:10",
+    ),
+    (
+        "resnet-lite",
+        "input:32x32x3 conv:3x3x16,same conv:3x3x16,same conv:3x3x16,same skip:2 \
+         conv:3x3x16,same conv:3x3x16,same skip:2 pool:2 \
+         conv:3x3x32,same conv:3x3x32,same conv:3x3x32,same skip:2 pool:2 \
+         conv:3x3x64,same conv:3x3x64,same conv:3x3x64,same skip:2 pool:2,avg dense:10",
+    ),
+];
+
+/// The preset names, for error messages and `list` output.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
+/// Look up a preset by name (case-insensitive; `_` and `-` are
+/// interchangeable). Returns the named, validated `ArchSpec`.
+pub fn preset(name: &str) -> Option<ArchSpec> {
+    let norm = name.trim().to_ascii_lowercase().replace('_', "-");
+    PRESETS.iter().find(|(n, _)| *n == norm).map(|(n, dsl)| {
+        let mut arch: ArchSpec = dsl.parse().expect("built-in preset parses");
+        arch.name = (*n).to_string();
+        arch
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cnn::{cdbnet, lenet, LayerKind};
+
+    #[test]
+    fn every_preset_parses_and_shapes() {
+        for (name, _) in PRESETS {
+            let arch = preset(name).unwrap();
+            assert_eq!(arch.name, *name);
+            let shaped = arch.shapes().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!shaped.spec.layers.is_empty());
+            assert_eq!(shaped.spec.num_classes, 10, "{name}");
+        }
+        assert!(preset("resnet_lite").is_some());
+        assert!(preset("RESNET-LITE").is_some());
+        assert!(preset("resnet").is_none());
+    }
+
+    #[test]
+    fn lenet_preset_equals_legacy_model() {
+        let shaped = preset("lenet").unwrap().shapes().unwrap();
+        assert_eq!(shaped.spec, lenet());
+        assert!(shaped.skips.is_empty());
+    }
+
+    #[test]
+    fn cdbnet_preset_equals_legacy_model() {
+        let shaped = preset("cdbnet").unwrap().shapes().unwrap();
+        assert_eq!(shaped.spec, cdbnet());
+        assert!(shaped.skips.is_empty());
+    }
+
+    #[test]
+    fn alexnet_and_vgg11_shapes() {
+        let alex = preset("alexnet").unwrap().shapes().unwrap();
+        // three pools on a 32x32 input leave a 4x4 map before the head
+        let last_pool = alex
+            .spec
+            .layers
+            .iter()
+            .rev()
+            .find(|l| matches!(l.kind, LayerKind::MaxPool | LayerKind::AvgPool))
+            .unwrap();
+        assert_eq!(last_pool.out_shape, (4, 4, 256));
+        let vgg = preset("vgg11").unwrap().shapes().unwrap();
+        let weighted = vgg.spec.layers.iter().filter(|l| l.has_params()).count();
+        assert_eq!(weighted, 11, "VGG-11 has 11 weight layers");
+        assert_eq!(vgg.spec.layers.last().unwrap().in_shape, (1, 1, 512));
+    }
+
+    #[test]
+    fn resnet_lite_has_matching_skips() {
+        let shaped = preset("resnet-lite").unwrap().shapes().unwrap();
+        assert_eq!(shaped.skips.len(), 4);
+        for e in &shaped.skips {
+            assert_eq!(
+                shaped.spec.layers[e.src].out_shape,
+                shaped.spec.layers[e.dst].out_shape
+            );
+            assert_eq!(e.dst - e.src, 2);
+        }
+    }
+}

@@ -1,0 +1,490 @@
+//! `ArchSpec` — the CNN architecture DSL.
+//!
+//! A spec is a whitespace-separated list of layer items, parsed from a
+//! compact string (see [`GRAMMAR`]):
+//!
+//! ```text
+//! conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10
+//! ```
+//!
+//! Parsing validates the item syntax; shape inference ([`ArchSpec::shapes`])
+//! validates the semantics (kernels that fit, matching skip shapes) and
+//! produces the [`crate::model::cnn::ModelSpec`] layer chain plus the
+//! residual [`SkipEdge`]s that the lowering pass turns into traffic. The
+//! inference rules are exactly `model::cnn`'s (same padding / pooling /
+//! ceil-mode arithmetic), so a DSL-built LeNet is field-for-field equal to
+//! the hand-built `model::cnn::lenet()` — pinned by tests.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::model::cnn::{Layer, LayerKind, ModelSpec, Shape3};
+
+/// The workload DSL, quoted verbatim in malformed-spec errors.
+pub const GRAMMAR: &str = "workload DSL (whitespace-separated items):
+  input:HxWxC                    input tensor; optional first item (default 32x32x3)
+  conv:KxKxC[,same][,stride=S]   KxK convolution to C channels; valid padding
+                                 unless `same`, stride 1 unless `stride=S`
+  pool:K[/S][,avg][,ceil]        pooling: kernel K, stride S (default K), max
+                                 unless `avg`, floor division unless `ceil`
+  lrn                            local response normalization
+  dense:N                        fully connected layer with N outputs
+  skip:D                         residual add of the output D layers back onto
+                                 the previous layer's output
+example: conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10
+presets: lenet, cdbnet, alexnet, vgg11, resnet-lite";
+
+/// One item of the architecture DSL, before shape inference.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LayerDef {
+    Conv { kernel: usize, out_channels: usize, same: bool, stride: usize },
+    Pool { kernel: usize, stride: usize, avg: bool, ceil: bool },
+    Lrn,
+    Dense { units: usize },
+    /// Residual connection: add the output of the layer `back` positions
+    /// earlier (in the inferred layer chain) to the previous layer's
+    /// output. Shapes must match.
+    Skip { back: usize },
+}
+
+/// A residual edge between two layers of the inferred chain: the output
+/// of layer `src` is added to the output of layer `dst` (indices into
+/// `ModelSpec::layers`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SkipEdge {
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Shape-inferred architecture: the legacy layer chain plus the skip
+/// edges the chain cannot express.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapedArch {
+    pub spec: ModelSpec,
+    pub skips: Vec<SkipEdge>,
+}
+
+/// A CNN architecture described by the DSL: an input shape and a list of
+/// [`LayerDef`] items. Round-trips through its string form
+/// (`to_string().parse()` reproduces the value) and lowers to a
+/// [`ModelSpec`] + skip edges via [`ArchSpec::shapes`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArchSpec {
+    /// Workload name ("custom" for parsed specs, the preset name for
+    /// built-ins). Not part of the string form.
+    pub name: String,
+    /// (H, W, C) input tensor shape per sample.
+    pub input: Shape3,
+    pub items: Vec<LayerDef>,
+}
+
+fn bad(msg: String) -> WihetError {
+    WihetError::InvalidSpec(msg)
+}
+
+impl ArchSpec {
+    /// Default input when the spec omits `input:` — CIFAR-shaped.
+    pub const DEFAULT_INPUT: Shape3 = (32, 32, 3);
+
+    /// Run shape inference: validate every layer against its input shape
+    /// and produce the concrete layer chain + skip edges.
+    pub fn shapes(&self) -> Result<ShapedArch, WihetError> {
+        let mut layers: Vec<Layer> = Vec::with_capacity(self.items.len());
+        let mut skips = Vec::new();
+        let (mut nc, mut np, mut nd) = (0usize, 0usize, 0usize);
+        let cur = |layers: &Vec<Layer>| -> Shape3 {
+            layers.last().map(|l| l.out_shape).unwrap_or(self.input)
+        };
+        for item in &self.items {
+            match *item {
+                LayerDef::Conv { kernel: k, out_channels: co, same, stride: s } => {
+                    nc += 1;
+                    let name = format!("C{nc}");
+                    let (ih, iw, ci) = cur(&layers);
+                    let (oh, ow) = if same {
+                        (ih.div_ceil(s), iw.div_ceil(s))
+                    } else {
+                        if ih < k || iw < k {
+                            return Err(bad(format!(
+                                "{name}: conv {k}x{k} does not fit the {ih}x{iw} input"
+                            )));
+                        }
+                        ((ih - k) / s + 1, (iw - k) / s + 1)
+                    };
+                    if oh == 0 || ow == 0 {
+                        return Err(bad(format!(
+                            "{name}: conv {k}x{k}/{s} collapses the {ih}x{iw} input"
+                        )));
+                    }
+                    layers.push(Layer {
+                        name,
+                        kind: LayerKind::Conv,
+                        in_shape: (ih, iw, ci),
+                        out_shape: (oh, ow, co),
+                        kernel: k,
+                        stride: s,
+                        same_padding: same,
+                        ceil_mode: false,
+                    });
+                }
+                LayerDef::Pool { kernel: k, stride: s, avg, ceil } => {
+                    np += 1;
+                    let name = format!("P{np}");
+                    let (ih, iw, c) = cur(&layers);
+                    if ih < k || iw < k {
+                        return Err(bad(format!(
+                            "{name}: pool {k}/{s} does not fit the {ih}x{iw} input"
+                        )));
+                    }
+                    let dim = |i: usize| {
+                        if ceil {
+                            (i - k).div_ceil(s) + 1
+                        } else {
+                            (i - k) / s + 1
+                        }
+                    };
+                    layers.push(Layer {
+                        name,
+                        kind: if avg { LayerKind::AvgPool } else { LayerKind::MaxPool },
+                        in_shape: (ih, iw, c),
+                        out_shape: (dim(ih), dim(iw), c),
+                        kernel: k,
+                        stride: s,
+                        same_padding: false,
+                        ceil_mode: ceil,
+                    });
+                }
+                LayerDef::Lrn => {
+                    let s = cur(&layers);
+                    layers.push(Layer {
+                        name: "LRN".into(),
+                        kind: LayerKind::Lrn,
+                        in_shape: s,
+                        out_shape: s,
+                        kernel: 5,
+                        stride: 1,
+                        same_padding: false,
+                        ceil_mode: false,
+                    });
+                }
+                LayerDef::Dense { units } => {
+                    nd += 1;
+                    let (ih, iw, c) = cur(&layers);
+                    layers.push(Layer {
+                        name: format!("F{nd}"),
+                        kind: LayerKind::Dense,
+                        in_shape: (ih, iw, c),
+                        out_shape: (1, 1, units),
+                        kernel: 0,
+                        stride: 1,
+                        same_padding: false,
+                        ceil_mode: false,
+                    });
+                }
+                LayerDef::Skip { back } => {
+                    let Some(dst) = layers.len().checked_sub(1) else {
+                        return Err(bad("skip:D cannot be the first layer".into()));
+                    };
+                    let Some(src) = dst.checked_sub(back) else {
+                        return Err(bad(format!(
+                            "skip:{back} reaches before the first layer (only {dst} layers precede {})",
+                            layers[dst].name
+                        )));
+                    };
+                    let (a, b) = (layers[src].out_shape, layers[dst].out_shape);
+                    if a != b {
+                        return Err(bad(format!(
+                            "skip:{back}: shape mismatch {}x{}x{} ({}) vs {}x{}x{} ({})",
+                            a.0, a.1, a.2, layers[src].name, b.0, b.1, b.2, layers[dst].name
+                        )));
+                    }
+                    skips.push(SkipEdge { src, dst });
+                }
+            }
+        }
+        if layers.is_empty() {
+            return Err(bad("spec has no layers".into()));
+        }
+        let num_classes = layers
+            .iter()
+            .rev()
+            .find(|l| l.kind == LayerKind::Dense)
+            .map(|l| l.out_shape.2)
+            .unwrap_or(cur(&layers).2);
+        Ok(ShapedArch {
+            spec: ModelSpec {
+                name: self.name.clone(),
+                input_shape: self.input,
+                num_classes,
+                layers,
+            },
+            skips,
+        })
+    }
+
+    /// Number of GPU-resident layers (everything but `dense`, which the
+    /// paper's execution model runs on the CPUs).
+    pub fn gpu_layer_count(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| {
+                matches!(i, LayerDef::Conv { .. } | LayerDef::Pool { .. } | LayerDef::Lrn)
+            })
+            .count()
+    }
+}
+
+impl fmt::Display for ArchSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (h, w, c) = self.input;
+        write!(f, "input:{h}x{w}x{c}")?;
+        for item in &self.items {
+            f.write_str(" ")?;
+            match *item {
+                LayerDef::Conv { kernel, out_channels, same, stride } => {
+                    write!(f, "conv:{kernel}x{kernel}x{out_channels}")?;
+                    if same {
+                        f.write_str(",same")?;
+                    }
+                    if stride != 1 {
+                        write!(f, ",stride={stride}")?;
+                    }
+                }
+                LayerDef::Pool { kernel, stride, avg, ceil } => {
+                    write!(f, "pool:{kernel}")?;
+                    if stride != kernel {
+                        write!(f, "/{stride}")?;
+                    }
+                    if avg {
+                        f.write_str(",avg")?;
+                    }
+                    if ceil {
+                        f.write_str(",ceil")?;
+                    }
+                }
+                LayerDef::Lrn => f.write_str("lrn")?,
+                LayerDef::Dense { units } => write!(f, "dense:{units}")?,
+                LayerDef::Skip { back } => write!(f, "skip:{back}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_usize(v: &str, what: &str) -> Result<usize, WihetError> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => Err(bad(format!("{what} expects a positive integer, got '{v}'"))),
+    }
+}
+
+/// One parsed token: either the input declaration or a layer item.
+enum Item {
+    Input(Shape3),
+    Def(LayerDef),
+}
+
+fn parse_item(tok: &str) -> Result<Item, WihetError> {
+    let tok_lc = tok.to_ascii_lowercase();
+    let (head, rest) = match tok_lc.split_once(':') {
+        Some((h, r)) => (h, Some(r)),
+        None => (tok_lc.as_str(), None),
+    };
+    let args = |what: &str| rest.ok_or_else(|| bad(format!("{what} needs arguments: '{tok}'")));
+    match head {
+        "lrn" => {
+            if rest.is_some() {
+                return Err(bad(format!("lrn takes no arguments, got '{tok}'")));
+            }
+            Ok(Item::Def(LayerDef::Lrn))
+        }
+        "input" => {
+            let dims: Vec<&str> = args("input")?.split('x').collect();
+            if dims.len() != 3 {
+                return Err(bad(format!("input expects HxWxC, got '{tok}'")));
+            }
+            Ok(Item::Input((
+                parse_usize(dims[0], "input height")?,
+                parse_usize(dims[1], "input width")?,
+                parse_usize(dims[2], "input channels")?,
+            )))
+        }
+        "conv" => {
+            let mut parts = args("conv")?.split(',');
+            let shape = parts.next().unwrap_or_default();
+            let dims: Vec<&str> = shape.split('x').collect();
+            if dims.len() != 3 {
+                return Err(bad(format!("conv expects KxKxC, got '{tok}'")));
+            }
+            let k1 = parse_usize(dims[0], "conv kernel")?;
+            let k2 = parse_usize(dims[1], "conv kernel")?;
+            if k1 != k2 {
+                return Err(bad(format!("conv kernels must be square, got {k1}x{k2}")));
+            }
+            let out_channels = parse_usize(dims[2], "conv channels")?;
+            let (mut same, mut stride) = (false, 1usize);
+            for flag in parts {
+                match flag.trim() {
+                    "same" => same = true,
+                    f if f.starts_with("stride=") => {
+                        stride = parse_usize(&f["stride=".len()..], "conv stride")?;
+                    }
+                    other => {
+                        return Err(bad(format!(
+                            "unknown conv option '{other}' (same, stride=S)"
+                        )))
+                    }
+                }
+            }
+            Ok(Item::Def(LayerDef::Conv { kernel: k1, out_channels, same, stride }))
+        }
+        "pool" => {
+            let mut parts = args("pool")?.split(',');
+            let ks = parts.next().unwrap_or_default();
+            let (kernel, stride) = match ks.split_once('/') {
+                Some((k, s)) => {
+                    (parse_usize(k, "pool kernel")?, parse_usize(s, "pool stride")?)
+                }
+                None => {
+                    let k = parse_usize(ks, "pool kernel")?;
+                    (k, k)
+                }
+            };
+            let (mut avg, mut ceil) = (false, false);
+            for flag in parts {
+                match flag.trim() {
+                    "avg" => avg = true,
+                    "max" => avg = false,
+                    "ceil" => ceil = true,
+                    other => {
+                        return Err(bad(format!(
+                            "unknown pool option '{other}' (avg, max, ceil)"
+                        )))
+                    }
+                }
+            }
+            Ok(Item::Def(LayerDef::Pool { kernel, stride, avg, ceil }))
+        }
+        "dense" => Ok(Item::Def(LayerDef::Dense {
+            units: parse_usize(args("dense")?, "dense units")?,
+        })),
+        "skip" => Ok(Item::Def(LayerDef::Skip {
+            back: parse_usize(args("skip")?, "skip distance")?,
+        })),
+        other => Err(bad(format!(
+            "unknown layer item '{other}' (input, conv, pool, lrn, dense, skip)"
+        ))),
+    }
+}
+
+impl FromStr for ArchSpec {
+    type Err = WihetError;
+
+    /// Parse and shape-check a spec string; the result is named "custom".
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let mut input = ArchSpec::DEFAULT_INPUT;
+        let mut items = Vec::new();
+        for (i, tok) in s.split_whitespace().enumerate() {
+            match parse_item(tok)? {
+                Item::Input(shape) => {
+                    if i != 0 {
+                        return Err(bad("input:HxWxC must be the first item".into()));
+                    }
+                    input = shape;
+                }
+                Item::Def(def) => items.push(def),
+            }
+        }
+        if items.is_empty() {
+            return Err(bad("empty workload spec".into()));
+        }
+        let arch = ArchSpec { name: "custom".into(), input, items };
+        arch.shapes()?; // semantic validation up front
+        Ok(arch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let a: ArchSpec = "conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10"
+            .parse()
+            .unwrap();
+        assert_eq!(a.input, (32, 32, 3));
+        assert_eq!(a.items.len(), 6);
+        let shaped = a.shapes().unwrap();
+        assert_eq!(shaped.spec.layers.len(), 6);
+        assert_eq!(shaped.spec.num_classes, 10);
+        // 32 -> conv5 -> 28 -> pool2 -> 14 -> conv5 -> 10 -> pool2 -> 5
+        assert_eq!(shaped.spec.layers[3].out_shape, (5, 5, 50));
+        assert_eq!(shaped.spec.layers[4].out_shape, (1, 1, 500));
+    }
+
+    #[test]
+    fn roundtrips_through_display() {
+        for s in [
+            "conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10",
+            "input:28x28x1 conv:3x3x8,same,stride=2 pool:3/2,avg,ceil lrn dense:10",
+            "input:16x16x4 conv:3x3x4,same conv:3x3x4,same skip:1 dense:10",
+        ] {
+            let a: ArchSpec = s.parse().unwrap();
+            let b: ArchSpec = a.to_string().parse().unwrap();
+            assert_eq!(a, b, "{s} -> {a}");
+        }
+    }
+
+    #[test]
+    fn skip_shapes_must_match() {
+        // the pooled tensor no longer matches the pre-pool one
+        let e = "input:16x16x4 conv:3x3x4,same pool:2 skip:1 dense:10"
+            .parse::<ArchSpec>()
+            .unwrap_err();
+        assert!(matches!(e, WihetError::InvalidSpec(_)), "{e:?}");
+        assert!(e.to_string().contains("shape mismatch"), "{e}");
+    }
+
+    #[test]
+    fn malformed_items_are_typed_errors_with_grammar() {
+        for s in [
+            "",
+            "convolution:3x3x8",
+            "conv:3x4x8",
+            "conv:3x3",
+            "conv:0x0x8",
+            "pool:0",
+            "pool:2,huge",
+            "dense:x",
+            "skip:0",
+            "skip:1",
+            "conv:3x3x8 input:8x8x1",
+            "lrn:5",
+        ] {
+            let e = s.parse::<ArchSpec>().unwrap_err();
+            assert!(matches!(e, WihetError::InvalidSpec(_)), "{s}: {e:?}");
+            assert!(e.to_string().contains("conv:KxKxC"), "{s}: {e}");
+        }
+        // a kernel larger than its input is a shape error
+        let e = "input:4x4x1 conv:9x9x4".parse::<ArchSpec>().unwrap_err();
+        assert!(e.to_string().contains("does not fit"), "{e}");
+    }
+
+    #[test]
+    fn strided_and_same_conv_shapes() {
+        let a: ArchSpec = "input:32x32x3 conv:3x3x8,same,stride=2 dense:10".parse().unwrap();
+        let s = a.shapes().unwrap();
+        assert_eq!(s.spec.layers[0].out_shape, (16, 16, 8));
+        let a: ArchSpec = "input:11x11x3 conv:3x3x8,stride=2 dense:10".parse().unwrap();
+        let s = a.shapes().unwrap();
+        assert_eq!(s.spec.layers[0].out_shape, (5, 5, 8));
+    }
+
+    #[test]
+    fn gpu_layer_count_excludes_dense() {
+        let a: ArchSpec = "conv:3x3x8 pool:2 lrn dense:10".parse().unwrap();
+        assert_eq!(a.gpu_layer_count(), 3);
+    }
+}

@@ -1,0 +1,248 @@
+//! Workload-subsystem guarantees (ISSUE 3):
+//!
+//! * **Conservation** — for every preset x mapping policy x platform,
+//!   the lowered traffic obeys exact byte accounting: pipelined mappings
+//!   redistribute the identity lowering's bytes without creating or
+//!   losing any; `data:R` adds exactly `(R-1) * 4 * weight_bytes` per
+//!   weighted GPU layer; and the aggregate `fij` matrix carries exactly
+//!   the flits the phases account for.
+//! * **Determinism** — lowering is reproducible across runs and across
+//!   `par_map` worker counts.
+//! * **Round-trip** — `ArchSpec` survives `to_string().parse()`.
+//! * **End-to-end** — a non-paper workload (alexnet) on a non-paper
+//!   platform (12x12, corner MCs) simulates through the standard
+//!   pipeline.
+
+use wihetnoc::model::cnn::LayerKind;
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::util::exec::par_map_threads;
+use wihetnoc::workload::{lower_id, preset_names, ArchSpec, MappingPolicy};
+use wihetnoc::{Effort, ModelId, Platform, Scenario};
+
+fn platforms() -> Vec<SystemConfig> {
+    ["4x4", "8x8", "12x12"]
+        .iter()
+        .map(|s| s.parse::<Platform>().unwrap().build().unwrap())
+        .collect()
+}
+
+fn preset_ids() -> Vec<ModelId> {
+    preset_names().iter().map(|n| n.parse().unwrap()).collect()
+}
+
+/// Comparable digest of a lowered traffic model.
+fn fingerprint(tm: &wihetnoc::traffic::phases::TrafficModel) -> Vec<(u64, u64, u64, u64, u64, u64, Vec<usize>)> {
+    tm.phases
+        .iter()
+        .map(|p| {
+            (
+                p.gpu_read_bytes,
+                p.gpu_write_bytes,
+                p.cpu_read_bytes,
+                p.cpu_write_bytes,
+                p.core_core_flits,
+                p.duration_cycles,
+                p.gpu_tiles.clone(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn bytes_conserve_across_presets_mappings_platforms() {
+    let batch = 32;
+    for sys in platforms() {
+        for model in preset_ids() {
+            let base = lower_id(&model, &MappingPolicy::default(), &sys, batch).unwrap();
+            assert!(base.total_bytes() > 0);
+
+            // pipelining redistributes traffic; totals must be untouched
+            for stages in [2, 3] {
+                let piped = lower_id(
+                    &model,
+                    &MappingPolicy::LayerPipelined { stages },
+                    &sys,
+                    batch,
+                )
+                .unwrap();
+                assert_eq!(
+                    piped.total_bytes(),
+                    base.total_bytes(),
+                    "{model} pipeline:{stages} on {} tiles",
+                    sys.num_tiles()
+                );
+                assert_eq!(piped.phases.len(), base.phases.len());
+                // restricted phases draw their tiles from the GPU set
+                let gpus = sys.gpus();
+                for p in &piped.phases {
+                    for t in &p.gpu_tiles {
+                        assert!(gpus.contains(t), "{model}: tile {t} is not a GPU");
+                    }
+                }
+            }
+
+            // data-parallel replicas add exactly their weight traffic:
+            // fwd weight read + bwd gradient write + bwd weight re-read +
+            // CPU gradient-shard read = 4 weight volumes per extra replica
+            let w: u64 = model
+                .spec()
+                .layers
+                .iter()
+                .filter(|l| l.has_params() && l.kind != LayerKind::Dense)
+                .map(|l| l.weight_bytes())
+                .sum();
+            for replicas in [2u64, 4] {
+                let dp = lower_id(
+                    &model,
+                    &MappingPolicy::DataParallel { replicas: replicas as usize },
+                    &sys,
+                    batch,
+                )
+                .unwrap();
+                assert_eq!(
+                    dp.total_bytes(),
+                    base.total_bytes() + (replicas - 1) * 4 * w,
+                    "{model} data:{replicas} on {} tiles",
+                    sys.num_tiles()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fij_carries_exactly_the_phase_flits() {
+    let batch = 16;
+    let mappings = [
+        MappingPolicy::default(),
+        MappingPolicy::DataParallel { replicas: 4 },
+        MappingPolicy::LayerPipelined { stages: 3 },
+    ];
+    for sys in platforms() {
+        for model in preset_ids() {
+            for mapping in mappings {
+                let tm = lower_id(&model, &mapping, &sys, batch).unwrap();
+                let fij = tm.fij(&sys);
+                let cycles = tm.total_cycles().max(1) as f64;
+                // exact directional accounting (GPU and CPU cohorts line
+                // up separately, matching fij's construction)
+                let lf = sys.line_bytes / sys.flit_bytes + 1;
+                let mut expect = 0u64;
+                for p in &tm.phases {
+                    let gr = p.gpu_read_bytes.div_ceil(sys.line_bytes);
+                    let gw = p.gpu_write_bytes.div_ceil(sys.line_bytes);
+                    let cr = p.cpu_read_bytes.div_ceil(sys.line_bytes);
+                    let cw = p.cpu_write_bytes.div_ceil(sys.line_bytes);
+                    expect += gr + gw * (1 + lf) // core->MC requests
+                        + gr * lf + gw * (lf + 1) // MC->core replies
+                        + cr + cw * (1 + lf)
+                        + cr * lf + cw * (lf + 1)
+                        + p.core_core_flits;
+                }
+                let carried = fij.total() * cycles;
+                let rel = (carried - expect as f64).abs() / expect as f64;
+                assert!(
+                    rel < 1e-6,
+                    "{model} {mapping} on {} tiles: fij carries {carried}, phases account {expect}",
+                    sys.num_tiles()
+                );
+                // and the phase-level flit helpers agree to rounding
+                let flits: u64 = tm.phases.iter().map(|p| p.total_flits(&sys)).sum();
+                let rel = (carried - flits as f64).abs() / flits as f64;
+                assert!(rel < 1e-3, "{model} {mapping}: {carried} vs {flits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lowering_is_deterministic_across_runs_and_threads() {
+    let sys = "12x12".parse::<Platform>().unwrap().build().unwrap();
+    let jobs: Vec<(ModelId, MappingPolicy)> = preset_ids()
+        .into_iter()
+        .flat_map(|m| {
+            [
+                MappingPolicy::default(),
+                MappingPolicy::DataParallel { replicas: 8 },
+                MappingPolicy::LayerPipelined { stages: 4 },
+            ]
+            .into_iter()
+            .map(move |p| (m.clone(), p))
+        })
+        .collect();
+    let run = |threads: usize| {
+        par_map_threads(threads, &jobs, |_, (model, mapping)| {
+            fingerprint(&lower_id(model, mapping, &sys, 32).unwrap())
+        })
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(1), "repeat runs must match");
+    for threads in [2, 8] {
+        assert_eq!(run(threads), serial, "thread count {threads} diverged");
+    }
+}
+
+#[test]
+fn archspec_roundtrips_through_strings() {
+    // the ISSUE's acceptance string
+    let s = "conv:5x5x20 pool:2 conv:5x5x50 pool:2 dense:500 dense:10";
+    let a: ArchSpec = s.parse().unwrap();
+    let b: ArchSpec = a.to_string().parse().unwrap();
+    assert_eq!(a, b);
+    // every preset's DSL round-trips too (names aside)
+    for model in preset_ids() {
+        let arch = model.arch();
+        let re: ArchSpec = arch.to_string().parse().unwrap();
+        assert_eq!(re.items, arch.items, "{model}");
+        assert_eq!(re.input, arch.input, "{model}");
+    }
+    // and a ModelId built from a spec string displays as parseable DSL
+    let m: ModelId = s.parse().unwrap();
+    let m2: ModelId = m.to_string().parse().unwrap();
+    assert_eq!(m, m2);
+}
+
+#[test]
+fn alexnet_simulates_on_12x12_corners_end_to_end() {
+    // The acceptance scenario minus the AMOSA design step (CI's
+    // bench-smoke drives the full `simulate --noc wihetnoc` CLI): lower
+    // alexnet with a pipelined mapping onto a 144-tile chip and push the
+    // trace through the cycle-level simulator on the adaptive mesh.
+    use wihetnoc::experiments::Ctx;
+    use wihetnoc::noc::builder::mesh_opt;
+
+    let platform: Platform = "12x12:cpus=8,mcs=8,placement=corners".parse().unwrap();
+    let scenario = Scenario::new(platform, "alexnet".parse().unwrap())
+        .with_mapping(MappingPolicy::LayerPipelined { stages: 4 })
+        .with_effort(Effort::Quick)
+        .with_seed(3);
+    let mut ctx = Ctx::for_scenario(&scenario).unwrap();
+    let sys = ctx.sys.clone();
+    let inst = mesh_opt(&sys, true);
+    let tm = ctx.traffic_on(scenario.model.clone(), &sys);
+    // pipelined phases restrict injection to their stage tiles
+    assert!(tm.phases.iter().any(|p| !p.gpu_tiles.is_empty()));
+    let cfg = TraceConfig { scale: 0.002, ..Default::default() };
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    assert!(!trace.is_empty());
+    let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .run(&trace);
+    assert!(rep.delivered_packets > 0);
+    assert_eq!(rep.undelivered, 0);
+}
+
+#[test]
+fn custom_spec_flows_through_ctx_cache() {
+    use wihetnoc::experiments::Ctx;
+
+    let model: ModelId = "input:28x28x1 conv:3x3x8,same pool:2 dense:10".parse().unwrap();
+    let scenario = Scenario::new("4x4".parse().unwrap(), model.clone()).with_seed(9);
+    let mut ctx = Ctx::for_scenario(&scenario).unwrap();
+    let sys = ctx.sys.clone();
+    let t1 = ctx.traffic_on(model.clone(), &sys);
+    let t2 = ctx.traffic_on(model.clone(), &sys);
+    assert!(std::sync::Arc::ptr_eq(&t1, &t2), "custom specs hash into the cache");
+    assert_eq!(t1.phases.len(), 2 * 3);
+}
