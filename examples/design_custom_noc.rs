@@ -14,9 +14,11 @@ use wihetnoc::noc::analysis::analyze;
 use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::noc::topology::Topology;
+use wihetnoc::schedule::run_schedule;
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
-use wihetnoc::{ModelId, Platform, Scenario, WihetError};
+use wihetnoc::workload::lower_id;
+use wihetnoc::{MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError};
 
 fn run_platform(platform: Platform, model: ModelId, batch: usize) -> Result<(), WihetError> {
     let scenario = Scenario::new(platform, model).with_seed(7).with_batch(batch);
@@ -68,6 +70,25 @@ fn run_platform(platform: Platform, model: ModelId, batch: usize) -> Result<(), 
             rep.latency.mean(),
             rep.cpu_mc_latency.mean(),
             message_edp(&inst.topo, &rep, &energy),
+        );
+    }
+
+    // overlap microbatches on the same instances: a pipelined mapping
+    // plus a GPipe schedule turns the iteration into concurrent NoC
+    // phases (the schedule subsystem, end to end)
+    let mapping = MappingPolicy::LayerPipelined { stages: 2 };
+    let piped = lower_id(&scenario.model, &mapping, &sys, batch)?;
+    let gpipe = SchedulePolicy::GPipe { microbatches: 4 };
+    for (name, inst) in [("mesh", &mesh), ("wihetnoc", &inst)] {
+        let serial = run_schedule(&sys, inst, &piped, &SchedulePolicy::Serial, &tcfg)?;
+        let gp = run_schedule(&sys, inst, &piped, &gpipe, &tcfg)?;
+        println!(
+            "{name:<9} {gpipe} over {mapping}: makespan {} vs serial {} ({:.2}x) | bubble {:>5.1}% | peak link concurrency {}",
+            gp.makespan,
+            serial.makespan,
+            serial.makespan as f64 / gp.makespan.max(1) as f64,
+            100.0 * gp.bubble_fraction,
+            gp.peak_link_concurrency,
         );
     }
     Ok(())

@@ -12,6 +12,7 @@ use wihetnoc::coordinator::{TrainConfig, Trainer};
 use wihetnoc::model::lenet;
 use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::runtime::Runtime;
+use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::TraceConfig;
 use wihetnoc::Scenario;
 
@@ -54,7 +55,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let het = designer.clone().kind(NocKind::HetNoc).build()?;
     let wihet = designer.build()?;
     let tcfg = TraceConfig { scale: 0.1, ..Default::default() };
-    let rep = cosimulate(&sys, &spec, batch, &[&mesh, &het, &wihet], &tcfg)?;
+    let tm = model_phases(&sys, &spec, batch);
+    let rep = cosimulate(&sys, &tm, &[&mesh, &het, &wihet], &tcfg)?;
     println!("\n{:<10} {:>8} {:>8}   (normalized to mesh; paper: WiHetNoC 0.87 / 0.75)", "noc", "exec", "EDP");
     for (i, name) in ["mesh", "hetnoc", "wihetnoc"].iter().enumerate() {
         println!(

@@ -22,6 +22,7 @@ use wihetnoc::experiments::{self, Ctx, Effort};
 use wihetnoc::model::SystemConfig;
 use wihetnoc::noc::builder::{mesh_opt, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig, SimWorkspace};
+use wihetnoc::schedule::{expand, run_schedule, SchedulePolicy};
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
 use wihetnoc::util::exec::thread_count;
@@ -94,6 +95,54 @@ fn main() {
         );
     }
 
+    // --- schedule subsystem microbenches (ISSUE 4) ---
+    // timeline expansion: alexnet on the 144-tile chip, pipelined, 8
+    // microbatches — the DAG the gated simulator consumes
+    let tm_big = lower_id(
+        &alexnet,
+        &MappingPolicy::LayerPipelined { stages: 4 },
+        &big_sys,
+        32,
+    )
+    .expect("alexnet lowers on 12x12");
+    let gpipe8 = SchedulePolicy::GPipe { microbatches: 8 };
+    let n_inst = expand(&tm_big, &gpipe8).expect("timeline expands").instances.len();
+    b.bench_items(
+        &format!("schedule_expand/alexnet@12x12 gpipe:8 ({n_inst} instances)"),
+        Some(n_inst as f64),
+        &mut || {
+            std::hint::black_box(expand(&tm_big, &gpipe8).expect("expands").instances.len());
+        },
+    );
+    // gated concurrent simulation: lenet pipelined on the adaptive mesh,
+    // overlapping 4 microbatches — many flows in flight at once, the
+    // workload the PR 2 sim core was built for
+    let tm_piped = lower_id(
+        &ModelId::LeNet,
+        &MappingPolicy::LayerPipelined { stages: 2 },
+        &sys,
+        32,
+    )
+    .expect("lenet lowers");
+    let sched_cfg = TraceConfig { scale: 0.05, ..Default::default() };
+    let gpipe4 = SchedulePolicy::GPipe { microbatches: 4 };
+    let sched_pkts = run_schedule(&sys, &inst, &tm_piped, &gpipe4, &sched_cfg)
+        .expect("schedule runs")
+        .sim
+        .delivered_packets;
+    b.bench_items(
+        &format!("simcore/timeline gpipe:4 ({sched_pkts} pkts)"),
+        Some(sched_pkts as f64),
+        &mut || {
+            std::hint::black_box(
+                run_schedule(&sys, &inst, &tm_piped, &gpipe4, &sched_cfg)
+                    .expect("schedule runs")
+                    .sim
+                    .delivered_packets,
+            );
+        },
+    );
+
     // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
@@ -103,9 +152,21 @@ fn main() {
 
     for id in experiments::ALL {
         let mut report = String::new();
-        b.bench(&format!("experiment/{id}"), || {
-            report = experiments::run(id, &mut ctx).expect("experiment runs");
-        });
+        if *id == "workload_figs" {
+            // This harness builds its own Ctxs and AMOSA-designs two
+            // 144-tile NoCs per run — repeat samples would redo identical
+            // design work, so time a single pass (still recorded in
+            // BENCH_sim.json).
+            let mut once = Bencher { warmup: 0, samples: 1, results: Vec::new() };
+            once.bench(&format!("experiment/{id}"), || {
+                report = experiments::run(id, &mut ctx).expect("experiment runs");
+            });
+            b.results.append(&mut once.results);
+        } else {
+            b.bench(&format!("experiment/{id}"), || {
+                report = experiments::run(id, &mut ctx).expect("experiment runs");
+            });
+        }
         println!("\n{report}\n{}\n", "-".repeat(72));
     }
     println!("== done: {} experiments ==", experiments::ALL.len());

@@ -3,10 +3,11 @@
 //! same workload — the Fig 19 end-to-end loop.
 
 use crate::energy::params::EnergyParams;
-use crate::energy::system::{full_system_run, FullSystemReport, StallModel};
-use crate::model::SystemConfig;
+use crate::energy::system::{full_system_run_scheduled, FullSystemReport, StallModel};
 use crate::error::Result;
+use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
+use crate::schedule::SchedulePolicy;
 use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
 
@@ -43,12 +44,28 @@ pub fn cosimulate(
     nocs: &[&NocInstance],
     trace_cfg: &TraceConfig,
 ) -> Result<CosimReport> {
+    cosimulate_scheduled(sys, tm, &SchedulePolicy::Serial, nocs, trace_cfg)
+}
+
+/// [`cosimulate`] under a training-timeline schedule: `serial` is the
+/// legacy per-phase loop; `gpipe:M`/`1f1b:M` run each NoC's whole
+/// iteration as one gated concurrent simulation (see
+/// [`crate::schedule::run_schedule`]). NoCs still fan out over
+/// [`crate::util::exec::par_map`] workers with input-order results.
+pub fn cosimulate_scheduled(
+    sys: &SystemConfig,
+    tm: &TrafficModel,
+    schedule: &SchedulePolicy,
+    nocs: &[&NocInstance],
+    trace_cfg: &TraceConfig,
+) -> Result<CosimReport> {
     let energy = EnergyParams::default();
     let stall = StallModel::default();
-    let per_noc =
-        crate::util::exec::par_map(nocs, |_, inst| {
-            full_system_run(sys, inst, tm, trace_cfg, &energy, &stall)
-        });
+    let per_noc: Vec<_> = crate::util::exec::par_map(nocs, |_, inst| {
+        full_system_run_scheduled(sys, inst, tm, schedule, trace_cfg, &energy, &stall)
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
     Ok(CosimReport { per_noc })
 }
 

@@ -6,6 +6,6 @@ pub mod cosim;
 pub mod data;
 pub mod trainer;
 
-pub use cosim::{cosimulate, CosimReport};
+pub use cosim::{cosimulate, cosimulate_scheduled, CosimReport};
 pub use data::SyntheticDataset;
 pub use trainer::{TrainConfig, Trainer, TrainLog};

@@ -63,6 +63,9 @@ pub struct PhaseResult {
 pub struct FullSystemReport {
     pub noc: String,
     pub model: String,
+    /// Per-(layer x pass) results. Empty for scheduled (overlapping)
+    /// runs, where phases execute concurrently and only aggregate
+    /// network metrics are meaningful.
     pub per_phase: Vec<PhaseResult>,
     pub exec_cycles: f64,
     pub exec_seconds: f64,
@@ -71,6 +74,14 @@ pub struct FullSystemReport {
     pub total_j: f64,
     /// Full-system EDP in Joule-seconds.
     pub edp: f64,
+    /// The training-timeline schedule this run executed ("serial",
+    /// "gpipe:M", "1f1b:M").
+    pub schedule: String,
+    /// Pipeline idle share of the scheduled timeline (0.0 for serial).
+    pub bubble_fraction: f64,
+    /// Makespan speedup over the back-to-back serial reference (1.0 for
+    /// serial).
+    pub speedup_vs_serial: f64,
 }
 
 /// Run every phase of `tm` through the simulator on `inst` and assemble
@@ -162,7 +173,93 @@ pub fn full_system_run(
         core_j,
         total_j,
         edp: total_j * exec_seconds,
+        schedule: "serial".to_string(),
+        bubble_fraction: 0.0,
+        speedup_vs_serial: 1.0,
     }
+}
+
+/// Full-system run under a training-timeline schedule. `serial`
+/// delegates to [`full_system_run`] (byte-identical); overlapping
+/// schedules run the whole iteration as one gated concurrent simulation
+/// ([`crate::schedule::run_schedule`]) and derive system time and energy
+/// from the realized timeline:
+///
+/// * execution = realized makespan (rescaled to the full trace) plus the
+///   usual CPU/GPU stall terms from the aggregate round-trip latencies;
+/// * network energy from the aggregate simulation report;
+/// * core energy = idle/MC baseline over the makespan plus an
+///   (active - idle) increment over each instance's realized
+///   release->drain span, weighted by its participating tiles. Overlap
+///   shortens the idle baseline — that is where scheduled EDP wins come
+///   from.
+pub fn full_system_run_scheduled(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    schedule: &crate::schedule::SchedulePolicy,
+    trace_cfg: &TraceConfig,
+    energy: &EnergyParams,
+    stall: &StallModel,
+) -> crate::error::Result<FullSystemReport> {
+    if schedule.is_serial() {
+        return Ok(full_system_run(sys, inst, tm, trace_cfg, energy, stall));
+    }
+    let sr = crate::schedule::run_schedule(sys, inst, tm, schedule, trace_cfg)?;
+    let inv_scale = 1.0 / trace_cfg.scale;
+    let net_j = network_energy_pj(&inst.topo, &sr.sim, energy).total_pj() * inv_scale * 1e-12;
+
+    // stall terms from unscaled message counts and aggregate latencies
+    let lines = |b: u64| b.div_ceil(sys.line_bytes) as f64;
+    let (mut cpu_msgs, mut gpu_msgs) = (0.0f64, 0.0f64);
+    for p in &tm.phases {
+        cpu_msgs += lines(p.cpu_read_bytes) + lines(p.cpu_write_bytes);
+        gpu_msgs += lines(p.gpu_read_bytes) + lines(p.gpu_write_bytes);
+    }
+    let rt = 2.0;
+    let cpu_lat = sr.sim.cpu_mc_latency.mean();
+    let gpu_lat = sr.sim.gpu_mc_latency.mean();
+    let cpu_stall = cpu_msgs * rt * cpu_lat / (stall.cpu_mlp * sys.cpus().len().max(1) as f64);
+    let gpu_stall = gpu_msgs * rt * (gpu_lat - stall.gpu_hide_cycles).max(0.0)
+        / (stall.gpu_mlp * sys.gpus().len().max(1) as f64);
+    let exec_total = sr.makespan as f64 * inv_scale + cpu_stall + gpu_stall;
+    let exec_seconds = exec_total / sys.noc_clock_hz;
+
+    // core energy: idle/MC baseline over the makespan + active increments
+    // over the realized instance spans
+    let makespan_secs = sr.makespan as f64 * inv_scale / sys.noc_clock_hz;
+    let mut baseline_w = 0.0;
+    for t in &sys.tiles {
+        baseline_w += match t {
+            TileKind::Gpu => energy.gpu_idle_w,
+            TileKind::Cpu => energy.cpu_idle_w,
+            TileKind::Mc => energy.mc_active_w,
+        };
+    }
+    let cyc_to_secs = inv_scale / sys.noc_clock_hz;
+    let gpu_active_j =
+        sr.gpu_tile_busy_cycles as f64 * cyc_to_secs * (energy.gpu_active_w - energy.gpu_idle_w);
+    let cpu_active_j = sr.cpu_busy_cycles as f64
+        * cyc_to_secs
+        * sys.cpus().len() as f64
+        * (energy.cpu_active_w - energy.cpu_idle_w);
+    let core_j = baseline_w * makespan_secs + gpu_active_j + cpu_active_j;
+
+    let total_j = net_j + core_j;
+    Ok(FullSystemReport {
+        noc: inst.kind.as_str().to_string(),
+        model: tm.model.clone(),
+        per_phase: Vec::new(),
+        exec_cycles: exec_total,
+        exec_seconds,
+        network_j: net_j,
+        core_j,
+        total_j,
+        edp: total_j * exec_seconds,
+        schedule: schedule.to_string(),
+        bubble_fraction: sr.bubble_fraction,
+        speedup_vs_serial: sr.speedup_vs_serial,
+    })
 }
 
 #[cfg(test)]
@@ -197,6 +294,48 @@ mod tests {
         assert!((rep.edp - rep.total_j * rep.exec_seconds).abs() < 1e-15);
         // exec includes the compute model at minimum
         assert!(rep.exec_cycles >= tm.total_cycles() as f64 * 0.99);
+    }
+
+    #[test]
+    fn scheduled_run_overlaps_and_stays_consistent() {
+        use crate::schedule::SchedulePolicy;
+        use crate::workload::{lower_id, MappingPolicy};
+        use crate::ModelId;
+
+        let sys = SystemConfig::paper_8x8();
+        let tm = lower_id(
+            &ModelId::LeNet,
+            &MappingPolicy::LayerPipelined { stages: 2 },
+            &sys,
+            32,
+        )
+        .unwrap();
+        let inst = mesh_opt(&sys, true);
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let e = EnergyParams::default();
+        let s = StallModel::default();
+        let serial = full_system_run_scheduled(
+            &sys, &inst, &tm, &SchedulePolicy::Serial, &cfg, &e, &s,
+        )
+        .unwrap();
+        assert_eq!(serial.schedule, "serial");
+        assert!(serial.speedup_vs_serial == 1.0 && serial.bubble_fraction == 0.0);
+        let gp = full_system_run_scheduled(
+            &sys,
+            &inst,
+            &tm,
+            &SchedulePolicy::GPipe { microbatches: 4 },
+            &cfg,
+            &e,
+            &s,
+        )
+        .unwrap();
+        assert_eq!(gp.schedule, "gpipe:4");
+        assert!(gp.per_phase.is_empty());
+        assert!(gp.exec_seconds > 0.0 && gp.network_j > 0.0 && gp.core_j > 0.0);
+        assert!((gp.total_j - (gp.network_j + gp.core_j)).abs() < 1e-12);
+        assert!((gp.edp - gp.total_j * gp.exec_seconds).abs() < 1e-15);
+        assert!((0.0..=1.0).contains(&gp.bubble_fraction));
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::noc::topology::Topology;
 use crate::optim::placement::optimize_placement;
 use crate::optim::wiplace::build_wireless;
 use crate::scenario::{ModelId, Scenario, ScenarioKey};
+use crate::schedule::SchedulePolicy;
 use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
 use crate::util::exec::par_map;
@@ -52,6 +53,14 @@ pub struct Ctx {
     /// How workloads are laid out on the tiles (part of every traffic
     /// cache key). Private: fixed at construction like `batch`.
     mapping: MappingPolicy,
+    /// How the iteration's phases overlap in time. Lowered traffic is
+    /// schedule-independent (timeline expansion happens downstream), so
+    /// within one Ctx the schedule never splits the traffic cache — it
+    /// is carried into every [`ScenarioKey`] so keys derived here stay
+    /// faithful to the scenario (and future schedule-dependent cached
+    /// artifacts cannot alias). Private: fixed at construction like
+    /// `batch`.
+    schedule: SchedulePolicy,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     /// Shared handle — cloning it is pointer-cheap.
     pub sys: Arc<SystemConfig>,
@@ -76,6 +85,7 @@ impl Ctx {
             batch: 32,
             model: ModelId::LeNet,
             mapping: MappingPolicy::default(),
+            schedule: SchedulePolicy::default(),
             sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
@@ -91,10 +101,12 @@ impl Ctx {
     pub fn for_scenario(sc: &Scenario) -> Result<Ctx, WihetError> {
         let sys = sc.platform.build()?;
         sc.mapping.validate_for(&sys, sc.batch)?;
+        sc.schedule.validate_for(sc.batch)?;
         let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
         ctx.model = sc.model.clone();
         ctx.batch = sc.batch;
         ctx.mapping = sc.mapping;
+        ctx.schedule = sc.schedule;
         Ok(ctx)
     }
 
@@ -106,6 +118,11 @@ impl Ctx {
     /// The mapping policy every traffic model is lowered with.
     pub fn mapping(&self) -> MappingPolicy {
         self.mapping
+    }
+
+    /// The schedule the scenario's training timeline runs under.
+    pub fn schedule(&self) -> SchedulePolicy {
+        self.schedule
     }
 
     /// The batch size the traffic models are derived at.
@@ -153,7 +170,7 @@ impl Ctx {
     /// counts, so this holds for all internal callers; handing in an
     /// unrelated smaller chip is a caller bug and panics).
     pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
-        let key = ScenarioKey::with_mapping(model, sys, self.mapping);
+        let key = ScenarioKey::with_schedule(model, sys, self.mapping, self.schedule);
         if !self.traffic.contains_key(&key) {
             let tm = lower_id(&key.model, &self.mapping, sys, self.batch)
                 .expect("mapping validated at construction fits every Ctx-derived placement");

@@ -13,15 +13,18 @@ pub mod optim_figs; // fig8, fig9, fig10
 pub mod param_figs; // fig11, fig12, fig13
 pub mod wireless_figs; // fig14, fig15, fig16
 pub mod compare_figs; // fig17, fig18, fig19
+pub mod workload_figs; // non-paper workloads x schedules on 12x12
 
 pub use ctx::{Ctx, Effort};
 
 use crate::error::WihetError;
 
-/// All experiment ids in paper order.
+/// All experiment ids: the paper figures in paper order, then the
+/// non-paper extensions.
 pub const ALL: &[&str] = &[
     "table1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
+    "workload_figs",
 ];
 
 /// Dispatch one experiment by id; returns its printable report. Unknown
@@ -44,6 +47,7 @@ pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, WihetError> {
         "fig17" => Ok(compare_figs::fig17(ctx)),
         "fig18" => Ok(compare_figs::fig18(ctx)),
         "fig19" => Ok(compare_figs::fig19(ctx)),
+        "workload_figs" => Ok(workload_figs::workload_figs(ctx)),
         other => Err(WihetError::UnknownExperiment(other.to_string())),
     }
 }

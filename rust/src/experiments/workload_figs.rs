@@ -1,0 +1,133 @@
+//! Fig 17/19-style head-to-head promoted to **non-paper workloads**:
+//! mesh vs the hybrid WiHetNoC for `alexnet` and `vgg11` on a 144-tile
+//! chip (`12x12:cpus=8,mcs=8,placement=corners`), across training
+//! schedules (`serial`, `gpipe:8`, `1f1b:8`) under a `pipeline:4`
+//! mapping.
+//!
+//! This is the ROADMAP "promote more figures to non-paper workloads"
+//! item: every piece — DSL preset, mapping, lowering, AMOSA design,
+//! timeline expansion, gated concurrent simulation, energy/EDP — runs
+//! through the same pipeline as the paper figures, just on a chip and
+//! CNNs the paper never evaluated.
+//!
+//! Besides the printed table, the harness writes a machine-readable CSV
+//! (default `workload_figs.csv`, override with `WIHETNOC_WORKLOAD_CSV`;
+//! CI uploads it as an artifact).
+
+use super::ctx::Ctx;
+use crate::coordinator::cosim::cosimulate_scheduled;
+use crate::noc::builder::NocKind;
+use crate::scenario::{ModelId, Scenario};
+use crate::schedule::SchedulePolicy;
+use crate::workload::MappingPolicy;
+use crate::Platform;
+
+const PLATFORM: &str = "12x12:cpus=8,mcs=8,placement=corners";
+const BATCH: usize = 16;
+
+fn schedules() -> [SchedulePolicy; 3] {
+    [
+        SchedulePolicy::Serial,
+        SchedulePolicy::GPipe { microbatches: 8 },
+        SchedulePolicy::OneFOneB { microbatches: 8 },
+    ]
+}
+
+/// The workload comparison: one table row per (model, schedule), hybrid
+/// normalized to the mesh, plus the hybrid's timeline metrics.
+pub fn workload_figs(ctx: &mut Ctx) -> String {
+    let platform: Platform = PLATFORM.parse().expect("well-formed platform literal");
+    let mut out = format!(
+        "Workload figs — mesh vs WiHetNoC on {PLATFORM} (mapping pipeline:4, batch {BATCH})\n\
+         (fig17/fig19 methodology on non-paper workloads; schedules overlap microbatch phases)\n\n  \
+         model     schedule   exec(hyb/mesh)  EDP(hyb/mesh)  bubble  speedup-vs-serial\n"
+    );
+    let mut csv = String::from(
+        "model,schedule,noc,exec_seconds,edp_js,bubble_fraction,speedup_vs_serial\n",
+    );
+    for name in ["alexnet", "vgg11"] {
+        let model: ModelId = name.parse().expect("preset exists");
+        let sc = Scenario::new(platform, model.clone())
+            .with_mapping(MappingPolicy::LayerPipelined { stages: 4 })
+            .with_effort(ctx.effort)
+            .with_seed(ctx.seed)
+            .with_batch(BATCH);
+        let mut wctx = Ctx::for_scenario(&sc).expect("scenario is valid");
+        let mesh = wctx.instance_arc(NocKind::MeshXyYx);
+        let wihet = wctx.instance_arc(NocKind::WiHetNoc);
+        let mesh_sys = wctx.sys_for(NocKind::MeshXyYx);
+        let sys = wctx.sys.clone();
+        let mesh_tm = wctx.traffic_on(model.clone(), &mesh_sys);
+        let tm = wctx.traffic_on(model.clone(), &sys);
+        let mut cfg = wctx.trace_cfg();
+        // heavy workloads on a 144-tile chip: keep the smoke budget small
+        cfg.scale = cfg.scale.min(0.01);
+        for sched in schedules() {
+            let m = cosimulate_scheduled(&mesh_sys, &mesh_tm, &sched, &[&mesh], &cfg)
+                .expect("mesh cosimulation runs");
+            let h = cosimulate_scheduled(&sys, &tm, &sched, &[&wihet], &cfg)
+                .expect("wihetnoc cosimulation runs");
+            let (m, h) = (&m.per_noc[0], &h.per_noc[0]);
+            out.push_str(&format!(
+                "  {:<9} {:<10} {:>12.3}  {:>13.3}  {:>6.3}  {:>17.3}\n",
+                name,
+                sched.to_string(),
+                h.exec_seconds / m.exec_seconds,
+                h.edp / m.edp,
+                h.bubble_fraction,
+                h.speedup_vs_serial,
+            ));
+            for rep in [m, h] {
+                csv.push_str(&format!(
+                    "{},{},{},{:.6e},{:.6e},{:.4},{:.4}\n",
+                    name,
+                    sched,
+                    rep.noc,
+                    rep.exec_seconds,
+                    rep.edp,
+                    rep.bubble_fraction,
+                    rep.speedup_vs_serial,
+                ));
+            }
+        }
+    }
+    let path = std::env::var("WIHETNOC_WORKLOAD_CSV")
+        .unwrap_or_else(|_| "workload_figs.csv".to_string());
+    match std::fs::write(&path, &csv) {
+        Ok(()) => out.push_str(&format!("\n(wrote {path})\n")),
+        Err(e) => out.push_str(&format!("\n(could not write {path}: {e})\n")),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ctx::Effort;
+
+    /// The full harness designs two 144-tile NoCs — exercised by the CI
+    /// bench job. Here: one model, one overlapped schedule, on the cheap
+    /// mesh baseline only, end to end through the cosim layer.
+    #[test]
+    fn scheduled_cosim_on_12x12_smoke() {
+        let platform: Platform = PLATFORM.parse().unwrap();
+        let model: ModelId = "alexnet".parse().unwrap();
+        let sc = Scenario::new(platform, model.clone())
+            .with_mapping(MappingPolicy::LayerPipelined { stages: 4 })
+            .with_effort(Effort::Quick)
+            .with_seed(7)
+            .with_batch(BATCH);
+        let mut wctx = Ctx::for_scenario(&sc).unwrap();
+        let mesh = wctx.instance_arc(NocKind::MeshXyYx);
+        let mesh_sys = wctx.sys_for(NocKind::MeshXyYx);
+        let tm = wctx.traffic_on(model, &mesh_sys);
+        let mut cfg = wctx.trace_cfg();
+        cfg.scale = 0.002;
+        let sched = SchedulePolicy::GPipe { microbatches: 8 };
+        let rep = cosimulate_scheduled(&mesh_sys, &tm, &sched, &[&mesh], &cfg).unwrap();
+        let r = &rep.per_noc[0];
+        assert_eq!(r.schedule, "gpipe:8");
+        assert!(r.exec_seconds > 0.0 && r.edp > 0.0);
+        assert!((0.0..=1.0).contains(&r.bubble_fraction));
+    }
+}

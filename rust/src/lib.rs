@@ -17,8 +17,10 @@
 //!   `alexnet`, `vgg11`, `resnet-lite`) or any CNN written in the
 //!   [`workload`] architecture DSL (`"conv:5x5x20 pool:2 ... dense:10"`),
 //!   mapped onto the tiles by a [`MappingPolicy`] (data-parallel
-//!   replicas or pipelined layer stages) and lowered to NoC traffic by
-//!   [`workload::lower`].
+//!   replicas or pipelined layer stages), lowered to NoC traffic by
+//!   [`workload::lower`], and laid out in time by a [`SchedulePolicy`]
+//!   (`serial`, `gpipe:M`, `1f1b:M` — overlapping microbatch phases
+//!   simulated concurrently by [`schedule::run_schedule`]).
 //! * [`Scenario`] — *what experiment*: platform + workload + mapping +
 //!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch. The
 //!   single input to design, simulation, and the experiment harnesses.
@@ -68,6 +70,7 @@ pub mod noc;
 pub mod optim;
 pub mod runtime;
 pub mod scenario;
+pub mod schedule;
 pub mod traffic;
 pub mod util;
 pub mod workload;
@@ -75,4 +78,5 @@ pub mod workload;
 pub use error::WihetError;
 pub use model::{Platform, PlacementPolicy};
 pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};
+pub use schedule::SchedulePolicy;
 pub use workload::{ArchSpec, MappingPolicy};

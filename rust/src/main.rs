@@ -22,8 +22,9 @@ use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
+use wihetnoc::schedule::run_schedule;
 use wihetnoc::workload::preset_names;
-use wihetnoc::{MappingPolicy, ModelId, Platform, Scenario, WihetError};
+use wihetnoc::{MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -97,6 +98,15 @@ fn mapping_spec() -> ArgSpec {
     }
 }
 
+fn schedule_spec() -> ArgSpec {
+    ArgSpec {
+        name: "schedule",
+        help: "serial|gpipe:M|1f1b:M — microbatch overlap of the training timeline",
+        default: Some("serial"),
+        is_flag: false,
+    }
+}
+
 fn str_err(e: WihetError) -> String {
     e.to_string()
 }
@@ -107,10 +117,13 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     let model: ModelId = args.get_or("model", "lenet").parse().map_err(str_err)?;
     let mapping: MappingPolicy =
         args.get_or("mapping", "data:1").parse().map_err(str_err)?;
+    let schedule: SchedulePolicy =
+        args.get_or("schedule", "serial").parse().map_err(str_err)?;
     let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     let seed = args.get_u64("seed", 42)?;
     Ok(Scenario::new(platform, model)
         .with_mapping(mapping)
+        .with_schedule(schedule)
         .with_effort(effort)
         .with_seed(seed))
 }
@@ -266,6 +279,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         system_spec(),
         model_spec(),
         mapping_spec(),
+        schedule_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -283,6 +297,32 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let tm = ctx.traffic_on(scenario.model.clone(), &sys);
     let mut cfg = ctx.trace_cfg();
     cfg.scale = args.get_f64("scale", 0.05)?;
+    if !scenario.schedule.is_serial() {
+        // overlapping schedule: expand the timeline and run the gated
+        // concurrent simulation
+        println!(
+            "simulating {noc} on {} ({}, mapping {}, schedule {}) ...",
+            scenario.model, scenario.platform, scenario.mapping, scenario.schedule
+        );
+        let t0 = std::time::Instant::now();
+        let sr = run_schedule(&sys, &inst, &tm, &scenario.schedule, &cfg).map_err(str_err)?;
+        println!(
+            "{} packets in {:.2}s wall | {} instances over {} stages | makespan {} cyc (speedup {:.2}x vs serial) | bubble {:.1}% | peak link concurrency {} | latency mean {:.2} | cpu-mc {:.2} | wireless {:.1}% (fallbacks {})",
+            sr.sim.delivered_packets,
+            t0.elapsed().as_secs_f64(),
+            sr.instances,
+            sr.num_stages,
+            sr.makespan,
+            sr.speedup_vs_serial,
+            100.0 * sr.bubble_fraction,
+            sr.peak_link_concurrency,
+            sr.sim.latency.mean(),
+            sr.sim.cpu_mc_latency.mean(),
+            100.0 * sr.sim.wireless_utilization(),
+            sr.sim.air_fallbacks,
+        );
+        return Ok(());
+    }
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     println!(
         "simulating {noc} on {} ({}, mapping {}): {} messages ...",
@@ -318,7 +358,7 @@ fn cmd_list(argv: &[String]) -> Result<(), String> {
     let args = parse(argv, &specs)?;
     println!("experiments: {}", experiments::ALL.join(", "));
     println!(
-        "models: {} — or any workload-DSL spec | mappings: data[:replicas], pipeline[:stages] | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc",
+        "models: {} — or any workload-DSL spec | mappings: data[:replicas], pipeline[:stages] | schedules: serial, gpipe:M, 1f1b:M | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc",
         preset_names().join(", ")
     );
     match Runtime::new(args.get_or("artifacts", "artifacts")) {

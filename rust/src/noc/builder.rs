@@ -330,9 +330,13 @@ impl NocDesigner {
     /// Designer for a full scenario: builds the platform, lowers the CNN
     /// workload (preset or DSL spec, under the scenario's mapping policy)
     /// to training traffic at the scenario's batch size, and scales the
-    /// design knobs to the platform.
+    /// design knobs to the platform. The design input is the aggregate
+    /// `fij` over the whole iteration, which every schedule conserves
+    /// exactly — so the scenario's schedule is validated here but does
+    /// not change the designed topology.
     pub fn for_scenario(sc: &Scenario) -> Result<Self, WihetError> {
         let sys = sc.platform.build()?;
+        sc.schedule.validate_for(sc.batch)?;
         let fij =
             crate::workload::lower_id(&sc.model, &sc.mapping, &sys, sc.batch)?.fij(&sys);
         let cfg = DesignConfig::scaled(&sys, sc.effort, sc.seed);

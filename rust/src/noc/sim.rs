@@ -41,6 +41,18 @@
 //! * In-flight message state is stored as structure-of-arrays, and the
 //!   CPU/GPU↔MC pair classification is a precomputed per-(src,dst)
 //!   table instead of a per-delivery match over tile kinds.
+//!
+//! ## Timelines (§Schedules)
+//!
+//! [`NocSim::run_timeline`] runs a *gated* trace: messages are grouped
+//! into phase instances, each group's `inject_at` is relative to its
+//! release, and a group is released the cycle its last predecessor
+//! group **drains** (every message, including spawned replies,
+//! tail-delivered). This is what lets overlapping microbatch schedules
+//! (`crate::schedule`) inject several training phases concurrently while
+//! precedence edges hold back the rest. The plain [`NocSim::run`] path is
+//! the single-group, zero-predecessor case of the same event loop, so
+//! reports are byte-identical to the pre-timeline simulator.
 
 use std::cell::RefCell;
 use std::cmp::Reverse;
@@ -153,6 +165,26 @@ impl SimReport {
     pub fn wireless_utilization(&self) -> f64 {
         self.air_packets as f64 / self.delivered_packets.max(1) as f64
     }
+}
+
+/// Per-group results of a gated timeline run ([`NocSim::run_timeline`]).
+///
+/// `release[g]`/`drain[g]` are [`u64::MAX`] for groups the run never
+/// reached (a horizon cut upstream of them, or predecessor indices that
+/// form a cycle — the `crate::schedule` expander only emits DAGs).
+#[derive(Debug, Clone, Default)]
+pub struct TimelineOutcome {
+    /// Aggregate simulation report over every released group.
+    pub report: SimReport,
+    /// Cycle each group's messages were injected (predecessors drained).
+    pub release: Vec<u64>,
+    /// Cycle each group drained: its last message (including spawned
+    /// replies) tail-delivered.
+    pub drain: Vec<u64>,
+    /// Flits each group pushed over each wireline link, group-major
+    /// (`group * num_links + link`) — the input to per-link concurrency
+    /// metrics.
+    pub group_link_flits: Vec<u64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -409,6 +441,10 @@ struct Flights {
     class: Vec<MsgClass>,
     inject_at: Vec<u64>,
     route: Vec<RouteRef>,
+    /// Timeline group (phase instance) the message belongs to; spawned
+    /// responses inherit the group of their request. Always 0 for plain
+    /// (single-group) runs.
+    group: Vec<u32>,
 }
 
 impl Flights {
@@ -419,13 +455,14 @@ impl Flights {
         self.class.clear();
         self.inject_at.clear();
         self.route.clear();
+        self.group.clear();
     }
 
     fn len(&self) -> usize {
         self.src.len()
     }
 
-    fn push(&mut self, m: &Message) -> u32 {
+    fn push(&mut self, m: &Message, group: u32) -> u32 {
         let idx = self.src.len() as u32;
         self.src.push(m.src as u32);
         self.dst.push(m.dst as u32);
@@ -433,6 +470,7 @@ impl Flights {
         self.class.push(m.class);
         self.inject_at.push(m.inject_at);
         self.route.push(RouteRef { src: m.src as u32, dst: m.dst as u32, idx: 0 });
+        self.group.push(group);
         idx
     }
 }
@@ -457,6 +495,18 @@ pub struct SimWorkspace {
     pair_kind: Vec<u8>,
     pair_n: usize,
     pair_sig: u64,
+    /// §Schedules: per-group gating state for `run_gated`, kept here so
+    /// the plain `run_in` path (one group) stays allocation-free across
+    /// runs. `tl_release`/`tl_drain`/`tl_group_link_flits` double as the
+    /// source of [`TimelineOutcome`] after a timeline run.
+    tl_release: Vec<u64>,
+    tl_drain: Vec<u64>,
+    tl_remaining: Vec<u64>,
+    tl_done: Vec<u64>,
+    tl_indeg: Vec<u32>,
+    tl_succs: Vec<Vec<u32>>,
+    tl_work: Vec<u32>,
+    tl_group_link_flits: Vec<u64>,
 }
 
 impl SimWorkspace {
@@ -513,6 +563,54 @@ fn tiles_signature(sys: &SystemConfig) -> u64 {
     h
 }
 
+/// Release the groups seeded into `work` at cycle `now`: push their
+/// messages (offsets become absolute injection times) and cascade
+/// through empty groups, which drain on the spot and may unlock
+/// successors in turn. Worklist order is deterministic (discovery
+/// order), so same-cycle injections keep a reproducible queue order.
+/// `work` is a reusable buffer; it is drained and cleared.
+#[allow(clippy::too_many_arguments)]
+fn release_groups(
+    now: u64,
+    groups: &[&[Message]],
+    succs: &[Vec<u32>],
+    q: &mut CalendarQueue,
+    fl: &mut Flights,
+    release: &mut [u64],
+    drain: &mut [u64],
+    remaining: &mut [u64],
+    indeg: &mut [u32],
+    not_released: &mut u64,
+    work: &mut Vec<u32>,
+) {
+    let mut wi = 0;
+    while wi < work.len() {
+        let g = work[wi] as usize;
+        wi += 1;
+        release[g] = now;
+        let msgs = groups[g];
+        *not_released -= msgs.len() as u64;
+        remaining[g] = msgs.len() as u64;
+        for m in msgs {
+            // inject_at is release-relative; store it absolute so latency
+            // accounting sees real injection times
+            let abs = Message { inject_at: now + m.inject_at, ..*m };
+            let idx = fl.push(&abs, g as u32);
+            q.push(abs.inject_at, Event::Inject(idx));
+        }
+        if remaining[g] == 0 {
+            drain[g] = now;
+            for &s in &succs[g] {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    work.push(s);
+                }
+            }
+        }
+    }
+    work.clear();
+}
+
 thread_local! {
     /// Workspace behind [`NocSim::run`]: every run on this thread reuses
     /// one arena, so sweeps allocate nothing per run even through the
@@ -550,10 +648,54 @@ impl<'a> NocSim<'a> {
     /// Run the trace using an explicit, reusable workspace. The result is
     /// identical whatever the workspace previously simulated.
     pub fn run_in(&self, trace: &[Message], ws: &mut SimWorkspace) -> SimReport {
+        self.run_gated(&[trace], None, ws)
+    }
+
+    /// Run a gated timeline, reusing this thread's workspace: one message
+    /// group per phase instance, `inject_at` relative to the group's
+    /// release cycle, `preds[g]` the groups whose traffic must fully
+    /// drain before group `g` is released. Groups with no predecessors
+    /// release at cycle 0; everything else starts the cycle its last
+    /// predecessor's tail flit is delivered. See [`TimelineOutcome`].
+    pub fn run_timeline(&self, groups: &[Vec<Message>], preds: &[Vec<u32>]) -> TimelineOutcome {
+        TLS_WORKSPACE.with(|ws| self.run_timeline_in(groups, preds, &mut ws.borrow_mut()))
+    }
+
+    /// [`NocSim::run_timeline`] with an explicit, reusable workspace.
+    pub fn run_timeline_in(
+        &self,
+        groups: &[Vec<Message>],
+        preds: &[Vec<u32>],
+        ws: &mut SimWorkspace,
+    ) -> TimelineOutcome {
+        assert_eq!(groups.len(), preds.len(), "one predecessor list per group");
+        let refs: Vec<&[Message]> = groups.iter().map(|g| g.as_slice()).collect();
+        let report = self.run_gated(&refs, Some(preds), ws);
+        TimelineOutcome {
+            report,
+            release: ws.tl_release.clone(),
+            drain: ws.tl_drain.clone(),
+            group_link_flits: ws.tl_group_link_flits.clone(),
+        }
+    }
+
+    /// The event loop behind both [`NocSim::run_in`] (one group, no
+    /// gating, offsets are absolute times) and
+    /// [`NocSim::run_timeline_in`]. Per-group gating state lives in the
+    /// workspace (sized to the group count per run), so the plain path
+    /// keeps the workspace's allocation-free guarantee.
+    fn run_gated(
+        &self,
+        groups: &[&[Message]],
+        preds: Option<&[Vec<u32>]>,
+        ws: &mut SimWorkspace,
+    ) -> SimReport {
         let nl = self.topo.links.len();
         let nch = self.air.num_channels.max(1);
         let n = self.sys.num_tiles();
         ws.prepare(self.sys, nl, nch);
+        let ng = groups.len();
+        let gated = preds.is_some();
         let mut report = SimReport {
             link_busy: vec![0; nl],
             link_flits: vec![0; nl],
@@ -568,19 +710,78 @@ impl<'a> NocSim<'a> {
             link_busy_until,
             chan_busy_until,
             pair_kind,
+            tl_release: release,
+            tl_drain: drain,
+            tl_remaining: remaining,
+            tl_done: group_done,
+            tl_indeg: indeg,
+            tl_succs: succs,
+            tl_work: work,
+            tl_group_link_flits: group_link_flits,
             ..
         } = ws;
         let q = queue.as_mut().expect("prepare() primed the queue");
 
-        for m in trace {
-            let idx = fl.push(m);
-            q.push(m.inject_at, Event::Inject(idx));
+        // Gating state (workspace-backed). For the plain path this is one
+        // group with no successors: it releases at cycle 0 (reproducing
+        // the old push-everything-up-front prologue exactly) and its
+        // drain bookkeeping never triggers anything. `remaining` counts
+        // undelivered messages per group; `group_done` tracks the latest
+        // tail-delivery cycle (a later event can carry an earlier tail
+        // than a long message before it).
+        release.clear();
+        release.resize(ng, u64::MAX);
+        drain.clear();
+        drain.resize(ng, u64::MAX);
+        remaining.clear();
+        remaining.resize(ng, 0);
+        group_done.clear();
+        group_done.resize(ng, 0);
+        indeg.clear();
+        indeg.resize(ng, 0);
+        if succs.len() < ng {
+            succs.resize_with(ng, Vec::new);
         }
+        for s in succs.iter_mut().take(ng) {
+            s.clear();
+        }
+        group_link_flits.clear();
+        if gated {
+            group_link_flits.resize(ng * nl, 0);
+        }
+        if let Some(preds) = preds {
+            for (g, ps) in preds.iter().enumerate() {
+                indeg[g] = ps.len() as u32;
+                for &p in ps {
+                    assert!((p as usize) < ng, "predecessor {p} out of range");
+                    succs[p as usize].push(g as u32);
+                }
+            }
+        }
+        let mut not_released: u64 = groups.iter().map(|g| g.len() as u64).sum();
+
+        work.clear();
+        for g in 0..ng {
+            if indeg[g] == 0 {
+                work.push(g as u32);
+            }
+        }
+        release_groups(
+            0,
+            groups,
+            succs,
+            q,
+            fl,
+            release,
+            drain,
+            remaining,
+            indeg,
+            &mut not_released,
+            work,
+        );
 
         while let Some((t, ev)) = q.pop() {
             if self.cfg.horizon > 0 && t > self.cfg.horizon {
-                // Count undelivered *messages*, not queued events.
-                report.undelivered = fl.len() as u64 - report.delivered_packets;
                 break;
             }
             match ev {
@@ -621,6 +822,9 @@ impl<'a> NocSim<'a> {
                             link_busy_until[link] = start + flits;
                             report.link_busy[link] += flits;
                             report.link_flits[link] += flits;
+                            if gated {
+                                group_link_flits[fl.group[i] as usize * nl + link] += flits;
+                            }
                             let arrive = start + self.topo.links[link].delay_cycles;
                             let ev = if hop == last {
                                 Event::Deliver { idx }
@@ -696,6 +900,11 @@ impl<'a> NocSim<'a> {
                     if done > report.cycles {
                         report.cycles = done;
                     }
+                    let g = fl.group[i] as usize;
+                    remaining[g] -= 1;
+                    if done > group_done[g] {
+                        group_done[g] = done;
+                    }
                     if let Some(resp) = fl.class[i].spawns_response() {
                         let rflits = match resp {
                             MsgClass::ReadReply => self.cfg.line_flits,
@@ -708,12 +917,47 @@ impl<'a> NocSim<'a> {
                             class: resp,
                             inject_at: done + self.cfg.mc_service_cycles,
                         };
-                        let ridx = fl.push(&r);
+                        remaining[g] += 1;
+                        let ridx = fl.push(&r, g as u32);
                         q.push(r.inject_at, Event::Inject(ridx));
+                    }
+                    if remaining[g] == 0 {
+                        // group drained at its latest tail-delivery cycle
+                        let drained_at = group_done[g];
+                        drain[g] = drained_at;
+                        if gated && !succs[g].is_empty() {
+                            work.clear();
+                            for &s in &succs[g] {
+                                indeg[s as usize] -= 1;
+                                if indeg[s as usize] == 0 {
+                                    work.push(s);
+                                }
+                            }
+                            if !work.is_empty() {
+                                release_groups(
+                                    drained_at,
+                                    groups,
+                                    succs,
+                                    q,
+                                    fl,
+                                    release,
+                                    drain,
+                                    remaining,
+                                    indeg,
+                                    &mut not_released,
+                                    work,
+                                );
+                            }
+                        }
                     }
                 }
             }
         }
+        // Count undelivered *messages*, not queued events — in-flight
+        // ones a horizon cut stranded, plus messages of groups never
+        // released (gated behind the cut, or behind a caller-supplied
+        // predecessor cycle). Zero when the run completed.
+        report.undelivered = fl.len() as u64 - report.delivered_packets + not_released;
         report
     }
 
@@ -1017,6 +1261,93 @@ mod tests {
             got,
             vec![(0, 3), (0, 9), (5, 0), (5, 2), (far_t, 1), (far_t, 4), (far_t + 1, 5)]
         );
+    }
+
+    #[test]
+    fn timeline_single_group_matches_plain_run() {
+        // run() is the one-group case of the gated loop: reports agree.
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let tr: Vec<Message> = (0..120)
+            .map(|i| Message {
+                src: (i * 7) % 64,
+                dst: (i * 19 + 3) % 64,
+                flits: 1 + (i % 4) as u64,
+                class: if i % 3 == 0 { MsgClass::ReadReq } else { MsgClass::Control },
+                inject_at: (i / 2) as u64,
+            })
+            .filter(|m| m.src != m.dst)
+            .collect();
+        let plain = sim.run(&tr);
+        let out = sim.run_timeline(&[tr.clone()], &[Vec::new()]);
+        assert_eq!(plain.latency.sum, out.report.latency.sum);
+        assert_eq!(plain.delivered_flits, out.report.delivered_flits);
+        assert_eq!(plain.link_busy, out.report.link_busy);
+        assert_eq!(plain.cycles, out.report.cycles);
+        assert_eq!(out.release, vec![0]);
+        assert_eq!(out.drain, vec![plain.cycles]);
+    }
+
+    #[test]
+    fn timeline_gates_on_predecessor_drain() {
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let msg = |src, dst, flits| Message { src, dst, flits, class: MsgClass::Control, inject_at: 0 };
+        // group 0: a slow 40-flit packet; group 1 gated behind it; group 2
+        // free-running concurrently with group 0.
+        let groups = vec![vec![msg(0, 1, 40)], vec![msg(0, 1, 1)], vec![msg(62, 63, 1)]];
+        let preds = vec![Vec::new(), vec![0u32], Vec::new()];
+        let out = sim.run_timeline(&groups, &preds);
+        assert_eq!(out.report.delivered_packets, 3);
+        assert_eq!(out.release[0], 0);
+        assert_eq!(out.release[2], 0);
+        // group 0 drains at its tail delivery; group 1 releases right there
+        assert_eq!(out.release[1], out.drain[0]);
+        assert!(out.drain[1] > out.drain[0]);
+        // concurrency accounting: groups 0 and 1 share the 0->1 link,
+        // group 2 does not touch it
+        let nl = topo.links.len();
+        let used: Vec<usize> = (0..nl).filter(|&l| out.group_link_flits[l] > 0).collect();
+        for &l in &used {
+            assert_eq!(out.group_link_flits[2 * nl + l], 0, "group 2 on group 0's link");
+        }
+    }
+
+    #[test]
+    fn timeline_empty_groups_cascade() {
+        // an empty group drains at release and unlocks its successors
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let m = Message { src: 0, dst: 1, flits: 2, class: MsgClass::Control, inject_at: 5 };
+        let groups = vec![Vec::new(), Vec::new(), vec![m]];
+        let preds = vec![Vec::new(), vec![0u32], vec![1u32]];
+        let out = sim.run_timeline(&groups, &preds);
+        assert_eq!(out.release, vec![0, 0, 0]);
+        assert_eq!(out.report.delivered_packets, 1);
+        // offsets are release-relative: injected at 0 + 5
+        assert_eq!(out.report.latency.count, 1);
+        assert!(out.drain[2] >= 5);
+    }
+
+    #[test]
+    fn timeline_horizon_counts_unreleased_messages() {
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let cfg = SimConfig { horizon: 10, ..SimConfig::default() };
+        let sim = NocSim::new(&sys, &topo, &rs, &air, cfg);
+        let slow = Message { src: 0, dst: 63, flits: 60, class: MsgClass::Control, inject_at: 0 };
+        let late = Message { src: 5, dst: 6, flits: 1, class: MsgClass::Control, inject_at: 0 };
+        let groups = vec![vec![slow], vec![late, late]];
+        let preds = vec![Vec::new(), vec![0u32]];
+        let out = sim.run_timeline(&groups, &preds);
+        // the gated group never released: its 2 messages count undelivered
+        assert_eq!(out.report.delivered_packets, 0);
+        assert_eq!(out.report.undelivered, 3);
+        assert_eq!(out.release[1], u64::MAX);
+        assert_eq!(out.drain[1], u64::MAX);
     }
 
     #[test]

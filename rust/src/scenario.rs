@@ -19,6 +19,7 @@ use crate::model::cnn::{cdbnet, lenet, ModelSpec};
 use crate::model::platform::Platform;
 use crate::model::SystemConfig;
 use crate::noc::builder::NocKind;
+use crate::schedule::SchedulePolicy;
 use crate::workload::{preset, ArchSpec, MappingPolicy};
 
 /// A CNN workload: one of the named presets, or a custom architecture
@@ -179,6 +180,9 @@ pub struct Scenario {
     pub model: ModelId,
     /// How the workload's layers are laid out on the platform's tiles.
     pub mapping: MappingPolicy,
+    /// How the iteration's phases are laid out in time (serial, or
+    /// overlapping microbatch schedules — see [`SchedulePolicy`]).
+    pub schedule: SchedulePolicy,
     pub noc: NocKind,
     pub effort: Effort,
     pub seed: u64,
@@ -188,12 +192,13 @@ pub struct Scenario {
 
 impl Scenario {
     /// A scenario with the crate defaults: identity mapping (`data:1`),
-    /// WiHetNoC, quick effort, seed 42, batch 32.
+    /// serial schedule, WiHetNoC, quick effort, seed 42, batch 32.
     pub fn new(platform: Platform, model: ModelId) -> Self {
         Scenario {
             platform,
             model,
             mapping: MappingPolicy::default(),
+            schedule: SchedulePolicy::default(),
             noc: NocKind::WiHetNoc,
             effort: Effort::Quick,
             seed: 42,
@@ -208,6 +213,11 @@ impl Scenario {
 
     pub fn with_mapping(mut self, mapping: MappingPolicy) -> Self {
         self.mapping = mapping;
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: SchedulePolicy) -> Self {
+        self.schedule = schedule;
         self
     }
 
@@ -237,11 +247,11 @@ impl Scenario {
     }
 }
 
-/// Typed cache key: a workload, mapped one way, on one concrete tile
-/// placement. Two placements that happen to share a human-readable tag
-/// hash differently, which is what makes [`crate::experiments::Ctx`]'s
-/// traffic cache safe; two mappings of the same workload never alias
-/// either.
+/// Typed cache key: a workload, mapped one way, scheduled one way, on
+/// one concrete tile placement. Two placements that happen to share a
+/// human-readable tag hash differently, which is what makes
+/// [`crate::experiments::Ctx`]'s traffic cache safe; two mappings — or
+/// two schedules — of the same workload never alias either.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ScenarioKey {
     pub model: ModelId,
@@ -249,6 +259,7 @@ pub struct ScenarioKey {
     /// [`SystemConfig::placement_key`]).
     pub placement: u64,
     pub mapping: MappingPolicy,
+    pub schedule: SchedulePolicy,
 }
 
 impl ScenarioKey {
@@ -257,7 +268,16 @@ impl ScenarioKey {
     }
 
     pub fn with_mapping(model: ModelId, sys: &SystemConfig, mapping: MappingPolicy) -> Self {
-        ScenarioKey { model, placement: sys.placement_key(), mapping }
+        ScenarioKey::with_schedule(model, sys, mapping, SchedulePolicy::default())
+    }
+
+    pub fn with_schedule(
+        model: ModelId,
+        sys: &SystemConfig,
+        mapping: MappingPolicy,
+        schedule: SchedulePolicy,
+    ) -> Self {
+        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule }
     }
 }
 
@@ -343,9 +363,24 @@ mod tests {
             &sys,
             MappingPolicy::DataParallel { replicas: 4 },
         );
+        let e = ScenarioKey::with_schedule(
+            ModelId::LeNet,
+            &sys,
+            MappingPolicy::default(),
+            SchedulePolicy::GPipe { microbatches: 4 },
+        );
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d, "mapping must be part of the key");
+        assert_ne!(a, e, "schedule must be part of the key");
         assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
+    }
+
+    #[test]
+    fn scenario_carries_a_schedule() {
+        let sc = Scenario::paper();
+        assert!(sc.schedule.is_serial());
+        let sc = sc.with_schedule(SchedulePolicy::OneFOneB { microbatches: 8 });
+        assert_eq!(sc.schedule, SchedulePolicy::OneFOneB { microbatches: 8 });
     }
 }

@@ -1,0 +1,43 @@
+//! The schedule subsystem: training timelines with overlapping
+//! microbatch phases.
+//!
+//! The workload subsystem (`crate::workload`) decides *where* a CNN's
+//! layers compute and how many bytes each phase moves; until this module
+//! existed, the simulator then executed those phases strictly one at a
+//! time. Real training pipelines overlap them: with the batch split into
+//! `M` microbatches, several phase instances are in flight at once and
+//! pipeline *bubbles* trade off against NoC *contention* — the
+//! interaction this subsystem makes simulatable:
+//!
+//! ```text
+//!   TrafficModel phases              (workload::lower)
+//!      │  SchedulePolicy: serial | gpipe:M | 1f1b:M     (schedule::policy)
+//!      ▼
+//!   TrainingTimeline                 (schedule::timeline)
+//!      │  DAG of PhaseInstances (phase x microbatch) with
+//!      │  data + per-stage resource precedence edges;
+//!      │  exact volume partition (conservation law)
+//!      ▼
+//!   gated concurrent simulation      (noc::sim::NocSim::run_timeline)
+//!      │  an instance injects the cycle its predecessors drain
+//!      ▼
+//!   ScheduleReport                   (schedule::run)
+//!      makespan, speedup vs serial, bubble_fraction,
+//!      per-link peak concurrency
+//! ```
+//!
+//! `serial` is the legacy behaviour and produces byte-identical
+//! [`crate::noc::sim::SimReport`]s (pinned by `tests/schedule_sim.rs`);
+//! `gpipe:M`/`1f1b:M` move exactly the same bytes (prefix-difference
+//! microbatch partition) on a different timeline. Entry points: parse a
+//! [`SchedulePolicy`] (`Scenario::with_schedule`, CLI `--schedule`), then
+//! [`run_schedule`] — or [`expand`] + [`timeline_groups`] +
+//! [`crate::noc::sim::NocSim::run_timeline`] for custom harnesses.
+
+pub mod policy;
+pub mod run;
+pub mod timeline;
+
+pub use policy::{SchedulePolicy, GRAMMAR};
+pub use run::{run_schedule, timeline_groups, ScheduleReport};
+pub use timeline::{count_stages, expand, PhaseInstance, TrainingTimeline};

@@ -1,0 +1,178 @@
+//! Schedule policies: how one training iteration's phases overlap in
+//! time.
+//!
+//! The mapping policy (`crate::workload::MappingPolicy`) decides *where*
+//! each layer computes; the schedule policy decides *when* — whether the
+//! batch runs as one serial pass or as `M` microbatches whose phase
+//! instances overlap:
+//!
+//! * [`SchedulePolicy::Serial`] — the paper's (and the crate's legacy)
+//!   behaviour: one phase at a time, back to back. Lowering and
+//!   simulation are byte-identical to the pre-schedule pipeline.
+//! * [`SchedulePolicy::GPipe`] `{ microbatches }` — GPipe-style: every
+//!   stage runs all `M` forward microbatches, then (once its forward work
+//!   and the incoming gradient are done) all `M` backwards. The classic
+//!   flush bubble `(S-1)/(M+S-1)` emerges from the precedence DAG.
+//! * [`SchedulePolicy::OneFOneB`] `{ microbatches }` — 1F1B: each stage
+//!   warms up with `min(S - rank, M)` forwards, then alternates one
+//!   backward / one forward, draining the remaining backwards at the end.
+//!   Backward work starts long before the last forward microbatch, which
+//!   shrinks the bubble and the peak number of in-flight microbatches.
+//!
+//! See Guirado et al. (arXiv:1912.01664) and Marques et al.
+//! (arXiv:1712.02546) for why the overlap-vs-contention interaction
+//! matters on DNN accelerators.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+
+/// The `--schedule` grammar, embedded in every parse/validation error.
+pub const GRAMMAR: &str = "schedule := serial | gpipe:<M> | 1f1b:<M>   \
+                           (M = microbatches per iteration, 1 <= M <= batch)";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulePolicy {
+    /// One phase at a time — the legacy, byte-identical behaviour.
+    Serial,
+    /// GPipe: all forward microbatches, flush, all backward microbatches.
+    GPipe { microbatches: usize },
+    /// 1F1B: warmup forwards, then alternate one backward / one forward.
+    OneFOneB { microbatches: usize },
+}
+
+impl Default for SchedulePolicy {
+    fn default() -> Self {
+        SchedulePolicy::Serial
+    }
+}
+
+impl SchedulePolicy {
+    /// Whether this schedule runs the legacy single-pass timeline.
+    pub fn is_serial(&self) -> bool {
+        matches!(self, SchedulePolicy::Serial)
+    }
+
+    /// Microbatches per iteration (1 for the serial schedule).
+    pub fn microbatches(&self) -> usize {
+        match *self {
+            SchedulePolicy::Serial => 1,
+            SchedulePolicy::GPipe { microbatches } | SchedulePolicy::OneFOneB { microbatches } => {
+                microbatches
+            }
+        }
+    }
+
+    /// Reject schedules that cannot split `batch` samples: every
+    /// microbatch needs at least one.
+    pub fn validate_for(&self, batch: usize) -> Result<(), WihetError> {
+        let m = self.microbatches();
+        if m == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "schedule '{self}' needs at least 1 microbatch\n{GRAMMAR}"
+            )));
+        }
+        if m > batch {
+            return Err(WihetError::InvalidArg(format!(
+                "schedule '{self}' splits more microbatches than the batch size {batch}\n{GRAMMAR}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for SchedulePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SchedulePolicy::Serial => f.pad("serial"),
+            SchedulePolicy::GPipe { microbatches } => {
+                f.pad(&format!("gpipe:{microbatches}"))
+            }
+            SchedulePolicy::OneFOneB { microbatches } => {
+                f.pad(&format!("1f1b:{microbatches}"))
+            }
+        }
+    }
+}
+
+impl FromStr for SchedulePolicy {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let t = s.trim().to_ascii_lowercase();
+        let (head, arg) = match t.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (t.as_str(), None),
+        };
+        let micro = |arg: Option<&str>| -> Result<usize, WihetError> {
+            let a = arg.ok_or_else(|| {
+                WihetError::InvalidArg(format!(
+                    "schedule '{head}' expects a microbatch count, e.g. '{head}:4'\n{GRAMMAR}"
+                ))
+            })?;
+            let m: usize = a.trim().parse().map_err(|_| {
+                WihetError::InvalidArg(format!(
+                    "schedule '{head}:{a}': microbatch count must be an integer\n{GRAMMAR}"
+                ))
+            })?;
+            if m == 0 {
+                return Err(WihetError::InvalidArg(format!(
+                    "schedule '{head}:0' needs at least 1 microbatch\n{GRAMMAR}"
+                )));
+            }
+            Ok(m)
+        };
+        match head {
+            "serial" => {
+                if arg.is_some() {
+                    return Err(WihetError::InvalidArg(format!(
+                        "schedule 'serial' takes no argument\n{GRAMMAR}"
+                    )));
+                }
+                Ok(SchedulePolicy::Serial)
+            }
+            "gpipe" => Ok(SchedulePolicy::GPipe { microbatches: micro(arg)? }),
+            "1f1b" => Ok(SchedulePolicy::OneFOneB { microbatches: micro(arg)? }),
+            other => Err(WihetError::InvalidArg(format!(
+                "unknown schedule '{other}'\n{GRAMMAR}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["serial", "gpipe:4", "gpipe:8", "1f1b:2", "1f1b:16"] {
+            let p: SchedulePolicy = s.parse().unwrap();
+            assert_eq!(p.to_string(), s);
+            assert_eq!(p.to_string().parse::<SchedulePolicy>().unwrap(), p);
+        }
+        assert!(SchedulePolicy::default().is_serial());
+        assert_eq!(SchedulePolicy::Serial.microbatches(), 1);
+        assert_eq!(SchedulePolicy::GPipe { microbatches: 8 }.microbatches(), 8);
+    }
+
+    #[test]
+    fn errors_carry_the_grammar() {
+        for bad in ["rings", "gpipe", "gpipe:x", "gpipe:0", "1f1b:", "serial:2"] {
+            let e = bad.parse::<SchedulePolicy>().unwrap_err();
+            assert!(matches!(e, WihetError::InvalidArg(_)), "{bad}: {e:?}");
+            let msg = e.to_string();
+            assert!(msg.contains("gpipe:<M>") && msg.contains("1f1b:<M>"), "{bad}: {msg}");
+        }
+    }
+
+    #[test]
+    fn validation_bounds_microbatches_by_batch() {
+        assert!(SchedulePolicy::Serial.validate_for(1).is_ok());
+        assert!(SchedulePolicy::GPipe { microbatches: 8 }.validate_for(32).is_ok());
+        assert!(SchedulePolicy::GPipe { microbatches: 33 }.validate_for(32).is_err());
+        let e = SchedulePolicy::OneFOneB { microbatches: 9 }.validate_for(8).unwrap_err();
+        assert!(e.to_string().contains("batch size 8"), "{e}");
+    }
+}

@@ -1,0 +1,294 @@
+//! Running a timeline through the simulator and deriving schedule
+//! metrics.
+//!
+//! * `serial` short-circuits to the legacy trace pipeline
+//!   ([`training_trace`] + [`NocSim::run`]), so its [`SimReport`] is
+//!   byte-identical to the pre-schedule simulator — the same guarantee
+//!   the workload lowering gives the identity mapping.
+//! * `gpipe:M` / `1f1b:M` expand to a [`TrainingTimeline`], generate one
+//!   message group per phase instance (single RNG stream in canonical
+//!   order, so traces are deterministic), and run the gated event loop
+//!   ([`NocSim::run_timeline`]): several instances inject concurrently,
+//!   each released the cycle its predecessors drain.
+//!
+//! Metrics:
+//! * `makespan` — last tail-delivery cycle of the whole iteration.
+//! * `serial_ref_cycles` — the per-phase trace windows the `serial`
+//!   schedule lays back to back; `speedup_vs_serial` is their ratio to
+//!   the makespan.
+//! * `bubble_fraction` — `1 - active/(S * makespan)` where `active` sums
+//!   each instance's release->drain span and `S` is the stage count. For
+//!   an ideal `S`-stage GPipe pipeline this reduces to the textbook
+//!   `(S-1)/(M+S-1)` flush bubble.
+//! * `link_peak_concurrency` — per wireline link, the peak number of
+//!   phase instances whose active spans overlap while both put flits on
+//!   that link: where overlap turns into NoC contention.
+
+use crate::error::WihetError;
+use crate::model::SystemConfig;
+use crate::noc::builder::NocInstance;
+use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
+use crate::traffic::phases::TrafficModel;
+use crate::traffic::trace::{phase_trace, training_trace, TraceConfig};
+use crate::util::rng::Rng;
+
+use super::policy::SchedulePolicy;
+use super::timeline::{count_stages, expand, TrainingTimeline};
+
+/// Results of one scheduled training iteration on one NoC.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    pub policy: SchedulePolicy,
+    /// Aggregate network report over the whole (possibly concurrent)
+    /// iteration. For `serial` this is byte-identical to the legacy
+    /// single-trace run.
+    pub sim: SimReport,
+    pub instances: usize,
+    pub num_stages: usize,
+    /// Last tail-delivery cycle of the iteration (trace-scaled time).
+    pub makespan: u64,
+    /// The per-phase trace windows laid back to back — what the serial
+    /// schedule injects.
+    pub serial_ref_cycles: u64,
+    /// `serial_ref_cycles / makespan` (1.0 for serial by definition).
+    pub speedup_vs_serial: f64,
+    /// Pipeline idle share: `1 - active / (num_stages * makespan)`,
+    /// clamped to [0, 1]. 0.0 for serial by definition.
+    pub bubble_fraction: f64,
+    /// Peak number of concurrently-active instances sharing each
+    /// wireline link (empty for serial: one phase at a time).
+    pub link_peak_concurrency: Vec<u32>,
+    /// `max` of `link_peak_concurrency` (1 for serial).
+    pub peak_link_concurrency: u32,
+    /// GPU-tile-weighted active cycles: sum over instances of
+    /// (release->drain span) x (participating GPU tiles). Scaled time;
+    /// energy accounting rescales.
+    pub gpu_tile_busy_cycles: u64,
+    /// Cycles with CPU-cohort traffic in flight (span sum over instances
+    /// that move CPU bytes).
+    pub cpu_busy_cycles: u64,
+}
+
+/// Generate one message group per timeline instance. Offsets are
+/// release-relative (`start_cycle = 0`); one RNG stream over the
+/// canonical instance order keeps traces deterministic for a given seed.
+/// Returns the groups and each instance's trace window length.
+pub fn timeline_groups(
+    sys: &SystemConfig,
+    tl: &TrainingTimeline,
+    cfg: &TraceConfig,
+) -> (Vec<Vec<Message>>, Vec<u64>) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut groups = Vec::with_capacity(tl.instances.len());
+    let mut durs = Vec::with_capacity(tl.instances.len());
+    for inst in &tl.instances {
+        let (msgs, dur) = phase_trace(sys, &inst.traffic, 0, cfg, &mut rng);
+        groups.push(msgs);
+        durs.push(dur);
+    }
+    (groups, durs)
+}
+
+/// Simulate one training iteration of `tm` on `inst` under `policy`.
+pub fn run_schedule(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    cfg: &TraceConfig,
+) -> Result<ScheduleReport, WihetError> {
+    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    if policy.is_serial() {
+        // Legacy path, byte-identical: one trace, phases back to back.
+        let (trace, windows) = training_trace(sys, &tm.phases, cfg);
+        let rep = sim.run(&trace);
+        let serial_ref = windows.last().map(|&(_, end)| end).unwrap_or(0);
+        let n_gpu = sys.gpus().len() as u64;
+        let mut gpu_busy = 0u64;
+        let mut cpu_busy = 0u64;
+        for (p, &(start, end)) in tm.phases.iter().zip(&windows) {
+            let span = end - start;
+            if p.gpu_read_bytes + p.gpu_write_bytes > 0 {
+                let tiles =
+                    if p.gpu_tiles.is_empty() { n_gpu } else { p.gpu_tiles.len() as u64 };
+                gpu_busy += span * tiles;
+            }
+            if p.cpu_read_bytes + p.cpu_write_bytes > 0 {
+                cpu_busy += span;
+            }
+        }
+        let makespan = rep.cycles;
+        return Ok(ScheduleReport {
+            policy: *policy,
+            sim: rep,
+            instances: tm.phases.len(),
+            num_stages: count_stages(tm),
+            makespan,
+            serial_ref_cycles: serial_ref,
+            speedup_vs_serial: 1.0,
+            bubble_fraction: 0.0,
+            link_peak_concurrency: Vec::new(),
+            peak_link_concurrency: 1,
+            gpu_tile_busy_cycles: gpu_busy,
+            cpu_busy_cycles: cpu_busy,
+        });
+    }
+
+    let tl = expand(tm, policy)?;
+    let (groups, _durs) = timeline_groups(sys, &tl, cfg);
+    let out = sim.run_timeline(&groups, &tl.preds);
+    let makespan = out.report.cycles;
+    // Serial reference = the windows the *serial* schedule would lay back
+    // to back (one per phase). Summing the per-instance windows instead
+    // would count phase_trace's 16-cycle floor M times per phase and
+    // overstate the speedup at small trace scales.
+    let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
+    let speedup = serial_ref as f64 / makespan.max(1) as f64;
+
+    // active spans (release -> drain) per instance
+    let n_gpu = sys.gpus().len() as u64;
+    let mut active = 0u64;
+    let mut gpu_busy = 0u64;
+    let mut cpu_busy = 0u64;
+    for (g, pi) in tl.instances.iter().enumerate() {
+        let (r, d) = (out.release[g], out.drain[g]);
+        if r == u64::MAX || d == u64::MAX {
+            continue; // horizon-cut instance
+        }
+        let span = d - r;
+        active += span;
+        let t = &pi.traffic;
+        if t.gpu_read_bytes + t.gpu_write_bytes > 0 {
+            let tiles = if t.gpu_tiles.is_empty() { n_gpu } else { t.gpu_tiles.len() as u64 };
+            gpu_busy += span * tiles;
+        }
+        if t.cpu_read_bytes + t.cpu_write_bytes > 0 {
+            cpu_busy += span;
+        }
+    }
+    let denom = (tl.num_stages as u64 * makespan).max(1) as f64;
+    let bubble = (1.0 - active as f64 / denom).clamp(0.0, 1.0);
+
+    // per-link peak concurrency: sweep the active spans of the instances
+    // that put flits on each link
+    let nl = inst.topo.links.len();
+    let mut link_peak = vec![0u32; nl];
+    let mut events: Vec<(u64, i32)> = Vec::new();
+    for (l, peak) in link_peak.iter_mut().enumerate() {
+        events.clear();
+        for g in 0..tl.instances.len() {
+            if out.group_link_flits[g * nl + l] == 0 {
+                continue;
+            }
+            let (r, d) = (out.release[g], out.drain[g]);
+            if r == u64::MAX || d == u64::MAX {
+                continue;
+            }
+            // half-open [r, d): a gated successor releasing exactly at
+            // its predecessor's drain does not count as overlap
+            events.push((r, 1));
+            events.push((d, -1));
+        }
+        events.sort_unstable();
+        let mut cur = 0i32;
+        let mut best = 0i32;
+        for &(_, delta) in events.iter() {
+            cur += delta;
+            best = best.max(cur);
+        }
+        *peak = best.max(0) as u32;
+    }
+    let peak = link_peak.iter().copied().max().unwrap_or(0).max(1);
+
+    Ok(ScheduleReport {
+        policy: *policy,
+        sim: out.report,
+        instances: tl.instances.len(),
+        num_stages: tl.num_stages,
+        makespan,
+        serial_ref_cycles: serial_ref,
+        speedup_vs_serial: speedup,
+        bubble_fraction: bubble,
+        link_peak_concurrency: link_peak,
+        peak_link_concurrency: peak,
+        gpu_tile_busy_cycles: gpu_busy,
+        cpu_busy_cycles: cpu_busy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::builder::mesh_opt;
+    use crate::workload::{lower_id, MappingPolicy};
+    use crate::ModelId;
+
+    fn setup() -> (SystemConfig, NocInstance, TrafficModel) {
+        let sys = SystemConfig::paper_8x8();
+        let inst = mesh_opt(&sys, true);
+        let tm = lower_id(
+            &ModelId::LeNet,
+            &MappingPolicy::LayerPipelined { stages: 2 },
+            &sys,
+            32,
+        )
+        .unwrap();
+        (sys, inst, tm)
+    }
+
+    #[test]
+    fn serial_matches_legacy_trace_run() {
+        let (sys, inst, tm) = setup();
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let sr = run_schedule(&sys, &inst, &tm, &SchedulePolicy::Serial, &cfg).unwrap();
+        let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+        let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+            .run(&trace);
+        assert_eq!(sr.sim.latency.sum, rep.latency.sum);
+        assert_eq!(sr.sim.delivered_flits, rep.delivered_flits);
+        assert_eq!(sr.sim.link_busy, rep.link_busy);
+        assert_eq!(sr.makespan, rep.cycles);
+        assert_eq!(sr.speedup_vs_serial, 1.0);
+        assert_eq!(sr.bubble_fraction, 0.0);
+    }
+
+    #[test]
+    fn gpipe_overlaps_and_reports_metrics() {
+        let (sys, inst, tm) = setup();
+        let cfg = TraceConfig { scale: 0.1, ..Default::default() };
+        let serial = run_schedule(&sys, &inst, &tm, &SchedulePolicy::Serial, &cfg).unwrap();
+        let gp = run_schedule(
+            &sys,
+            &inst,
+            &tm,
+            &SchedulePolicy::GPipe { microbatches: 4 },
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(gp.instances, tm.phases.len() * 4);
+        assert!(gp.makespan > 0);
+        assert!(gp.makespan <= serial.makespan, "gpipe {} vs serial {}", gp.makespan, serial.makespan);
+        assert!((0.0..1.0).contains(&gp.bubble_fraction), "{}", gp.bubble_fraction);
+        assert!(gp.speedup_vs_serial > 1.0, "{}", gp.speedup_vs_serial);
+        assert!(gp.peak_link_concurrency >= 1);
+        // all traffic delivered: conservation carries into flits
+        assert_eq!(gp.sim.undelivered, 0);
+    }
+
+    #[test]
+    fn one_f_one_b_runs_and_delivers_everything() {
+        let (sys, inst, tm) = setup();
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let r = run_schedule(
+            &sys,
+            &inst,
+            &tm,
+            &SchedulePolicy::OneFOneB { microbatches: 4 },
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(r.sim.undelivered, 0);
+        assert!(r.sim.delivered_packets > 0);
+        assert!((0.0..=1.0).contains(&r.bubble_fraction));
+    }
+}

@@ -1,0 +1,330 @@
+//! Timeline expansion: `(TrafficModel, SchedulePolicy)` -> an explicit
+//! DAG of phase instances.
+//!
+//! [`expand`] splits every lowered [`LayerPhase`] into `M` microbatch
+//! instances (phase x microbatch x fwd/bwd is implicit: the phase list
+//! already carries the pass) and wires two kinds of precedence edges:
+//!
+//! * **data** — microbatch `m` executes its phases in the lowered order
+//!   (forward chain, then the backward chain), so instance `(p, m)`
+//!   depends on `(p-1, m)`;
+//! * **resource** — the tiles of a *stage* (a distinct
+//!   [`LayerPhase::gpu_tiles`] slice, or the CPUs for dense layers)
+//!   process one instance at a time, in the order the schedule policy
+//!   dictates (GPipe: all forwards then all backwards; 1F1B: warmup then
+//!   alternate). Consecutive instances in that per-stage order are
+//!   chained.
+//!
+//! **Conservation law**: the microbatch split is a prefix-difference
+//! partition — `share(m) = v*(m+1)/M - v*m/M` — so for every volume
+//! field the `M` instances sum *exactly* to the serial phase. Any
+//! schedule moves the same bytes as `serial`; it only changes when they
+//! move (pinned by `tests/schedule_sim.rs`).
+
+use crate::error::WihetError;
+use crate::model::cnn::{LayerKind, Pass};
+use crate::traffic::phases::{LayerPhase, TrafficModel};
+
+use super::policy::SchedulePolicy;
+
+/// One phase x microbatch node of the timeline DAG.
+#[derive(Debug, Clone)]
+pub struct PhaseInstance {
+    /// Index into the lowered `TrafficModel::phases`.
+    pub phase: usize,
+    pub microbatch: usize,
+    /// Resource id (see [`TrainingTimeline::num_stages`]).
+    pub stage: usize,
+    /// Microbatch-scaled copy of the phase (volumes, control flits, and
+    /// duration partitioned by prefix differences).
+    pub traffic: LayerPhase,
+}
+
+/// The expanded training iteration: instances in canonical order
+/// (phase-major, microbatch-minor — so a serial expansion *is* the phase
+/// list) plus the precedence DAG.
+#[derive(Debug, Clone)]
+pub struct TrainingTimeline {
+    pub policy: SchedulePolicy,
+    pub model: String,
+    pub instances: Vec<PhaseInstance>,
+    /// Predecessor instance indices per instance (deduplicated).
+    pub preds: Vec<Vec<u32>>,
+    /// Distinct resources: one per distinct GPU tile slice among the
+    /// phases, plus one for the CPUs when dense layers exist. Under a
+    /// `pipeline:S` mapping this is the pipeline depth (+1 for the CPU
+    /// tail); under the identity mapping it collapses to one GPU stage.
+    pub num_stages: usize,
+    pub microbatches: usize,
+}
+
+impl TrainingTimeline {
+    /// Total core<->MC bytes over all instances — equals the serial
+    /// model's [`TrafficModel::total_bytes`] for every policy.
+    pub fn total_bytes(&self) -> u64 {
+        self.instances
+            .iter()
+            .map(|i| {
+                i.traffic.gpu_read_bytes
+                    + i.traffic.gpu_write_bytes
+                    + i.traffic.cpu_read_bytes
+                    + i.traffic.cpu_write_bytes
+            })
+            .sum()
+    }
+
+    /// Total core<->core control flits over all instances.
+    pub fn total_core_core_flits(&self) -> u64 {
+        self.instances.iter().map(|i| i.traffic.core_core_flits).sum()
+    }
+}
+
+/// Exact prefix-difference share of `v` for microbatch `m` of `count`.
+fn share(v: u64, m: usize, count: usize) -> u64 {
+    let v = v as u128;
+    let (m, count) = (m as u128, count as u128);
+    (v * (m + 1) / count - v * m / count) as u64
+}
+
+/// Stage id per phase: distinct `gpu_tiles` slices (empty = all GPUs) in
+/// first-appearance order, with dense (CPU-resident) phases on their own
+/// CPU stage. Returns `(stage_of, num_stages)`.
+fn stage_ids(phases: &[LayerPhase]) -> (Vec<usize>, usize) {
+    // key: None = the CPU stage, Some(tiles) = a GPU tile slice
+    let mut keys: Vec<Option<&[usize]>> = Vec::new();
+    let stage_of = phases
+        .iter()
+        .map(|p| {
+            let key: Option<&[usize]> =
+                if p.kind == LayerKind::Dense { None } else { Some(&p.gpu_tiles) };
+            match keys.iter().position(|k| *k == key) {
+                Some(i) => i,
+                None => {
+                    keys.push(key);
+                    keys.len() - 1
+                }
+            }
+        })
+        .collect();
+    (stage_of, keys.len())
+}
+
+/// Number of distinct stages the lowered model occupies (used for
+/// serial-schedule reporting without a full expansion).
+pub fn count_stages(tm: &TrafficModel) -> usize {
+    stage_ids(&tm.phases).1
+}
+
+/// Expand a lowered traffic model into the timeline DAG for `policy`.
+pub fn expand(tm: &TrafficModel, policy: &SchedulePolicy) -> Result<TrainingTimeline, WihetError> {
+    policy.validate_for(tm.batch)?;
+    let m_count = policy.microbatches();
+    let n_phases = tm.phases.len();
+    let (stage_of, num_stages) = stage_ids(&tm.phases);
+
+    // canonical order: phase-major, microbatch-minor
+    let idx = |p: usize, m: usize| (p * m_count + m) as u32;
+    let mut instances = Vec::with_capacity(n_phases * m_count);
+    for (p, phase) in tm.phases.iter().enumerate() {
+        for m in 0..m_count {
+            let mut traffic = phase.clone();
+            traffic.gpu_read_bytes = share(phase.gpu_read_bytes, m, m_count);
+            traffic.gpu_write_bytes = share(phase.gpu_write_bytes, m, m_count);
+            traffic.cpu_read_bytes = share(phase.cpu_read_bytes, m, m_count);
+            traffic.cpu_write_bytes = share(phase.cpu_write_bytes, m, m_count);
+            traffic.core_core_flits = share(phase.core_core_flits, m, m_count);
+            traffic.duration_cycles = share(phase.duration_cycles, m, m_count);
+            instances.push(PhaseInstance { phase: p, microbatch: m, stage: stage_of[p], traffic });
+        }
+    }
+
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); instances.len()];
+    // data edges: each microbatch walks the lowered phase order
+    for p in 1..n_phases {
+        for m in 0..m_count {
+            preds[idx(p, m) as usize].push(idx(p - 1, m));
+        }
+    }
+    // resource edges: consecutive instances in each stage's service order
+    for s in 0..num_stages {
+        let fwd: Vec<usize> = (0..n_phases)
+            .filter(|&p| stage_of[p] == s && tm.phases[p].pass == Pass::Forward)
+            .collect();
+        let bwd: Vec<usize> = (0..n_phases)
+            .filter(|&p| stage_of[p] == s && tm.phases[p].pass == Pass::Backward)
+            .collect();
+        let mut order: Vec<u32> = Vec::new();
+        let push_fwd = |m: usize, order: &mut Vec<u32>| {
+            order.extend(fwd.iter().map(|&p| idx(p, m)));
+        };
+        let push_bwd = |m: usize, order: &mut Vec<u32>| {
+            order.extend(bwd.iter().map(|&p| idx(p, m)));
+        };
+        match policy {
+            SchedulePolicy::Serial | SchedulePolicy::GPipe { .. } => {
+                for m in 0..m_count {
+                    push_fwd(m, &mut order);
+                }
+                for m in 0..m_count {
+                    push_bwd(m, &mut order);
+                }
+            }
+            SchedulePolicy::OneFOneB { .. } => {
+                // warmup depth shrinks toward the last stage; the final
+                // stage alternates immediately (w = 1)
+                let w = (num_stages - s).min(m_count).max(1);
+                for m in 0..w {
+                    push_fwd(m, &mut order);
+                }
+                for i in 0..m_count - w {
+                    push_bwd(i, &mut order);
+                    push_fwd(w + i, &mut order);
+                }
+                for i in m_count - w..m_count {
+                    push_bwd(i, &mut order);
+                }
+            }
+        }
+        for pair in order.windows(2) {
+            preds[pair[1] as usize].push(pair[0]);
+        }
+    }
+    for ps in &mut preds {
+        ps.sort_unstable();
+        ps.dedup();
+        // self-edges cannot arise (data edges cross phases, resource
+        // edges cross order positions), but keep the invariant explicit
+        debug_assert!(ps.windows(2).all(|w| w[0] != w[1]));
+    }
+
+    // Kahn pass: the service orders above are real schedules, so the DAG
+    // must be acyclic; a cycle would deadlock the gated simulation.
+    let mut indeg: Vec<u32> = vec![0; instances.len()];
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); instances.len()];
+    for (i, ps) in preds.iter().enumerate() {
+        indeg[i] = ps.len() as u32;
+        for &p in ps {
+            succs[p as usize].push(i as u32);
+        }
+    }
+    let mut work: Vec<u32> =
+        (0..instances.len() as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    let mut seen = 0usize;
+    let mut wi = 0usize;
+    while wi < work.len() {
+        let i = work[wi] as usize;
+        wi += 1;
+        seen += 1;
+        for &s in &succs[i] {
+            indeg[s as usize] -= 1;
+            if indeg[s as usize] == 0 {
+                work.push(s);
+            }
+        }
+    }
+    if seen != instances.len() {
+        return Err(WihetError::InvalidArg(format!(
+            "schedule '{policy}' produced a cyclic timeline for {} ({} of {} instances orderable) — this is a bug in the expander",
+            tm.model,
+            seen,
+            instances.len()
+        )));
+    }
+
+    Ok(TrainingTimeline {
+        policy: *policy,
+        model: tm.model.clone(),
+        instances,
+        preds,
+        num_stages,
+        microbatches: m_count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+    use crate::workload::{lower_id, MappingPolicy};
+    use crate::ModelId;
+
+    fn lowered(mapping: MappingPolicy) -> (SystemConfig, TrafficModel) {
+        let sys = SystemConfig::paper_8x8();
+        let tm = lower_id(&ModelId::LeNet, &mapping, &sys, 32).unwrap();
+        (sys, tm)
+    }
+
+    #[test]
+    fn serial_expansion_is_the_phase_chain() {
+        let (_, tm) = lowered(MappingPolicy::default());
+        let tl = expand(&tm, &SchedulePolicy::Serial).unwrap();
+        assert_eq!(tl.instances.len(), tm.phases.len());
+        assert_eq!(tl.microbatches, 1);
+        for (i, inst) in tl.instances.iter().enumerate() {
+            assert_eq!(inst.phase, i);
+            assert_eq!(inst.traffic.gpu_read_bytes, tm.phases[i].gpu_read_bytes);
+            assert_eq!(inst.traffic.duration_cycles, tm.phases[i].duration_cycles);
+            if i > 0 {
+                assert!(tl.preds[i].contains(&(i as u32 - 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn shares_partition_exactly() {
+        for v in [0u64, 1, 7, 63, 64, 1_000_003] {
+            for count in [1usize, 2, 3, 8] {
+                let sum: u64 = (0..count).map(|m| share(v, m, count)).sum();
+                assert_eq!(sum, v, "v={v} count={count}");
+            }
+        }
+    }
+
+    #[test]
+    fn gpipe_conserves_volumes_and_counts() {
+        for mapping in [MappingPolicy::default(), MappingPolicy::LayerPipelined { stages: 3 }] {
+            let (_, tm) = lowered(mapping);
+            for m in [2usize, 4, 8] {
+                let tl = expand(&tm, &SchedulePolicy::GPipe { microbatches: m }).unwrap();
+                assert_eq!(tl.instances.len(), tm.phases.len() * m);
+                assert_eq!(tl.total_bytes(), tm.total_bytes());
+                let serial_cc: u64 = tm.phases.iter().map(|p| p.core_core_flits).sum();
+                assert_eq!(tl.total_core_core_flits(), serial_cc);
+                let serial_dur: u64 = tm.phases.iter().map(|p| p.duration_cycles).sum();
+                let tl_dur: u64 =
+                    tl.instances.iter().map(|i| i.traffic.duration_cycles).sum();
+                assert_eq!(tl_dur, serial_dur);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_mapping_yields_multiple_stages() {
+        let (_, tm) = lowered(MappingPolicy::LayerPipelined { stages: 3 });
+        let tl = expand(&tm, &SchedulePolicy::GPipe { microbatches: 4 }).unwrap();
+        // 3 GPU stages + the CPU (dense) stage
+        assert_eq!(tl.num_stages, 4);
+        let (_, tm_flat) = lowered(MappingPolicy::default());
+        assert_eq!(count_stages(&tm_flat), 2, "all-GPU stage + CPU stage");
+    }
+
+    #[test]
+    fn one_f_one_b_is_acyclic_and_conserves() {
+        for stages in [2usize, 3, 4] {
+            let (_, tm) = lowered(MappingPolicy::LayerPipelined { stages });
+            for m in [2usize, 4, 8] {
+                let tl = expand(&tm, &SchedulePolicy::OneFOneB { microbatches: m }).unwrap();
+                assert_eq!(tl.total_bytes(), tm.total_bytes());
+                assert_eq!(tl.instances.len(), tm.phases.len() * m);
+            }
+        }
+    }
+
+    #[test]
+    fn too_many_microbatches_is_typed() {
+        let (_, tm) = lowered(MappingPolicy::default());
+        let e = expand(&tm, &SchedulePolicy::GPipe { microbatches: 64 }).unwrap_err();
+        assert!(matches!(e, WihetError::InvalidArg(_)), "{e:?}");
+        assert!(e.to_string().contains("batch size 32"), "{e}");
+    }
+}

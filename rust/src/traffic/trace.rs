@@ -29,6 +29,16 @@ impl Default for TraceConfig {
     }
 }
 
+impl TraceConfig {
+    /// The trace window a phase of `duration_cycles` occupies under this
+    /// config's downsampling (floored at 16 cycles so even tiny phases
+    /// get a schedulable window). Exposed so schedule references compare
+    /// against exactly what [`phase_trace`] generates.
+    pub fn window(&self, duration_cycles: u64) -> u64 {
+        ((duration_cycles as f64 * self.scale).ceil() as u64).max(16)
+    }
+}
+
 /// Generate the message trace for one phase, starting at `start_cycle`.
 /// Returns (messages, phase duration in cycles).
 pub fn phase_trace(
@@ -38,7 +48,7 @@ pub fn phase_trace(
     cfg: &TraceConfig,
     rng: &mut Rng,
 ) -> (Vec<Message>, u64) {
-    let dur = ((phase.duration_cycles as f64 * cfg.scale).ceil() as u64).max(16);
+    let dur = cfg.window(phase.duration_cycles);
     let line = sys.line_bytes;
     let line_flits = sys.line_bytes / sys.flit_bytes + 1;
     let all_gpus = sys.gpus();
