@@ -10,12 +10,17 @@
 //! Every run also updates `BENCH_sim.json` (override the path with
 //! WIHETNOC_BENCH_JSON) with per-experiment medians/MADs plus sim-core
 //! microbenches, keyed by WIHETNOC_BENCH_LABEL (default `current`).
+//! Since the experiments return typed `Report`s, the run also records
+//! every report's scalar sections (the paper-claim measurements) under
+//! the `figures` key — the trajectory tracks numbers, not prose.
 //! Record the pre-change numbers under the `baseline` label:
 //!
 //! ```sh
 //! WIHETNOC_BENCH_LABEL=baseline cargo bench --bench paper_benches  # before
 //! cargo bench --bench paper_benches                                # after
 //! ```
+
+use std::collections::BTreeMap;
 
 use wihetnoc::bench::{merge_run, Bencher};
 use wihetnoc::experiments::{self, Ctx, Effort};
@@ -150,8 +155,12 @@ fn main() {
     let _ = ctx.instance(NocKind::HetNoc);
     let _ = ctx.instance(NocKind::WiHetNoc);
 
-    for id in experiments::ALL {
-        let mut report = String::new();
+    // Each experiment returns a typed Report; its scalar sections (the
+    // paper-claim measurements) are recorded in BENCH_sim.json next to
+    // the wall times, so the perf trajectory also tracks paper numbers.
+    let mut figures = BTreeMap::new();
+    for id in experiments::ALL.iter() {
+        let mut report = None;
         if *id == "workload_figs" {
             // This harness builds its own Ctxs and AMOSA-designs two
             // 144-tile NoCs per run — repeat samples would redo identical
@@ -159,15 +168,24 @@ fn main() {
             // BENCH_sim.json).
             let mut once = Bencher { warmup: 0, samples: 1, results: Vec::new() };
             once.bench(&format!("experiment/{id}"), || {
-                report = experiments::run(id, &mut ctx).expect("experiment runs");
+                report = Some(experiments::run(id, &mut ctx).expect("experiment runs"));
             });
             b.results.append(&mut once.results);
         } else {
             b.bench(&format!("experiment/{id}"), || {
-                report = experiments::run(id, &mut ctx).expect("experiment runs");
+                report = Some(experiments::run(id, &mut ctx).expect("experiment runs"));
             });
         }
-        println!("\n{report}\n{}\n", "-".repeat(72));
+        let report = report.expect("bench ran the harness at least once");
+        let scalars: BTreeMap<String, Json> = report
+            .scalars()
+            .filter(|(_, value)| value.is_finite())
+            .map(|(name, value)| (name.to_string(), Json::Num(value)))
+            .collect();
+        if !scalars.is_empty() {
+            figures.insert(id.to_string(), Json::Obj(scalars));
+        }
+        println!("\n{}\n{}\n", report.to_text(), "-".repeat(72));
     }
     println!("== done: {} experiments ==", experiments::ALL.len());
 
@@ -178,6 +196,7 @@ fn main() {
         ("effort", Json::Str(format!("{effort:?}").to_lowercase())),
         ("seed", Json::Num(seed as f64)),
         ("threads", Json::Num(threads as f64)),
+        ("figures", Json::Obj(figures)),
     ]);
     let existing = std::fs::read_to_string(&path).unwrap_or_default();
     let doc = merge_run(&existing, &label, run);

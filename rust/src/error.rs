@@ -56,7 +56,8 @@ impl fmt::Display for WihetError {
             ),
             WihetError::UnknownExperiment(e) => write!(
                 f,
-                "unknown experiment '{e}' (run `wihetnoc list` for the full set)"
+                "unknown experiment '{e}'. Registered ids: {}, all",
+                crate::experiments::ids().join(", ")
             ),
             WihetError::InvalidPlatform(m) => write!(f, "invalid platform: {m}"),
             WihetError::InvalidDesign(m) => write!(f, "invalid design: {m}"),
@@ -115,6 +116,12 @@ mod tests {
         assert!(s.contains("conv:3") && s.contains("skip:D"), "{s}");
         let e = WihetError::UnknownNoc("torus".into());
         assert!(e.to_string().contains("wihetnoc"));
+        // the experiment menu is derived from the registry, not hardcoded
+        let e = WihetError::UnknownExperiment("figg17".into());
+        let s = e.to_string();
+        for hint in ["figg17", "table1", "fig17", "workload_figs"] {
+            assert!(s.contains(hint), "missing '{hint}' in: {s}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use super::ctx::Ctx;
+use super::report::{Cell, Report};
 use crate::coordinator::cosim::cosimulate;
 use crate::energy::network::message_edp;
 use crate::energy::params::EnergyParams;
@@ -27,6 +28,15 @@ struct PerLayer {
     /// [noc][layer] metric
     latency: Vec<Vec<f64>>,
     edp: Vec<Vec<f64>>,
+}
+
+/// Mesh-normalized per-layer ratios + the aggregate means — the
+/// structured form of one Fig 17/18 panel.
+struct NormPanel {
+    het: Vec<f64>,
+    wihet: Vec<f64>,
+    het_wmean: f64,
+    wihet_wmean: f64,
 }
 
 /// One (NoC, layer) simulation job, prepared serially and run on any
@@ -88,7 +98,7 @@ fn render_per_layer(
     paper_note: &str,
     pl: &PerLayer,
     metric: impl Fn(&PerLayer, usize, usize) -> f64,
-) -> String {
+) -> (String, NormPanel) {
     let mut out = format!("{title}\n{paper_note}\n\n  layer    HetNoC/mesh   WiHetNoC/mesh\n");
     let n = pl.tags.len();
     let mut het_sum = 0.0;
@@ -96,6 +106,8 @@ fn render_per_layer(
     let mut het_wsum = 0.0;
     let mut wihet_wsum = 0.0;
     let wtotal: f64 = pl.flits.iter().sum();
+    let mut het_norm = Vec::with_capacity(n);
+    let mut wihet_norm = Vec::with_capacity(n);
     for li in 0..n {
         let base = metric(pl, 0, li).max(1e-30);
         let het = metric(pl, 1, li) / base;
@@ -104,6 +116,8 @@ fn render_per_layer(
         wihet_sum += wih;
         het_wsum += het * pl.flits[li];
         wihet_wsum += wih * pl.flits[li];
+        het_norm.push(het);
+        wihet_norm.push(wih);
         out.push_str(&format!("  {:<7}  {:>9.3}     {:>9.3}\n", pl.tags[li], het, wih));
     }
     out.push_str(&format!(
@@ -116,51 +130,125 @@ fn render_per_layer(
         het_wsum / wtotal,
         wihet_wsum / wtotal
     ));
-    out
+    let panel = NormPanel {
+        het: het_norm,
+        wihet: wihet_norm,
+        het_wmean: het_wsum / wtotal,
+        wihet_wmean: wihet_wsum / wtotal,
+    };
+    (out, panel)
+}
+
+/// Fig 17/18 share everything except the metric and the paper numbers.
+fn compare_fig(
+    ctx: &mut Ctx,
+    id: &str,
+    title: &str,
+    fig_no: u32,
+    metric_name: &str,
+    paper_note: &str,
+    metric: impl Fn(&PerLayer, usize, usize) -> f64,
+    paper_het: f64,
+    paper_wihet: f64,
+) -> Report {
+    let mut rep = Report::new(id, title).with_paper(format!("Fig. {fig_no}"));
+    let mut out = String::new();
+    let mut wihet_wmeans = Vec::new();
+    for model in ModelId::ALL {
+        let pl = per_layer(ctx, model.clone());
+        let (text, panel) = render_per_layer(
+            &format!("Fig {fig_no} ({model}) — normalized network {metric_name} vs mesh"),
+            paper_note,
+            &pl,
+            &metric,
+        );
+        out.push_str(&text);
+        out.push('\n');
+        rep.series(
+            format!("{model}.hetnoc_over_mesh"),
+            format!("{metric_name} / optimized mesh"),
+            pl.tags.clone(),
+            panel.het,
+        );
+        rep.series(
+            format!("{model}.wihetnoc_over_mesh"),
+            format!("{metric_name} / optimized mesh"),
+            pl.tags.clone(),
+            panel.wihet,
+        );
+        rep.scalar_vs_paper(
+            format!("{model}.hetnoc_mean_weighted"),
+            panel.het_wmean,
+            format!("{metric_name} / mesh (traffic-weighted)"),
+            paper_het,
+            format!("paper mean: HetNoC ~{paper_het}"),
+        );
+        rep.scalar_vs_paper(
+            format!("{model}.wihetnoc_mean_weighted"),
+            panel.wihet_wmean,
+            format!("{metric_name} / mesh (traffic-weighted)"),
+            paper_wihet,
+            format!("paper mean: WiHetNoC ~{paper_wihet}"),
+        );
+        wihet_wmeans.push(panel.wihet_wmean);
+    }
+    // the headline claim: average WiHetNoC reduction over both CNNs
+    let avg = wihet_wmeans.iter().sum::<f64>() / wihet_wmeans.len() as f64;
+    rep.scalar_vs_paper(
+        format!("wihetnoc_{}_reduction_pct", metric_name.to_lowercase()),
+        100.0 * (1.0 - avg),
+        "% vs optimized mesh",
+        100.0 * (1.0 - paper_wihet),
+        format!("paper: ~{:.0}% lower {metric_name} than the optimized mesh", 100.0 * (1.0 - paper_wihet)),
+    );
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 17: per-layer network latency normalized to the optimized mesh.
 /// Paper: HetNoC ~23% lower, WiHetNoC ~42% lower on average.
-pub fn fig17(ctx: &mut Ctx) -> String {
-    let mut out = String::new();
-    for model in ModelId::ALL {
-        let pl = per_layer(ctx, model.clone());
-        out.push_str(&render_per_layer(
-            &format!("Fig 17 ({model}) — normalized network latency vs mesh"),
-            "paper means: HetNoC ~0.77-0.78, WiHetNoC ~0.58",
-            &pl,
-            |p, ni, li| p.latency[ni][li],
-        ));
-        out.push('\n');
-    }
-    out
+pub fn fig17(ctx: &mut Ctx) -> Report {
+    compare_fig(
+        ctx,
+        "fig17",
+        "per-layer network latency vs the optimized mesh",
+        17,
+        "latency",
+        "paper means: HetNoC ~0.77-0.78, WiHetNoC ~0.58",
+        |p, ni, li| p.latency[ni][li],
+        0.775,
+        0.58,
+    )
 }
 
 /// Fig 18: per-layer network (message) EDP normalized to the optimized
 /// mesh. Paper: HetNoC ~0.56-0.58, WiHetNoC ~0.40-0.42.
-pub fn fig18(ctx: &mut Ctx) -> String {
-    let mut out = String::new();
-    for model in ModelId::ALL {
-        let pl = per_layer(ctx, model.clone());
-        out.push_str(&render_per_layer(
-            &format!("Fig 18 ({model}) — normalized network EDP vs mesh"),
-            "paper means: HetNoC ~0.56-0.58, WiHetNoC ~0.40-0.42",
-            &pl,
-            |p, ni, li| p.edp[ni][li],
-        ));
-        out.push('\n');
-    }
-    out
+pub fn fig18(ctx: &mut Ctx) -> Report {
+    compare_fig(
+        ctx,
+        "fig18",
+        "per-layer network EDP vs the optimized mesh",
+        18,
+        "EDP",
+        "paper means: HetNoC ~0.56-0.58, WiHetNoC ~0.40-0.42",
+        |p, ni, li| p.edp[ni][li],
+        0.57,
+        0.41,
+    )
 }
 
 /// Fig 19: full-system execution time and EDP normalized to the mesh.
 /// Paper: HetNoC ~8% faster; WiHetNoC ~13% faster, 25% lower EDP.
-pub fn fig19(ctx: &mut Ctx) -> String {
+pub fn fig19(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig19", "full-system execution time & EDP vs the optimized mesh")
+            .with_paper("Fig. 19");
     let mut out = String::from(
         "Fig 19 — full-system execution time & EDP (normalized to optimized mesh)\n\n",
     );
     out.push_str("  model    noc        exec    EDP     paper exec / EDP\n");
     let cfg = ctx.trace_cfg();
+    let mut rows = Vec::new();
     for model in ModelId::ALL {
         // NOTE: the mesh is evaluated on its own optimized placement, the
         // irregular NoCs on the WiHetNoC placement, exactly as designed.
@@ -178,26 +266,62 @@ pub fn fig19(ctx: &mut Ctx) -> String {
         let irr = cosimulate(&sys, &tm, &[&het, &wihet], &cfg)
             .expect("cosimulate is infallible on in-memory inputs");
         let base = &mesh_rep.per_noc[0];
-        for (i, name, paper) in [(0usize, "HetNoC", "0.92 / 0.85"), (1, "WiHetNoC", "0.87 / 0.75")] {
+        for (i, name, paper, paper_exec, paper_edp) in [
+            (0usize, "HetNoC", "0.92 / 0.85", 0.92, 0.85),
+            (1, "WiHetNoC", "0.87 / 0.75", 0.87, 0.75),
+        ] {
             let r = &irr.per_noc[i];
+            let exec_ratio = r.exec_seconds / base.exec_seconds;
+            let edp_ratio = r.edp / base.edp;
             out.push_str(&format!(
                 "  {:<8} {:<9} {:>6.3}  {:>6.3}   {}\n",
                 model,
                 name,
-                r.exec_seconds / base.exec_seconds,
-                r.edp / base.edp,
+                exec_ratio,
+                edp_ratio,
                 paper,
             ));
+            rows.push(vec![
+                Cell::str(model.as_str()),
+                Cell::str(name),
+                Cell::num(exec_ratio),
+                Cell::num(edp_ratio),
+                Cell::num(paper_exec),
+                Cell::num(paper_edp),
+            ]);
+            if name == "WiHetNoC" {
+                rep.scalar_vs_paper(
+                    format!("{model}.wihetnoc_exec_over_mesh"),
+                    exec_ratio,
+                    "execution time / mesh",
+                    paper_exec,
+                    "paper: WiHetNoC trains ~13% faster than the optimized mesh",
+                );
+                rep.scalar_vs_paper(
+                    format!("{model}.wihetnoc_edp_over_mesh"),
+                    edp_ratio,
+                    "full-system EDP / mesh",
+                    paper_edp,
+                    "paper: WiHetNoC lowers full-system EDP by ~25%",
+                );
+            }
         }
     }
+    rep.table(
+        "normalized",
+        &["model", "noc", "exec_over_mesh", "edp_over_mesh", "paper_exec", "paper_edp"],
+        rows,
+    );
     out.push_str("\n(exec < 1 and EDP < 1 with WiHetNoC < HetNoC reproduces the paper's ordering; see EXPERIMENTS.md for the recorded run)\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::experiments::ctx::Effort;
+    use crate::experiments::report::SectionData;
 
     #[test]
     fn fig17_18_ordering_wihetnoc_best() {
@@ -228,5 +352,26 @@ mod tests {
         for row in pl.latency.iter().chain(pl.edp.iter()) {
             assert_eq!(row.len(), pl.tags.len());
         }
+    }
+
+    #[test]
+    fn fig17_carries_the_latency_series_and_headline_scalar() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let rep = fig17(&mut ctx);
+        // acceptance: the mesh-vs-WiHetNoC latency series is structured
+        for name in ["lenet.wihetnoc_over_mesh", "cdbnet.wihetnoc_over_mesh"] {
+            let sec = rep.section(name).unwrap_or_else(|| panic!("missing {name}"));
+            let SectionData::Series { values, labels, .. } = &sec.data else {
+                panic!("{name} is not a series");
+            };
+            assert!(!values.is_empty());
+            assert_eq!(values.len(), labels.len());
+            assert!(values.iter().all(|v| v.is_finite() && *v > 0.0));
+        }
+        let (_, reduction) = rep
+            .scalars()
+            .find(|(n, _)| *n == "wihetnoc_latency_reduction_pct")
+            .expect("headline scalar");
+        assert!((0.0..100.0).contains(&reduction), "reduction {reduction}%");
     }
 }

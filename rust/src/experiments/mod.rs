@@ -1,12 +1,20 @@
 //! Per-figure experiment harnesses — one entry per table/figure of the
-//! paper's evaluation (§5). Each regenerates the corresponding series and
-//! prints paper-vs-measured where the paper states a number.
+//! paper's evaluation (§5). Each regenerates the corresponding series,
+//! prints paper-vs-measured where the paper states a number, and returns
+//! a typed [`Report`] (scalars/series/tables with units and paper
+//! references) so CI, benches, and downstream comparisons consume data
+//! instead of prose.
 //!
-//! Run via `wihetnoc experiment <id>` (ids: table1, fig5..fig19, all) or
-//! `cargo bench` (rust/benches/paper_benches.rs drives the same code).
+//! The set is described by the [`registry`] — [`ALL`], [`run`], and
+//! [`run_many`] are views over it. Run via
+//! `wihetnoc experiment <id|all> [--format text|json|csv] [--out DIR]`
+//! or `cargo bench` (rust/benches/paper_benches.rs drives the same code
+//! and records each report's scalars next to the wall times).
 
 pub mod common;
 pub mod ctx;
+pub mod registry;
+pub mod report;
 pub mod table1;
 pub mod traffic_figs; // fig5, fig6, fig7
 pub mod optim_figs; // fig8, fig9, fig10
@@ -16,38 +24,5 @@ pub mod compare_figs; // fig17, fig18, fig19
 pub mod workload_figs; // non-paper workloads x schedules on 12x12
 
 pub use ctx::{Ctx, Effort};
-
-use crate::error::WihetError;
-
-/// All experiment ids: the paper figures in paper order, then the
-/// non-paper extensions.
-pub const ALL: &[&str] = &[
-    "table1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
-    "workload_figs",
-];
-
-/// Dispatch one experiment by id; returns its printable report. Unknown
-/// ids are a typed [`WihetError::UnknownExperiment`], never a panic.
-pub fn run(id: &str, ctx: &mut Ctx) -> Result<String, WihetError> {
-    match id {
-        "table1" => Ok(table1::run(ctx)),
-        "fig5" => Ok(traffic_figs::fig5(ctx)),
-        "fig6" => Ok(traffic_figs::fig6(ctx)),
-        "fig7" => Ok(traffic_figs::fig7(ctx)),
-        "fig8" => Ok(optim_figs::fig8(ctx)),
-        "fig9" => Ok(optim_figs::fig9(ctx)),
-        "fig10" => Ok(optim_figs::fig10(ctx)),
-        "fig11" => Ok(param_figs::fig11(ctx)),
-        "fig12" => Ok(param_figs::fig12(ctx)),
-        "fig13" => Ok(param_figs::fig13(ctx)),
-        "fig14" => Ok(wireless_figs::fig14(ctx)),
-        "fig15" => Ok(wireless_figs::fig15(ctx)),
-        "fig16" => Ok(wireless_figs::fig16(ctx)),
-        "fig17" => Ok(compare_figs::fig17(ctx)),
-        "fig18" => Ok(compare_figs::fig18(ctx)),
-        "fig19" => Ok(compare_figs::fig19(ctx)),
-        "workload_figs" => Ok(workload_figs::workload_figs(ctx)),
-        other => Err(WihetError::UnknownExperiment(other.to_string())),
-    }
-}
+pub use registry::{find, ids, run, run_many, run_many_threads, Experiment, ALL, REGISTRY};
+pub use report::{Artifact, ArtifactSink, Cell, PaperRef, Report, Section, SectionData};

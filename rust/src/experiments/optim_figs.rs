@@ -2,6 +2,7 @@
 //! wireline design-space exploration.
 
 use super::ctx::Ctx;
+use super::report::{Cell, Report};
 use crate::noc::analysis::analyze;
 use crate::noc::routing::RouteSet;
 use crate::noc::topology::Topology;
@@ -11,7 +12,9 @@ use crate::optim::linkplace::LinkPlacement;
 /// Fig 8: link utilizations of the optimized mesh under the scenario's
 /// design workload (paper: LeNet), normalized to the mean. Paper:
 /// MC-adjacent links reach ~6-7x mean.
-pub fn fig8(ctx: &mut Ctx) -> String {
+pub fn fig8(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig8", "optimized mesh link-utilization bottlenecks")
+        .with_paper("Fig. 8");
     let model = ctx.model();
     let sys = ctx.mesh_sys();
     let tm = ctx.traffic_on(model.clone(), &sys);
@@ -48,6 +51,7 @@ pub fn fig8(ctx: &mut Ctx) -> String {
     hot.sort_by(|x, y| y.1.partial_cmp(&x.1).unwrap());
     out.push_str("\n  hottest links (utilization / mean):\n");
     let mcs = sys.mcs();
+    let mut rows = Vec::new();
     for &(li, ratio) in hot.iter().take(10) {
         let l = &topo.links[li];
         let touches_mc = mcs.contains(&l.a) || mcs.contains(&l.b);
@@ -58,7 +62,13 @@ pub fn fig8(ctx: &mut Ctx) -> String {
             ratio,
             if touches_mc { "(MC link)" } else { "" }
         ));
+        rows.push(vec![
+            Cell::str(format!("{}-{}", l.a, l.b)),
+            Cell::num(ratio),
+            Cell::str(if touches_mc { "mc" } else { "core" }),
+        ]);
     }
+    rep.table("hottest_links", &["link", "util_over_mean", "kind"], rows);
     let max_mc_ratio = hot
         .iter()
         .filter(|&&(li, _)| {
@@ -67,19 +77,32 @@ pub fn fig8(ctx: &mut Ctx) -> String {
         })
         .map(|&(_, r)| r)
         .fold(0.0, f64::max);
+    let bottlenecks = hot.iter().filter(|&&(_, r)| r >= 2.0).count();
     out.push_str(&format!(
         "\n  max MC-adjacent link = {:.1}x mean (paper: up to 6-7x); bottlenecks >2x: {}/{} links\n",
         max_mc_ratio,
-        hot.iter().filter(|&&(_, r)| r >= 2.0).count(),
+        bottlenecks,
         topo.links.len()
     ));
-    out
+    rep.scalar_vs_paper(
+        "max_mc_link_over_mean",
+        max_mc_ratio,
+        "x mean utilization",
+        6.5,
+        "paper: MC-adjacent links reach ~6-7x the mean",
+    );
+    rep.scalar("bottleneck_links_over_2x", bottlenecks as f64, "links");
+    rep.scalar("total_links", topo.links.len() as f64, "links");
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 9: traffic-weighted hop count and σ(link util) for the optimized
 /// mesh (XY, XY+YX) vs WiHetNoC wireline candidates (k_max 4..7).
 /// Paper: mesh is >= 2x worse on both.
-pub fn fig9(ctx: &mut Ctx) -> String {
+pub fn fig9(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig9", "hop count & link-utilization spread, mesh vs WiHetNoC")
+        .with_paper("Fig. 9");
     let model = ctx.model();
     let mesh_sys = ctx.mesh_sys();
     let mesh_tm = ctx.traffic_on(model.clone(), &mesh_sys);
@@ -109,6 +132,10 @@ pub fn fig9(ctx: &mut Ctx) -> String {
         "  mesh XY+YX      {:>10.3}              {:>8.4}\n",
         a_mesh.twhc, sigma_xyyx
     ));
+    let mut rows = vec![
+        vec![Cell::str("mesh_xy"), Cell::num(a_mesh.twhc), Cell::num(a_mesh.u_std)],
+        vec![Cell::str("mesh_xy_yx"), Cell::num(a_mesh.twhc), Cell::num(sigma_xyyx)],
+    ];
     let mut best_ratio = f64::INFINITY;
     // the four per-k_max AMOSA candidates are independent — design any
     // missing ones in parallel before walking the (now cached) set
@@ -121,18 +148,34 @@ pub fn fig9(ctx: &mut Ctx) -> String {
             "  WiHetNoC k_max={k_max} {:>9.3}              {:>8.4}\n",
             a.twhc, a.u_std
         ));
+        rows.push(vec![
+            Cell::str(format!("wihetnoc_kmax{k_max}")),
+            Cell::num(a.twhc),
+            Cell::num(a.u_std),
+        ]);
     }
+    rep.table("objectives", &["config", "twhc", "sigma_u"], rows);
     out.push_str(&format!(
         "\n  mesh/WiHetNoC twhc ratio >= {:.2}x (paper: >= 2x)\n",
         1.0 / best_ratio
     ));
-    out
+    rep.scalar_vs_paper(
+        "mesh_over_wihetnoc_twhc",
+        1.0 / best_ratio,
+        "x",
+        2.0,
+        "paper: the mesh is >= 2x worse on traffic-weighted hop count",
+    );
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 10: the AMOSA candidate fronts (Ū, σ) per k_max, normalized to the
 /// final WiHetNoC configuration. Paper: both objectives fall as k_max
 /// grows, with diminishing returns by 7.
-pub fn fig10(ctx: &mut Ctx) -> String {
+pub fn fig10(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig10", "AMOSA candidate fronts per k_max").with_paper("Fig. 10");
     let model = ctx.model();
     let fij = ctx.fij(model);
     let sys = ctx.sys.clone();
@@ -144,6 +187,7 @@ pub fn fig10(ctx: &mut Ctx) -> String {
     let ref_topo = ctx.wireline(6);
     let ref_a = analyze(&ref_topo, &fij);
 
+    let mut rows = Vec::new();
     let mut cfg = ctx.design_cfg();
     for k_max in 4..=7 {
         cfg.seed = ctx.seed.wrapping_add(100 + k_max as u64);
@@ -161,10 +205,13 @@ pub fn fig10(ctx: &mut Ctx) -> String {
         pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         for (u, s) in pts.iter().take(6) {
             out.push_str(&format!("    U={u:.3}  sigma={s:.3}\n"));
+            rows.push(vec![Cell::num(k_max as f64), Cell::num(*u), Cell::num(*s)]);
         }
     }
+    rep.table("fronts", &["k_max", "u_norm", "sigma_norm"], rows);
     out.push_str("\n(expect: fronts shift toward the origin as k_max grows 4 -> 6, small gain 6 -> 7)\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 /// Analytic helper shared with tests: (twhc, σ) of an instance's wireline
@@ -201,19 +248,13 @@ mod tests {
     #[test]
     fn fig8_finds_mc_bottlenecks() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let s = fig8(&mut ctx);
-        assert!(s.contains("MC link"), "{s}");
-        // the max MC ratio should be well above the mean
-        let line = s.lines().find(|l| l.contains("max MC-adjacent")).unwrap();
-        let ratio: f64 = line
-            .split('=')
-            .nth(1)
-            .unwrap()
-            .trim()
-            .split('x')
-            .next()
-            .unwrap()
-            .parse()
+        let rep = fig8(&mut ctx);
+        assert!(rep.to_text().contains("MC link"), "{}", rep.to_text());
+        // the max MC ratio travels as a typed scalar with the paper claim
+        let ratio = rep
+            .scalars()
+            .find(|(n, _)| *n == "max_mc_link_over_mean")
+            .map(|(_, v)| v)
             .unwrap();
         assert!(ratio > 2.0, "MC links only {ratio}x mean");
     }

@@ -7,6 +7,7 @@
 //! metrics out — so reports are byte-identical at any `WIHETNOC_THREADS`.
 
 use super::ctx::{variant_on, Ctx};
+use super::report::{Cell, Report};
 use crate::energy::network::message_edp;
 use crate::energy::params::EnergyParams;
 use crate::noc::builder::NocInstance;
@@ -38,7 +39,9 @@ fn run_trace(ctx: &Ctx, inst: &NocInstance, trace: &[Message]) -> SimReport {
 
 /// Fig 11: network EDP vs k_max. Paper: optimum at k_max = 6 (EDP worsens
 /// beyond due to router energy without latency gains).
-pub fn fig11(ctx: &mut Ctx) -> String {
+pub fn fig11(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig11", "network EDP vs router port bound k_max")
+        .with_paper("Fig. 11");
     let energy = EnergyParams::default();
     let mut out = String::from("Fig 11 — network EDP vs router port bound k_max (paper optimum: 6)\n\n");
     out.push_str("  k_max   msg EDP (pJ*cyc)   mean latency   norm\n");
@@ -71,19 +74,41 @@ pub fn fig11(ctx: &mut Ctx) -> String {
         (*k_max, message_edp(&inst.topo, &rep, &energy), rep.latency.mean())
     });
     let best = rows.iter().cloned().fold(f64::INFINITY, |m, r| m.min(r.1));
+    let mut table = Vec::new();
+    let mut best_k = 0usize;
     for (k, edp, lat) in &rows {
+        if (edp / best - 1.0).abs() < 1e-9 {
+            best_k = *k;
+        }
         out.push_str(&format!(
             "  {k}       {edp:>12.1}       {lat:>8.2}      {:>5.3}{}\n",
             edp / best,
             if (edp / best - 1.0).abs() < 1e-9 { "  <- optimum" } else { "" }
         ));
+        table.push(vec![
+            Cell::num(*k as f64),
+            Cell::num(*edp),
+            Cell::num(*lat),
+            Cell::num(edp / best),
+        ]);
     }
-    out
+    rep.table("sweep", &["k_max", "msg_edp_pj_cyc", "mean_latency_cyc", "edp_over_best"], table);
+    rep.scalar_vs_paper(
+        "best_k_max",
+        best_k as f64,
+        "ports",
+        6.0,
+        "paper: the EDP optimum sits at k_max = 6",
+    );
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 12: EDP and wireless utilization vs WI count. Paper: EDP improves
 /// up to 24 WIs (6 per channel), then MAC overhead turns it around.
-pub fn fig12(ctx: &mut Ctx) -> String {
+pub fn fig12(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig12", "EDP & wireless utilization vs WI count").with_paper("Fig. 12");
     let energy = EnergyParams::default();
     let mut out = String::from(
         "Fig 12 — EDP & wireless utilization vs GPU-MC WI count (paper optimum: 24)\n\n",
@@ -104,18 +129,44 @@ pub fn fig12(ctx: &mut Ctx) -> String {
             100.0 * rep.air_fallbacks as f64 / rep.delivered_packets.max(1) as f64,
         )
     });
+    let mut table = Vec::new();
+    let mut best = (f64::INFINITY, 0usize);
     for (n_wi, (edp, util, fb)) in wi_counts.iter().zip(&rows) {
         out.push_str(&format!(
             "  {n_wi:<5}  {edp:>12.1}       {util:>6.2}%         {fb:>6.2}%\n",
         ));
+        if *edp < best.0 {
+            best = (*edp, *n_wi);
+        }
+        table.push(vec![
+            Cell::num(*n_wi as f64),
+            Cell::num(*edp),
+            Cell::num(*util),
+            Cell::num(*fb),
+        ]);
     }
+    rep.table(
+        "sweep",
+        &["n_wi", "msg_edp_pj_cyc", "wireless_util_pct", "air_fallback_pct"],
+        table,
+    );
+    rep.scalar_vs_paper(
+        "best_n_wi",
+        best.1 as f64,
+        "WIs",
+        24.0,
+        "paper: EDP improves up to 24 WIs (6 per channel)",
+    );
     out.push_str("\n(MAC request period grows with WIs/channel: beyond 6 per channel the access latency erodes the shortcut gain)\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 13: EDP and WI utilization vs number of GPU-MC channels at 6 WIs
 /// per channel. Paper: gains plateau at 4 channels for 64 tiles.
-pub fn fig13(ctx: &mut Ctx) -> String {
+pub fn fig13(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig13", "EDP & wireless utilization vs channel count")
+        .with_paper("Fig. 13");
     let energy = EnergyParams::default();
     let mut out = String::from(
         "Fig 13 — EDP & wireless utilization vs channel count (6 WIs/channel; paper plateau: 4)\n\n",
@@ -133,13 +184,22 @@ pub fn fig13(ctx: &mut Ctx) -> String {
         let rep = run_trace(ctx_ref, &inst, &trace);
         (message_edp(&inst.topo, &rep, &energy), 100.0 * rep.wireless_utilization())
     });
+    let mut table = Vec::new();
     for (channels, (edp, util)) in channel_counts.iter().zip(&rows) {
         let n_wi = channels * 6;
         out.push_str(&format!(
             "  {channels:<9}  {n_wi:<5}  {edp:>12.1}       {util:>6.2}%\n",
         ));
+        table.push(vec![
+            Cell::num(*channels as f64),
+            Cell::num(n_wi as f64),
+            Cell::num(*edp),
+            Cell::num(*util),
+        ]);
     }
-    out
+    rep.table("sweep", &["channels", "n_wi", "msg_edp_pj_cyc", "wireless_util_pct"], table);
+    rep.set_text(out);
+    rep
 }
 
 #[cfg(test)]

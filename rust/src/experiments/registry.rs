@@ -1,0 +1,299 @@
+//! The experiment registry — one [`Experiment`] descriptor per table /
+//! figure of the paper's evaluation (plus the non-paper extensions),
+//! replacing the old hardcoded id slice and string-returning dispatch.
+//!
+//! [`ALL`] and [`run`] are views over [`REGISTRY`]: adding an experiment
+//! means adding one descriptor, and the CLI menu, the unknown-id error
+//! message, the benches, and CI all pick it up. [`run_many`] fans
+//! independent experiments out over [`crate::util::exec::par_map`] with
+//! results joined in input order — every harness is deterministic given
+//! (effort, seed), so reports are byte-identical at any thread count
+//! (pinned by `tests/report_api.rs`).
+
+use std::sync::LazyLock;
+
+use super::ctx::{Ctx, Effort};
+use super::report::Report;
+use super::{compare_figs, optim_figs, param_figs, table1, traffic_figs, wireless_figs, workload_figs};
+use crate::error::WihetError;
+use crate::util::exec::{par_map_threads, thread_count};
+
+/// A registered experiment: identity, provenance, and its harness.
+pub struct Experiment {
+    /// CLI id (`table1`, `fig5`, ... `workload_figs`).
+    pub id: &'static str,
+    /// One-line human title (shown by `wihetnoc list`).
+    pub title: &'static str,
+    /// Paper anchor (`"Fig. 17"`); empty for non-paper extensions.
+    pub paper: &'static str,
+    /// The lightest [`Effort`] at which the harness produces a
+    /// meaningful report (all current harnesses are CI-runnable at
+    /// `Quick`; heavier future experiments can demand `Full`).
+    pub min_effort: Effort,
+    /// The harness itself.
+    pub run: fn(&mut Ctx) -> Result<Report, WihetError>,
+}
+
+impl Experiment {
+    /// Whether `effort` meets this experiment's floor ([`run`] and
+    /// [`run_many`] reject dispatches below it).
+    pub fn runnable_at(&self, effort: Effort) -> bool {
+        !(self.min_effort == Effort::Full && effort == Effort::Quick)
+    }
+}
+
+/// Every experiment, in paper order, then the non-paper extensions.
+pub const REGISTRY: &[Experiment] = &[
+    Experiment {
+        id: "table1",
+        title: "layer configurations of LeNet and CDBNet",
+        paper: "Table 1",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(table1::run(ctx)),
+    },
+    Experiment {
+        id: "fig5",
+        title: "normalized injection rate per layer",
+        paper: "Fig. 5",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(traffic_figs::fig5(ctx)),
+    },
+    Experiment {
+        id: "fig6",
+        title: "traffic breakdown per layer (many-to-few shares)",
+        paper: "Fig. 6",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(traffic_figs::fig6(ctx)),
+    },
+    Experiment {
+        id: "fig7",
+        title: "temporal locality of MC accesses",
+        paper: "Fig. 7",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(traffic_figs::fig7(ctx)),
+    },
+    Experiment {
+        id: "fig8",
+        title: "optimized mesh link-utilization bottlenecks",
+        paper: "Fig. 8",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(optim_figs::fig8(ctx)),
+    },
+    Experiment {
+        id: "fig9",
+        title: "hop count & link-utilization spread, mesh vs WiHetNoC",
+        paper: "Fig. 9",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(optim_figs::fig9(ctx)),
+    },
+    Experiment {
+        id: "fig10",
+        title: "AMOSA candidate fronts per k_max",
+        paper: "Fig. 10",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(optim_figs::fig10(ctx)),
+    },
+    Experiment {
+        id: "fig11",
+        title: "network EDP vs router port bound k_max",
+        paper: "Fig. 11",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(param_figs::fig11(ctx)),
+    },
+    Experiment {
+        id: "fig12",
+        title: "EDP & wireless utilization vs WI count",
+        paper: "Fig. 12",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(param_figs::fig12(ctx)),
+    },
+    Experiment {
+        id: "fig13",
+        title: "EDP & wireless utilization vs channel count",
+        paper: "Fig. 13",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(param_figs::fig13(ctx)),
+    },
+    Experiment {
+        id: "fig14",
+        title: "CPU-MC latency & saturation throughput, mesh vs WiHetNoC",
+        paper: "Fig. 14",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(wireless_figs::fig14(ctx)),
+    },
+    Experiment {
+        id: "fig15",
+        title: "CDF of link utilizations, mesh vs WiHetNoC",
+        paper: "Fig. 15",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(wireless_figs::fig15(ctx)),
+    },
+    Experiment {
+        id: "fig16",
+        title: "WI utilization asymmetry per layer",
+        paper: "Fig. 16",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(wireless_figs::fig16(ctx)),
+    },
+    Experiment {
+        id: "fig17",
+        title: "per-layer network latency vs the optimized mesh",
+        paper: "Fig. 17",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(compare_figs::fig17(ctx)),
+    },
+    Experiment {
+        id: "fig18",
+        title: "per-layer network EDP vs the optimized mesh",
+        paper: "Fig. 18",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(compare_figs::fig18(ctx)),
+    },
+    Experiment {
+        id: "fig19",
+        title: "full-system execution time & EDP vs the optimized mesh",
+        paper: "Fig. 19",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(compare_figs::fig19(ctx)),
+    },
+    Experiment {
+        id: "workload_figs",
+        title: "mesh vs WiHetNoC on non-paper workloads x schedules",
+        paper: "",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(workload_figs::workload_figs(ctx)),
+    },
+];
+
+/// All experiment ids, in registry order — a view over [`REGISTRY`].
+pub static ALL: LazyLock<Vec<&'static str>> =
+    LazyLock::new(|| REGISTRY.iter().map(|e| e.id).collect());
+
+/// All experiment ids as a slice (registry order).
+pub fn ids() -> &'static [&'static str] {
+    ALL.as_slice()
+}
+
+/// Look up a registered experiment by id.
+pub fn find(id: &str) -> Option<&'static Experiment> {
+    REGISTRY.iter().find(|e| e.id == id)
+}
+
+/// Dispatch one experiment by id. Unknown ids are a typed
+/// [`WihetError::UnknownExperiment`] (whose message lists every
+/// registered id), never a panic; an effort below the experiment's
+/// [`Experiment::min_effort`] floor is an [`WihetError::InvalidArg`].
+pub fn run(id: &str, ctx: &mut Ctx) -> Result<Report, WihetError> {
+    match find(id) {
+        Some(e) if !e.runnable_at(ctx.effort) => Err(WihetError::InvalidArg(format!(
+            "experiment '{}' requires --effort {} or higher (got {})",
+            e.id, e.min_effort, ctx.effort
+        ))),
+        Some(e) => (e.run)(ctx),
+        None => Err(WihetError::UnknownExperiment(id.to_string())),
+    }
+}
+
+/// Run several experiments, fanning out over the default worker pool
+/// (`WIHETNOC_THREADS`). Reports come back in input order.
+///
+/// Unknown ids fail up front, before any experiment runs. Each job gets
+/// its own [`Ctx`] built from `(effort, seed)` — experiments never share
+/// mutable state across workers, and every harness is deterministic
+/// given its context, so the reports are byte-identical to a serial run.
+pub fn run_many(ids: &[&str], effort: Effort, seed: u64) -> Result<Vec<Report>, WihetError> {
+    run_many_threads(thread_count(), ids, effort, seed)
+}
+
+/// [`run_many`] with an explicit worker count — the entry point the
+/// determinism tests drive with 1, 2, and 8 workers.
+pub fn run_many_threads(
+    threads: usize,
+    ids: &[&str],
+    effort: Effort,
+    seed: u64,
+) -> Result<Vec<Report>, WihetError> {
+    let exps: Vec<&'static Experiment> = ids
+        .iter()
+        .map(|id| {
+            let e = find(id).ok_or_else(|| WihetError::UnknownExperiment(id.to_string()))?;
+            if !e.runnable_at(effort) {
+                return Err(WihetError::InvalidArg(format!(
+                    "experiment '{}' requires --effort {} or higher (got {effort})",
+                    e.id, e.min_effort
+                )));
+            }
+            Ok(e)
+        })
+        .collect::<Result<_, _>>()?;
+    par_map_threads(threads, &exps, |_, e| {
+        let mut ctx = Ctx::new(effort, seed);
+        (e.run)(&mut ctx)
+    })
+    .into_iter()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_is_a_view_over_the_registry() {
+        assert_eq!(ALL.len(), REGISTRY.len());
+        assert_eq!(ALL.len(), 17);
+        for (id, e) in ALL.iter().zip(REGISTRY) {
+            assert_eq!(*id, e.id);
+        }
+        // ids are unique
+        let mut sorted = ALL.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ALL.len());
+    }
+
+    #[test]
+    fn min_effort_floor_is_enforced() {
+        // every current experiment is CI-runnable at Quick ...
+        for e in REGISTRY {
+            assert!(e.runnable_at(Effort::Quick), "{} not runnable at quick", e.id);
+            assert!(e.runnable_at(Effort::Full));
+        }
+        // ... and a Full-floor experiment would be rejected at Quick
+        let heavy = Experiment {
+            id: "heavy",
+            title: "synthetic",
+            paper: "",
+            min_effort: Effort::Full,
+            run: |_| unreachable!("never dispatched below its floor"),
+        };
+        assert!(!heavy.runnable_at(Effort::Quick));
+        assert!(heavy.runnable_at(Effort::Full));
+    }
+
+    #[test]
+    fn paper_anchors_and_titles_present() {
+        for e in REGISTRY {
+            assert!(!e.title.is_empty(), "{} has no title", e.id);
+            if e.id.starts_with("fig") || e.id.starts_with("table") {
+                assert!(!e.paper.is_empty(), "{} has no paper anchor", e.id);
+            }
+        }
+        assert_eq!(find("workload_figs").unwrap().paper, "");
+    }
+
+    #[test]
+    fn unknown_id_is_typed_and_lists_the_menu() {
+        let mut ctx = Ctx::new(Effort::Quick, 1);
+        let err = run("figg17", &mut ctx).unwrap_err();
+        assert!(matches!(err, WihetError::UnknownExperiment(_)));
+        let msg = err.to_string();
+        // satellite: the message enumerates every registered id
+        for id in ids() {
+            assert!(msg.contains(id), "error does not list '{id}': {msg}");
+        }
+        // run_many validates before doing any work
+        let err = run_many(&["table1", "nope"], Effort::Quick, 1).unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+}

@@ -1,0 +1,567 @@
+//! Structured experiment reports — the machine-readable artifact every
+//! registered [`crate::experiments::registry::Experiment`] returns.
+//!
+//! A [`Report`] is metadata (id, title, paper anchor) plus typed
+//! [`Section`]s — [`SectionData::Scalar`], [`SectionData::Series`], and
+//! [`SectionData::Table`] — each carrying units and, where the paper
+//! states a number, a [`PaperRef`] with the expected value, so CI and
+//! benches can regression-gate paper claims instead of grepping prose.
+//! Auxiliary files (e.g. the `workload_figs` comparison CSV) ride along
+//! as [`Artifact`] attachments instead of env-var side channels.
+//!
+//! Three renderers:
+//! * [`Report::to_text`] — the human-readable figure, byte-identical to
+//!   the pre-registry `String` output (pinned by `tests/report_api.rs`).
+//! * [`Report::to_csv`] — one row per data point
+//!   (`kind,section,column,row,value,unit`).
+//! * [`Report::to_json`] — the full document via [`crate::util::json`]
+//!   (schema documented in README §Experiments).
+//!
+//! [`ArtifactSink`] writes a report to `<out_dir>/<id>.{json,csv,txt}`
+//! plus `<id>.<name>` per attachment — the `--out` backend of
+//! `wihetnoc experiment`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::WihetError;
+use crate::util::json::Json;
+
+/// A value the paper states for this measurement, kept next to the
+/// measured one so downstream tooling can diff reproduction vs claim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaperRef {
+    /// The paper's number (for ranges, the midpoint — see `note`).
+    pub expected: f64,
+    /// The claim verbatim, e.g. "~1.8x latency reduction".
+    pub note: String,
+}
+
+/// One table cell: a number (JSON number) or a label (JSON string).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Num(f64),
+    Str(String),
+}
+
+impl Cell {
+    pub fn num(v: f64) -> Cell {
+        Cell::Num(v)
+    }
+
+    pub fn str(s: impl Into<String>) -> Cell {
+        Cell::Str(s.into())
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Num(v) => num(*v),
+            Cell::Str(s) => Json::Str(s.clone()),
+        }
+    }
+
+    fn to_csv_field(&self) -> String {
+        match self {
+            Cell::Num(v) => fmt_num(*v),
+            Cell::Str(s) => csv_escape(s),
+        }
+    }
+}
+
+/// The payload of one named report section.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SectionData {
+    /// A single measured value.
+    Scalar { value: f64, unit: String, paper_ref: Option<PaperRef> },
+    /// A labeled 1-D series (one value per x label).
+    Series {
+        unit: String,
+        labels: Vec<String>,
+        values: Vec<f64>,
+        paper_ref: Option<PaperRef>,
+    },
+    /// A rectangular table with named columns.
+    Table { columns: Vec<String>, rows: Vec<Vec<Cell>> },
+}
+
+/// A named piece of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub data: SectionData,
+}
+
+/// An auxiliary file carried by the report. `name` is a filename suffix
+/// — [`ArtifactSink`] writes it as `<report id>.<name>` and rejects
+/// names that would shadow the `.json`/`.csv`/`.txt` renderings or
+/// escape the sink directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub content: String,
+}
+
+/// A typed, serializable experiment result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// Registry id (`table1`, `fig5`, ... `workload_figs`).
+    pub id: String,
+    /// One-line human title.
+    pub title: String,
+    /// Paper anchor (`"Fig. 17"`, `"Table 1"`); empty for non-paper
+    /// extensions.
+    pub paper: String,
+    pub sections: Vec<Section>,
+    pub artifacts: Vec<Artifact>,
+    /// The preformatted human rendering (what the harness printed before
+    /// the registry existed) — returned verbatim by [`Report::to_text`].
+    text: String,
+}
+
+impl Report {
+    pub fn new(id: impl Into<String>, title: impl Into<String>) -> Report {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            paper: String::new(),
+            sections: Vec::new(),
+            artifacts: Vec::new(),
+            text: String::new(),
+        }
+    }
+
+    /// Set the paper anchor (builder-style).
+    pub fn with_paper(mut self, paper: impl Into<String>) -> Report {
+        self.paper = paper.into();
+        self
+    }
+
+    /// Attach the human-readable rendering.
+    pub fn set_text(&mut self, text: String) {
+        self.text = text;
+    }
+
+    pub fn scalar(&mut self, name: impl Into<String>, value: f64, unit: impl Into<String>) {
+        self.sections.push(Section {
+            name: name.into(),
+            data: SectionData::Scalar { value, unit: unit.into(), paper_ref: None },
+        });
+    }
+
+    /// A scalar the paper states a number for.
+    pub fn scalar_vs_paper(
+        &mut self,
+        name: impl Into<String>,
+        value: f64,
+        unit: impl Into<String>,
+        expected: f64,
+        note: impl Into<String>,
+    ) {
+        self.sections.push(Section {
+            name: name.into(),
+            data: SectionData::Scalar {
+                value,
+                unit: unit.into(),
+                paper_ref: Some(PaperRef { expected, note: note.into() }),
+            },
+        });
+    }
+
+    pub fn series(
+        &mut self,
+        name: impl Into<String>,
+        unit: impl Into<String>,
+        labels: Vec<String>,
+        values: Vec<f64>,
+    ) {
+        debug_assert_eq!(labels.len(), values.len(), "series labels/values must align");
+        self.sections.push(Section {
+            name: name.into(),
+            data: SectionData::Series {
+                unit: unit.into(),
+                labels,
+                values,
+                paper_ref: None,
+            },
+        });
+    }
+
+    pub fn table(
+        &mut self,
+        name: impl Into<String>,
+        columns: &[&str],
+        rows: Vec<Vec<Cell>>,
+    ) {
+        debug_assert!(
+            rows.iter().all(|r| r.len() == columns.len()),
+            "table rows must match the column count"
+        );
+        self.sections.push(Section {
+            name: name.into(),
+            data: SectionData::Table {
+                columns: columns.iter().map(|c| c.to_string()).collect(),
+                rows,
+            },
+        });
+    }
+
+    pub fn artifact(&mut self, name: impl Into<String>, content: impl Into<String>) {
+        self.artifacts.push(Artifact { name: name.into(), content: content.into() });
+    }
+
+    /// Look up a section by name.
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// Every scalar section as `(name, value)` — what the bench
+    /// trajectory records next to the wall times.
+    pub fn scalars(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.sections.iter().filter_map(|s| match &s.data {
+            SectionData::Scalar { value, .. } => Some((s.name.as_str(), *value)),
+            _ => None,
+        })
+    }
+
+    /// The human-readable figure — byte-identical to the pre-registry
+    /// `String` the harness returned.
+    pub fn to_text(&self) -> &str {
+        &self.text
+    }
+
+    /// One CSV row per data point: `id,kind,section,column,row,value,unit`.
+    /// The leading report id keeps rows attributable when several
+    /// reports are concatenated (`experiment all --format csv`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("id,kind,section,column,row,value,unit\n");
+        let id = csv_escape(&self.id);
+        for s in &self.sections {
+            let name = csv_escape(&s.name);
+            match &s.data {
+                SectionData::Scalar { value, unit, .. } => {
+                    let _ =
+                        writeln!(out, "{id},scalar,{name},,,{},{}", fmt_num(*value), csv_escape(unit));
+                }
+                SectionData::Series { unit, labels, values, .. } => {
+                    for (i, (l, v)) in labels.iter().zip(values).enumerate() {
+                        let _ = writeln!(
+                            out,
+                            "{id},series,{name},{},{i},{},{}",
+                            csv_escape(l),
+                            fmt_num(*v),
+                            csv_escape(unit)
+                        );
+                    }
+                }
+                SectionData::Table { columns, rows } => {
+                    for (ri, row) in rows.iter().enumerate() {
+                        for (col, cell) in columns.iter().zip(row) {
+                            let _ = writeln!(
+                                out,
+                                "{id},table,{name},{},{ri},{},",
+                                csv_escape(col),
+                                cell.to_csv_field()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The full document (schema 1; see README §Experiments).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Num(1.0));
+        m.insert("id".into(), Json::Str(self.id.clone()));
+        m.insert("title".into(), Json::Str(self.title.clone()));
+        m.insert(
+            "paper".into(),
+            if self.paper.is_empty() { Json::Null } else { Json::Str(self.paper.clone()) },
+        );
+        m.insert(
+            "sections".into(),
+            Json::Arr(self.sections.iter().map(section_json).collect()),
+        );
+        m.insert(
+            "artifacts".into(),
+            Json::Arr(
+                self.artifacts
+                    .iter()
+                    .map(|a| {
+                        let mut am = BTreeMap::new();
+                        am.insert("name".into(), Json::Str(a.name.clone()));
+                        am.insert("content".into(), Json::Str(a.content.clone()));
+                        Json::Obj(am)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("text".into(), Json::Str(self.text.clone()));
+        Json::Obj(m)
+    }
+}
+
+fn section_json(s: &Section) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(s.name.clone()));
+    match &s.data {
+        SectionData::Scalar { value, unit, paper_ref } => {
+            m.insert("kind".into(), Json::Str("scalar".into()));
+            m.insert("value".into(), num(*value));
+            m.insert("unit".into(), Json::Str(unit.clone()));
+            m.insert("paper_ref".into(), paper_ref_json(paper_ref));
+        }
+        SectionData::Series { unit, labels, values, paper_ref } => {
+            m.insert("kind".into(), Json::Str("series".into()));
+            m.insert("unit".into(), Json::Str(unit.clone()));
+            m.insert(
+                "labels".into(),
+                Json::Arr(labels.iter().map(|l| Json::Str(l.clone())).collect()),
+            );
+            m.insert("values".into(), Json::Arr(values.iter().map(|v| num(*v)).collect()));
+            m.insert("paper_ref".into(), paper_ref_json(paper_ref));
+        }
+        SectionData::Table { columns, rows } => {
+            m.insert("kind".into(), Json::Str("table".into()));
+            m.insert(
+                "columns".into(),
+                Json::Arr(columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            );
+            m.insert(
+                "rows".into(),
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| Json::Arr(r.iter().map(Cell::to_json).collect()))
+                        .collect(),
+                ),
+            );
+        }
+    }
+    Json::Obj(m)
+}
+
+fn paper_ref_json(p: &Option<PaperRef>) -> Json {
+    match p {
+        None => Json::Null,
+        Some(p) => {
+            let mut m = BTreeMap::new();
+            m.insert("expected".into(), num(p.expected));
+            m.insert("note".into(), Json::Str(p.note.clone()));
+            Json::Obj(m)
+        }
+    }
+}
+
+/// Non-finite values (a degenerate normalization) serialize as `null`,
+/// never as invalid JSON.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        Json::Num(v).dump()
+    } else {
+        String::new()
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Writes reports (and their attachments) under one output directory:
+/// `<dir>/<id>.json`, `<dir>/<id>.csv`, `<dir>/<id>.txt`, and
+/// `<dir>/<id>.<artifact name>` per attachment. Replaces the old
+/// `WIHETNOC_WORKLOAD_CSV` env-var side channel.
+pub struct ArtifactSink {
+    dir: PathBuf,
+}
+
+impl ArtifactSink {
+    /// Create the sink (and the directory, if missing).
+    pub fn new(dir: impl AsRef<Path>) -> Result<ArtifactSink, WihetError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ArtifactSink { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write all renderings + attachments; returns the paths written.
+    ///
+    /// Artifact names are validated first: a name that would shadow a
+    /// rendering (`json`/`csv`/`txt`) or escape the sink directory
+    /// (path separators, `..`) is a typed error — the "attachments can
+    /// never collide" invariant is enforced, not just documented.
+    pub fn write(&self, rep: &Report) -> Result<Vec<PathBuf>, WihetError> {
+        for a in &rep.artifacts {
+            if matches!(a.name.as_str(), "json" | "csv" | "txt")
+                || a.name.contains(['/', '\\'])
+                || a.name.contains("..")
+                || a.name.is_empty()
+            {
+                return Err(WihetError::InvalidArg(format!(
+                    "artifact name '{}' in report '{}' would shadow a rendering or \
+                     escape the output directory",
+                    a.name, rep.id
+                )));
+            }
+        }
+        let mut paths = Vec::new();
+        let mut emit = |suffix: &str, content: &str| -> Result<(), WihetError> {
+            let path = self.dir.join(format!("{}.{suffix}", rep.id));
+            std::fs::write(&path, content)?;
+            paths.push(path);
+            Ok(())
+        };
+        emit("json", &(rep.to_json().dump() + "\n"))?;
+        emit("csv", &rep.to_csv())?;
+        emit("txt", rep.to_text())?;
+        for a in &rep.artifacts {
+            emit(&a.name, &a.content)?;
+        }
+        Ok(paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Report {
+        let mut r = Report::new("figx", "a sample figure").with_paper("Fig. X");
+        r.scalar("plain", 2.5, "cyc");
+        r.scalar_vs_paper("claimed", 1.76, "x", 1.8, "~1.8x reduction");
+        r.series(
+            "lat",
+            "cyc",
+            vec!["C1".into(), "P1".into()],
+            vec![10.0, 4.5],
+        );
+        r.table(
+            "rows",
+            &["layer", "ratio"],
+            vec![
+                vec![Cell::str("C1"), Cell::num(0.5)],
+                vec![Cell::str("P1, odd\"name"), Cell::num(1.0)],
+            ],
+        );
+        r.artifact("rows.csv", "a,b\n1,2\n");
+        r.set_text("the preformatted figure\n".into());
+        r
+    }
+
+    #[test]
+    fn json_document_roundtrips() {
+        let r = sample();
+        let doc = r.to_json();
+        let parsed = json::parse(&doc.dump()).expect("valid json");
+        assert_eq!(parsed, doc);
+        assert_eq!(parsed.get("id").and_then(Json::as_str), Some("figx"));
+        assert_eq!(parsed.get("paper").and_then(Json::as_str), Some("Fig. X"));
+        let sections = parsed.get("sections").and_then(Json::as_arr).unwrap();
+        assert_eq!(sections.len(), 4);
+        let claimed = &sections[1];
+        assert_eq!(claimed.get("kind").and_then(Json::as_str), Some("scalar"));
+        assert_eq!(
+            claimed.get("paper_ref").unwrap().get("expected").and_then(Json::as_f64),
+            Some(1.8)
+        );
+        assert_eq!(
+            parsed.get("artifacts").and_then(Json::as_arr).unwrap()[0]
+                .get("name")
+                .and_then(Json::as_str),
+            Some("rows.csv")
+        );
+    }
+
+    #[test]
+    fn text_is_verbatim() {
+        assert_eq!(sample().to_text(), "the preformatted figure\n");
+    }
+
+    #[test]
+    fn csv_rows_cover_every_point() {
+        let csv = sample().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("id,kind,section,column,row,value,unit"));
+        // 2 scalars + 2 series points + 4 table cells
+        assert_eq!(csv.lines().count(), 1 + 2 + 2 + 4);
+        // every data row is attributable to its report after concatenation
+        assert!(csv.lines().skip(1).all(|l| l.starts_with("figx,")));
+        assert!(csv.contains("figx,scalar,claimed,,,1.76,x"));
+        assert!(csv.contains("figx,series,lat,P1,1,4.5,cyc"));
+        // csv-escaped cell
+        assert!(csv.contains("\"P1, odd\"\"name\""));
+    }
+
+    #[test]
+    fn non_finite_values_stay_valid_json() {
+        let mut r = Report::new("nan", "degenerate");
+        r.scalar("bad", f64::NAN, "");
+        r.series("s", "", vec!["a".into()], vec![f64::INFINITY]);
+        let doc = r.to_json().dump();
+        assert!(json::parse(&doc).is_ok(), "{doc}");
+        assert!(doc.contains("null"));
+    }
+
+    #[test]
+    fn scalars_iterator_and_lookup() {
+        let r = sample();
+        let all: Vec<(&str, f64)> = r.scalars().collect();
+        assert_eq!(all, vec![("plain", 2.5), ("claimed", 1.76)]);
+        assert!(r.section("lat").is_some());
+        assert!(r.section("missing").is_none());
+    }
+
+    #[test]
+    fn sink_writes_renderings_and_artifacts() {
+        let dir = std::env::temp_dir().join(format!("wihet_sink_{}", std::process::id()));
+        let sink = ArtifactSink::new(&dir).unwrap();
+        let paths = sink.write(&sample()).unwrap();
+        let names: Vec<String> = paths
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["figx.json", "figx.csv", "figx.txt", "figx.rows.csv"]);
+        for p in &paths {
+            assert!(std::fs::metadata(p).unwrap().len() > 0, "{p:?} is empty");
+        }
+        let json_text = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(json::parse(json_text.trim()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_rejects_shadowing_and_escaping_artifact_names() {
+        let dir = std::env::temp_dir().join(format!("wihet_sink_bad_{}", std::process::id()));
+        let sink = ArtifactSink::new(&dir).unwrap();
+        for bad in ["csv", "json", "txt", "sub/rows.csv", "..", "../rows.csv", ""] {
+            let mut r = Report::new("figx", "bad artifact");
+            r.artifact(bad, "x");
+            let err = sink.write(&r).unwrap_err();
+            assert!(
+                matches!(err, WihetError::InvalidArg(_)),
+                "'{bad}' was not rejected"
+            );
+        }
+        // nothing was written for rejected reports
+        assert!(std::fs::read_dir(&dir).unwrap().next().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,37 +2,63 @@
 //! asserted against the paper's entries in model::cnn tests).
 
 use super::ctx::Ctx;
+use super::report::{Cell, Report};
 use crate::scenario::ModelId;
 
-pub fn run(ctx: &mut Ctx) -> String {
+pub fn run(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("table1", "layer configurations of LeNet and CDBNet")
+        .with_paper("Table 1");
     let mut out = String::from("Table 1 — layer configurations (derived)\n");
     for model in ModelId::ALL {
-        let spec = ctx.spec(model);
+        let spec = ctx.spec(model.clone());
         out.push_str(&format!(
             "\n{} (input {}x{}x{}):\n",
             spec.name, spec.input_shape.0, spec.input_shape.1, spec.input_shape.2
         ));
         out.push_str("  layer  kind      in           out          kernel  weights\n");
+        let mut rows = Vec::new();
         for l in &spec.layers {
+            let in_shape = format!("{}x{}x{}", l.in_shape.0, l.in_shape.1, l.in_shape.2);
+            let out_shape = format!("{}x{}x{}", l.out_shape.0, l.out_shape.1, l.out_shape.2);
+            let kernel =
+                if l.kernel > 0 { format!("{0}x{0}", l.kernel) } else { "-".into() };
             out.push_str(&format!(
                 "  {:<6} {:<9} {:<12} {:<12} {:<7} {}\n",
                 l.name,
                 l.kind.as_str(),
-                format!("{}x{}x{}", l.in_shape.0, l.in_shape.1, l.in_shape.2),
-                format!("{}x{}x{}", l.out_shape.0, l.out_shape.1, l.out_shape.2),
-                if l.kernel > 0 { format!("{0}x{0}", l.kernel) } else { "-".into() },
+                in_shape,
+                out_shape,
+                kernel,
                 l.weight_count(),
             ));
+            rows.push(vec![
+                Cell::str(l.name.as_str()),
+                Cell::str(l.kind.as_str()),
+                Cell::str(in_shape),
+                Cell::str(out_shape),
+                Cell::str(kernel),
+                Cell::num(l.weight_count() as f64),
+            ]);
         }
+        let total_weights: u64 = spec.layers.iter().map(|l| l.weight_count()).sum();
+        let macs = spec.total_macs(ctx.batch());
         out.push_str(&format!(
             "  total weights: {}  | fwd MACs @batch {}: {}\n",
-            spec.layers.iter().map(|l| l.weight_count()).sum::<u64>(),
+            total_weights,
             ctx.batch(),
-            spec.total_macs(ctx.batch()),
+            macs,
         ));
+        rep.table(
+            format!("{model}.layers"),
+            &["layer", "kind", "in", "out", "kernel", "weights"],
+            rows,
+        );
+        rep.scalar(format!("{model}.total_weights"), total_weights as f64, "weights");
+        rep.scalar(format!("{model}.fwd_macs"), macs as f64, "MACs");
     }
     out.push_str("\npaper check: LeNet C1 29x29x16, C2 11x11x16, C3 1x1x128; CDBNet C1 31x31x32, C2 15x15x32, C3 7x7x64 — asserted in model::cnn::tests.\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 #[cfg(test)]
@@ -43,10 +69,20 @@ mod tests {
     #[test]
     fn renders_both_models() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let s = run(&mut ctx);
+        let rep = run(&mut ctx);
+        let s = rep.to_text();
         assert!(s.contains("lenet"));
         assert!(s.contains("cdbnet"));
         assert!(s.contains("29x29x16"));
         assert!(s.contains("7x7x64"));
+        // structured: one layer table + two scalars per model
+        assert!(rep.section("lenet.layers").is_some());
+        assert!(rep.section("cdbnet.layers").is_some());
+        let weights = rep
+            .scalars()
+            .find(|(n, _)| *n == "lenet.total_weights")
+            .map(|(_, v)| v)
+            .unwrap();
+        assert!(weights > 0.0);
     }
 }

@@ -2,6 +2,7 @@
 
 use super::common::normalize_to_max;
 use super::ctx::Ctx;
+use super::report::{Cell, Report};
 use crate::model::cnn::Pass;
 use crate::model::TileKind;
 use crate::noc::builder::NocKind;
@@ -12,7 +13,9 @@ use crate::util::rng::Rng;
 
 /// Fig 5: per-layer message injection rate, forward + backward, both CNNs,
 /// normalized to the hottest layer. Paper shape: conv > pool > FC.
-pub fn fig5(ctx: &mut Ctx) -> String {
+pub fn fig5(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig5", "normalized injection rate per layer").with_paper("Fig. 5");
     let mut out = String::from(
         "Fig 5 — normalized injection rate per layer (paper: conv > pool > FC)\n",
     );
@@ -27,24 +30,41 @@ pub fn fig5(ctx: &mut Ctx) -> String {
             for (p, r) in phases.iter().zip(&norm) {
                 out.push_str(&format!("  {:<5} {:>6.3} {}\n", p.tag, r, bar(*r)));
             }
+            rep.series(
+                format!("{model}.{}", pass_tag(pass)),
+                "injection rate / max layer",
+                phases.iter().map(|p| p.tag.clone()).collect(),
+                norm,
+            );
         }
     }
-    out
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 6: per-layer traffic breakdown — core->MC vs MC->core shares and
 /// the many-to-few fraction (paper: 93% LeNet / 89% CDBNet).
-pub fn fig6(ctx: &mut Ctx) -> String {
+pub fn fig6(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig6", "traffic breakdown per layer (flit shares)")
+        .with_paper("Fig. 6");
     let mut out = String::from("Fig 6 — traffic breakdown per layer (flit shares)\n");
     let sys = ctx.sys.clone();
     for model in ModelId::ALL {
         let tm = ctx.traffic(model.clone());
+        let m2f_pct = 100.0 * tm.many_to_few_fraction(&sys);
+        let paper_pct = if model == ModelId::LeNet { 93 } else { 89 };
         out.push_str(&format!(
-            "\n{model}: many-to-few = {:.1}% (paper: {}%)\n",
-            100.0 * tm.many_to_few_fraction(&sys),
-            if model == ModelId::LeNet { 93 } else { 89 },
+            "\n{model}: many-to-few = {m2f_pct:.1}% (paper: {paper_pct}%)\n",
         ));
+        rep.scalar_vs_paper(
+            format!("{model}.many_to_few_pct"),
+            m2f_pct,
+            "%",
+            paper_pct as f64,
+            format!("paper: {paper_pct}% of traffic is many-to-few"),
+        );
         out.push_str("  layer(pass)   core->MC  MC->core  core-core  MC->core/core->MC\n");
+        let mut rows = Vec::new();
         for p in &tm.phases {
             let c2m = p.core_to_mc_flits(&sys) as f64;
             let m2c = p.mc_to_core_flits(&sys) as f64;
@@ -59,16 +79,32 @@ pub fn fig6(ctx: &mut Ctx) -> String {
                 100.0 * cc / tot,
                 p.asymmetry(&sys),
             ));
+            rows.push(vec![
+                Cell::str(p.tag.as_str()),
+                Cell::str(pass_tag(p.pass)),
+                Cell::num(100.0 * c2m / tot),
+                Cell::num(100.0 * m2c / tot),
+                Cell::num(100.0 * cc / tot),
+                Cell::num(p.asymmetry(&sys)),
+            ]);
         }
+        rep.table(
+            format!("{model}.breakdown"),
+            &["layer", "pass", "core_to_mc_pct", "mc_to_core_pct", "core_core_pct", "asymmetry"],
+            rows,
+        );
     }
-    out
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 7: temporal locality raster of MC accesses during LeNet's forward
 /// conv (C1) and pool (P1) layers: which tiles talk to MCs in which time
 /// bin. The paper's observation: many GPUs transmit simultaneously
 /// (waves), demonstrating the need for dedicated CPU-MC links.
-pub fn fig7(ctx: &mut Ctx) -> String {
+pub fn fig7(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig7", "temporal locality of MC accesses").with_paper("Fig. 7");
     let sys = ctx.sys.clone();
     let tm = ctx.traffic(ModelId::LeNet);
     let mut out = String::from(
@@ -95,6 +131,9 @@ pub fn fig7(ctx: &mut Ctx) -> String {
             }
         }
         out.push_str(&format!("\n{} (duration {} cycles, {} msgs):\n", want, dur, msgs.len()));
+        rep.scalar(format!("{want}.duration_cycles"), dur as f64, "cyc");
+        rep.scalar(format!("{want}.messages"), msgs.len() as f64, "msgs");
+        let mut active_bins = 0usize;
         for (row, &tile) in tiles.iter().enumerate() {
             let kind = match sys.tiles[tile] {
                 TileKind::Cpu => "CPU",
@@ -105,11 +144,18 @@ pub fn fig7(ctx: &mut Ctx) -> String {
                 .iter()
                 .map(|&b| if b { '#' } else { '.' })
                 .collect();
+            active_bins += grid[row].iter().filter(|&&b| b).count();
             out.push_str(&format!("  {kind}{tile:<3} {line}\n"));
         }
+        rep.scalar(
+            format!("{want}.active_bin_fraction"),
+            active_bins as f64 / (bins * tiles.len()) as f64,
+            "active (tile, bin) cells / all",
+        );
     }
     out.push_str("\n(observe: GPU rows form staggered waves; CPU rows are sparse but overlap GPU bursts — motivating the dedicated CPU-MC wireless channel)\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 fn pass_tag(p: Pass) -> &'static str {
@@ -145,29 +191,40 @@ pub fn simulated_phase_latency(ctx: &mut Ctx, model: ModelId, tag: &str, pass: P
 mod tests {
     use super::*;
     use crate::experiments::ctx::Effort;
+    use crate::experiments::report::SectionData;
 
     #[test]
     fn fig5_reports_all_layers() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let s = fig5(&mut ctx);
+        let rep = fig5(&mut ctx);
+        let s = rep.to_text();
         for tag in ["C1", "P1", "C2", "P2", "C3", "F1"] {
             assert!(s.contains(tag), "missing {tag}\n{s}");
         }
         assert!(s.contains("cdbnet Backward"));
+        // structured: one series per (model, pass), normalized to 1.0 max
+        assert_eq!(rep.sections.len(), 4);
+        for name in ["lenet.fwd", "lenet.bwd", "cdbnet.fwd", "cdbnet.bwd"] {
+            let sec = rep.section(name).unwrap_or_else(|| panic!("missing {name}"));
+            let SectionData::Series { values, labels, .. } = &sec.data else {
+                panic!("{name} is not a series");
+            };
+            assert_eq!(values.len(), labels.len());
+            let max = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            assert!((max - 1.0).abs() < 1e-9, "{name} max {max}");
+        }
     }
 
     #[test]
     fn fig6_many_to_few_near_paper() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let s = fig6(&mut ctx);
-        assert!(s.contains("many-to-few"));
-        // extract lenet fraction
-        let frac = s
-            .lines()
-            .find(|l| l.contains("lenet: many-to-few"))
-            .and_then(|l| l.split('=').nth(1))
-            .and_then(|x| x.trim().trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.').split('%').next())
-            .and_then(|x| x.trim().parse::<f64>().ok())
+        let rep = fig6(&mut ctx);
+        assert!(rep.to_text().contains("many-to-few"));
+        // the measured fraction now travels as a typed scalar
+        let frac = rep
+            .scalars()
+            .find(|(n, _)| *n == "lenet.many_to_few_pct")
+            .map(|(_, v)| v)
             .unwrap();
         assert!((85.0..=99.0).contains(&frac), "lenet m2f {frac}");
     }
@@ -175,9 +232,16 @@ mod tests {
     #[test]
     fn fig7_raster_has_waves() {
         let mut ctx = Ctx::new(Effort::Quick, 1);
-        let s = fig7(&mut ctx);
+        let rep = fig7(&mut ctx);
+        let s = rep.to_text();
         assert!(s.contains("C1"));
         assert!(s.contains('#'));
         assert!(s.lines().filter(|l| l.contains("GPU")).count() >= 10);
+        let active = rep
+            .scalars()
+            .find(|(n, _)| *n == "C1.active_bin_fraction")
+            .map(|(_, v)| v)
+            .unwrap();
+        assert!(active > 0.0);
     }
 }

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use super::ctx::Ctx;
 use super::param_figs::sim_iteration;
+use super::report::{Cell, Report};
 use crate::model::cnn::Pass;
 use crate::model::SystemConfig;
 use crate::noc::builder::{NocInstance, NocKind};
@@ -85,7 +86,10 @@ pub fn sim_at_rate(ctx: &mut Ctx, kind: NocKind, rate: f64) -> SimReport {
 
 /// Fig 14: CPU-MC latency and overall throughput, optimized mesh vs
 /// WiHetNoC. Paper: ~1.8x latency reduction, ~2.2x throughput.
-pub fn fig14(ctx: &mut Ctx) -> String {
+pub fn fig14(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig14", "CPU-MC latency & saturation throughput, mesh vs WiHetNoC")
+            .with_paper("Fig. 14");
     let (mesh_thr, mesh_rate) = saturation_throughput(ctx, NocKind::MeshXyYx);
     let (wihet_thr, wihet_rate) = saturation_throughput(ctx, NocKind::WiHetNoc);
     // Two operating points: the workload's nominal rate (x1 — where the
@@ -119,7 +123,7 @@ pub fn fig14(ctx: &mut Ctx) -> String {
 
     let thr_ratio = wihet_thr / mesh_thr.max(1e-9);
     let r = |a: f64, b: f64| a / b.max(1e-9);
-    format!(
+    let text = format!(
         "Fig 14 — CPU-MC latency & throughput: optimized mesh vs WiHetNoC\n\n\
          \x20 metric                          mesh      WiHetNoC   ratio    paper\n\
          \x20 at nominal CNN load (x1.00):\n\
@@ -147,13 +151,70 @@ pub fn fig14(ctx: &mut Ctx) -> String {
         thr_ratio,
         mesh_rate,
         wihet_rate,
-    )
+    );
+    rep.table(
+        "operating_points",
+        &["load", "noc", "cpu_mc_latency_cyc", "overall_latency_cyc"],
+        vec![
+            vec![
+                Cell::str("nominal"),
+                Cell::str("mesh"),
+                Cell::num(mesh_nom.cpu_mc_latency.mean()),
+                Cell::num(mesh_nom.latency.mean()),
+            ],
+            vec![
+                Cell::str("nominal"),
+                Cell::str("wihetnoc"),
+                Cell::num(wihet_nom.cpu_mc_latency.mean()),
+                Cell::num(wihet_nom.latency.mean()),
+            ],
+            vec![
+                Cell::str("light"),
+                Cell::str("mesh"),
+                Cell::num(mesh_lt.cpu_mc_latency.mean()),
+                Cell::num(mesh_lt.latency.mean()),
+            ],
+            vec![
+                Cell::str("light"),
+                Cell::str("wihetnoc"),
+                Cell::num(wihet_lt.cpu_mc_latency.mean()),
+                Cell::num(wihet_lt.latency.mean()),
+            ],
+        ],
+    );
+    rep.scalar_vs_paper(
+        "latency_reduction_nominal",
+        r(mesh_nom.latency.mean(), wihet_nom.latency.mean()),
+        "x (mesh / WiHetNoC, nominal load)",
+        1.8,
+        "paper: ~1.8x network latency reduction",
+    );
+    rep.scalar(
+        "cpu_mc_latency_reduction_nominal",
+        r(mesh_nom.cpu_mc_latency.mean(), wihet_nom.cpu_mc_latency.mean()),
+        "x (mesh / WiHetNoC, nominal load)",
+    );
+    rep.scalar("mesh_saturation_throughput", mesh_thr, "flit/cyc");
+    rep.scalar("wihetnoc_saturation_throughput", wihet_thr, "flit/cyc");
+    rep.scalar_vs_paper(
+        "throughput_gain",
+        thr_ratio,
+        "x (WiHetNoC / mesh)",
+        2.2,
+        "paper: ~2.2x throughput improvement",
+    );
+    rep.scalar("mesh_stable_rate", mesh_rate, "x nominal");
+    rep.scalar("wihetnoc_stable_rate", wihet_rate, "x nominal");
+    rep.set_text(text);
+    rep
 }
 
 /// Fig 15: CDF of link utilizations, mesh_opt vs WiHetNoC, normalized to
 /// the mesh mean. Paper: 20% of mesh links >2x mean; WiHetNoC has none,
 /// and >90% of WiHetNoC links sit below the mesh mean.
-pub fn fig15(ctx: &mut Ctx) -> String {
+pub fn fig15(ctx: &mut Ctx) -> Report {
+    let mut rep = Report::new("fig15", "CDF of link utilizations, mesh vs WiHetNoC")
+        .with_paper("Fig. 15");
     let mesh_util = sim_kind(ctx, NocKind::MeshXyYx).link_utilization();
     let wihet = ctx.instance_arc(NocKind::WiHetNoc);
     let wihet_util = sim_iteration(ctx, &wihet).link_utilization();
@@ -171,19 +232,46 @@ pub fn fig15(ctx: &mut Ctx) -> String {
     for ((p, m), w) in points.iter().zip(&cdf_m).zip(&cdf_w) {
         out.push_str(&format!("  {p:>5.2}    {m:>6.3}     {w:>6.3}\n"));
     }
+    let labels: Vec<String> = points.iter().map(|p| format!("{p:.2}")).collect();
+    rep.series("mesh_cdf", "P(U/mesh-mean <= x)", labels.clone(), cdf_m.clone());
+    rep.series("wihetnoc_cdf", "P(U/mesh-mean <= x)", labels, cdf_w.clone());
     let mesh_over2 = 100.0 * (1.0 - stats::cdf_at(&norm_mesh, &[2.0])[0]);
     let wihet_over2 = 100.0 * (1.0 - stats::cdf_at(&norm_wihet, &[2.0])[0]);
     let wihet_under_mean = 100.0 * stats::cdf_at(&norm_wihet, &[1.0])[0];
     out.push_str(&format!(
         "\n  summary: mesh>2x {mesh_over2:.0}% (paper ~20) | wihet>2x {wihet_over2:.0}% (paper 0) | wihet<mesh-mean {wihet_under_mean:.0}% (paper >90)\n",
     ));
-    out
+    rep.scalar_vs_paper(
+        "mesh_links_over_2x_pct",
+        mesh_over2,
+        "%",
+        20.0,
+        "paper: ~20% of mesh links exceed 2x the mean",
+    );
+    rep.scalar_vs_paper(
+        "wihetnoc_links_over_2x_pct",
+        wihet_over2,
+        "%",
+        0.0,
+        "paper: no WiHetNoC link exceeds 2x the mesh mean",
+    );
+    rep.scalar_vs_paper(
+        "wihetnoc_links_under_mesh_mean_pct",
+        wihet_under_mean,
+        "%",
+        90.0,
+        "paper: >90% of WiHetNoC links sit below the mesh mean",
+    );
+    rep.set_text(out);
+    rep
 }
 
 /// Fig 16: asymmetry of WI utilization per layer — MC-to-core vs
 /// core-to-MC flits over the wireless channels, which should track the
 /// Fig 6 traffic asymmetry (the MAC allocates bandwidth on demand).
-pub fn fig16(ctx: &mut Ctx) -> String {
+pub fn fig16(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("fig16", "WI utilization asymmetry per layer").with_paper("Fig. 16");
     let sys = ctx.sys.clone();
     let inst = ctx.instance_arc(NocKind::WiHetNoc);
     let mut out = String::from(
@@ -210,21 +298,36 @@ pub fn fig16(ctx: &mut Ctx) -> String {
             .map(|p| phase_trace(&sys, p, 0, &cfg, &mut rng).0)
             .collect();
         let reps = par_map(&traces, |_, msgs| run_on(&sys, &inst, msgs));
-        for (p, rep) in phases.iter().zip(&reps) {
-            let ratio = rep.air_flits_from_mc as f64 / rep.air_flits_to_mc.max(1) as f64;
+        let mut rows = Vec::new();
+        for (p, sim) in phases.iter().zip(&reps) {
+            let ratio = sim.air_flits_from_mc as f64 / sim.air_flits_to_mc.max(1) as f64;
             out.push_str(&format!(
                 "  {:<5}({:<3})   {:>10}   {:>10}   {:>5.2}   {:>5.2}\n",
                 p.tag,
                 if p.pass == Pass::Forward { "fwd" } else { "bwd" },
-                rep.air_flits_from_mc,
-                rep.air_flits_to_mc,
+                sim.air_flits_from_mc,
+                sim.air_flits_to_mc,
                 ratio,
                 p.asymmetry(&sys),
             ));
+            rows.push(vec![
+                Cell::str(p.tag.as_str()),
+                Cell::str(if p.pass == Pass::Forward { "fwd" } else { "bwd" }),
+                Cell::num(sim.air_flits_from_mc as f64),
+                Cell::num(sim.air_flits_to_mc as f64),
+                Cell::num(ratio),
+                Cell::num(p.asymmetry(&sys)),
+            ]);
         }
+        rep.table(
+            format!("{model}.wi_asymmetry"),
+            &["layer", "pass", "air_from_mc_flits", "air_to_mc_flits", "wi_ratio", "traffic_ratio"],
+            rows,
+        );
     }
     out.push_str("\n(WI ratio tracking the traffic ratio = the distributed MAC allocates wireless bandwidth per instantaneous demand)\n");
-    out
+    rep.set_text(out);
+    rep
 }
 
 #[cfg(test)]

@@ -10,11 +10,14 @@
 //! through the same pipeline as the paper figures, just on a chip and
 //! CNNs the paper never evaluated.
 //!
-//! Besides the printed table, the harness writes a machine-readable CSV
-//! (default `workload_figs.csv`, override with `WIHETNOC_WORKLOAD_CSV`;
-//! CI uploads it as an artifact).
+//! Besides the table, the report attaches the comparison rows as a
+//! machine-readable CSV artifact (`workload_figs.rows.csv` under
+//! `experiment workload_figs --out DIR`; CI uploads it). The old
+//! `WIHETNOC_WORKLOAD_CSV` env var is deprecated — it still writes the
+//! CSV to the given path for one release, with a warning on stderr.
 
 use super::ctx::Ctx;
+use super::report::{Cell, Report};
 use crate::coordinator::cosim::cosimulate_scheduled;
 use crate::noc::builder::NocKind;
 use crate::scenario::{ModelId, Scenario};
@@ -35,7 +38,9 @@ fn schedules() -> [SchedulePolicy; 3] {
 
 /// The workload comparison: one table row per (model, schedule), hybrid
 /// normalized to the mesh, plus the hybrid's timeline metrics.
-pub fn workload_figs(ctx: &mut Ctx) -> String {
+pub fn workload_figs(ctx: &mut Ctx) -> Report {
+    let mut rep =
+        Report::new("workload_figs", "mesh vs WiHetNoC on non-paper workloads x schedules");
     let platform: Platform = PLATFORM.parse().expect("well-formed platform literal");
     let mut out = format!(
         "Workload figs — mesh vs WiHetNoC on {PLATFORM} (mapping pipeline:4, batch {BATCH})\n\
@@ -45,6 +50,7 @@ pub fn workload_figs(ctx: &mut Ctx) -> String {
     let mut csv = String::from(
         "model,schedule,noc,exec_seconds,edp_js,bubble_fraction,speedup_vs_serial\n",
     );
+    let mut rows = Vec::new();
     for name in ["alexnet", "vgg11"] {
         let model: ModelId = name.parse().expect("preset exists");
         let sc = Scenario::new(platform, model.clone())
@@ -77,27 +83,50 @@ pub fn workload_figs(ctx: &mut Ctx) -> String {
                 h.bubble_fraction,
                 h.speedup_vs_serial,
             ));
-            for rep in [m, h] {
+            rows.push(vec![
+                Cell::str(name),
+                Cell::str(sched.to_string()),
+                Cell::num(h.exec_seconds / m.exec_seconds),
+                Cell::num(h.edp / m.edp),
+                Cell::num(h.bubble_fraction),
+                Cell::num(h.speedup_vs_serial),
+            ]);
+            for sim in [m, h] {
                 csv.push_str(&format!(
                     "{},{},{},{:.6e},{:.6e},{:.4},{:.4}\n",
                     name,
                     sched,
-                    rep.noc,
-                    rep.exec_seconds,
-                    rep.edp,
-                    rep.bubble_fraction,
-                    rep.speedup_vs_serial,
+                    sim.noc,
+                    sim.exec_seconds,
+                    sim.edp,
+                    sim.bubble_fraction,
+                    sim.speedup_vs_serial,
                 ));
             }
         }
     }
-    let path = std::env::var("WIHETNOC_WORKLOAD_CSV")
-        .unwrap_or_else(|_| "workload_figs.csv".to_string());
-    match std::fs::write(&path, &csv) {
-        Ok(()) => out.push_str(&format!("\n(wrote {path})\n")),
-        Err(e) => out.push_str(&format!("\n(could not write {path}: {e})\n")),
+    rep.table(
+        "hybrid_over_mesh",
+        &["model", "schedule", "exec_ratio", "edp_ratio", "bubble_fraction", "speedup_vs_serial"],
+        rows,
+    );
+    rep.artifact("rows.csv", csv.clone());
+    // Deprecated side channel, kept one release as an alias: if the env
+    // var is set, still write the CSV there, but say so.
+    if let Ok(path) = std::env::var("WIHETNOC_WORKLOAD_CSV") {
+        eprintln!(
+            "warning: WIHETNOC_WORKLOAD_CSV is deprecated; use \
+             `wihetnoc experiment workload_figs --out DIR` (writes workload_figs.rows.csv)"
+        );
+        if let Err(e) = std::fs::write(&path, &csv) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
     }
-    out
+    out.push_str(
+        "\n(comparison rows attached as the workload_figs.rows.csv artifact; write it with --out DIR)\n",
+    );
+    rep.set_text(out);
+    rep
 }
 
 #[cfg(test)]

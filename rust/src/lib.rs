@@ -24,6 +24,12 @@
 //! * [`Scenario`] — *what experiment*: platform + workload + mapping +
 //!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch. The
 //!   single input to design, simulation, and the experiment harnesses.
+//!
+//! The paper's evaluation itself is typed too: every table/figure is an
+//! [`experiments::Experiment`] in a registry, and each harness returns a
+//! structured [`experiments::Report`] (scalar/series/table sections with
+//! units and paper-stated expected values) that renders as text, CSV, or
+//! JSON — see [`experiments::run`] / [`experiments::run_many`].
 //! * [`noc::builder::NocDesigner`] — *how to build it*: a fluent builder
 //!   that runs the paper's design flow (AMOSA wireline optimization,
 //!   wireless overlay, ALASH routing) with knobs scaled to the platform.

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   experiment <id|all>     regenerate a paper table/figure (table1, fig5..fig19)
+//!                           as text, JSON, or CSV (--format), optionally writing
+//!                           <id>.{json,csv,txt} + attachments under --out DIR
 //!   train                   train a CNN through the PJRT artifacts (L3 path)
 //!   design                  run the NoC design flow on any platform and print the result
 //!   simulate                simulate one training iteration on a chosen NoC/platform
@@ -15,7 +17,7 @@
 use std::process::ExitCode;
 
 use wihetnoc::coordinator::{TrainConfig, Trainer};
-use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::experiments::{self, ArtifactSink, Ctx, Effort};
 use wihetnoc::noc::analysis::analyze;
 use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
@@ -135,14 +137,36 @@ fn ctx_from(args: &Args) -> Result<Ctx, String> {
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<(), String> {
-    let specs = common_specs();
+    let mut specs = common_specs();
+    specs.extend([
+        ArgSpec {
+            name: "format",
+            help: "text|json|csv — how reports render on stdout",
+            default: Some("text"),
+            is_flag: false,
+        },
+        ArgSpec {
+            name: "out",
+            help: "directory for <id>.{json,csv,txt} + attachments",
+            default: None,
+            is_flag: false,
+        },
+    ]);
     let args = parse(argv, &specs)?;
     let Some(id) = args.positional.first() else {
         return Err(format!(
-            "usage: wihetnoc experiment <id|all> [--effort quick|full]\nids: {}\n{}",
+            "usage: wihetnoc experiment <id|all> [--effort quick|full] [--format text|json|csv] [--out DIR]\nids: {}\n{}",
             experiments::ALL.join(", "),
             usage(&specs)
         ));
+    };
+    let format = args.get_or("format", "text");
+    if !matches!(format.as_str(), "text" | "json" | "csv") {
+        return Err(format!("--format must be text|json|csv, got '{format}'"));
+    }
+    let sink = match args.get("out") {
+        Some(dir) => Some(ArtifactSink::new(dir).map_err(str_err)?),
+        None => None,
     };
     let mut ctx = ctx_from(&args)?;
     let ids: Vec<&str> = if id == "all" {
@@ -153,8 +177,18 @@ fn cmd_experiment(argv: &[String]) -> Result<(), String> {
     for id in ids {
         let t0 = std::time::Instant::now();
         let report = experiments::run(id, &mut ctx).map_err(str_err)?;
-        println!("{report}");
-        println!("[{id} done in {:.1}s]\n", t0.elapsed().as_secs_f64());
+        match format.as_str() {
+            "json" => println!("{}", report.to_json().dump()),
+            "csv" => print!("{}", report.to_csv()),
+            _ => {
+                println!("{}", report.to_text());
+                println!("[{id} done in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+        }
+        if let Some(sink) = &sink {
+            let paths = sink.write(&report).map_err(str_err)?;
+            eprintln!("[{id}: wrote {} files under {}]", paths.len(), sink.dir().display());
+        }
     }
     Ok(())
 }
@@ -356,7 +390,15 @@ fn cmd_list(argv: &[String]) -> Result<(), String> {
         is_flag: false,
     }];
     let args = parse(argv, &specs)?;
-    println!("experiments: {}", experiments::ALL.join(", "));
+    println!("experiments (run with `wihetnoc experiment <id|all> [--format text|json|csv] [--out DIR]`):");
+    for e in experiments::REGISTRY {
+        println!(
+            "  {:<14} {}{}",
+            e.id,
+            e.title,
+            if e.paper.is_empty() { String::new() } else { format!(" [{}]", e.paper) }
+        );
+    }
     println!(
         "models: {} — or any workload-DSL spec | mappings: data[:replicas], pipeline[:stages] | schedules: serial, gpipe:M, 1f1b:M | nocs: mesh_xy, mesh_opt, hetnoc, wihetnoc",
         preset_names().join(", ")

@@ -1,11 +1,11 @@
 //! Cross-module integration tests: the full design flow (traffic model ->
 //! AMOSA -> wireless overlay -> routing -> simulation -> energy) on both
-//! the paper system and the small 4x4 variant, plus experiment smoke runs.
+//! the paper system and the small 4x4 variant (the every-experiment
+//! smoke lives in tests/report_api.rs).
 
 use wihetnoc::energy::network::network_energy_pj;
 use wihetnoc::energy::params::EnergyParams;
 use wihetnoc::energy::system::{full_system_run, StallModel};
-use wihetnoc::experiments::{self, Ctx, Effort};
 use wihetnoc::model::{cdbnet, lenet, SystemConfig};
 use wihetnoc::noc::builder::{het_noc, mesh_opt, wi_het_noc, DesignConfig};
 use wihetnoc::noc::routing::verify_lash;
@@ -108,20 +108,11 @@ fn headline_orderings_hold_end_to_end() {
     assert!(fw.exec_seconds <= fm.exec_seconds * 1.005);
 }
 
-#[test]
-fn experiments_all_smoke() {
-    // every figure harness runs and produces non-trivial output
-    let mut ctx = Ctx::new(Effort::Quick, 7);
-    for id in experiments::ALL {
-        let report = experiments::run(id, &mut ctx).unwrap_or_else(|e| panic!("{id}: {e}"));
-        assert!(report.len() > 100, "{id} output too short:\n{report}");
-        assert!(report.contains(match *id {
-            "table1" => "Table 1",
-            _ => "Fig",
-        }));
-    }
-    assert!(experiments::run("nope", &mut ctx).is_err());
-}
+// NOTE: the every-id smoke (all of `experiments::ALL` through one shared
+// Ctx, asserting non-trivial text AND a valid JSON document per report)
+// lives in tests/report_api.rs::every_experiment_roundtrips_through_json
+// — one full sweep covers both, instead of this binary re-running the
+// AMOSA designs a second time.
 
 #[test]
 fn manifest_cross_check_against_python_if_present() {

@@ -41,13 +41,14 @@ fn ctx_runs_experiment_on_4x4_platform() {
     let scenario = Scenario::new("4x4".parse().unwrap(), ModelId::LeNet).with_seed(5);
     let mut ctx = Ctx::for_scenario(&scenario).unwrap();
     let report = experiments::run("fig5", &mut ctx).unwrap();
-    assert!(report.contains("Fig 5"));
-    assert!(report.contains("C1"));
+    assert!(report.to_text().contains("Fig 5"));
+    assert!(report.to_text().contains("C1"));
 }
 
 // NOTE: the every-id dispatch smoke test (all of `experiments::ALL` at
-// Effort::Quick through one shared Ctx, asserting non-empty reports)
-// lives in tests/integration.rs::experiments_all_smoke.
+// Effort::Quick through one shared Ctx, asserting non-trivial text and
+// valid JSON per report) lives in
+// tests/report_api.rs::every_experiment_roundtrips_through_json.
 
 #[test]
 fn unknown_names_are_errors_not_panics() {
