@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Bench regression gate (open since PR 5).
+
+Compares the `current` run in BENCH_sim.json against the recorded
+`baseline` series and the experiment reports against their paper
+claims:
+
+* wall-time medians: `current` must stay under REGRESSION_FACTOR x
+  `baseline` per bench name (generous — CI runners are noisy; only
+  real regressions trip it);
+* `figures` scalars: the experiments are deterministic given
+  (effort, seed), so a scalar drifting more than FIGURE_REL_TOL from
+  the baseline value means the measured physics changed — that must
+  be a deliberate, re-recorded change, not an accident;
+* `paper_ref` scalars (from reports/<id>.json): the measured value
+  must stay within PAPER_REL_TOL of the paper's stated number.
+
+Until a `baseline` series exists the first two checks are skipped
+(the seed containers had no Rust toolchain; CI records the first
+baseline on main), so the gate arms itself automatically.
+
+Usage: bench_gate.py BENCH_sim.json [reports_dir]
+"""
+
+import json
+import sys
+
+REGRESSION_FACTOR = 2.5  # current median may be up to 2.5x baseline
+FIGURE_REL_TOL = 0.25    # figures scalars may drift 25% from baseline
+PAPER_REL_TOL = 0.50     # measured vs paper claim, reproduction-grade
+
+
+def fail(msgs):
+    for m in msgs:
+        print(f"GATE FAIL: {m}")
+    sys.exit(1)
+
+
+def run_by_label(doc, label):
+    for run in doc.get("runs", []):
+        if run.get("label") == label:
+            return run
+    return None
+
+
+def gate_bench(doc):
+    errors = []
+    baseline = run_by_label(doc, "baseline")
+    current = run_by_label(doc, "current")
+    if baseline is None:
+        print("no recorded baseline series yet; bench gate disarmed")
+        return errors
+    if current is None:
+        print("no current series in this run; bench gate skipped")
+        return errors
+
+    base_medians = {r["name"]: r["median_ns"] for r in baseline.get("results", [])}
+    for r in current.get("results", []):
+        name, med = r["name"], r["median_ns"]
+        base = base_medians.get(name)
+        if base is None or base <= 0:
+            continue  # new bench, or degenerate baseline: nothing to gate
+        if med > REGRESSION_FACTOR * base:
+            errors.append(
+                f"bench '{name}': median {med:.0f} ns is "
+                f"{med / base:.2f}x the baseline {base:.0f} ns "
+                f"(limit {REGRESSION_FACTOR}x)"
+            )
+
+    base_figs = baseline.get("figures", {})
+    for exp, scalars in current.get("figures", {}).items():
+        for name, value in scalars.items():
+            base = base_figs.get(exp, {}).get(name)
+            if base is None or not isinstance(base, (int, float)):
+                continue
+            denom = max(abs(base), 1e-12)
+            drift = abs(value - base) / denom
+            if drift > FIGURE_REL_TOL:
+                errors.append(
+                    f"figure {exp}.{name}: {value:.6g} drifted "
+                    f"{100 * drift:.1f}% from the baseline {base:.6g} "
+                    f"(limit {100 * FIGURE_REL_TOL:.0f}%)"
+                )
+    return errors
+
+
+def gate_paper_refs(reports_dir):
+    import glob
+    import os
+
+    errors = []
+    checked = 0
+    for path in sorted(glob.glob(os.path.join(reports_dir, "*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        for section in doc.get("sections", []):
+            ref = section.get("paper_ref")
+            value = section.get("value")
+            if not ref or not isinstance(value, (int, float)):
+                continue
+            expected = ref.get("expected")
+            if not isinstance(expected, (int, float)) or expected == 0:
+                continue
+            checked += 1
+            rel = abs(value - expected) / abs(expected)
+            if rel > PAPER_REL_TOL:
+                errors.append(
+                    f"{os.path.basename(path)} '{section.get('name')}': "
+                    f"measured {value:.6g} is {100 * rel:.1f}% from the "
+                    f"paper's {expected:.6g} (limit {100 * PAPER_REL_TOL:.0f}%)"
+                )
+    print(f"paper_ref gate: {checked} claimed scalars checked")
+    return errors
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(2)
+    with open(sys.argv[1]) as f:
+        doc = json.load(f)
+    errors = gate_bench(doc)
+    if len(sys.argv) > 2:
+        errors += gate_paper_refs(sys.argv[2])
+    if errors:
+        fail(errors)
+    print("bench gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,12 +4,15 @@
 //! scenario edit: parse a platform string, hand it to `NocDesigner`.
 //! Here: a 16-tile edge-inference chip (12 GPU, 2 CPU, 2 MC) running
 //! CDBNet, designed end to end and compared against its mesh — then the
-//! same flow again on the paper's 8x8 for contrast.
+//! same flow again on the paper's 8x8 for contrast. Each platform
+//! closes by scaling the designed chip out to a 4-chip data-parallel
+//! fabric (ring allreduce over alpha-beta inter-chip links).
 //!
 //! Run: `cargo run --release --example design_custom_noc`
 
 use wihetnoc::energy::network::message_edp;
 use wihetnoc::energy::params::EnergyParams;
+use wihetnoc::fabric::{run_fabric, Fabric};
 use wihetnoc::noc::analysis::analyze;
 use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
@@ -89,6 +92,25 @@ fn run_platform(platform: Platform, model: ModelId, batch: usize) -> Result<(), 
             serial.makespan as f64 / gp.makespan.max(1) as f64,
             100.0 * gp.bubble_fraction,
             gp.peak_link_concurrency,
+        );
+    }
+
+    // scale the designed chip out: the same instances on a 4-chip
+    // data-parallel fabric, gradients allreduced over 25 GB/s links —
+    // the collective's on-chip traffic rides the gated timeline, the
+    // inter-chip hops are charged from the alpha-beta model
+    let fabric: Fabric = "4:topo=ring".parse()?;
+    let grad = scenario.model.spec().total_weight_bytes();
+    for (name, inst) in [("mesh", &mesh), ("wihetnoc", &inst)] {
+        let fr = run_fabric(&sys, inst, &piped, &gpipe, &fabric, grad, &tcfg)?;
+        println!(
+            "{name:<9} fabric {fabric} ({}): {} B/chip on the wire in {} steps | iteration {} cyc (chip makespan {}) | comm overhead {:>5.1}%",
+            fr.algorithm,
+            fr.wire_bytes_per_chip,
+            fr.steps,
+            fr.iteration_cycles,
+            fr.schedule.makespan,
+            fr.comm_overhead_pct,
         );
     }
     Ok(())

@@ -24,6 +24,7 @@ use std::collections::BTreeMap;
 
 use wihetnoc::bench::{merge_run, Bencher};
 use wihetnoc::experiments::{self, Ctx, Effort};
+use wihetnoc::fabric::{extend_timeline, steps, Collective, Fabric};
 use wihetnoc::model::SystemConfig;
 use wihetnoc::noc::builder::{mesh_opt, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig, SimWorkspace};
@@ -148,6 +149,52 @@ fn main() {
         },
     );
 
+    // --- fabric subsystem microbenches (ISSUE 6) ---
+    // allreduce expansion: lower a ring collective's gated instances
+    // into the lenet gpipe:4 timeline (the pure DAG-building cost)
+    let grad = ModelId::LeNet.spec().total_weight_bytes();
+    let ring8 = steps(Collective::Ring, 8, grad);
+    let fabric8 = Fabric { collective: Collective::Ring, ..Fabric::new(8) };
+    let n_ar = {
+        let mut tl = expand(&tm_piped, &gpipe4).expect("timeline expands");
+        extend_timeline(&mut tl, &tm_piped, &sys, &fabric8, &ring8);
+        tl.instances.len()
+    };
+    b.bench_items(
+        &format!("fabric_expand/lenet gpipe:4 ring:8 ({n_ar} instances)"),
+        Some(n_ar as f64),
+        &mut || {
+            let mut tl = expand(&tm_piped, &gpipe4).expect("expands");
+            extend_timeline(&mut tl, &tm_piped, &sys, &fabric8, &ring8);
+            std::hint::black_box(tl.instances.len());
+        },
+    );
+    // full fabric lowering + gated co-simulation + alpha-beta charge:
+    // one 4-chip data-parallel iteration of pipelined lenet
+    let fabric4 = Fabric { collective: Collective::Ring, ..Fabric::new(4) };
+    let fab_pkts = wihetnoc::fabric::run_fabric(
+        &sys, &inst, &tm_piped, &gpipe4, &fabric4, grad, &sched_cfg,
+    )
+    .expect("fabric runs")
+    .schedule
+    .sim
+    .delivered_packets;
+    b.bench_items(
+        &format!("fabric_lower/lenet gpipe:4 ring:4 ({fab_pkts} pkts)"),
+        Some(fab_pkts as f64),
+        &mut || {
+            std::hint::black_box(
+                wihetnoc::fabric::run_fabric(
+                    &sys, &inst, &tm_piped, &gpipe4, &fabric4, grad, &sched_cfg,
+                )
+                .expect("fabric runs")
+                .schedule
+                .sim
+                .delivered_packets,
+            );
+        },
+    );
+
     // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
@@ -161,8 +208,8 @@ fn main() {
     let mut figures = BTreeMap::new();
     for id in experiments::ALL.iter() {
         let mut report = None;
-        if *id == "workload_figs" {
-            // This harness builds its own Ctxs and AMOSA-designs two
+        if matches!(*id, "workload_figs" | "scale_figs") {
+            // These harnesses build their own Ctxs and AMOSA-design two
             // 144-tile NoCs per run — repeat samples would redo identical
             // design work, so time a single pass (still recorded in
             // BENCH_sim.json).

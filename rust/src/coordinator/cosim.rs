@@ -3,8 +3,11 @@
 //! same workload — the Fig 19 end-to-end loop.
 
 use crate::energy::params::EnergyParams;
-use crate::energy::system::{full_system_run_scheduled, FullSystemReport, StallModel};
+use crate::energy::system::{
+    full_system_run_fabric, full_system_run_scheduled, FullSystemReport, StallModel,
+};
 use crate::error::Result;
+use crate::fabric::Fabric;
 use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
 use crate::schedule::SchedulePolicy;
@@ -69,6 +72,33 @@ pub fn cosimulate_scheduled(
     Ok(CosimReport { per_noc })
 }
 
+/// [`cosimulate_scheduled`] on a multi-chip [`Fabric`]: each NoC's
+/// per-chip iteration is co-simulated with the allreduce's on-chip
+/// traffic and charged the alpha-beta inter-chip time and SerDes energy
+/// (see [`crate::energy::full_system_run_fabric`]). `grad_bytes` is the
+/// model's total weight bytes (`ModelId::spec().total_weight_bytes()`).
+/// The single-chip fabric is byte-identical to [`cosimulate_scheduled`].
+pub fn cosimulate_fabric(
+    sys: &SystemConfig,
+    tm: &TrafficModel,
+    schedule: &SchedulePolicy,
+    fabric: &Fabric,
+    grad_bytes: u64,
+    nocs: &[&NocInstance],
+    trace_cfg: &TraceConfig,
+) -> Result<CosimReport> {
+    let energy = EnergyParams::default();
+    let stall = StallModel::default();
+    let per_noc: Vec<_> = crate::util::exec::par_map(nocs, |_, inst| {
+        full_system_run_fabric(
+            sys, inst, tm, schedule, fabric, grad_bytes, trace_cfg, &energy, &stall,
+        )
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
+    Ok(CosimReport { per_noc })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +120,31 @@ mod tests {
         let edp = rep.edp_vs_baseline(1);
         assert!(exec <= 1.01, "exec ratio {exec}");
         assert!(edp < 1.0, "edp ratio {edp}");
+    }
+
+    #[test]
+    fn fabric_cosim_charges_every_noc() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = model_phases(&sys, &lenet(), 32);
+        let mesh = mesh_opt(&sys, true);
+        let wihet = wi_het_noc_quick(&sys, 17);
+        let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+        let fabric: Fabric = "4:topo=ring".parse().unwrap();
+        let rep = cosimulate_fabric(
+            &sys,
+            &tm,
+            &SchedulePolicy::Serial,
+            &fabric,
+            1 << 20,
+            &[&mesh, &wihet],
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(rep.per_noc.len(), 2);
+        for r in &rep.per_noc {
+            assert_eq!(r.fabric_chips, 4);
+            assert!(r.interchip_j > 0.0);
+            assert!(r.comm_overhead_pct > 0.0);
+        }
     }
 }

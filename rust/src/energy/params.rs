@@ -15,6 +15,11 @@ pub struct EnergyParams {
     pub router_port_pj: f64,
     /// Wireless energy per bit (paper: 1.3 pJ/bit at 16 Gbps, 20 mm).
     pub wireless_pj_per_bit: f64,
+    /// Inter-chip SerDes energy per bit for the multi-chip fabric links
+    /// (typical 2-6 pJ/bit for organic-package SerDes; well above any
+    /// on-chip hop, which is what makes the gradient exchange the
+    /// dominant energy term at scale).
+    pub interchip_pj_per_bit: f64,
     /// Flit width in bits.
     pub flit_bits: f64,
     /// Core active/idle power (W) by tile kind.
@@ -33,6 +38,7 @@ impl Default for EnergyParams {
             router_base_pj: 2.0,
             router_port_pj: 0.35,
             wireless_pj_per_bit: 1.3,
+            interchip_pj_per_bit: 4.0,
             flit_bits: 128.0,
             gpu_active_w: 1.25,
             gpu_idle_w: 0.30,
@@ -58,6 +64,11 @@ impl EnergyParams {
     /// Energy (pJ) for one flit over a wireless channel.
     pub fn wireless_flit_pj(&self) -> f64 {
         self.wireless_pj_per_bit * self.flit_bits
+    }
+
+    /// Energy (J) to move `bytes` across one inter-chip fabric link.
+    pub fn interchip_bytes_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.interchip_pj_per_bit * 1e-12
     }
 }
 
@@ -88,5 +99,16 @@ mod tests {
     fn router_energy_grows_with_radix() {
         let p = EnergyParams::default();
         assert!(p.router_flit_pj(7) > p.router_flit_pj(4));
+    }
+
+    #[test]
+    fn interchip_bit_dwarfs_onchip_bit() {
+        // the premise of the fabric energy model: one inter-chip byte
+        // costs more than a full wireless hop of the same byte
+        let p = EnergyParams::default();
+        let serdes = p.interchip_bytes_j(16);
+        let air = p.wireless_flit_pj() * 1e-12; // one 16-byte flit
+        assert!(serdes > air, "serdes {serdes} vs air {air}");
+        assert!((p.interchip_bytes_j(1_000_000_000) - 0.032).abs() < 1e-9);
     }
 }

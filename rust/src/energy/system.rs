@@ -82,6 +82,18 @@ pub struct FullSystemReport {
     /// Makespan speedup over the back-to-back serial reference (1.0 for
     /// serial).
     pub speedup_vs_serial: f64,
+    /// Chips in the data-parallel fabric (1 = single-chip run; the
+    /// energy/time figures above are always *per chip*).
+    pub fabric_chips: usize,
+    /// Inter-chip SerDes energy of the gradient exchange across the
+    /// whole fabric, Joules (0.0 for a single chip).
+    pub interchip_j: f64,
+    /// Wire share of a serialized iteration, percent (see
+    /// [`crate::fabric::FabricReport::comm_overhead_pct`]).
+    pub comm_overhead_pct: f64,
+    /// Fabric-level EDP: `(chips x total_j + interchip_j) x
+    /// exec_seconds`. Equals `edp` for a single chip.
+    pub fabric_edp: f64,
 }
 
 /// Run every phase of `tm` through the simulator on `inst` and assemble
@@ -176,6 +188,10 @@ pub fn full_system_run(
         schedule: "serial".to_string(),
         bubble_fraction: 0.0,
         speedup_vs_serial: 1.0,
+        fabric_chips: 1,
+        interchip_j: 0.0,
+        comm_overhead_pct: 0.0,
+        fabric_edp: total_j * exec_seconds,
     }
 }
 
@@ -259,6 +275,101 @@ pub fn full_system_run_scheduled(
         schedule: schedule.to_string(),
         bubble_fraction: sr.bubble_fraction,
         speedup_vs_serial: sr.speedup_vs_serial,
+        fabric_chips: 1,
+        interchip_j: 0.0,
+        comm_overhead_pct: 0.0,
+        fabric_edp: total_j * exec_seconds,
+    })
+}
+
+/// Full-system run on a multi-chip [`crate::fabric::Fabric`]. The
+/// single-chip fabric delegates to [`full_system_run_scheduled`]
+/// (byte-identical — the acceptance bar of `tests/fabric_sim.rs`);
+/// otherwise one chip's gated iteration — backward pass overlapping the
+/// allreduce's on-chip traffic — is simulated
+/// ([`crate::fabric::run_fabric`]), the iteration end also waits for the
+/// analytic alpha-beta wire pipeline, and the report grows the fabric
+/// terms: inter-chip SerDes energy for every chip's wire bytes and the
+/// fabric-level EDP over all chips.
+#[allow(clippy::too_many_arguments)]
+pub fn full_system_run_fabric(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    schedule: &crate::schedule::SchedulePolicy,
+    fabric: &crate::fabric::Fabric,
+    grad_bytes: u64,
+    trace_cfg: &TraceConfig,
+    energy: &EnergyParams,
+    stall: &StallModel,
+) -> crate::error::Result<FullSystemReport> {
+    if fabric.is_single() {
+        fabric.validate()?;
+        return full_system_run_scheduled(sys, inst, tm, schedule, trace_cfg, energy, stall);
+    }
+    let fr = crate::fabric::run_fabric(sys, inst, tm, schedule, fabric, grad_bytes, trace_cfg)?;
+    let sr = &fr.schedule;
+    let inv_scale = 1.0 / trace_cfg.scale;
+    let net_j = network_energy_pj(&inst.topo, &sr.sim, energy).total_pj() * inv_scale * 1e-12;
+
+    // stall terms: the base phases plus the allreduce's MC crossings
+    let lines = |b: u64| b.div_ceil(sys.line_bytes) as f64;
+    let (mut cpu_msgs, mut gpu_msgs) = (0.0f64, 0.0f64);
+    for p in &tm.phases {
+        cpu_msgs += lines(p.cpu_read_bytes) + lines(p.cpu_write_bytes);
+        gpu_msgs += lines(p.gpu_read_bytes) + lines(p.gpu_write_bytes);
+    }
+    gpu_msgs += 2.0 * lines(fr.wire_bytes_per_chip); // shard out + reduced shard in
+    let rt = 2.0;
+    let cpu_lat = sr.sim.cpu_mc_latency.mean();
+    let gpu_lat = sr.sim.gpu_mc_latency.mean();
+    let cpu_stall = cpu_msgs * rt * cpu_lat / (stall.cpu_mlp * sys.cpus().len().max(1) as f64);
+    let gpu_stall = gpu_msgs * rt * (gpu_lat - stall.gpu_hide_cycles).max(0.0)
+        / (stall.gpu_mlp * sys.gpus().len().max(1) as f64);
+    let exec_total = fr.iteration_cycles as f64 * inv_scale + cpu_stall + gpu_stall;
+    let exec_seconds = exec_total / sys.noc_clock_hz;
+
+    // core energy: idle/MC baseline over the whole iteration (a chip
+    // waiting on the wire still burns idle power) + active increments
+    // over the realized instance spans
+    let iter_secs = fr.iteration_cycles as f64 * inv_scale / sys.noc_clock_hz;
+    let mut baseline_w = 0.0;
+    for t in &sys.tiles {
+        baseline_w += match t {
+            TileKind::Gpu => energy.gpu_idle_w,
+            TileKind::Cpu => energy.cpu_idle_w,
+            TileKind::Mc => energy.mc_active_w,
+        };
+    }
+    let cyc_to_secs = inv_scale / sys.noc_clock_hz;
+    let gpu_active_j =
+        sr.gpu_tile_busy_cycles as f64 * cyc_to_secs * (energy.gpu_active_w - energy.gpu_idle_w);
+    let cpu_active_j = sr.cpu_busy_cycles as f64
+        * cyc_to_secs
+        * sys.cpus().len() as f64
+        * (energy.cpu_active_w - energy.cpu_idle_w);
+    let core_j = baseline_w * iter_secs + gpu_active_j + cpu_active_j;
+
+    let total_j = net_j + core_j;
+    let interchip_j =
+        energy.interchip_bytes_j(fr.wire_bytes_per_chip) * fabric.chips as f64;
+    Ok(FullSystemReport {
+        noc: inst.kind.as_str().to_string(),
+        model: tm.model.clone(),
+        per_phase: Vec::new(),
+        exec_cycles: exec_total,
+        exec_seconds,
+        network_j: net_j,
+        core_j,
+        total_j,
+        edp: total_j * exec_seconds,
+        schedule: schedule.to_string(),
+        bubble_fraction: sr.bubble_fraction,
+        speedup_vs_serial: sr.speedup_vs_serial,
+        fabric_chips: fabric.chips,
+        interchip_j,
+        comm_overhead_pct: fr.comm_overhead_pct,
+        fabric_edp: (fabric.chips as f64 * total_j + interchip_j) * exec_seconds,
     })
 }
 
@@ -336,6 +447,53 @@ mod tests {
         assert!((gp.total_j - (gp.network_j + gp.core_j)).abs() < 1e-12);
         assert!((gp.edp - gp.total_j * gp.exec_seconds).abs() < 1e-15);
         assert!((0.0..=1.0).contains(&gp.bubble_fraction));
+    }
+
+    #[test]
+    fn fabric_run_adds_interchip_terms() {
+        use crate::fabric::Fabric;
+        use crate::schedule::SchedulePolicy;
+        use crate::workload::{lower_id, MappingPolicy};
+        use crate::ModelId;
+
+        let sys = SystemConfig::paper_8x8();
+        let tm = lower_id(
+            &ModelId::LeNet,
+            &MappingPolicy::LayerPipelined { stages: 2 },
+            &sys,
+            32,
+        )
+        .unwrap();
+        let grad = ModelId::LeNet.spec().total_weight_bytes();
+        let inst = mesh_opt(&sys, true);
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let e = EnergyParams::default();
+        let s = StallModel::default();
+        let policy = SchedulePolicy::GPipe { microbatches: 4 };
+
+        let one = full_system_run_fabric(
+            &sys, &inst, &tm, &policy, &Fabric::single(), grad, &cfg, &e, &s,
+        )
+        .unwrap();
+        let base =
+            full_system_run_scheduled(&sys, &inst, &tm, &policy, &cfg, &e, &s).unwrap();
+        assert_eq!(one.exec_cycles, base.exec_cycles, "fabric=1 must delegate");
+        assert_eq!(one.fabric_chips, 1);
+        assert_eq!(one.interchip_j, 0.0);
+        assert_eq!(one.fabric_edp, one.edp);
+
+        let four: Fabric = "4:topo=ring".parse().unwrap();
+        let r = full_system_run_fabric(&sys, &inst, &tm, &policy, &four, grad, &cfg, &e, &s)
+            .unwrap();
+        assert_eq!(r.fabric_chips, 4);
+        assert!(r.interchip_j > 0.0);
+        assert!(r.comm_overhead_pct > 0.0);
+        assert!(r.exec_seconds > base.exec_seconds, "the wire must cost time");
+        assert!(r.fabric_edp > 4.0 * r.edp - 1e-12, "fabric EDP covers all chips");
+        let expect_ic = e.interchip_bytes_j(
+            crate::fabric::wire_bytes_per_chip(4, grad),
+        ) * 4.0;
+        assert!((r.interchip_j - expect_ic).abs() < 1e-12);
     }
 
     #[test]

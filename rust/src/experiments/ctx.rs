@@ -18,6 +18,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::error::WihetError;
+use crate::fabric::Fabric;
 use crate::model::cnn::ModelSpec;
 use crate::model::SystemConfig;
 use crate::noc::analysis::TrafficMatrix;
@@ -61,6 +62,12 @@ pub struct Ctx {
     /// artifacts cannot alias). Private: fixed at construction like
     /// `batch`.
     schedule: SchedulePolicy,
+    /// Multi-chip data-parallel fabric the scenario runs on. Lowered
+    /// traffic is per-chip (every replica sees the same workload), so
+    /// the fabric never splits the traffic cache — but it is carried
+    /// into every [`ScenarioKey`] so keys stay faithful to the
+    /// scenario. Private: fixed at construction like `batch`.
+    fabric: Fabric,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     /// Shared handle — cloning it is pointer-cheap.
     pub sys: Arc<SystemConfig>,
@@ -86,6 +93,7 @@ impl Ctx {
             model: ModelId::LeNet,
             mapping: MappingPolicy::default(),
             schedule: SchedulePolicy::default(),
+            fabric: Fabric::single(),
             sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
@@ -102,11 +110,13 @@ impl Ctx {
         let sys = sc.platform.build()?;
         sc.mapping.validate_for(&sys, sc.batch)?;
         sc.schedule.validate_for(sc.batch)?;
+        sc.fabric.validate()?;
         let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
         ctx.model = sc.model.clone();
         ctx.batch = sc.batch;
         ctx.mapping = sc.mapping;
         ctx.schedule = sc.schedule;
+        ctx.fabric = sc.fabric;
         Ok(ctx)
     }
 
@@ -123,6 +133,11 @@ impl Ctx {
     /// The schedule the scenario's training timeline runs under.
     pub fn schedule(&self) -> SchedulePolicy {
         self.schedule
+    }
+
+    /// The multi-chip fabric the scenario replicates over.
+    pub fn fabric(&self) -> Fabric {
+        self.fabric
     }
 
     /// The batch size the traffic models are derived at.
@@ -170,7 +185,8 @@ impl Ctx {
     /// counts, so this holds for all internal callers; handing in an
     /// unrelated smaller chip is a caller bug and panics).
     pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
-        let key = ScenarioKey::with_schedule(model, sys, self.mapping, self.schedule);
+        let key =
+            ScenarioKey::with_fabric(model, sys, self.mapping, self.schedule, self.fabric);
         if !self.traffic.contains_key(&key) {
             let tm = lower_id(&key.model, &self.mapping, sys, self.batch)
                 .expect("mapping validated at construction fits every Ctx-derived placement");

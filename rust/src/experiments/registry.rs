@@ -14,7 +14,10 @@ use std::sync::LazyLock;
 
 use super::ctx::{Ctx, Effort};
 use super::report::Report;
-use super::{compare_figs, optim_figs, param_figs, table1, traffic_figs, wireless_figs, workload_figs};
+use super::{
+    compare_figs, optim_figs, param_figs, scale_figs, table1, traffic_figs, wireless_figs,
+    workload_figs,
+};
 use crate::error::WihetError;
 use crate::util::exec::{par_map_threads, thread_count};
 
@@ -163,6 +166,13 @@ pub const REGISTRY: &[Experiment] = &[
         min_effort: Effort::Quick,
         run: |ctx| Ok(workload_figs::workload_figs(ctx)),
     },
+    Experiment {
+        id: "scale_figs",
+        title: "multi-chip data-parallel scaling: speedup & comm overhead vs chips",
+        paper: "",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(scale_figs::scale_figs(ctx)),
+    },
 ];
 
 /// All experiment ids, in registry order — a view over [`REGISTRY`].
@@ -241,7 +251,7 @@ mod tests {
     #[test]
     fn all_is_a_view_over_the_registry() {
         assert_eq!(ALL.len(), REGISTRY.len());
-        assert_eq!(ALL.len(), 17);
+        assert_eq!(ALL.len(), 18);
         for (id, e) in ALL.iter().zip(REGISTRY) {
             assert_eq!(*id, e.id);
         }

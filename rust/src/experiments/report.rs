@@ -383,8 +383,7 @@ fn csv_escape(s: &str) -> String {
 
 /// Writes reports (and their attachments) under one output directory:
 /// `<dir>/<id>.json`, `<dir>/<id>.csv`, `<dir>/<id>.txt`, and
-/// `<dir>/<id>.<artifact name>` per attachment. Replaces the old
-/// `WIHETNOC_WORKLOAD_CSV` env-var side channel.
+/// `<dir>/<id>.<artifact name>` per attachment.
 pub struct ArtifactSink {
     dir: PathBuf,
 }

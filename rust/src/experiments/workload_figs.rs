@@ -12,9 +12,7 @@
 //!
 //! Besides the table, the report attaches the comparison rows as a
 //! machine-readable CSV artifact (`workload_figs.rows.csv` under
-//! `experiment workload_figs --out DIR`; CI uploads it). The old
-//! `WIHETNOC_WORKLOAD_CSV` env var is deprecated — it still writes the
-//! CSV to the given path for one release, with a warning on stderr.
+//! `experiment workload_figs --out DIR`; CI uploads it).
 
 use super::ctx::Ctx;
 use super::report::{Cell, Report};
@@ -110,18 +108,7 @@ pub fn workload_figs(ctx: &mut Ctx) -> Report {
         &["model", "schedule", "exec_ratio", "edp_ratio", "bubble_fraction", "speedup_vs_serial"],
         rows,
     );
-    rep.artifact("rows.csv", csv.clone());
-    // Deprecated side channel, kept one release as an alias: if the env
-    // var is set, still write the CSV there, but say so.
-    if let Ok(path) = std::env::var("WIHETNOC_WORKLOAD_CSV") {
-        eprintln!(
-            "warning: WIHETNOC_WORKLOAD_CSV is deprecated; use \
-             `wihetnoc experiment workload_figs --out DIR` (writes workload_figs.rows.csv)"
-        );
-        if let Err(e) = std::fs::write(&path, &csv) {
-            eprintln!("warning: could not write {path}: {e}");
-        }
-    }
+    rep.artifact("rows.csv", csv);
     out.push_str(
         "\n(comparison rows attached as the workload_figs.rows.csv artifact; write it with --out DIR)\n",
     );

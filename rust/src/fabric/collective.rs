@@ -1,0 +1,303 @@
+//! Allreduce algorithms for the inter-chip gradient exchange.
+//!
+//! Every algorithm is lowered to a list of [`CollectiveStep`]s — the
+//! serialized per-chip wire schedule — whose byte totals all obey the
+//! same conservation law: with `N` chips and `V` gradient bytes, each
+//! chip puts exactly `2·(N-1)/N · V` bytes on the wire (reduce-scatter
+//! moves `(N-1)/N · V`, allgather moves it back). The algorithms differ
+//! only in *how many* steps carry those bytes, which is what trades the
+//! latency term (`alpha` per step) against the bandwidth term
+//! (`beta`-charged bytes):
+//!
+//! * [`Collective::Ring`] — `2(N-1)` equal steps of `V/N`:
+//!   bandwidth-optimal, latency-heavy (the classic Baidu/NCCL ring).
+//! * [`Collective::Tree`] — recursive halving/doubling
+//!   (Rabenseifner): `2·ceil(log2 N)` steps with geometrically
+//!   shrinking volumes: latency-optimal for small messages.
+//! * [`Collective::Hierarchical`] — chips pair up (groups of 2),
+//!   reduce-scatter inside the package over cheap intra links, ring over
+//!   the group leaders, allgather back — the two-tier shape used on
+//!   multi-GPU nodes.
+//! * [`Collective::Auto`] — the DiHydrogen `perfmodel.py` switch: ring
+//!   when the per-chip chunk `V/N` reaches the large-message threshold
+//!   (`2^9` 4-byte words), tree below it.
+//!
+//! The conservation law is structural: step volumes are a
+//! cumulative-rounding partition of the exact wire total, so rounding
+//! can never create or destroy bytes (pinned by `tests/fabric_sim.rs`).
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+
+use super::spec::{Fabric, GRAMMAR};
+
+/// Gradient word size the auto-switch threshold is counted in.
+pub const WORD_BYTES: u64 = 4;
+/// Large-message threshold in words (DiHydrogen: `2**9`).
+pub const LARGE_MESSAGE_WORDS: u64 = 1 << 9;
+/// Per-chunk byte size at which [`Collective::Auto`] picks the ring.
+pub const LARGE_MESSAGE_THRESH_BYTES: u64 = WORD_BYTES * LARGE_MESSAGE_WORDS;
+/// Intra-package links are shorter: their alpha is this fraction of the
+/// inter-chip alpha (they share the beta — the SerDes rate is the same).
+pub const INTRA_ALPHA_DIV: f64 = 4.0;
+
+/// Allreduce algorithm selector (the `topo=` key of the fabric grammar).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Collective {
+    /// Message-size-based switch: ring for large chunks, tree for small.
+    #[default]
+    Auto,
+    Ring,
+    Tree,
+    Hierarchical,
+}
+
+impl Collective {
+    /// Resolve [`Collective::Auto`] against a concrete gradient size.
+    /// Never resolves to `Hierarchical` (that shape is opt-in).
+    pub fn resolve(self, chips: usize, grad_bytes: u64) -> Collective {
+        match self {
+            Collective::Auto => {
+                if chips <= 1 || grad_bytes / chips.max(1) as u64 >= LARGE_MESSAGE_THRESH_BYTES {
+                    Collective::Ring
+                } else {
+                    Collective::Tree
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for Collective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(match self {
+            Collective::Auto => "auto",
+            Collective::Ring => "ring",
+            Collective::Tree => "tree",
+            Collective::Hierarchical => "hierarchical",
+        })
+    }
+}
+
+impl FromStr for Collective {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(Collective::Auto),
+            "ring" => Ok(Collective::Ring),
+            "tree" => Ok(Collective::Tree),
+            "hier" | "hierarchical" => Ok(Collective::Hierarchical),
+            other => Err(WihetError::InvalidArg(format!(
+                "unknown collective '{other}'\n{GRAMMAR}"
+            ))),
+        }
+    }
+}
+
+/// One serialized inter-chip exchange step of the allreduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollectiveStep {
+    /// Bytes every chip sends (and receives) in this step.
+    pub bytes: u64,
+    /// Intra-package step (hierarchical only): alpha is divided by
+    /// [`INTRA_ALPHA_DIV`].
+    pub intra: bool,
+    /// Reduce-scatter half (gradients flowing in) vs allgather half.
+    pub reduce_scatter: bool,
+}
+
+/// Exact per-chip wire volume of an `N`-chip allreduce over `grad_bytes`:
+/// `floor(2·(N-1)·V / N)` — identical for every algorithm.
+pub fn wire_bytes_per_chip(chips: usize, grad_bytes: u64) -> u64 {
+    if chips <= 1 {
+        return 0;
+    }
+    (2u128 * (chips as u128 - 1) * grad_bytes as u128 / chips as u128) as u64
+}
+
+fn ceil_log2(n: usize) -> usize {
+    debug_assert!(n >= 2);
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+/// Relative step weights (weight, intra, reduce_scatter) per algorithm.
+fn step_shape(alg: Collective, chips: usize) -> Vec<(f64, bool, bool)> {
+    let mut shape = Vec::new();
+    match alg {
+        // Auto must be resolved by the caller; treat it as ring if not.
+        Collective::Ring | Collective::Auto => {
+            for i in 0..2 * (chips - 1) {
+                shape.push((1.0, false, i < chips - 1));
+            }
+        }
+        Collective::Tree => {
+            let l = ceil_log2(chips);
+            for i in 0..l {
+                shape.push((0.5f64.powi(i as i32 + 1), false, true));
+            }
+            for i in (0..l).rev() {
+                shape.push((0.5f64.powi(i as i32 + 1), false, false));
+            }
+        }
+        Collective::Hierarchical => {
+            // groups of 2: one intra pairwise exchange each way, a ring
+            // over the group leaders in between. The intra step moves
+            // V/2 vs the ring's V/N per step, hence weight N/2 : 1.
+            let half = chips / 2;
+            shape.push((half as f64, true, true));
+            for i in 0..2 * (half - 1) {
+                shape.push((1.0, false, i < half - 1));
+            }
+            shape.push((half as f64, true, false));
+        }
+    }
+    shape
+}
+
+/// Cumulative-rounding partition of `total` bytes over the weighted step
+/// shape: monotone running targets make every step non-negative and the
+/// last step absorbs the remainder, so the sum is exactly `total`.
+fn partition(total: u64, shape: &[(f64, bool, bool)]) -> Vec<CollectiveStep> {
+    let wsum: f64 = shape.iter().map(|s| s.0).sum();
+    let mut out = Vec::with_capacity(shape.len());
+    let mut acc = 0.0f64;
+    let mut assigned = 0u64;
+    for (i, &(w, intra, reduce_scatter)) in shape.iter().enumerate() {
+        acc += w;
+        let target = if i + 1 == shape.len() {
+            total
+        } else {
+            (((total as f64) * (acc / wsum)).round().min(total as f64) as u64).max(assigned)
+        };
+        out.push(CollectiveStep { bytes: target - assigned, intra, reduce_scatter });
+        assigned = target;
+    }
+    out
+}
+
+/// Lower a resolved algorithm into its serialized wire schedule.
+/// Empty for a single chip (nothing to exchange).
+pub fn steps(alg: Collective, chips: usize, grad_bytes: u64) -> Vec<CollectiveStep> {
+    if chips <= 1 {
+        return Vec::new();
+    }
+    partition(wire_bytes_per_chip(chips, grad_bytes), &step_shape(alg, chips))
+}
+
+impl Fabric {
+    /// Alpha-beta time of one step in seconds.
+    pub fn step_seconds(&self, step: &CollectiveStep) -> f64 {
+        let alpha =
+            self.alpha_seconds() / if step.intra { INTRA_ALPHA_DIV } else { 1.0 };
+        alpha + step.bytes as f64 / self.link_bytes_per_sec as f64
+    }
+
+    /// Alpha-beta time of one step in NoC cycles at `clock_hz`.
+    pub fn step_cycles(&self, step: &CollectiveStep, clock_hz: f64) -> u64 {
+        (self.step_seconds(step) * clock_hz).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_for_every_algorithm() {
+        for grad in [64u64, 2048, 1_000_003, 2_470_000] {
+            for chips in [2usize, 3, 4, 8, 16] {
+                let expect = wire_bytes_per_chip(chips, grad);
+                let mut algs = vec![Collective::Ring, Collective::Tree];
+                if chips % 2 == 0 {
+                    algs.push(Collective::Hierarchical);
+                }
+                for alg in algs {
+                    let st = steps(alg, chips, grad);
+                    let total: u64 = st.iter().map(|s| s.bytes).sum();
+                    assert_eq!(total, expect, "{alg} chips={chips} grad={grad}");
+                }
+            }
+        }
+        assert_eq!(wire_bytes_per_chip(1, 1 << 20), 0);
+        assert_eq!(wire_bytes_per_chip(4, 1 << 20), 3 * (1 << 20) / 2);
+    }
+
+    #[test]
+    fn step_counts_per_algorithm() {
+        for chips in [2usize, 4, 8, 16] {
+            assert_eq!(steps(Collective::Ring, chips, 1 << 20).len(), 2 * (chips - 1));
+            assert_eq!(steps(Collective::Tree, chips, 1 << 20).len(), 2 * ceil_log2(chips));
+            assert_eq!(
+                steps(Collective::Hierarchical, chips, 1 << 20).len(),
+                2 + 2 * (chips / 2 - 1)
+            );
+        }
+        assert!(steps(Collective::Ring, 1, 1 << 20).is_empty());
+        // reduce-scatter is the first half of the ring
+        let st = steps(Collective::Ring, 4, 1 << 20);
+        assert_eq!(st.iter().filter(|s| s.reduce_scatter).count(), 3);
+        assert!(st.iter().all(|s| !s.intra));
+        let h = steps(Collective::Hierarchical, 4, 1 << 20);
+        assert!(h.first().unwrap().intra && h.last().unwrap().intra);
+    }
+
+    #[test]
+    fn auto_switch_follows_message_size() {
+        // chunk = grad/chips vs the 2048-byte threshold
+        assert_eq!(Collective::Auto.resolve(4, 4 * 2048), Collective::Ring);
+        assert_eq!(Collective::Auto.resolve(4, 4 * 2048 - 1), Collective::Tree);
+        assert_eq!(Collective::Auto.resolve(1, 0), Collective::Ring);
+        // explicit algorithms resolve to themselves
+        assert_eq!(Collective::Tree.resolve(8, 1 << 30), Collective::Tree);
+        assert_eq!(Collective::Hierarchical.resolve(8, 16), Collective::Hierarchical);
+        assert_eq!(LARGE_MESSAGE_THRESH_BYTES, 2048);
+    }
+
+    #[test]
+    fn wire_time_grows_with_chip_count() {
+        let f = Fabric::new(2);
+        let clock = 2.5e9;
+        for alg in [Collective::Ring, Collective::Tree, Collective::Hierarchical] {
+            let mut prev = 0u64;
+            for chips in [2usize, 4, 8] {
+                let total: u64 = steps(alg, chips, 2_470_000)
+                    .iter()
+                    .map(|s| f.step_cycles(s, clock))
+                    .sum();
+                assert!(total > prev, "{alg} chips={chips}: {total} vs {prev}");
+                prev = total;
+            }
+        }
+    }
+
+    #[test]
+    fn step_time_is_alpha_plus_beta() {
+        let f: Fabric = "2:alpha=1us,beta=1GBps".parse().unwrap();
+        let s = CollectiveStep { bytes: 1_000_000, intra: false, reduce_scatter: true };
+        // 1 us latency + 1 ms serialization
+        assert!((f.step_seconds(&s) - 1.001e-3).abs() < 1e-9);
+        let i = CollectiveStep { intra: true, ..s };
+        assert!(f.step_seconds(&i) < f.step_seconds(&s));
+        assert_eq!(f.step_cycles(&s, 2.5e9), 2_502_500);
+    }
+
+    #[test]
+    fn collective_parse_roundtrip() {
+        for (s, c) in [
+            ("auto", Collective::Auto),
+            ("ring", Collective::Ring),
+            ("tree", Collective::Tree),
+            ("hierarchical", Collective::Hierarchical),
+        ] {
+            assert_eq!(s.parse::<Collective>().unwrap(), c);
+            assert_eq!(c.to_string(), s);
+        }
+        assert_eq!("hier".parse::<Collective>().unwrap(), Collective::Hierarchical);
+        let e = "star".parse::<Collective>().unwrap_err();
+        assert!(e.to_string().contains("ring|tree|hierarchical"), "{e}");
+    }
+}

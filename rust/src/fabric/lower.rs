@@ -1,0 +1,315 @@
+//! Lowering the gradient allreduce into the training timeline.
+//!
+//! [`extend_timeline`] appends one gated [`PhaseInstance`] per
+//! [`CollectiveStep`] to an expanded [`TrainingTimeline`]. Each step's
+//! on-chip side is the chip's share of the exchange: GPUs stream the
+//! outgoing gradient shard out of (and the incoming one back into) the
+//! memory-controller tiles — the chip's off-chip ports — so every
+//! allreduce flit crosses the MCs and contends with whatever
+//! backward-pass traffic is still in flight. The steps are chained
+//! (allreduce steps serialize on the links) and *bucket-gated* on the
+//! backward pass: reduce-scatter step `j` of `S` releases once the first
+//! `ceil((j+1)·B/S)` backward phases have drained for every microbatch —
+//! early steps overlap the tail of the backward pass, the last step
+//! waits for the full gradient, exactly the bucketed-overlap shape of
+//! production data-parallel trainers.
+//!
+//! [`run_fabric`] then runs the extended timeline through the gated
+//! simulator (`NocSim::run_timeline` via [`run_expanded`]) and charges
+//! the *inter-chip* hop of each step analytically from the alpha-beta
+//! model: step `s` finishes at
+//! `max(release[s], finish[s-1]) + ceil(scale · (alpha + beta·bytes))`,
+//! and the iteration ends when both the chip's makespan and the wire
+//! pipeline are done. `comm_overhead_pct` is the wire share of a
+//! serialized iteration, `100·wire/(serial_ref + wire)` — its
+//! denominator is constant for a given scenario, so the overhead is
+//! strictly monotone in the chip count (pinned by `tests/fabric_sim.rs`).
+
+use crate::error::WihetError;
+use crate::model::cnn::{LayerKind, Pass};
+use crate::model::SystemConfig;
+use crate::noc::builder::NocInstance;
+use crate::schedule::{
+    expand, run_expanded, run_schedule, PhaseInstance, SchedulePolicy, ScheduleReport,
+    TrainingTimeline,
+};
+use crate::traffic::phases::{LayerPhase, TrafficModel};
+use crate::traffic::trace::TraceConfig;
+
+use super::collective::{steps, wire_bytes_per_chip, Collective, CollectiveStep};
+use super::spec::Fabric;
+
+/// One data-parallel training iteration on an `N`-chip fabric.
+#[derive(Debug, Clone)]
+pub struct FabricReport {
+    pub fabric: Fabric,
+    /// The resolved collective (never [`Collective::Auto`]).
+    pub algorithm: Collective,
+    /// Per-chip gated simulation — includes the allreduce groups'
+    /// on-chip traffic for `chips > 1`; byte-identical to
+    /// [`run_schedule`] for the single-chip fabric.
+    pub schedule: ScheduleReport,
+    /// Gradient bytes allreduced per iteration (`ΣW` of the model).
+    pub grad_bytes: u64,
+    /// Exact wire volume per chip: `2·(N-1)/N · grad_bytes`.
+    pub wire_bytes_per_chip: u64,
+    /// Serialized collective steps.
+    pub steps: usize,
+    /// Trace-scaled serialized inter-chip time (alpha-beta charge).
+    pub wire_cycles: u64,
+    /// End of the iteration: chip makespan vs the wire pipeline,
+    /// whichever drains last (trace-scaled cycles).
+    pub iteration_cycles: u64,
+    /// Wire share of a serialized iteration,
+    /// `100 · wire / (serial_ref + wire)` — 0 for a single chip,
+    /// strictly increasing with the chip count.
+    pub comm_overhead_pct: f64,
+}
+
+/// Synthesize the on-chip traffic of one collective step: the outgoing
+/// shard is read from the MCs, the incoming reduced shard written back.
+fn allreduce_phase(step_idx: usize, bytes: u64, duration_cycles: u64) -> LayerPhase {
+    LayerPhase {
+        layer: format!("allreduce{step_idx}"),
+        kind: LayerKind::Conv,
+        pass: Pass::Backward,
+        tag: format!("AR{step_idx}"),
+        gpu_read_bytes: bytes,
+        gpu_write_bytes: bytes,
+        cpu_read_bytes: 0,
+        cpu_write_bytes: 0,
+        core_core_flits: 0,
+        duration_cycles,
+        gpu_tiles: Vec::new(),
+    }
+}
+
+/// Append the collective's gated instances to an expanded timeline.
+/// Returns the index of the first allreduce instance (the groups
+/// `base..base+steps.len()` are the wire schedule, in order).
+pub fn extend_timeline(
+    tl: &mut TrainingTimeline,
+    tm: &TrafficModel,
+    sys: &SystemConfig,
+    fabric: &Fabric,
+    collective_steps: &[CollectiveStep],
+) -> usize {
+    let base = tl.instances.len();
+    if collective_steps.is_empty() {
+        return base;
+    }
+    let m_count = tl.microbatches;
+    let n_phases = tm.phases.len();
+    // the collective serializes on the chip's off-chip ports: one new
+    // resource stage, so its steps also count toward bubble accounting
+    let ar_stage = tl.num_stages;
+    tl.num_stages += 1;
+    // backward phases in lowered order: the last layer's gradient is
+    // produced first, so bucket j of the reduce-scatter can ship as soon
+    // as the first ceil((j+1)·B/S) backward phases are done
+    let bwd: Vec<usize> =
+        (0..n_phases).filter(|&p| tm.phases[p].pass == Pass::Backward).collect();
+    let n_rs = collective_steps.iter().filter(|s| s.reduce_scatter).count().max(1);
+    let mut rs_seen = 0usize;
+    for (s, st) in collective_steps.iter().enumerate() {
+        // pace the on-chip injection by the step's wire time: the MCs
+        // can't accept the next shard faster than the link drains it
+        let dur = fabric.step_cycles(st, sys.noc_clock_hz).max(1);
+        let mut preds: Vec<u32> = Vec::new();
+        if s > 0 {
+            preds.push((base + s - 1) as u32);
+        }
+        if st.reduce_scatter && !bwd.is_empty() {
+            rs_seen += 1;
+            let need = (rs_seen * bwd.len()).div_ceil(n_rs);
+            let gate_phase = bwd[need - 1];
+            for m in 0..m_count {
+                preds.push((gate_phase * m_count + m) as u32);
+            }
+        } else if s == 0 && base > 0 {
+            // no backward phases to gate on: start after the last base
+            // instance so the exchange still trails the compute
+            preds.push((base - 1) as u32);
+        }
+        preds.sort_unstable();
+        preds.dedup();
+        tl.instances.push(PhaseInstance {
+            // virtual phase id past the lowered list — only `traffic`
+            // and `stage` are consumed downstream
+            phase: n_phases + s,
+            microbatch: 0,
+            stage: ar_stage,
+            traffic: allreduce_phase(s, st.bytes, dur),
+        });
+        tl.preds.push(preds);
+    }
+    base
+}
+
+/// Simulate one data-parallel iteration of `tm` on a `fabric` of
+/// `inst`-NoC chips. `grad_bytes` is the model's total weight bytes
+/// (each chip holds a full replica and allreduces its gradient).
+pub fn run_fabric(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    fabric: &Fabric,
+    grad_bytes: u64,
+    cfg: &TraceConfig,
+) -> Result<FabricReport, WihetError> {
+    fabric.validate()?;
+    let algorithm = fabric.collective.resolve(fabric.chips, grad_bytes);
+    if fabric.is_single() {
+        // degenerate fabric: the unmodified single-chip path,
+        // byte-identical to `run_schedule` (pinned by tests)
+        let schedule = run_schedule(sys, inst, tm, policy, cfg)?;
+        let iteration_cycles = schedule.makespan;
+        return Ok(FabricReport {
+            fabric: *fabric,
+            algorithm,
+            schedule,
+            grad_bytes,
+            wire_bytes_per_chip: 0,
+            steps: 0,
+            wire_cycles: 0,
+            iteration_cycles,
+            comm_overhead_pct: 0.0,
+        });
+    }
+
+    let st = steps(algorithm, fabric.chips, grad_bytes);
+    let mut tl = expand(tm, policy)?;
+    let first_ar = extend_timeline(&mut tl, tm, sys, fabric, &st);
+    let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
+    let (schedule, release) = run_expanded(sys, inst, &tl, cfg, serial_ref);
+
+    // analytic inter-chip pipeline: each step's wire hop starts when its
+    // on-chip group released (shard staged at the MCs) and the previous
+    // hop finished; charged at the trace scale like every other duration
+    let mut wire_cycles = 0u64;
+    let mut finish = 0u64;
+    for (i, s) in st.iter().enumerate() {
+        let w = ((fabric.step_cycles(s, sys.noc_clock_hz) as f64 * cfg.scale).ceil() as u64)
+            .max(1);
+        wire_cycles += w;
+        let rel = match release.get(first_ar + i) {
+            Some(&r) if r != u64::MAX => r,
+            _ => 0,
+        };
+        finish = finish.max(rel) + w;
+    }
+    let iteration_cycles = schedule.makespan.max(finish);
+    let comm_overhead_pct =
+        100.0 * wire_cycles as f64 / (serial_ref + wire_cycles).max(1) as f64;
+
+    Ok(FabricReport {
+        fabric: *fabric,
+        algorithm,
+        schedule,
+        grad_bytes,
+        wire_bytes_per_chip: wire_bytes_per_chip(fabric.chips, grad_bytes),
+        steps: st.len(),
+        wire_cycles,
+        iteration_cycles,
+        comm_overhead_pct,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::builder::mesh_opt;
+    use crate::workload::{lower_id, MappingPolicy};
+    use crate::ModelId;
+
+    fn setup() -> (SystemConfig, NocInstance, TrafficModel, u64) {
+        let sys = SystemConfig::paper_8x8();
+        let inst = mesh_opt(&sys, true);
+        let tm = lower_id(
+            &ModelId::LeNet,
+            &MappingPolicy::LayerPipelined { stages: 2 },
+            &sys,
+            32,
+        )
+        .unwrap();
+        let grad = ModelId::LeNet.spec().total_weight_bytes();
+        (sys, inst, tm, grad)
+    }
+
+    #[test]
+    fn extend_appends_gated_steps() {
+        let (sys, _inst, tm, grad) = setup();
+        let fabric: Fabric = "4:topo=ring".parse().unwrap();
+        let st = steps(Collective::Ring, 4, grad);
+        let policy = SchedulePolicy::GPipe { microbatches: 4 };
+        let mut tl = expand(&tm, &policy).unwrap();
+        let base_n = tl.instances.len();
+        let base_stages = tl.num_stages;
+        let first = extend_timeline(&mut tl, &tm, &sys, &fabric, &st);
+        assert_eq!(first, base_n);
+        assert_eq!(tl.instances.len(), base_n + st.len());
+        assert_eq!(tl.num_stages, base_stages + 1);
+        // chained, and every reduce-scatter step gated on backward work
+        for (i, s) in st.iter().enumerate() {
+            let preds = &tl.preds[base_n + i];
+            if i > 0 {
+                assert!(preds.contains(&((base_n + i - 1) as u32)), "step {i} not chained");
+            }
+            if s.reduce_scatter {
+                assert!(
+                    preds.iter().any(|&p| (p as usize) < base_n),
+                    "reduce-scatter step {i} not gated on the backward pass"
+                );
+            }
+            let t = &tl.instances[base_n + i].traffic;
+            assert_eq!(t.gpu_read_bytes, s.bytes);
+            assert_eq!(t.gpu_write_bytes, s.bytes);
+        }
+        // the last reduce-scatter step waits on the *last* backward phase
+        let last_rs = st.iter().rposition(|s| s.reduce_scatter).unwrap();
+        let last_bwd = (0..tm.phases.len())
+            .rev()
+            .find(|&p| tm.phases[p].pass == Pass::Backward)
+            .unwrap();
+        let want = (last_bwd * tl.microbatches) as u32;
+        assert!(tl.preds[base_n + last_rs].iter().any(|&p| p >= want && (p as usize) < base_n));
+    }
+
+    #[test]
+    fn single_chip_fabric_matches_run_schedule() {
+        let (sys, inst, tm, grad) = setup();
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let policy = SchedulePolicy::GPipe { microbatches: 4 };
+        let fr =
+            run_fabric(&sys, &inst, &tm, &policy, &Fabric::single(), grad, &cfg).unwrap();
+        let sr = run_schedule(&sys, &inst, &tm, &policy, &cfg).unwrap();
+        assert_eq!(fr.schedule.sim.delivered_flits, sr.sim.delivered_flits);
+        assert_eq!(fr.schedule.makespan, sr.makespan);
+        assert_eq!(fr.iteration_cycles, sr.makespan);
+        assert_eq!(fr.comm_overhead_pct, 0.0);
+        assert_eq!(fr.wire_cycles, 0);
+    }
+
+    #[test]
+    fn multi_chip_overhead_grows_and_delivers() {
+        let (sys, inst, tm, grad) = setup();
+        let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+        let policy = SchedulePolicy::OneFOneB { microbatches: 4 };
+        let mut prev = 0.0f64;
+        for chips in [2usize, 4, 8] {
+            let fabric = Fabric { collective: Collective::Ring, ..Fabric::new(chips) };
+            let fr = run_fabric(&sys, &inst, &tm, &policy, &fabric, grad, &cfg).unwrap();
+            assert_eq!(fr.algorithm, Collective::Ring);
+            assert_eq!(fr.schedule.sim.undelivered, 0);
+            assert_eq!(fr.wire_bytes_per_chip, wire_bytes_per_chip(chips, grad));
+            assert!(fr.iteration_cycles >= fr.schedule.makespan);
+            assert!(
+                fr.comm_overhead_pct > prev,
+                "chips={chips}: {} vs {prev}",
+                fr.comm_overhead_pct
+            );
+            prev = fr.comm_overhead_pct;
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! The fabric subsystem: multi-chip data-parallel training.
+//!
+//! One chip — one [`crate::platform::Platform`] instance with its
+//! cycle-simulated NoC — trains on a shard of the batch; `N` chips form
+//! a [`Fabric`] joined by alpha-beta links that allreduce the weight
+//! gradients every iteration:
+//!
+//! ```text
+//!   Fabric descriptor                (fabric::spec, `--fabric`)
+//!      │  N chips, alpha (link latency), beta (1/bandwidth),
+//!      │  topo = ring | tree | hierarchical | auto
+//!      ▼
+//!   Collective wire schedule         (fabric::collective)
+//!      │  reduce-scatter + allgather steps; every algorithm moves
+//!      │  exactly 2·(N-1)/N · ΣW bytes per chip
+//!      ▼
+//!   timeline extension               (fabric::lower::extend_timeline)
+//!      │  one gated PhaseInstance per step: the shard crosses the
+//!      │  chip's MC tiles and overlaps the backward pass
+//!      ▼
+//!   gated sim + alpha-beta charge    (fabric::lower::run_fabric)
+//!      FabricReport: iteration cycles, wire cycles,
+//!      comm-overhead %, per-chip ScheduleReport
+//! ```
+//!
+//! On-chip contention stays cycle-accurate (`NocSim::run_timeline`); the
+//! inter-chip hops are charged analytically — the DiHydrogen
+//! `perfmodel.py` approach (SNIPPETS.md §1). `fabric=1` is byte-identical
+//! to the single-chip path (pinned by `tests/fabric_sim.rs`). Entry
+//! points: parse a [`Fabric`] (`Scenario::with_fabric`, CLI `--fabric`),
+//! then [`run_fabric`] — or [`crate::energy::full_system_run_fabric`] /
+//! [`crate::coordinator::cosimulate_fabric`] for energy-and-EDP reports,
+//! and the registered `scale_figs` experiment for the 1/2/4/8-chip
+//! scaling study.
+
+pub mod collective;
+pub mod lower;
+pub mod spec;
+
+pub use collective::{steps, wire_bytes_per_chip, Collective, CollectiveStep};
+pub use lower::{extend_timeline, run_fabric, FabricReport};
+pub use spec::{Fabric, GRAMMAR};

@@ -1,0 +1,347 @@
+//! The `Fabric` descriptor: N replicated chips plus an alpha-beta
+//! inter-chip link model, parseable like platforms.
+//!
+//! A fabric layers *above* a [`crate::platform::Platform`]: every chip is
+//! one instance of the platform running the same model on its own batch
+//! shard (data-parallel training), and the chips exchange weight
+//! gradients over point-to-point links each iteration. The links are not
+//! cycle-simulated; they are charged analytically from a per-link
+//! latency `alpha` and inverse-bandwidth `beta` (the DiHydrogen
+//! `perfmodel.py` idiom — see SNIPPETS.md §1), which is the established
+//! cheap way to model the off-chip tier while the on-chip NoC stays
+//! cycle-accurate.
+//!
+//! Grammar (mirrors `--system` / `--schedule`):
+//!
+//! ```text
+//! --fabric 4:alpha=1.2us,beta=25GBps,topo=ring
+//! ```
+//!
+//! `alpha`/`beta` are stored as integers (picoseconds, bytes/second) so
+//! `Fabric` can sit inside the `Hash + Eq` [`crate::Scenario`] /
+//! [`crate::ScenarioKey`] types.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+
+use super::collective::Collective;
+
+/// The `--fabric` grammar, embedded in every parse/validation error.
+pub const GRAMMAR: &str = "fabric := <chips>[:<key>=<value>,...]   \
+    keys: alpha=<link latency: ps|ns|us|ms, e.g. 1.2us>, \
+    beta=<link bandwidth: Bps|KBps|MBps|GBps|TBps or bit-rate b variants, e.g. 25GBps>, \
+    topo=<ring|tree|hierarchical|auto>   \
+    (1 <= chips <= 1024; hierarchical needs an even chip count; \
+    defaults: alpha=1200ns, beta=25GBps, topo=auto)";
+
+/// Default link latency: 1.2 us (DiHydrogen's inter-node alpha).
+pub const DEFAULT_ALPHA_PS: u64 = 1_200_000;
+/// Default link bandwidth: 25 GB/s (~1/3.893e-11 s per byte).
+pub const DEFAULT_LINK_BYTES_PER_SEC: u64 = 25_000_000_000;
+
+/// A data-parallel training fabric: `chips` replicas of the platform
+/// joined by alpha-beta links running a gradient-allreduce each
+/// iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fabric {
+    /// Number of chip replicas (1 = the single-chip system; the fabric
+    /// layer then adds nothing and every report is byte-identical to the
+    /// non-fabric path).
+    pub chips: usize,
+    /// Per-link latency in picoseconds.
+    pub alpha_ps: u64,
+    /// Per-link bandwidth in bytes/second (beta is its reciprocal).
+    pub link_bytes_per_sec: u64,
+    /// Allreduce algorithm for the gradient exchange.
+    pub collective: Collective,
+}
+
+impl Fabric {
+    /// The single-chip fabric — the [`crate::Scenario`] default.
+    pub fn single() -> Self {
+        Fabric::new(1)
+    }
+
+    /// `chips` replicas with the default link model and auto collective.
+    pub fn new(chips: usize) -> Self {
+        Fabric {
+            chips,
+            alpha_ps: DEFAULT_ALPHA_PS,
+            link_bytes_per_sec: DEFAULT_LINK_BYTES_PER_SEC,
+            collective: Collective::Auto,
+        }
+    }
+
+    /// Whether this fabric is the degenerate single-chip case.
+    pub fn is_single(&self) -> bool {
+        self.chips <= 1
+    }
+
+    /// Link latency in seconds.
+    pub fn alpha_seconds(&self) -> f64 {
+        self.alpha_ps as f64 * 1e-12
+    }
+
+    /// Reject fabrics the collective lowering cannot schedule.
+    pub fn validate(&self) -> Result<(), WihetError> {
+        if self.chips == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "fabric '{self}' needs at least 1 chip\n{GRAMMAR}"
+            )));
+        }
+        if self.chips > 1024 {
+            return Err(WihetError::InvalidArg(format!(
+                "fabric '{self}': more than 1024 chips is outside the model's regime\n{GRAMMAR}"
+            )));
+        }
+        if self.link_bytes_per_sec == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "fabric '{self}': link bandwidth must be positive\n{GRAMMAR}"
+            )));
+        }
+        if self.collective == Collective::Hierarchical && self.chips > 1 && self.chips % 2 != 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "fabric '{self}': the hierarchical allreduce pairs chips into groups of 2 \
+                 and needs an even chip count\n{GRAMMAR}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Default for Fabric {
+    fn default() -> Self {
+        Fabric::single()
+    }
+}
+
+/// Largest time unit that renders `ps` as an integer.
+fn fmt_time_ps(ps: u64) -> String {
+    if ps > 0 && ps % 1_000_000_000 == 0 {
+        format!("{}ms", ps / 1_000_000_000)
+    } else if ps > 0 && ps % 1_000_000 == 0 {
+        format!("{}us", ps / 1_000_000)
+    } else if ps > 0 && ps % 1_000 == 0 {
+        format!("{}ns", ps / 1_000)
+    } else {
+        format!("{ps}ps")
+    }
+}
+
+/// Largest decimal byte-rate unit that renders `bps` as an integer.
+fn fmt_bw(bps: u64) -> String {
+    if bps > 0 && bps % 1_000_000_000 == 0 {
+        format!("{}GBps", bps / 1_000_000_000)
+    } else if bps > 0 && bps % 1_000_000 == 0 {
+        format!("{}MBps", bps / 1_000_000)
+    } else if bps > 0 && bps % 1_000 == 0 {
+        format!("{}KBps", bps / 1_000)
+    } else {
+        format!("{bps}Bps")
+    }
+}
+
+fn parse_time_ps(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = t.strip_suffix("ps") {
+        (n, 1.0)
+    } else if let Some(n) = t.strip_suffix("ns") {
+        (n, 1e3)
+    } else if let Some(n) = t.strip_suffix("us") {
+        (n, 1e6)
+    } else if let Some(n) = t.strip_suffix("ms") {
+        (n, 1e9)
+    } else if let Some(n) = t.strip_suffix('s') {
+        (n, 1e12)
+    } else {
+        return None;
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    Some((v * mult).round() as u64)
+}
+
+/// `25GBps` (bytes) / `200Gbps` (bits) style rates; decimal prefixes.
+/// Case matters only for the `B`/`b` byte-vs-bit letter.
+fn parse_bw(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let (rest, bits) = if let Some(r) = t.strip_suffix("Bps") {
+        (r, false)
+    } else if let Some(r) = t.strip_suffix("bps") {
+        (r, true)
+    } else {
+        return None;
+    };
+    let (num, scale) = match rest.chars().last() {
+        Some('k') | Some('K') => (&rest[..rest.len() - 1], 1e3),
+        Some('m') | Some('M') => (&rest[..rest.len() - 1], 1e6),
+        Some('g') | Some('G') => (&rest[..rest.len() - 1], 1e9),
+        Some('t') | Some('T') => (&rest[..rest.len() - 1], 1e12),
+        _ => (rest, 1.0),
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    let bytes = v * scale / if bits { 8.0 } else { 1.0 };
+    Some(bytes.round() as u64)
+}
+
+impl fmt::Display for Fabric {
+    /// Canonical form: chip count plus only the non-default keys, so
+    /// `Display` -> `FromStr` round-trips to the same value.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = self.chips.to_string();
+        let mut kv: Vec<String> = Vec::new();
+        if self.alpha_ps != DEFAULT_ALPHA_PS {
+            kv.push(format!("alpha={}", fmt_time_ps(self.alpha_ps)));
+        }
+        if self.link_bytes_per_sec != DEFAULT_LINK_BYTES_PER_SEC {
+            kv.push(format!("beta={}", fmt_bw(self.link_bytes_per_sec)));
+        }
+        if self.collective != Collective::Auto {
+            kv.push(format!("topo={}", self.collective));
+        }
+        if !kv.is_empty() {
+            s.push(':');
+            s.push_str(&kv.join(","));
+        }
+        f.pad(&s)
+    }
+}
+
+impl FromStr for Fabric {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let t = s.trim();
+        if t.is_empty() {
+            return Err(WihetError::InvalidArg(format!("empty fabric spec\n{GRAMMAR}")));
+        }
+        let (head, rest) = match t.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (t, None),
+        };
+        let chips: usize = head.trim().parse().map_err(|_| {
+            WihetError::InvalidArg(format!(
+                "fabric '{t}': chip count must be an integer, e.g. '4' or '4:topo=ring'\n{GRAMMAR}"
+            ))
+        })?;
+        let mut fabric = Fabric::new(chips);
+        if let Some(rest) = rest {
+            for kv in rest.split(',') {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    WihetError::InvalidArg(format!(
+                        "fabric '{t}': expected key=value, got '{kv}'\n{GRAMMAR}"
+                    ))
+                })?;
+                match k.trim().to_ascii_lowercase().as_str() {
+                    "alpha" => {
+                        fabric.alpha_ps = parse_time_ps(v).ok_or_else(|| {
+                            WihetError::InvalidArg(format!(
+                                "fabric '{t}': alpha '{v}' is not a latency (try 1.2us or 800ns)\n{GRAMMAR}"
+                            ))
+                        })?;
+                    }
+                    "beta" => {
+                        fabric.link_bytes_per_sec = parse_bw(v).ok_or_else(|| {
+                            WihetError::InvalidArg(format!(
+                                "fabric '{t}': beta '{v}' is not a bandwidth (try 25GBps or 200Gbps)\n{GRAMMAR}"
+                            ))
+                        })?;
+                    }
+                    "topo" => fabric.collective = v.parse()?,
+                    other => {
+                        return Err(WihetError::InvalidArg(format!(
+                            "fabric '{t}': unknown key '{other}'\n{GRAMMAR}"
+                        )));
+                    }
+                }
+            }
+        }
+        fabric.validate()?;
+        Ok(fabric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fills_defaults() {
+        let f: Fabric = "4".parse().unwrap();
+        assert_eq!(f.chips, 4);
+        assert_eq!(f.alpha_ps, DEFAULT_ALPHA_PS);
+        assert_eq!(f.link_bytes_per_sec, DEFAULT_LINK_BYTES_PER_SEC);
+        assert_eq!(f.collective, Collective::Auto);
+        assert!(Fabric::single().is_single());
+        assert!(!f.is_single());
+        assert_eq!(Fabric::default(), Fabric::single());
+    }
+
+    #[test]
+    fn parse_units() {
+        let f: Fabric = "2:alpha=1.2us,beta=25GBps,topo=ring".parse().unwrap();
+        assert_eq!(f.alpha_ps, 1_200_000);
+        assert_eq!(f.link_bytes_per_sec, 25_000_000_000);
+        assert_eq!(f.collective, Collective::Ring);
+        // bit-rate form: 200 Gbps = 25 GB/s
+        let g: Fabric = "2:beta=200Gbps".parse().unwrap();
+        assert_eq!(g.link_bytes_per_sec, 25_000_000_000);
+        let h: Fabric = "2:alpha=800ns,beta=1500MBps".parse().unwrap();
+        assert_eq!(h.alpha_ps, 800_000);
+        assert_eq!(h.link_bytes_per_sec, 1_500_000_000);
+        assert!((h.alpha_seconds() - 8e-7).abs() < 1e-18);
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        // canonical strings reproduce exactly
+        for s in ["1", "4", "8:topo=hierarchical", "2:alpha=800ns,beta=100GBps,topo=tree"] {
+            let f: Fabric = s.parse().unwrap();
+            assert_eq!(f.to_string(), s);
+            assert_eq!(f.to_string().parse::<Fabric>().unwrap(), f);
+        }
+        // non-canonical input round-trips by value
+        let f: Fabric = "4:alpha=1.2us,beta=25GBps,topo=ring".parse().unwrap();
+        assert_eq!(f.to_string().parse::<Fabric>().unwrap(), f);
+        assert_eq!(f.to_string(), "4:topo=ring", "defaults are omitted");
+    }
+
+    #[test]
+    fn errors_carry_the_grammar() {
+        for bad in [
+            "",
+            "0",
+            "x",
+            "4:alpha",
+            "4:alpha=fast",
+            "4:beta=25",
+            "4:topo=star",
+            "4:chips=2",
+            "2000",
+        ] {
+            let e = bad.parse::<Fabric>().unwrap_err();
+            assert!(matches!(e, WihetError::InvalidArg(_)), "{bad}: {e:?}");
+            let msg = e.to_string();
+            assert!(
+                msg.contains("topo=<ring|tree|hierarchical|auto>") && msg.contains("alpha="),
+                "{bad}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_needs_even_chips() {
+        assert!("4:topo=hierarchical".parse::<Fabric>().is_ok());
+        let e = "3:topo=hierarchical".parse::<Fabric>().unwrap_err();
+        assert!(e.to_string().contains("even chip count"), "{e}");
+        // chips=1 is the degenerate fabric: any topo is accepted
+        assert!("1:topo=hierarchical".parse::<Fabric>().is_ok());
+    }
+}

@@ -22,8 +22,11 @@
 //!   (`serial`, `gpipe:M`, `1f1b:M` — overlapping microbatch phases
 //!   simulated concurrently by [`schedule::run_schedule`]).
 //! * [`Scenario`] — *what experiment*: platform + workload + mapping +
-//!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch. The
-//!   single input to design, simulation, and the experiment harnesses.
+//!   interconnect ([`noc::builder::NocKind`]) + [`Effort`]/seed/batch,
+//!   optionally scaled out to a multi-chip [`Fabric`] (`N` replicated
+//!   chips with alpha-beta inter-chip links running a gradient-allreduce
+//!   — see [`fabric`]). The single input to design, simulation, and the
+//!   experiment harnesses.
 //!
 //! The paper's evaluation itself is typed too: every table/figure is an
 //! [`experiments::Experiment`] in a registry, and each harness returns a
@@ -71,6 +74,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod error;
 pub mod experiments;
+pub mod fabric;
 pub mod model;
 pub mod noc;
 pub mod optim;
@@ -82,6 +86,7 @@ pub mod util;
 pub mod workload;
 
 pub use error::WihetError;
+pub use fabric::{Collective, Fabric};
 pub use model::{Platform, PlacementPolicy};
 pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};
 pub use schedule::SchedulePolicy;

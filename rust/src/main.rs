@@ -24,9 +24,10 @@ use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
+use wihetnoc::fabric::run_fabric;
 use wihetnoc::schedule::run_schedule;
 use wihetnoc::workload::preset_names;
-use wihetnoc::{MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError};
+use wihetnoc::{Fabric, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -109,6 +110,16 @@ fn schedule_spec() -> ArgSpec {
     }
 }
 
+fn fabric_spec() -> ArgSpec {
+    ArgSpec {
+        name: "fabric",
+        help: "N[:alpha=T,beta=BW,topo=ring|tree|hierarchical|auto] — \
+               data-parallel chips + inter-chip link (default: 1, single chip)",
+        default: Some("1"),
+        is_flag: false,
+    }
+}
+
 fn str_err(e: WihetError) -> String {
     e.to_string()
 }
@@ -121,11 +132,13 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
         args.get_or("mapping", "data:1").parse().map_err(str_err)?;
     let schedule: SchedulePolicy =
         args.get_or("schedule", "serial").parse().map_err(str_err)?;
+    let fabric: Fabric = args.get_or("fabric", "1").parse().map_err(str_err)?;
     let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     let seed = args.get_u64("seed", 42)?;
     Ok(Scenario::new(platform, model)
         .with_mapping(mapping)
         .with_schedule(schedule)
+        .with_fabric(fabric)
         .with_effort(effort)
         .with_seed(seed))
 }
@@ -314,6 +327,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         model_spec(),
         mapping_spec(),
         schedule_spec(),
+        fabric_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -331,6 +345,33 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let tm = ctx.traffic_on(scenario.model.clone(), &sys);
     let mut cfg = ctx.trace_cfg();
     cfg.scale = args.get_f64("scale", 0.05)?;
+    if !scenario.fabric.is_single() {
+        // multi-chip fabric: co-simulate the chip's iteration with the
+        // lowered allreduce and charge the alpha-beta inter-chip hops
+        let grad = scenario.model.spec().total_weight_bytes();
+        println!(
+            "simulating {noc} on {} ({}, mapping {}, schedule {}, fabric {}) ...",
+            scenario.model, scenario.platform, scenario.mapping, scenario.schedule,
+            scenario.fabric
+        );
+        let t0 = std::time::Instant::now();
+        let fr = run_fabric(&sys, &inst, &tm, &scenario.schedule, &scenario.fabric, grad, &cfg)
+            .map_err(str_err)?;
+        println!(
+            "{} packets in {:.2}s wall | {} chips, {} allreduce ({} steps, {} B/chip on the wire) | makespan {} cyc, iteration {} cyc | comm overhead {:.1}% | bubble {:.1}%",
+            fr.schedule.sim.delivered_packets,
+            t0.elapsed().as_secs_f64(),
+            fr.fabric.chips,
+            fr.algorithm,
+            fr.steps,
+            fr.wire_bytes_per_chip,
+            fr.schedule.makespan,
+            fr.iteration_cycles,
+            fr.comm_overhead_pct,
+            100.0 * fr.schedule.bubble_fraction,
+        );
+        return Ok(());
+    }
     if !scenario.schedule.is_serial() {
         // overlapping schedule: expand the timeline and run the gated
         // concurrent simulation

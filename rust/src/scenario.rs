@@ -15,6 +15,7 @@ use std::str::FromStr;
 use std::sync::Arc;
 
 use crate::error::WihetError;
+use crate::fabric::Fabric;
 use crate::model::cnn::{cdbnet, lenet, ModelSpec};
 use crate::model::platform::Platform;
 use crate::model::SystemConfig;
@@ -184,6 +185,10 @@ pub struct Scenario {
     /// overlapping microbatch schedules — see [`SchedulePolicy`]).
     pub schedule: SchedulePolicy,
     pub noc: NocKind,
+    /// How many chip replicas train data-parallel, and over what
+    /// inter-chip links (see [`Fabric`]; the single-chip default adds
+    /// nothing).
+    pub fabric: Fabric,
     pub effort: Effort,
     pub seed: u64,
     /// Training batch size the traffic model is derived at.
@@ -192,7 +197,8 @@ pub struct Scenario {
 
 impl Scenario {
     /// A scenario with the crate defaults: identity mapping (`data:1`),
-    /// serial schedule, WiHetNoC, quick effort, seed 42, batch 32.
+    /// serial schedule, WiHetNoC, single chip, quick effort, seed 42,
+    /// batch 32.
     pub fn new(platform: Platform, model: ModelId) -> Self {
         Scenario {
             platform,
@@ -200,6 +206,7 @@ impl Scenario {
             mapping: MappingPolicy::default(),
             schedule: SchedulePolicy::default(),
             noc: NocKind::WiHetNoc,
+            fabric: Fabric::single(),
             effort: Effort::Quick,
             seed: 42,
             batch: 32,
@@ -226,6 +233,11 @@ impl Scenario {
         self
     }
 
+    pub fn with_fabric(mut self, fabric: Fabric) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
     pub fn with_effort(mut self, effort: Effort) -> Self {
         self.effort = effort;
         self
@@ -248,10 +260,11 @@ impl Scenario {
 }
 
 /// Typed cache key: a workload, mapped one way, scheduled one way, on
-/// one concrete tile placement. Two placements that happen to share a
-/// human-readable tag hash differently, which is what makes
+/// one concrete tile placement and fabric. Two placements that happen to
+/// share a human-readable tag hash differently, which is what makes
 /// [`crate::experiments::Ctx`]'s traffic cache safe; two mappings — or
-/// two schedules — of the same workload never alias either.
+/// two schedules, or two fabrics — of the same workload never alias
+/// either.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ScenarioKey {
     pub model: ModelId,
@@ -260,6 +273,7 @@ pub struct ScenarioKey {
     pub placement: u64,
     pub mapping: MappingPolicy,
     pub schedule: SchedulePolicy,
+    pub fabric: Fabric,
 }
 
 impl ScenarioKey {
@@ -277,7 +291,17 @@ impl ScenarioKey {
         mapping: MappingPolicy,
         schedule: SchedulePolicy,
     ) -> Self {
-        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule }
+        ScenarioKey::with_fabric(model, sys, mapping, schedule, Fabric::single())
+    }
+
+    pub fn with_fabric(
+        model: ModelId,
+        sys: &SystemConfig,
+        mapping: MappingPolicy,
+        schedule: SchedulePolicy,
+        fabric: Fabric,
+    ) -> Self {
+        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule, fabric }
     }
 }
 
@@ -369,11 +393,20 @@ mod tests {
             MappingPolicy::default(),
             SchedulePolicy::GPipe { microbatches: 4 },
         );
+        let f = ScenarioKey::with_fabric(
+            ModelId::LeNet,
+            &sys,
+            MappingPolicy::default(),
+            SchedulePolicy::default(),
+            Fabric::new(4),
+        );
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d, "mapping must be part of the key");
         assert_ne!(a, e, "schedule must be part of the key");
+        assert_ne!(a, f, "fabric must be part of the key");
         assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
+        assert_eq!(a.fabric, Fabric::single(), "single chip is the default key fabric");
     }
 
     #[test]
@@ -382,5 +415,14 @@ mod tests {
         assert!(sc.schedule.is_serial());
         let sc = sc.with_schedule(SchedulePolicy::OneFOneB { microbatches: 8 });
         assert_eq!(sc.schedule, SchedulePolicy::OneFOneB { microbatches: 8 });
+    }
+
+    #[test]
+    fn scenario_carries_a_fabric() {
+        let sc = Scenario::paper();
+        assert!(sc.fabric.is_single());
+        let fabric: Fabric = "4:topo=ring".parse().unwrap();
+        let sc = sc.with_fabric(fabric);
+        assert_eq!(sc.fabric, fabric);
     }
 }

@@ -97,9 +97,10 @@ pub fn run_schedule(
     policy: &SchedulePolicy,
     cfg: &TraceConfig,
 ) -> Result<ScheduleReport, WihetError> {
-    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
     if policy.is_serial() {
         // Legacy path, byte-identical: one trace, phases back to back.
+        let sim =
+            NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
         let (trace, windows) = training_trace(sys, &tm.phases, cfg);
         let rep = sim.run(&trace);
         let serial_ref = windows.last().map(|&(_, end)| end).unwrap_or(0);
@@ -135,14 +136,33 @@ pub fn run_schedule(
     }
 
     let tl = expand(tm, policy)?;
-    let (groups, _durs) = timeline_groups(sys, &tl, cfg);
-    let out = sim.run_timeline(&groups, &tl.preds);
-    let makespan = out.report.cycles;
     // Serial reference = the windows the *serial* schedule would lay back
     // to back (one per phase). Summing the per-instance windows instead
     // would count phase_trace's 16-cycle floor M times per phase and
     // overstate the speedup at small trace scales.
     let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
+    let (report, _release) = run_expanded(sys, inst, &tl, cfg, serial_ref);
+    Ok(report)
+}
+
+/// Run an already-expanded timeline through the gated simulator and
+/// derive the schedule metrics. `serial_ref_cycles` comes from the
+/// caller: the fabric runner appends allreduce instances beyond the base
+/// phase list, so the serial reference cannot be recovered from `tl`
+/// alone. Also returns each group's release cycle (`u64::MAX` for
+/// unreached groups) so analytic post-passes — the alpha-beta inter-chip
+/// charge — can anchor on the simulated on-chip timeline.
+pub fn run_expanded(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tl: &TrainingTimeline,
+    cfg: &TraceConfig,
+    serial_ref: u64,
+) -> (ScheduleReport, Vec<u64>) {
+    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    let (groups, _durs) = timeline_groups(sys, tl, cfg);
+    let out = sim.run_timeline(&groups, &tl.preds);
+    let makespan = out.report.cycles;
     let speedup = serial_ref as f64 / makespan.max(1) as f64;
 
     // active spans (release -> drain) per instance
@@ -200,8 +220,8 @@ pub fn run_schedule(
     }
     let peak = link_peak.iter().copied().max().unwrap_or(0).max(1);
 
-    Ok(ScheduleReport {
-        policy: *policy,
+    let report = ScheduleReport {
+        policy: tl.policy,
         sim: out.report,
         instances: tl.instances.len(),
         num_stages: tl.num_stages,
@@ -213,7 +233,8 @@ pub fn run_schedule(
         peak_link_concurrency: peak,
         gpu_tile_busy_cycles: gpu_busy,
         cpu_busy_cycles: cpu_busy,
-    })
+    };
+    (report, out.release)
 }
 
 #[cfg(test)]

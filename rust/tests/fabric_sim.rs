@@ -1,0 +1,152 @@
+//! Fabric-subsystem guarantees (ISSUE 6):
+//!
+//! * **Conservation** — the allreduce moves exactly
+//!   `2*(N-1)/N * sum(W)` bytes per chip, regardless of the collective
+//!   algorithm (ring, tree, hierarchical): the algorithms trade step
+//!   count against step size, never volume.
+//! * **Single-chip identity** — `--fabric 1` is byte-identical to the
+//!   single-chip scheduled path for the paper models: the fabric layer
+//!   costs nothing until there is a second chip.
+//! * **Determinism** — the scale_figs lowering kernel (`run_fabric`
+//!   jobs fanned out like the experiment sweep) fingerprints
+//!   identically across 1/2/8 `par_map` workers.
+//! * **Typed errors** — an invalid `--fabric` string is a
+//!   `WihetError::InvalidArg` carrying the fabric grammar, never a
+//!   panic.
+
+use wihetnoc::fabric::{run_fabric, steps, wire_bytes_per_chip, Collective, Fabric};
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::builder::{mesh_opt, NocInstance};
+use wihetnoc::noc::sim::SimReport;
+use wihetnoc::schedule::{run_schedule, SchedulePolicy};
+use wihetnoc::traffic::trace::TraceConfig;
+use wihetnoc::util::exec::par_map_threads;
+use wihetnoc::workload::{lower_id, MappingPolicy};
+use wihetnoc::{ModelId, WihetError};
+
+/// Everything a `SimReport` aggregates, as one comparable value.
+fn fingerprint(r: &SimReport) -> (u64, u64, u64, String, Vec<u64>, Vec<u64>) {
+    (
+        r.delivered_packets,
+        r.delivered_flits,
+        r.cycles,
+        format!(
+            "{:.9}/{:.9}/{:.9}/{:.9}",
+            r.latency.sum, r.latency.max, r.cpu_mc_latency.sum, r.gpu_mc_latency.sum
+        ),
+        r.link_busy.clone(),
+        r.link_flits.clone(),
+    )
+}
+
+fn paper_setup(
+    model: &ModelId,
+    mapping: MappingPolicy,
+) -> (SystemConfig, NocInstance, wihetnoc::traffic::phases::TrafficModel) {
+    let sys = SystemConfig::paper_8x8();
+    let inst = mesh_opt(&sys, true);
+    let tm = lower_id(model, &mapping, &sys, 32).unwrap();
+    (sys, inst, tm)
+}
+
+#[test]
+fn allreduce_volume_is_algorithm_invariant() {
+    for model in [ModelId::LeNet, ModelId::CdbNet] {
+        let grad = model.spec().total_weight_bytes();
+        for chips in [2usize, 4, 8, 16] {
+            let want = wire_bytes_per_chip(chips, grad);
+            // the closed form itself: floor(2*(N-1)*V/N)
+            let closed = 2u128 * (chips as u128 - 1) * grad as u128 / chips as u128;
+            assert_eq!(want as u128, closed, "{model} chips={chips}");
+            for alg in [Collective::Ring, Collective::Tree, Collective::Hierarchical] {
+                if alg == Collective::Hierarchical && chips % 2 != 0 {
+                    continue;
+                }
+                let total: u64 = steps(alg, chips, grad).iter().map(|s| s.bytes).sum();
+                assert_eq!(
+                    total, want,
+                    "{model} {alg} chips={chips}: steps move {total}, want {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_chip_fabric_is_byte_identical_for_paper_models() {
+    for model in [ModelId::LeNet, ModelId::CdbNet] {
+        let grad = model.spec().total_weight_bytes();
+        let (sys, inst, tm) = paper_setup(&model, MappingPolicy::default());
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        for policy in [SchedulePolicy::Serial, SchedulePolicy::GPipe { microbatches: 4 }] {
+            let fr = run_fabric(&sys, &inst, &tm, &policy, &Fabric::single(), grad, &cfg)
+                .unwrap();
+            let sr = run_schedule(&sys, &inst, &tm, &policy, &cfg).unwrap();
+            assert_eq!(
+                fingerprint(&fr.schedule.sim),
+                fingerprint(&sr.sim),
+                "{model} {policy}"
+            );
+            assert_eq!(fr.schedule.makespan, sr.makespan);
+            assert_eq!(fr.iteration_cycles, sr.makespan);
+            assert_eq!(fr.wire_bytes_per_chip, 0);
+            assert_eq!(fr.comm_overhead_pct, 0.0);
+        }
+    }
+}
+
+#[test]
+fn fabric_lowering_is_thread_count_invariant() {
+    // The scale_figs sweep fans (chips x algorithm) run_fabric jobs out
+    // over par_map (WIHETNOC_THREADS); index-derived seeds make every
+    // job self-contained, so fingerprints must match at any worker
+    // count — and across repeat runs.
+    let model = ModelId::LeNet;
+    let grad = model.spec().total_weight_bytes();
+    let (sys, inst, tm) = paper_setup(&model, MappingPolicy::LayerPipelined { stages: 2 });
+    let jobs: Vec<Fabric> = [
+        (1usize, Collective::Auto),
+        (2, Collective::Ring),
+        (4, Collective::Ring),
+        (4, Collective::Tree),
+        (8, Collective::Hierarchical),
+    ]
+    .into_iter()
+    .map(|(chips, collective)| Fabric { collective, ..Fabric::new(chips) })
+    .collect();
+    let policy = SchedulePolicy::OneFOneB { microbatches: 4 };
+    let run_all = |threads: usize| {
+        par_map_threads(threads, &jobs, |i, fabric| {
+            let cfg = TraceConfig { scale: 0.02, seed: 0xFAB + i as u64, ..Default::default() };
+            let fr = run_fabric(&sys, &inst, &tm, &policy, fabric, grad, &cfg).unwrap();
+            (
+                fingerprint(&fr.schedule.sim),
+                fr.iteration_cycles,
+                fr.wire_cycles,
+                format!("{:.9}", fr.comm_overhead_pct),
+            )
+        })
+    };
+    let serial = run_all(1);
+    assert_eq!(run_all(1), serial, "repeat runs must match");
+    for threads in [2, 8] {
+        assert_eq!(run_all(threads), serial, "thread count {threads} diverged");
+    }
+}
+
+#[test]
+fn invalid_fabric_is_a_typed_error_listing_the_grammar() {
+    for bad in ["", "0", "2000", "4:topo=star", "4:alpha=fast", "4:beta=0GBps", "x"] {
+        let e = bad.parse::<Fabric>().unwrap_err();
+        assert!(matches!(e, WihetError::InvalidArg(_)), "{bad}: {e:?}");
+        let msg = e.to_string();
+        for hint in ["<chips>", "alpha=", "beta=", "ring|tree|hierarchical|auto"] {
+            assert!(msg.contains(hint), "'{bad}' error missing '{hint}': {msg}");
+        }
+    }
+    // an odd hierarchical fabric fails validation at the parse boundary
+    for odd in ["3:topo=hierarchical", "5:topo=hierarchical"] {
+        let e = odd.parse::<Fabric>().unwrap_err();
+        assert!(e.to_string().contains("even"), "{e}");
+    }
+}

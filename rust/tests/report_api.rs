@@ -68,6 +68,7 @@ fn every_experiment_roundtrips_through_json() {
         assert!(text.contains(match *id {
             "table1" => "Table 1",
             "workload_figs" => "Workload figs",
+            "scale_figs" => "Scale figs",
             _ => "Fig",
         }));
         assert!(rep.to_csv().lines().count() > 1, "{id} has an empty CSV");
