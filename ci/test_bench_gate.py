@@ -1,0 +1,128 @@
+"""Self-test for the bench regression gate (bench_gate.py).
+
+The gate guards every CI run, so its own behaviour is pinned here
+against synthetic BENCH_sim.json / reports fixtures:
+
+* **disarmed** — with no recorded `baseline` series the wall-time and
+  figure checks must pass silently (the gate arms itself only once CI
+  records a baseline on main);
+* **median drift** — a `current` median more than 2.5x its baseline
+  must fail, and one just under the limit must not;
+* **figure drift** — a deterministic experiment scalar drifting more
+  than 25% from its baseline value must fail;
+* **paper_ref deviation** — a report scalar further than 50% from the
+  paper's stated number must fail, and missing/zero expectations are
+  skipped rather than divided by.
+
+Run with: python3 -m pytest -q ci/test_bench_gate.py
+"""
+
+import copy
+import json
+import unittest
+
+import bench_gate
+
+
+def series(label, results=(), figures=None):
+    return {
+        "label": label,
+        "results": [
+            {"name": n, "median_ns": m} for (n, m) in results
+        ],
+        "figures": figures or {},
+    }
+
+
+def doc(*runs):
+    return {"runs": list(runs)}
+
+
+BASELINE = series(
+    "baseline",
+    results=[("simcore/iteration", 1000.0), ("experiment/fig17", 5000.0)],
+    figures={"fig17": {"wihetnoc_latency_reduction_pct": 40.0}},
+)
+
+
+class GateBench(unittest.TestCase):
+    def test_disarmed_without_baseline(self):
+        current = series("current", results=[("simcore/iteration", 9_999_999.0)])
+        self.assertEqual(bench_gate.gate_bench(doc(current)), [])
+
+    def test_skipped_without_current(self):
+        self.assertEqual(bench_gate.gate_bench(doc(BASELINE)), [])
+
+    def test_median_within_limit_passes(self):
+        current = series(
+            "current",
+            results=[("simcore/iteration", 2.4 * 1000.0)],
+            figures={"fig17": {"wihetnoc_latency_reduction_pct": 41.0}},
+        )
+        self.assertEqual(bench_gate.gate_bench(doc(BASELINE, current)), [])
+
+    def test_median_drift_fails(self):
+        current = series("current", results=[("simcore/iteration", 2.6 * 1000.0)])
+        errors = bench_gate.gate_bench(doc(BASELINE, current))
+        self.assertEqual(len(errors), 1)
+        self.assertIn("simcore/iteration", errors[0])
+        self.assertIn("2.60x", errors[0])
+
+    def test_new_bench_without_baseline_entry_is_not_gated(self):
+        current = series("current", results=[("fault_inject/compile", 123456.0)])
+        self.assertEqual(bench_gate.gate_bench(doc(BASELINE, current)), [])
+
+    def test_figure_scalar_drift_fails(self):
+        current = series(
+            "current",
+            figures={"fig17": {"wihetnoc_latency_reduction_pct": 20.0}},
+        )
+        errors = bench_gate.gate_bench(doc(BASELINE, current))
+        self.assertEqual(len(errors), 1)
+        self.assertIn("fig17.wihetnoc_latency_reduction_pct", errors[0])
+
+
+class GatePaperRefs(unittest.TestCase):
+    REPORT = {
+        "sections": [
+            {
+                "name": "wihetnoc_latency_reduction_pct",
+                "value": 38.0,
+                "paper_ref": {"expected": 40.0},
+            },
+            # no paper claim: never gated
+            {"name": "advantage_collapse_fault_pct", "value": 3.0},
+            # zero expectation: skipped, not divided by
+            {"name": "degenerate", "value": 1.0, "paper_ref": {"expected": 0}},
+        ]
+    }
+
+    def write_reports(self, tmpdir, report):
+        path = tmpdir / "fig17.json"
+        path.write_text(json.dumps(report))
+        return str(tmpdir)
+
+    def test_within_tolerance_passes(self):
+        import pathlib
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as d:
+            reports = self.write_reports(pathlib.Path(d), self.REPORT)
+            self.assertEqual(bench_gate.gate_paper_refs(reports), [])
+
+    def test_deviation_fails(self):
+        import pathlib
+        import tempfile
+
+        bad = copy.deepcopy(self.REPORT)
+        bad["sections"][0]["value"] = 10.0  # 75% off the paper's 40.0
+        with tempfile.TemporaryDirectory() as d:
+            reports = self.write_reports(pathlib.Path(d), bad)
+            errors = bench_gate.gate_paper_refs(reports)
+        self.assertEqual(len(errors), 1)
+        self.assertIn("wihetnoc_latency_reduction_pct", errors[0])
+        self.assertIn("75.0%", errors[0])
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -6,7 +6,9 @@
 //! CDBNet, designed end to end and compared against its mesh — then the
 //! same flow again on the paper's 8x8 for contrast. Each platform
 //! closes by scaling the designed chip out to a 4-chip data-parallel
-//! fabric (ring allreduce over alpha-beta inter-chip links).
+//! fabric (ring allreduce over alpha-beta inter-chip links), then
+//! breaks the network on purpose — a dead wireline link plus jammed
+//! wireless channels — to show the graceful-degradation machinery.
 //!
 //! Run: `cargo run --release --example design_custom_noc`
 
@@ -17,7 +19,7 @@ use wihetnoc::noc::analysis::analyze;
 use wihetnoc::noc::builder::{NocDesigner, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::noc::topology::Topology;
-use wihetnoc::schedule::run_schedule;
+use wihetnoc::schedule::{run_schedule, run_schedule_faults};
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
 use wihetnoc::workload::lower_id;
@@ -111,6 +113,28 @@ fn run_platform(platform: Platform, model: ModelId, batch: usize) -> Result<(), 
             fr.iteration_cycles,
             fr.schedule.makespan,
             fr.comm_overhead_pct,
+        );
+    }
+    // break the network on purpose: jam every wireless channel for the
+    // first 50k cycles and kill one wireline link. The MAC retries with
+    // exponential backoff then falls back to wireline; the routing
+    // layer repairs around the dead link — the chip degrades instead
+    // of failing, and the report says exactly how much it cost
+    let plan: wihetnoc::FaultPlan =
+        "wire:link=3;air:ch=0,burst=50000;air:ch=1,burst=50000".parse()?;
+    for (name, inst) in [("mesh", &mesh), ("wihetnoc", &inst)] {
+        let clean = run_schedule(&sys, inst, &piped, &gpipe, &tcfg)?;
+        let hurt = run_schedule_faults(&sys, inst, &piped, &gpipe, &tcfg, &plan)?;
+        let rs = hurt.resilience();
+        println!(
+            "{name:<9} under '{plan}': makespan {} vs clean {} | {} faults, {} rerouted, {} retries, {} fallback flits, {} undeliverable",
+            hurt.makespan,
+            clean.makespan,
+            rs.faults_injected,
+            rs.packets_rerouted,
+            rs.retries,
+            rs.fallback_flits,
+            rs.undeliverable_after_repair,
         );
     }
     Ok(())

@@ -26,7 +26,7 @@ use wihetnoc::bench::{merge_run, Bencher};
 use wihetnoc::experiments::{self, Ctx, Effort};
 use wihetnoc::fabric::{extend_timeline, steps, Collective, Fabric};
 use wihetnoc::model::SystemConfig;
-use wihetnoc::noc::builder::{mesh_opt, NocKind};
+use wihetnoc::noc::builder::{mesh_opt, wi_het_noc_quick, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig, SimWorkspace};
 use wihetnoc::schedule::{expand, run_schedule, SchedulePolicy};
 use wihetnoc::traffic::phases::model_phases;
@@ -34,7 +34,7 @@ use wihetnoc::traffic::trace::{training_trace, TraceConfig};
 use wihetnoc::util::exec::thread_count;
 use wihetnoc::util::json::Json;
 use wihetnoc::workload::{lower_id, MappingPolicy};
-use wihetnoc::{ModelId, Platform};
+use wihetnoc::{FaultPlan, ModelId, Platform};
 
 fn main() {
     let effort = match std::env::var("WIHETNOC_BENCH_EFFORT").as_deref() {
@@ -195,6 +195,46 @@ fn main() {
         },
     );
 
+    // --- fault-injection microbenches (ISSUE 7) ---
+    // plan compilation: seeded random kills + a jam window resolved
+    // against the full WiHetNoC (includes the route-repair pass)
+    let wihet = wi_het_noc_quick(&sys, 11);
+    let plan: FaultPlan = "wire:rate=0.03,seed=7;air:ch=0,burst=100000"
+        .parse()
+        .expect("well-formed plan");
+    let nominal = SimConfig::default().nominal_flits;
+    let n_faults = plan
+        .compile(&wihet.topo, &wihet.routes, &wihet.air, nominal)
+        .expect("plan compiles")
+        .faults_injected;
+    b.bench_items(
+        &format!("fault_inject/compile rate=0.03 ({n_faults} faults)"),
+        Some(n_faults as f64),
+        &mut || {
+            std::hint::black_box(
+                plan.compile(&wihet.topo, &wihet.routes, &wihet.air, nominal)
+                    .expect("compiles")
+                    .faults_injected,
+            );
+        },
+    );
+    // route repair alone: re-run the delay-weighted shortest-path /
+    // ALASH pass around one dead link on each instance family
+    for (name, inst_ref) in [("mesh_opt", &inst), ("wihetnoc", &wihet)] {
+        let mut dead = vec![false; inst_ref.topo.links.len()];
+        dead[dead.len() / 2] = true;
+        let (_, pairs) = inst_ref.routes.repaired(&inst_ref.topo, &inst_ref.air, &dead, nominal);
+        b.bench_items(
+            &format!("route_repair/{name} 1 dead link ({pairs} pairs)"),
+            Some(pairs as f64),
+            &mut || {
+                std::hint::black_box(
+                    inst_ref.routes.repaired(&inst_ref.topo, &inst_ref.air, &dead, nominal).1,
+                );
+            },
+        );
+    }
+
     // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
@@ -208,11 +248,11 @@ fn main() {
     let mut figures = BTreeMap::new();
     for id in experiments::ALL.iter() {
         let mut report = None;
-        if matches!(*id, "workload_figs" | "scale_figs") {
-            // These harnesses build their own Ctxs and AMOSA-design two
-            // 144-tile NoCs per run — repeat samples would redo identical
-            // design work, so time a single pass (still recorded in
-            // BENCH_sim.json).
+        if matches!(*id, "workload_figs" | "scale_figs" | "resilience_figs") {
+            // These harnesses build their own instances per run (AMOSA
+            // designs on 144 tiles, or dozens of faulted full-trace
+            // sims) — repeat samples would redo identical work, so time
+            // a single pass (still recorded in BENCH_sim.json).
             let mut once = Bencher { warmup: 0, samples: 1, results: Vec::new() };
             once.bench(&format!("experiment/{id}"), || {
                 report = Some(experiments::run(id, &mut ctx).expect("experiment runs"));

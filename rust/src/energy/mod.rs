@@ -8,5 +8,6 @@ pub mod system;
 pub use network::{network_energy_pj, message_edp, NetworkEnergy};
 pub use params::EnergyParams;
 pub use system::{
-    full_system_run, full_system_run_fabric, full_system_run_scheduled, FullSystemReport,
+    full_system_run, full_system_run_fabric, full_system_run_faults, full_system_run_scheduled,
+    FullSystemReport,
 };

@@ -17,6 +17,7 @@
 
 use crate::energy::network::network_energy_pj;
 use crate::energy::params::EnergyParams;
+use crate::faults::{FaultPlan, ResilienceStats};
 use crate::model::cnn::{LayerKind, Pass};
 use crate::model::{SystemConfig, TileKind};
 use crate::noc::builder::NocInstance;
@@ -94,6 +95,9 @@ pub struct FullSystemReport {
     /// Fabric-level EDP: `(chips x total_j + interchip_j) x
     /// exec_seconds`. Equals `edp` for a single chip.
     pub fabric_edp: f64,
+    /// Fault-injection accounting aggregated over every simulated phase
+    /// (all zeros for fault-free runs).
+    pub resilience: ResilienceStats,
 }
 
 /// Run every phase of `tm` through the simulator on `inst` and assemble
@@ -106,19 +110,50 @@ pub fn full_system_run(
     energy: &EnergyParams,
     stall: &StallModel,
 ) -> FullSystemReport {
+    full_system_run_faults(sys, inst, tm, trace_cfg, energy, stall, &FaultPlan::none())
+        .expect("the empty fault plan always compiles")
+}
+
+/// [`full_system_run`] under a [`FaultPlan`]: the plan is compiled once
+/// against the instance and every phase's simulation runs with it; the
+/// report aggregates the per-phase resilience counters (faults injected
+/// is the per-run count, not a per-phase sum). [`FaultPlan::none`]
+/// delegates byte-identically to the fault-free path.
+pub fn full_system_run_faults(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    trace_cfg: &TraceConfig,
+    energy: &EnergyParams,
+    stall: &StallModel,
+    plan: &FaultPlan,
+) -> crate::error::Result<FullSystemReport> {
     let mut rng = Rng::new(trace_cfg.seed);
     let sim_cfg = SimConfig::default();
-    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, sim_cfg);
+    let fx = if plan.has_noc_faults() {
+        Some(plan.compile(&inst.topo, &inst.routes, &inst.air, sim_cfg.nominal_flits)?)
+    } else {
+        None
+    };
+    let mut sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, sim_cfg);
+    if let Some(f) = &fx {
+        sim = sim.with_faults(f);
+    }
     let inv_scale = 1.0 / trace_cfg.scale;
 
     let mut per_phase = Vec::new();
     let mut exec_total = 0.0f64;
     let mut net_j = 0.0f64;
     let mut core_j = 0.0f64;
+    let mut resilience = ResilienceStats::default();
 
     for p in &tm.phases {
         let (msgs, _dur) = phase_trace(sys, p, 0, trace_cfg, &mut rng);
         let rep: SimReport = sim.run(&msgs);
+        resilience.packets_rerouted += rep.resilience.packets_rerouted;
+        resilience.retries += rep.resilience.retries;
+        resilience.fallback_flits += rep.resilience.fallback_flits;
+        resilience.undeliverable_after_repair += rep.resilience.undeliverable_after_repair;
         let e = network_energy_pj(&inst.topo, &rep, energy);
         let phase_net_j = e.total_pj() * inv_scale * 1e-12;
 
@@ -173,9 +208,14 @@ pub fn full_system_run(
         });
     }
 
+    if let Some(f) = &fx {
+        // per-run count: the same plan is live in every phase's sim
+        resilience.faults_injected = f.faults_injected;
+    }
+
     let exec_seconds = exec_total / sys.noc_clock_hz;
     let total_j = net_j + core_j;
-    FullSystemReport {
+    Ok(FullSystemReport {
         noc: inst.kind.as_str().to_string(),
         model: tm.model.clone(),
         per_phase,
@@ -192,7 +232,8 @@ pub fn full_system_run(
         interchip_j: 0.0,
         comm_overhead_pct: 0.0,
         fabric_edp: total_j * exec_seconds,
-    }
+        resilience,
+    })
 }
 
 /// Full-system run under a training-timeline schedule. `serial`
@@ -279,6 +320,7 @@ pub fn full_system_run_scheduled(
         interchip_j: 0.0,
         comm_overhead_pct: 0.0,
         fabric_edp: total_j * exec_seconds,
+        resilience: sr.sim.resilience.clone(),
     })
 }
 
@@ -370,6 +412,7 @@ pub fn full_system_run_fabric(
         interchip_j,
         comm_overhead_pct: fr.comm_overhead_pct,
         fabric_edp: (fabric.chips as f64 * total_j + interchip_j) * exec_seconds,
+        resilience: fr.resilience.clone(),
     })
 }
 
@@ -494,6 +537,34 @@ mod tests {
             crate::fabric::wire_bytes_per_chip(4, grad),
         ) * 4.0;
         assert!((r.interchip_j - expect_ic).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faulted_run_accounts_and_none_delegates() {
+        let sys = SystemConfig::paper_8x8();
+        let tm = model_phases(&sys, &lenet(), 32);
+        let inst = mesh_opt(&sys, true);
+        let cfg = quick_cfg();
+        let e = EnergyParams::default();
+        let s = StallModel::default();
+        let clean = full_system_run(&sys, &inst, &tm, &cfg, &e, &s);
+        assert_eq!(clean.resilience, ResilienceStats::default());
+
+        let none =
+            full_system_run_faults(&sys, &inst, &tm, &cfg, &e, &s, &FaultPlan::none()).unwrap();
+        assert_eq!(none.exec_cycles, clean.exec_cycles, "none() must delegate");
+        assert_eq!(none.network_j, clean.network_j);
+        assert_eq!(none.resilience, ResilienceStats::default());
+
+        // kill one mesh link: the residual is connected, so nothing is
+        // lost after repair but the detours cost energy/time accounting
+        let plan: FaultPlan = "wire:link=0".parse().unwrap();
+        let faulted =
+            full_system_run_faults(&sys, &inst, &tm, &cfg, &e, &s, &plan).unwrap();
+        assert_eq!(faulted.resilience.faults_injected, 1);
+        assert_eq!(faulted.resilience.undeliverable_after_repair, 0);
+        assert_eq!(faulted.per_phase.len(), clean.per_phase.len());
+        assert!(faulted.exec_seconds > 0.0 && faulted.network_j > 0.0);
     }
 
     #[test]

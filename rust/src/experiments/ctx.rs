@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use crate::error::WihetError;
 use crate::fabric::Fabric;
+use crate::faults::FaultPlan;
 use crate::model::cnn::ModelSpec;
 use crate::model::SystemConfig;
 use crate::noc::analysis::TrafficMatrix;
@@ -68,6 +69,12 @@ pub struct Ctx {
     /// into every [`ScenarioKey`] so keys stay faithful to the
     /// scenario. Private: fixed at construction like `batch`.
     fabric: Fabric,
+    /// Fault plan the scenario's simulations run under. Lowered traffic
+    /// is fault-independent (faults act at simulation time), so the plan
+    /// never splits the traffic cache — it is carried into every
+    /// [`ScenarioKey`] so keys stay faithful to the scenario. Private:
+    /// fixed at construction like `batch`.
+    faults: FaultPlan,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     /// Shared handle — cloning it is pointer-cheap.
     pub sys: Arc<SystemConfig>,
@@ -94,6 +101,7 @@ impl Ctx {
             mapping: MappingPolicy::default(),
             schedule: SchedulePolicy::default(),
             fabric: Fabric::single(),
+            faults: FaultPlan::none(),
             sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
@@ -111,12 +119,14 @@ impl Ctx {
         sc.mapping.validate_for(&sys, sc.batch)?;
         sc.schedule.validate_for(sc.batch)?;
         sc.fabric.validate()?;
+        sc.faults.validate()?;
         let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
         ctx.model = sc.model.clone();
         ctx.batch = sc.batch;
         ctx.mapping = sc.mapping;
         ctx.schedule = sc.schedule;
         ctx.fabric = sc.fabric;
+        ctx.faults = sc.faults.clone();
         Ok(ctx)
     }
 
@@ -138,6 +148,11 @@ impl Ctx {
     /// The multi-chip fabric the scenario replicates over.
     pub fn fabric(&self) -> Fabric {
         self.fabric
+    }
+
+    /// The fault plan the scenario's simulations run under.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// The batch size the traffic models are derived at.
@@ -185,8 +200,14 @@ impl Ctx {
     /// counts, so this holds for all internal callers; handing in an
     /// unrelated smaller chip is a caller bug and panics).
     pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
-        let key =
-            ScenarioKey::with_fabric(model, sys, self.mapping, self.schedule, self.fabric);
+        let key = ScenarioKey::with_faults(
+            model,
+            sys,
+            self.mapping,
+            self.schedule,
+            self.fabric,
+            self.faults.clone(),
+        );
         if !self.traffic.contains_key(&key) {
             let tm = lower_id(&key.model, &self.mapping, sys, self.batch)
                 .expect("mapping validated at construction fits every Ctx-derived placement");

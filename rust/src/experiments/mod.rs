@@ -23,6 +23,7 @@ pub mod wireless_figs; // fig14, fig15, fig16
 pub mod compare_figs; // fig17, fig18, fig19
 pub mod workload_figs; // non-paper workloads x schedules on 12x12
 pub mod scale_figs; // multi-chip data-parallel fabric scaling
+pub mod resilience_figs; // fault injection: graceful degradation sweeps
 
 pub use ctx::{Ctx, Effort};
 pub use registry::{find, ids, run, run_many, run_many_threads, Experiment, ALL, REGISTRY};

@@ -15,8 +15,8 @@ use std::sync::LazyLock;
 use super::ctx::{Ctx, Effort};
 use super::report::Report;
 use super::{
-    compare_figs, optim_figs, param_figs, scale_figs, table1, traffic_figs, wireless_figs,
-    workload_figs,
+    compare_figs, optim_figs, param_figs, resilience_figs, scale_figs, table1, traffic_figs,
+    wireless_figs, workload_figs,
 };
 use crate::error::WihetError;
 use crate::util::exec::{par_map_threads, thread_count};
@@ -173,6 +173,13 @@ pub const REGISTRY: &[Experiment] = &[
         min_effort: Effort::Quick,
         run: |ctx| Ok(scale_figs::scale_figs(ctx)),
     },
+    Experiment {
+        id: "resilience_figs",
+        title: "graceful degradation under link faults & jammed channels, mesh vs WiHetNoC",
+        paper: "",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(resilience_figs::resilience_figs(ctx)),
+    },
 ];
 
 /// All experiment ids, in registry order — a view over [`REGISTRY`].
@@ -251,7 +258,7 @@ mod tests {
     #[test]
     fn all_is_a_view_over_the_registry() {
         assert_eq!(ALL.len(), REGISTRY.len());
-        assert_eq!(ALL.len(), 18);
+        assert_eq!(ALL.len(), 19);
         for (id, e) in ALL.iter().zip(REGISTRY) {
             assert_eq!(*id, e.id);
         }

@@ -15,7 +15,8 @@
 //! production data-parallel trainers.
 //!
 //! [`run_fabric`] then runs the extended timeline through the gated
-//! simulator (`NocSim::run_timeline` via [`run_expanded`]) and charges
+//! simulator (`NocSim::run_timeline` via
+//! [`crate::schedule::run_expanded`]) and charges
 //! the *inter-chip* hop of each step analytically from the alpha-beta
 //! model: step `s` finishes at
 //! `max(release[s], finish[s-1]) + ceil(scale · (alpha + beta·bytes))`,
@@ -26,12 +27,14 @@
 //! strictly monotone in the chip count (pinned by `tests/fabric_sim.rs`).
 
 use crate::error::WihetError;
+use crate::faults::{FaultPlan, ResilienceStats};
 use crate::model::cnn::{LayerKind, Pass};
 use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
+use crate::noc::sim::SimConfig;
 use crate::schedule::{
-    expand, run_expanded, run_schedule, PhaseInstance, SchedulePolicy, ScheduleReport,
-    TrainingTimeline,
+    expand, run_expanded_faults, run_schedule_faults, PhaseInstance, SchedulePolicy,
+    ScheduleReport, TrainingTimeline,
 };
 use crate::traffic::phases::{LayerPhase, TrafficModel};
 use crate::traffic::trace::TraceConfig;
@@ -47,7 +50,7 @@ pub struct FabricReport {
     pub algorithm: Collective,
     /// Per-chip gated simulation — includes the allreduce groups'
     /// on-chip traffic for `chips > 1`; byte-identical to
-    /// [`run_schedule`] for the single-chip fabric.
+    /// [`crate::schedule::run_schedule`] for the single-chip fabric.
     pub schedule: ScheduleReport,
     /// Gradient bytes allreduced per iteration (`ΣW` of the model).
     pub grad_bytes: u64,
@@ -64,6 +67,11 @@ pub struct FabricReport {
     /// `100 · wire / (serial_ref + wire)` — 0 for a single chip,
     /// strictly increasing with the chip count.
     pub comm_overhead_pct: f64,
+    /// Fault-injection accounting: the per-chip simulation's stats plus
+    /// the inter-chip tier's contribution (a degraded chip counts as one
+    /// injected fault; dropped collective steps charge `drop` retries
+    /// per step). All zeros under [`FaultPlan::none`].
+    pub resilience: ResilienceStats,
 }
 
 /// Synthesize the on-chip traffic of one collective step: the outgoing
@@ -158,13 +166,37 @@ pub fn run_fabric(
     grad_bytes: u64,
     cfg: &TraceConfig,
 ) -> Result<FabricReport, WihetError> {
+    run_fabric_faults(sys, inst, tm, policy, fabric, grad_bytes, cfg, &FaultPlan::none())
+}
+
+/// [`run_fabric`] under a [`FaultPlan`]. On-chip faults (dead links, jam
+/// windows) thread into the per-chip gated simulation; chip-tier faults
+/// degrade the analytic inter-chip pipeline: `chip:n=K,slow=Sx` makes
+/// the slowest replica gate every collective step (the whole ring moves
+/// at the straggler's pace, so each step's wire time is multiplied by
+/// `S`), and `drop=R` charges `R` retries per step — each retry repeats
+/// the step's transfer and pays an exponential-backoff timeout of
+/// `alpha · (2^r - 1)` before the link is trusted again.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fabric_faults(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    fabric: &Fabric,
+    grad_bytes: u64,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+) -> Result<FabricReport, WihetError> {
     fabric.validate()?;
     let algorithm = fabric.collective.resolve(fabric.chips, grad_bytes);
     if fabric.is_single() {
         // degenerate fabric: the unmodified single-chip path,
-        // byte-identical to `run_schedule` (pinned by tests)
-        let schedule = run_schedule(sys, inst, tm, policy, cfg)?;
+        // byte-identical to `run_schedule` (pinned by tests); chip-tier
+        // faults are inert without collective steps
+        let schedule = run_schedule_faults(sys, inst, tm, policy, cfg, plan)?;
         let iteration_cycles = schedule.makespan;
+        let resilience = schedule.sim.resilience.clone();
         return Ok(FabricReport {
             fabric: *fabric,
             algorithm,
@@ -175,14 +207,29 @@ pub fn run_fabric(
             wire_cycles: 0,
             iteration_cycles,
             comm_overhead_pct: 0.0,
+            resilience,
         });
     }
 
+    let fx = if plan.has_noc_faults() {
+        let nominal = SimConfig::default().nominal_flits;
+        Some(plan.compile(&inst.topo, &inst.routes, &inst.air, nominal)?)
+    } else {
+        None
+    };
     let st = steps(algorithm, fabric.chips, grad_bytes);
     let mut tl = expand(tm, policy)?;
     let first_ar = extend_timeline(&mut tl, tm, sys, fabric, &st);
     let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
-    let (schedule, release) = run_expanded(sys, inst, &tl, cfg, serial_ref);
+    let (schedule, release) = run_expanded_faults(sys, inst, &tl, cfg, serial_ref, fx.as_ref());
+
+    // straggler-aware degradation of the wire tier: every collective
+    // step moves at the slowest replica's pace, and a flaky link repeats
+    // each step `drop` times with exponential-backoff timeouts
+    let slow = u64::from(plan.chip_slow_x.max(1));
+    let drop = u64::from(if plan.chip_n > 0 { plan.chip_drop } else { 0 });
+    let alpha_cycles = ((fabric.alpha_seconds() * sys.noc_clock_hz * cfg.scale).ceil() as u64)
+        .max(1);
 
     // analytic inter-chip pipeline: each step's wire hop starts when its
     // on-chip group released (shard staged at the MCs) and the previous
@@ -192,16 +239,24 @@ pub fn run_fabric(
     for (i, s) in st.iter().enumerate() {
         let w = ((fabric.step_cycles(s, sys.noc_clock_hz) as f64 * cfg.scale).ceil() as u64)
             .max(1);
-        wire_cycles += w;
+        let w_slow = w * slow;
+        let w_eff = w_slow + drop * w_slow + alpha_cycles * ((1u64 << drop) - 1);
+        wire_cycles += w_eff;
         let rel = match release.get(first_ar + i) {
             Some(&r) if r != u64::MAX => r,
             _ => 0,
         };
-        finish = finish.max(rel) + w;
+        finish = finish.max(rel) + w_eff;
     }
     let iteration_cycles = schedule.makespan.max(finish);
     let comm_overhead_pct =
         100.0 * wire_cycles as f64 / (serial_ref + wire_cycles).max(1) as f64;
+
+    let mut resilience = schedule.sim.resilience.clone();
+    if plan.chip_n > 0 {
+        resilience.faults_injected += 1;
+        resilience.retries += drop * st.len() as u64;
+    }
 
     Ok(FabricReport {
         fabric: *fabric,
@@ -213,6 +268,7 @@ pub fn run_fabric(
         wire_cycles,
         iteration_cycles,
         comm_overhead_pct,
+        resilience,
     })
 }
 
@@ -220,6 +276,7 @@ pub fn run_fabric(
 mod tests {
     use super::*;
     use crate::noc::builder::mesh_opt;
+    use crate::schedule::run_schedule;
     use crate::workload::{lower_id, MappingPolicy};
     use crate::ModelId;
 
@@ -301,7 +358,7 @@ mod tests {
             let fabric = Fabric { collective: Collective::Ring, ..Fabric::new(chips) };
             let fr = run_fabric(&sys, &inst, &tm, &policy, &fabric, grad, &cfg).unwrap();
             assert_eq!(fr.algorithm, Collective::Ring);
-            assert_eq!(fr.schedule.sim.undelivered, 0);
+            assert_eq!(fr.schedule.sim.undelivered(), 0);
             assert_eq!(fr.wire_bytes_per_chip, wire_bytes_per_chip(chips, grad));
             assert!(fr.iteration_cycles >= fr.schedule.makespan);
             assert!(
@@ -311,5 +368,53 @@ mod tests {
             );
             prev = fr.comm_overhead_pct;
         }
+    }
+
+    #[test]
+    fn chip_degradation_slows_the_wire_tier() {
+        let (sys, inst, tm, grad) = setup();
+        let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+        let policy = SchedulePolicy::GPipe { microbatches: 4 };
+        let fabric = Fabric { collective: Collective::Ring, ..Fabric::new(4) };
+        let clean = run_fabric(&sys, &inst, &tm, &policy, &fabric, grad, &cfg).unwrap();
+        assert_eq!(clean.resilience, ResilienceStats::default());
+
+        // FaultPlan::none() delegates byte-identically
+        let none = run_fabric_faults(
+            &sys, &inst, &tm, &policy, &fabric, grad, &cfg, &FaultPlan::none(),
+        )
+        .unwrap();
+        assert_eq!(none.wire_cycles, clean.wire_cycles);
+        assert_eq!(none.iteration_cycles, clean.iteration_cycles);
+        assert_eq!(none.schedule.makespan, clean.schedule.makespan);
+        assert_eq!(none.resilience, ResilienceStats::default());
+
+        // a 4x straggler gates every ring step: exactly 4x the wire time
+        let plan: FaultPlan = "chip:n=1,slow=4x".parse().unwrap();
+        let slow =
+            run_fabric_faults(&sys, &inst, &tm, &policy, &fabric, grad, &cfg, &plan).unwrap();
+        assert_eq!(slow.wire_cycles, 4 * clean.wire_cycles);
+        assert!(slow.iteration_cycles >= clean.iteration_cycles);
+        assert!(slow.comm_overhead_pct > clean.comm_overhead_pct);
+        assert_eq!(slow.resilience.faults_injected, 1);
+        assert_eq!(slow.resilience.retries, 0);
+        // the on-chip side is untouched by chip-tier faults
+        assert_eq!(slow.schedule.makespan, clean.schedule.makespan);
+
+        // dropped steps charge retries + backoff on top of the transfer
+        let plan: FaultPlan = "chip:n=1,drop=2".parse().unwrap();
+        let flaky =
+            run_fabric_faults(&sys, &inst, &tm, &policy, &fabric, grad, &cfg, &plan).unwrap();
+        assert!(flaky.wire_cycles > 3 * clean.wire_cycles, "2 retries repeat each step twice");
+        assert_eq!(flaky.resilience.faults_injected, 1);
+        assert_eq!(flaky.resilience.retries, 2 * flaky.steps as u64);
+
+        // chip faults are inert on the single-chip fabric
+        let single = run_fabric_faults(
+            &sys, &inst, &tm, &policy, &Fabric::single(), grad, &cfg, &plan,
+        )
+        .unwrap();
+        assert_eq!(single.resilience, ResilienceStats::default());
+        assert_eq!(single.wire_cycles, 0);
     }
 }

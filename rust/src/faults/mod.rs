@@ -1,0 +1,596 @@
+//! Fault injection and graceful degradation.
+//!
+//! The paper's §4.2.5 MAC already encodes a degradation rule — a busy
+//! channel re-routes over wireline on the spot — but only contention
+//! ever exercised it. This module injects *failures* and lets the rest
+//! of the stack degrade gracefully instead of lying about a perfect
+//! network:
+//!
+//! * **wireline hard faults** (`wire:`) — a link is dead from cycle
+//!   `at`. [`RouteSet::repaired`] re-runs the delay-weighted shortest
+//!   path / ALASH pass around the dead links, and the simulator
+//!   re-roots any packet that reaches a dying link onto the repaired
+//!   routes mid-flight, exactly like the MAC fallback.
+//! * **wireless interference windows** (`air:`) — a channel is jammed
+//!   over `[from, from+burst)`. The MAC sees it as busy, carrier-senses
+//!   again after a bounded exponential backoff, and falls back to
+//!   wireline when the window outlasts the retry budget.
+//! * **inter-chip fabric degradation** (`chip:`) — a degraded chip
+//!   slows every collective step by `slow` (the slowest participant
+//!   gates a ring/tree step), and a flaky link drops each step `drop`
+//!   times, charged analytically as timeout + exponential backoff in
+//!   [`crate::fabric::run_fabric_faults`].
+//!
+//! A [`FaultPlan`] parses from the same kind of compact grammar as the
+//! fabric spec (see [`GRAMMAR`]), validates at the scenario boundary,
+//! and [`FaultPlan::compile`]s against a concrete topology into
+//! [`SimFaults`] — per-link down cycles, per-channel jam windows, and
+//! the repaired route set. Compilation derives only from the plan (seed
+//! + structural indices), never from thread or workspace state, so
+//! injection is byte-identical across `WIHETNOC_THREADS` settings.
+//! [`FaultPlan::none`] compiles to nothing and every fault hook in the
+//! simulator is behind an `Option`, so fault-free runs stay
+//! byte-identical to the pre-fault code paths.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::noc::routing::RouteSet;
+use crate::noc::topology::Topology;
+use crate::noc::wireless::WirelessSpec;
+use crate::util::rng::Rng;
+
+/// The `--faults` grammar (embedded in every parse error).
+pub const GRAMMAR: &str = "fault plan grammar:
+  <plan>   := none | <clause>[;<clause>]*
+  <clause> := wire:link=<id>[,at=<cycle>]             one wireline link dies at <cycle>
+            | wire:rate=<frac>[,seed=<n>][,at=<cycle>]  seeded random link kills
+            | air:ch=<n>[,from=<cycle>],burst=<cycles>  jam a channel over [from, from+burst)
+            | chip:n=<k>[,slow=<f>x][,drop=<r>]       degrade k fabric chips
+  examples: wire:link=12 | wire:rate=0.01,seed=7 | air:ch=2,from=5000,burst=2000;chip:n=1,slow=4x";
+
+/// One explicit wireline link fault: `link` is dead from cycle `at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkFault {
+    pub link: u32,
+    pub at: u64,
+}
+
+/// One wireless interference window: `channel` is jammed over
+/// `[from, from + burst)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JamWindow {
+    pub channel: u32,
+    pub from: u64,
+    pub burst: u64,
+}
+
+/// A typed, deterministic fault-injection plan. Parses from the
+/// [`GRAMMAR`]; all fields are integers so the plan can ride inside the
+/// `Hash + Eq` [`crate::ScenarioKey`] (the random-kill rate is stored in
+/// parts per million).
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
+pub struct FaultPlan {
+    /// Explicit `wire:link=` faults.
+    pub dead_links: Vec<LinkFault>,
+    /// Seeded random link kills, parts per million (0 = off).
+    pub wire_rate_ppm: u32,
+    /// Seed of the random-kill stream.
+    pub wire_seed: u64,
+    /// Cycle the random kills take effect.
+    pub wire_at: u64,
+    /// Wireless interference windows.
+    pub jams: Vec<JamWindow>,
+    /// Degraded chips in the fabric (0 = none). Ring/tree collective
+    /// steps synchronize the whole fabric, so one degraded chip gates
+    /// every step — `n` is recorded for reporting.
+    pub chip_n: u32,
+    /// Alpha/beta slow-down factor of the degraded chips (>= 1).
+    pub chip_slow_x: u32,
+    /// Dropped attempts per collective step on the flaky link.
+    pub chip_drop: u32,
+}
+
+impl FaultPlan {
+    /// The empty plan: delegates byte-identically to fault-free runs.
+    pub fn none() -> Self {
+        FaultPlan { chip_slow_x: 1, ..FaultPlan::default() }
+    }
+
+    /// True when the plan injects nothing at all.
+    pub fn is_none(&self) -> bool {
+        self.dead_links.is_empty()
+            && self.wire_rate_ppm == 0
+            && self.jams.is_empty()
+            && self.chip_n == 0
+    }
+
+    /// True when the plan carries on-chip (wireline or wireless) faults
+    /// the cycle-level simulator must model.
+    pub fn has_noc_faults(&self) -> bool {
+        !self.dead_links.is_empty() || self.wire_rate_ppm > 0 || !self.jams.is_empty()
+    }
+
+    /// True when the plan degrades the inter-chip fabric.
+    pub fn has_chip_faults(&self) -> bool {
+        self.chip_n > 0
+    }
+
+    /// Semantic checks beyond the grammar (link ids are checked against
+    /// the concrete topology by [`FaultPlan::compile`]).
+    pub fn validate(&self) -> Result<(), WihetError> {
+        if self.wire_rate_ppm > 1_000_000 {
+            return Err(WihetError::InvalidArg(format!(
+                "wire:rate must be in [0, 1], got {}\n{GRAMMAR}",
+                self.wire_rate_ppm as f64 / 1e6
+            )));
+        }
+        for j in &self.jams {
+            if j.burst == 0 {
+                return Err(WihetError::InvalidArg(format!(
+                    "air: burst must be > 0 (channel {})\n{GRAMMAR}",
+                    j.channel
+                )));
+            }
+        }
+        if self.chip_n > 0 && self.chip_slow_x <= 1 && self.chip_drop == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "chip:n={} degrades nothing — add slow=<f>x (> 1x) or drop=<r>\n{GRAMMAR}",
+                self.chip_n
+            )));
+        }
+        if self.chip_slow_x == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "chip: slow factor must be >= 1x\n{GRAMMAR}"
+            )));
+        }
+        // the fabric tier charges an exponential-backoff timeout of
+        // alpha * (2^drop - 1) per step — cap the exponent well inside u64
+        if self.chip_drop > 16 {
+            return Err(WihetError::InvalidArg(format!(
+                "chip: drop={} retries per step is outside the model's regime (max 16)\n{GRAMMAR}",
+                self.chip_drop
+            )));
+        }
+        Ok(())
+    }
+
+    /// Resolve the plan against a concrete NoC: expand seeded random
+    /// kills (deterministically, in link-id order), check explicit link
+    /// ids, collect per-channel jam windows, and run the route repair
+    /// pass around every dead link. Jam windows naming channels this
+    /// NoC does not have are inert — a mesh under an `air:` plan is
+    /// exactly the fault-free mesh.
+    pub fn compile(
+        &self,
+        topo: &Topology,
+        routes: &RouteSet,
+        air: &WirelessSpec,
+        nominal_flits: u64,
+    ) -> Result<SimFaults, WihetError> {
+        self.validate()?;
+        let nl = topo.links.len();
+        let mut down = vec![u64::MAX; nl];
+        for lf in &self.dead_links {
+            let l = lf.link as usize;
+            if l >= nl {
+                return Err(WihetError::InvalidArg(format!(
+                    "wire:link={} out of range — this topology has {nl} links\n{GRAMMAR}",
+                    lf.link
+                )));
+            }
+            down[l] = down[l].min(lf.at);
+        }
+        if self.wire_rate_ppm > 0 {
+            // One draw per link, in link-id order: the kill set depends
+            // only on (seed, rate, link count), never on thread or
+            // workspace state.
+            let mut rng = Rng::new(self.wire_seed);
+            for d in down.iter_mut() {
+                if rng.next_u64() % 1_000_000 < self.wire_rate_ppm as u64 {
+                    *d = (*d).min(self.wire_at);
+                }
+            }
+        }
+        let dead: Vec<bool> = down.iter().map(|&t| t != u64::MAX).collect();
+        let n_dead = dead.iter().filter(|&&d| d).count() as u64;
+
+        let nch = air.num_channels;
+        let mut jams: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nch];
+        let mut n_jams = 0u64;
+        for j in &self.jams {
+            if let Some(ws) = jams.get_mut(j.channel as usize) {
+                ws.push((j.from, j.from + j.burst));
+                n_jams += 1;
+            }
+        }
+        for ws in &mut jams {
+            ws.sort_unstable();
+        }
+
+        let (repaired, pairs_repaired) = if n_dead > 0 {
+            let (rs, pairs) = routes.repaired(topo, air, &dead, nominal_flits);
+            (Some(rs), pairs)
+        } else {
+            (None, 0)
+        };
+
+        Ok(SimFaults {
+            link_down_at: down,
+            dead,
+            jams,
+            repaired,
+            pairs_repaired,
+            faults_injected: n_dead + n_jams,
+        })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    /// Canonical form (defaults omitted); round-trips through
+    /// [`FaultPlan::from_str`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_none() {
+            return f.pad("none");
+        }
+        let mut parts: Vec<String> = Vec::new();
+        for lf in &self.dead_links {
+            let mut s = format!("wire:link={}", lf.link);
+            if lf.at != 0 {
+                s.push_str(&format!(",at={}", lf.at));
+            }
+            parts.push(s);
+        }
+        if self.wire_rate_ppm > 0 {
+            let mut s = format!("wire:rate={}", self.wire_rate_ppm as f64 / 1e6);
+            if self.wire_seed != 0 {
+                s.push_str(&format!(",seed={}", self.wire_seed));
+            }
+            if self.wire_at != 0 {
+                s.push_str(&format!(",at={}", self.wire_at));
+            }
+            parts.push(s);
+        }
+        for j in &self.jams {
+            let mut s = format!("air:ch={}", j.channel);
+            if j.from != 0 {
+                s.push_str(&format!(",from={}", j.from));
+            }
+            s.push_str(&format!(",burst={}", j.burst));
+            parts.push(s);
+        }
+        if self.chip_n > 0 {
+            let mut s = format!("chip:n={}", self.chip_n);
+            if self.chip_slow_x > 1 {
+                s.push_str(&format!(",slow={}x", self.chip_slow_x));
+            }
+            if self.chip_drop > 0 {
+                s.push_str(&format!(",drop={}", self.chip_drop));
+            }
+            parts.push(s);
+        }
+        f.pad(&parts.join(";"))
+    }
+}
+
+fn parse_num<T: FromStr>(key: &str, v: &str) -> Result<T, WihetError> {
+    v.trim().parse::<T>().map_err(|_| {
+        WihetError::InvalidArg(format!("{key}={v} is not a valid number\n{GRAMMAR}"))
+    })
+}
+
+impl FromStr for FaultPlan {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let t = s.trim();
+        let mut plan = FaultPlan::none();
+        if t.is_empty() || t.eq_ignore_ascii_case("none") {
+            return Ok(plan);
+        }
+        for clause in t.split(';') {
+            let clause = clause.trim();
+            let (head, rest) = clause.split_once(':').ok_or_else(|| {
+                WihetError::InvalidArg(format!(
+                    "fault clause '{clause}' needs a wire:/air:/chip: head\n{GRAMMAR}"
+                ))
+            })?;
+            let mut kv = Vec::new();
+            for item in rest.split(',') {
+                let (k, v) = item.split_once('=').ok_or_else(|| {
+                    WihetError::InvalidArg(format!(
+                        "expected key=value in fault clause, got '{item}'\n{GRAMMAR}"
+                    ))
+                })?;
+                kv.push((k.trim(), v.trim()));
+            }
+            let get = |key: &str| kv.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+            let known = |allowed: &[&str]| -> Result<(), WihetError> {
+                for (k, _) in &kv {
+                    if !allowed.contains(k) {
+                        return Err(WihetError::InvalidArg(format!(
+                            "unknown key '{k}' in {head}: fault clause\n{GRAMMAR}"
+                        )));
+                    }
+                }
+                Ok(())
+            };
+            match head.trim() {
+                "wire" => {
+                    known(&["link", "at", "rate", "seed"])?;
+                    let at: u64 = get("at").map(|v| parse_num("at", v)).transpose()?.unwrap_or(0);
+                    match (get("link"), get("rate")) {
+                        (Some(link), None) => {
+                            plan.dead_links.push(LinkFault { link: parse_num("link", link)?, at });
+                        }
+                        (None, Some(rate)) => {
+                            if plan.wire_rate_ppm > 0 {
+                                return Err(WihetError::InvalidArg(format!(
+                                    "at most one wire:rate clause per plan\n{GRAMMAR}"
+                                )));
+                            }
+                            let r: f64 = parse_num("rate", rate)?;
+                            if !(0.0..=1.0).contains(&r) {
+                                return Err(WihetError::InvalidArg(format!(
+                                    "wire:rate must be in [0, 1], got {rate}\n{GRAMMAR}"
+                                )));
+                            }
+                            plan.wire_rate_ppm = (r * 1e6).round() as u32;
+                            plan.wire_seed =
+                                get("seed").map(|v| parse_num("seed", v)).transpose()?.unwrap_or(0);
+                            plan.wire_at = at;
+                        }
+                        _ => {
+                            return Err(WihetError::InvalidArg(format!(
+                                "wire: clause needs exactly one of link=<id> or rate=<frac>\n{GRAMMAR}"
+                            )));
+                        }
+                    }
+                }
+                "air" => {
+                    known(&["ch", "from", "burst"])?;
+                    let channel = get("ch").ok_or_else(|| {
+                        WihetError::InvalidArg(format!("air: clause needs ch=<n>\n{GRAMMAR}"))
+                    })?;
+                    let burst = get("burst").ok_or_else(|| {
+                        WihetError::InvalidArg(format!(
+                            "air: clause needs burst=<cycles>\n{GRAMMAR}"
+                        ))
+                    })?;
+                    plan.jams.push(JamWindow {
+                        channel: parse_num("ch", channel)?,
+                        from: get("from").map(|v| parse_num("from", v)).transpose()?.unwrap_or(0),
+                        burst: parse_num("burst", burst)?,
+                    });
+                }
+                "chip" => {
+                    known(&["n", "slow", "drop"])?;
+                    let n = get("n").ok_or_else(|| {
+                        WihetError::InvalidArg(format!("chip: clause needs n=<k>\n{GRAMMAR}"))
+                    })?;
+                    plan.chip_n = parse_num("n", n)?;
+                    if plan.chip_n == 0 {
+                        return Err(WihetError::InvalidArg(format!(
+                            "chip:n must be >= 1\n{GRAMMAR}"
+                        )));
+                    }
+                    if let Some(slow) = get("slow") {
+                        let digits = slow.strip_suffix('x').unwrap_or(slow);
+                        plan.chip_slow_x = parse_num("slow", digits)?;
+                    }
+                    plan.chip_drop =
+                        get("drop").map(|v| parse_num("drop", v)).transpose()?.unwrap_or(0);
+                }
+                other => {
+                    return Err(WihetError::InvalidArg(format!(
+                        "unknown fault class '{other}' (wire|air|chip)\n{GRAMMAR}"
+                    )));
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// A [`FaultPlan`] resolved against one concrete NoC — what the
+/// simulator consults on its hot path. Built once per run by
+/// [`FaultPlan::compile`]; borrowed by
+/// [`crate::noc::sim::NocSim::with_faults`].
+#[derive(Debug, Clone)]
+pub struct SimFaults {
+    /// Cycle each wireline link goes down (`u64::MAX` = healthy).
+    pub link_down_at: Vec<u64>,
+    /// Dead-link mask (any link that ever dies), indexed like
+    /// `Topology::links`.
+    pub dead: Vec<bool>,
+    /// Per-channel interference windows `[from, to)`, sorted by start.
+    jams: Vec<Vec<(u64, u64)>>,
+    /// Routes recomputed around every dead link (`None` for jam-only
+    /// plans, which never consult it).
+    repaired: Option<RouteSet>,
+    /// Pairs whose candidates the repair pass had to change.
+    pub pairs_repaired: u64,
+    /// Dead links + applicable jam windows (chip faults are charged by
+    /// the fabric layer).
+    pub faults_injected: u64,
+}
+
+impl SimFaults {
+    /// Is `link` still up at cycle `t`?
+    #[inline]
+    pub fn link_up(&self, link: usize, t: u64) -> bool {
+        t < self.link_down_at[link]
+    }
+
+    /// If `t` falls inside an interference window on `ch`, the cycle
+    /// the (longest covering) window ends; `None` when the channel is
+    /// clean at `t`.
+    #[inline]
+    pub fn jam_until(&self, ch: usize, t: u64) -> Option<u64> {
+        let ws = self.jams.get(ch)?;
+        ws.iter().filter(|&&(from, to)| t >= from && t < to).map(|&(_, to)| to).max()
+    }
+
+    /// The route set repaired around the dead links. Only meaningful —
+    /// and only called — when a link fault exists.
+    pub fn repaired(&self) -> &RouteSet {
+        self.repaired.as_ref().expect("repaired routes exist whenever a link is dead")
+    }
+
+    /// True when some wireline link dies during the run.
+    pub fn has_dead_links(&self) -> bool {
+        self.repaired.is_some()
+    }
+}
+
+/// Resilience counters carried by every simulation report. All zero for
+/// fault-free runs (and for [`FaultPlan::none`], which never installs
+/// the fault hooks at all).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ResilienceStats {
+    /// Faults the plan resolved against this run: dead links, applied
+    /// jam windows, and (at the fabric layer) degraded chips.
+    pub faults_injected: u64,
+    /// Packets re-rooted mid-flight onto repaired routes at a dead link.
+    pub packets_rerouted: u64,
+    /// Carrier-sense retries on jammed channels, plus (at the fabric
+    /// layer) analytic retransmissions of dropped collective steps.
+    pub retries: u64,
+    /// Flits forced over wireline because a jam outlasted the retry
+    /// budget.
+    pub fallback_flits: u64,
+    /// Messages with no route even after repair (a disconnected
+    /// residual topology). Must stay 0 whenever a repair path exists.
+    pub undeliverable_after_repair: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    #[test]
+    fn none_is_none_and_displays() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert!(!p.has_noc_faults() && !p.has_chip_faults());
+        assert_eq!(p.to_string(), "none");
+        assert_eq!("none".parse::<FaultPlan>().unwrap(), p);
+        assert_eq!("".parse::<FaultPlan>().unwrap(), p);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_fills_defaults() {
+        let p: FaultPlan = "wire:link=12".parse().unwrap();
+        assert_eq!(p.dead_links, vec![LinkFault { link: 12, at: 0 }]);
+        assert_eq!(p.wire_rate_ppm, 0);
+        let p: FaultPlan = "air:ch=2,burst=100".parse().unwrap();
+        assert_eq!(p.jams, vec![JamWindow { channel: 2, from: 0, burst: 100 }]);
+        let p: FaultPlan = "wire:rate=0.01,seed=7".parse().unwrap();
+        assert_eq!(p.wire_rate_ppm, 10_000);
+        assert_eq!(p.wire_seed, 7);
+        assert_eq!(p.wire_at, 0);
+        let p: FaultPlan = "chip:n=1,slow=4x".parse().unwrap();
+        assert_eq!((p.chip_n, p.chip_slow_x, p.chip_drop), (1, 4, 0));
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in [
+            "none",
+            "wire:link=12",
+            "wire:link=3,at=500",
+            "wire:rate=0.01,seed=7",
+            "wire:rate=0.05,seed=9,at=1000",
+            "air:ch=2,from=5000,burst=2000",
+            "air:ch=0,burst=100",
+            "chip:n=1,slow=4x",
+            "chip:n=2,slow=2x,drop=3",
+            "wire:link=12;air:ch=2,from=5000,burst=2000;chip:n=1,slow=4x",
+        ] {
+            let p: FaultPlan = s.parse().unwrap();
+            assert_eq!(p.to_string(), s, "canonical form");
+            let again: FaultPlan = p.to_string().parse().unwrap();
+            assert_eq!(again, p, "display must round-trip for '{s}'");
+        }
+    }
+
+    #[test]
+    fn errors_carry_the_grammar() {
+        for bad in [
+            "bogus:x=1",
+            "wire:rate=2.0",
+            "wire:link=1,rate=0.5",
+            "wire:frobnicate=1",
+            "air:burst=100",
+            "air:ch=1",
+            "air:ch=1,burst=0",
+            "chip:slow=4x",
+            "chip:n=0",
+            "chip:n=1",
+            "wire:rate=0.1;wire:rate=0.2",
+            "wire:link",
+        ] {
+            match bad.parse::<FaultPlan>() {
+                Err(WihetError::InvalidArg(msg)) => {
+                    assert!(msg.contains("fault plan grammar"), "'{bad}' -> {msg}");
+                }
+                other => panic!("'{bad}' should be InvalidArg, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn compile_expands_random_kills_deterministically() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rs = RouteSet::xy(&sys, &topo);
+        let air = WirelessSpec::new(0);
+        let plan: FaultPlan = "wire:rate=0.2,seed=7".parse().unwrap();
+        let a = plan.compile(&topo, &rs, &air, 5).unwrap();
+        let b = plan.compile(&topo, &rs, &air, 5).unwrap();
+        assert_eq!(a.link_down_at, b.link_down_at, "same seed, same kills");
+        assert!(a.faults_injected > 0, "20% of 112 links should kill some");
+        assert!(a.has_dead_links());
+        let other: FaultPlan = "wire:rate=0.2,seed=8".parse().unwrap();
+        let c = other.compile(&topo, &rs, &air, 5).unwrap();
+        assert_ne!(a.link_down_at, c.link_down_at, "different seed, different kills");
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range_links_and_ignores_alien_channels() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rs = RouteSet::xy(&sys, &topo);
+        let air = WirelessSpec::new(0);
+        let plan: FaultPlan = "wire:link=9999".parse().unwrap();
+        match plan.compile(&topo, &rs, &air, 5) {
+            Err(WihetError::InvalidArg(msg)) => assert!(msg.contains("out of range")),
+            other => panic!("expected InvalidArg, got {other:?}"),
+        }
+        // a jam on a channel the mesh does not have is inert
+        let plan: FaultPlan = "air:ch=2,burst=100".parse().unwrap();
+        let fx = plan.compile(&topo, &rs, &air, 5).unwrap();
+        assert_eq!(fx.faults_injected, 0);
+        assert!(!fx.has_dead_links());
+        assert_eq!(fx.jam_until(2, 50), None);
+    }
+
+    #[test]
+    fn jam_windows_answer_membership() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rs = RouteSet::xy(&sys, &topo);
+        let air = WirelessSpec::new(3);
+        let plan: FaultPlan = "air:ch=1,from=100,burst=50".parse().unwrap();
+        let fx = plan.compile(&topo, &rs, &air, 5).unwrap();
+        assert_eq!(fx.jam_until(1, 99), None);
+        assert_eq!(fx.jam_until(1, 100), Some(150));
+        assert_eq!(fx.jam_until(1, 149), Some(150));
+        assert_eq!(fx.jam_until(1, 150), None);
+        assert_eq!(fx.jam_until(0, 120), None, "other channels clean");
+    }
+}

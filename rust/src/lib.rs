@@ -75,6 +75,7 @@ pub mod energy;
 pub mod error;
 pub mod experiments;
 pub mod fabric;
+pub mod faults;
 pub mod model;
 pub mod noc;
 pub mod optim;
@@ -87,6 +88,7 @@ pub mod workload;
 
 pub use error::WihetError;
 pub use fabric::{Collective, Fabric};
+pub use faults::FaultPlan;
 pub use model::{Platform, PlacementPolicy};
 pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};
 pub use schedule::SchedulePolicy;

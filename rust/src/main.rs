@@ -24,10 +24,12 @@ use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
-use wihetnoc::fabric::run_fabric;
-use wihetnoc::schedule::run_schedule;
+use wihetnoc::fabric::run_fabric_faults;
+use wihetnoc::schedule::run_schedule_faults;
 use wihetnoc::workload::preset_names;
-use wihetnoc::{Fabric, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError};
+use wihetnoc::{
+    Fabric, FaultPlan, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError,
+};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -120,6 +122,17 @@ fn fabric_spec() -> ArgSpec {
     }
 }
 
+fn faults_spec() -> ArgSpec {
+    ArgSpec {
+        name: "faults",
+        help: "fault plan: wire:link=L[,at=T] | wire:rate=F[,seed=S] | \
+               air:ch=C,from=T,burst=D | chip:n=K[,slow=Fx][,drop=R] — \
+               ';'-separated clauses (default: none)",
+        default: None,
+        is_flag: false,
+    }
+}
+
 fn str_err(e: WihetError) -> String {
     e.to_string()
 }
@@ -133,12 +146,17 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     let schedule: SchedulePolicy =
         args.get_or("schedule", "serial").parse().map_err(str_err)?;
     let fabric: Fabric = args.get_or("fabric", "1").parse().map_err(str_err)?;
+    let faults: FaultPlan = match args.get("faults") {
+        Some(s) => s.parse().map_err(str_err)?,
+        None => FaultPlan::none(),
+    };
     let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     let seed = args.get_u64("seed", 42)?;
     Ok(Scenario::new(platform, model)
         .with_mapping(mapping)
         .with_schedule(schedule)
         .with_fabric(fabric)
+        .with_faults(faults)
         .with_effort(effort)
         .with_seed(seed))
 }
@@ -328,6 +346,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         mapping_spec(),
         schedule_spec(),
         fabric_spec(),
+        faults_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -345,18 +364,32 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let tm = ctx.traffic_on(scenario.model.clone(), &sys);
     let mut cfg = ctx.trace_cfg();
     cfg.scale = args.get_f64("scale", 0.05)?;
+    let faults_tag = if scenario.faults.is_none() {
+        String::new()
+    } else {
+        format!(", faults {}", scenario.faults)
+    };
     if !scenario.fabric.is_single() {
         // multi-chip fabric: co-simulate the chip's iteration with the
         // lowered allreduce and charge the alpha-beta inter-chip hops
         let grad = scenario.model.spec().total_weight_bytes();
         println!(
-            "simulating {noc} on {} ({}, mapping {}, schedule {}, fabric {}) ...",
+            "simulating {noc} on {} ({}, mapping {}, schedule {}, fabric {}{faults_tag}) ...",
             scenario.model, scenario.platform, scenario.mapping, scenario.schedule,
             scenario.fabric
         );
         let t0 = std::time::Instant::now();
-        let fr = run_fabric(&sys, &inst, &tm, &scenario.schedule, &scenario.fabric, grad, &cfg)
-            .map_err(str_err)?;
+        let fr = run_fabric_faults(
+            &sys,
+            &inst,
+            &tm,
+            &scenario.schedule,
+            &scenario.fabric,
+            grad,
+            &cfg,
+            &scenario.faults,
+        )
+        .map_err(str_err)?;
         println!(
             "{} packets in {:.2}s wall | {} chips, {} allreduce ({} steps, {} B/chip on the wire) | makespan {} cyc, iteration {} cyc | comm overhead {:.1}% | bubble {:.1}%",
             fr.schedule.sim.delivered_packets,
@@ -370,17 +403,19 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             fr.comm_overhead_pct,
             100.0 * fr.schedule.bubble_fraction,
         );
+        print_resilience(&scenario, &fr.resilience, fr.schedule.sim.undeliverable);
         return Ok(());
     }
     if !scenario.schedule.is_serial() {
         // overlapping schedule: expand the timeline and run the gated
         // concurrent simulation
         println!(
-            "simulating {noc} on {} ({}, mapping {}, schedule {}) ...",
+            "simulating {noc} on {} ({}, mapping {}, schedule {}{faults_tag}) ...",
             scenario.model, scenario.platform, scenario.mapping, scenario.schedule
         );
         let t0 = std::time::Instant::now();
-        let sr = run_schedule(&sys, &inst, &tm, &scenario.schedule, &cfg).map_err(str_err)?;
+        let sr = run_schedule_faults(&sys, &inst, &tm, &scenario.schedule, &cfg, &scenario.faults)
+            .map_err(str_err)?;
         println!(
             "{} packets in {:.2}s wall | {} instances over {} stages | makespan {} cyc (speedup {:.2}x vs serial) | bubble {:.1}% | peak link concurrency {} | latency mean {:.2} | cpu-mc {:.2} | wireless {:.1}% (fallbacks {})",
             sr.sim.delivered_packets,
@@ -396,19 +431,35 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             100.0 * sr.sim.wireless_utilization(),
             sr.sim.air_fallbacks,
         );
+        print_resilience(&scenario, sr.resilience(), sr.sim.undeliverable);
         return Ok(());
     }
+    let fx = if scenario.faults.has_noc_faults() {
+        let nominal = SimConfig::default().nominal_flits;
+        Some(
+            scenario
+                .faults
+                .compile(&inst.topo, &inst.routes, &inst.air, nominal)
+                .map_err(str_err)?,
+        )
+    } else {
+        None
+    };
     let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
     println!(
-        "simulating {noc} on {} ({}, mapping {}): {} messages ...",
+        "simulating {noc} on {} ({}, mapping {}{faults_tag}): {} messages ...",
         scenario.model,
         scenario.platform,
         scenario.mapping,
         trace.len()
     );
     let t0 = std::time::Instant::now();
-    let rep =
-        NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default()).run(&trace);
+    let mut sim =
+        NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    if let Some(f) = &fx {
+        sim = sim.with_faults(f);
+    }
+    let rep = sim.run(&trace);
     println!(
         "{} packets in {:.2}s wall | latency mean {:.2} max {:.0} | cpu-mc {:.2} | throughput {:.3} flits/cyc | wireless {:.1}% (fallbacks {})",
         rep.delivered_packets,
@@ -420,7 +471,28 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         100.0 * rep.wireless_utilization(),
         rep.air_fallbacks,
     );
+    print_resilience(&scenario, &rep.resilience, rep.undeliverable);
     Ok(())
+}
+
+/// One resilience line when a fault plan is active (silent otherwise).
+fn print_resilience(
+    scenario: &Scenario,
+    rs: &wihetnoc::faults::ResilienceStats,
+    undeliverable: u64,
+) {
+    if scenario.faults.is_none() {
+        return;
+    }
+    println!(
+        "resilience: {} faults injected | {} packets rerouted | {} retries | {} fallback flits | {} undeliverable after repair ({} undeliverable total)",
+        rs.faults_injected,
+        rs.packets_rerouted,
+        rs.retries,
+        rs.fallback_flits,
+        rs.undeliverable_after_repair,
+        undeliverable,
+    );
 }
 
 fn cmd_list(argv: &[String]) -> Result<(), String> {

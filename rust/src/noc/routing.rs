@@ -292,6 +292,140 @@ impl RouteSet {
         rs
     }
 
+    // ------------------------------------------------------------ repair
+
+    /// Re-route around dead wireline links (`dead[link] == true`): broken
+    /// primaries are replaced by delay-weighted shortest paths over the
+    /// residual topology and re-layered so every layer's channel-dependency
+    /// graph stays acyclic; broken wireline alternates are dropped (the
+    /// pair keeps its repaired primary); broken wireless candidates get
+    /// their wire head/tail segments rebuilt around the faults, keeping
+    /// their layer — the air hop breaks wireline dependency chains (see
+    /// [`verify_lash`]). A pair disconnected by the faults keeps an
+    /// empty-hops sentinel primary so the simulator can count it as
+    /// undeliverable-after-repair instead of panicking.
+    ///
+    /// Returns the repaired set and the number of (src, dst) pairs whose
+    /// candidates changed. With no dead links this is a plain clone.
+    pub fn repaired(
+        &self,
+        topo: &Topology,
+        air: &WirelessSpec,
+        dead: &[bool],
+        nominal_flits: u64,
+    ) -> (RouteSet, u64) {
+        debug_assert_eq!(dead.len(), topo.links.len());
+        if !dead.iter().any(|&d| d) {
+            return (self.clone(), 0);
+        }
+        const FRESH: u32 = u32::MAX; // re-layered below
+        let n = self.n;
+        let broken =
+            |hops: &[Hop]| hops.iter().any(|h| matches!(*h, Hop::Wire { link, .. } if dead[link]));
+        // Masked all-source parent maps over the residual topology,
+        // reusing one Dijkstra scratch like `alash_with`.
+        let mut scratch = DijkstraScratch::new(n);
+        let all: Vec<Vec<u32>> = (0..n)
+            .map(|s| {
+                let mut parent = vec![u32::MAX; n];
+                dijkstra_masked_into(topo, s, Some(dead), &mut parent, &mut scratch);
+                parent
+            })
+            .collect();
+        let mut rs = self.clone();
+        let mut pairs_repaired = 0u64;
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                let v = &mut rs.cand[s * n + d];
+                let mut touched = false;
+                let mut i = v.len();
+                while i > 1 {
+                    i -= 1;
+                    if !broken(&v[i].hops) {
+                        continue;
+                    }
+                    touched = true;
+                    if v[i].has_air() {
+                        match reroute_air(topo, &all, &v[i].hops, s, d) {
+                            Some(hops) => {
+                                let layer = v[i].layer;
+                                v[i] = Path::new(hops, layer);
+                            }
+                            None => {
+                                v.remove(i);
+                            }
+                        }
+                    } else {
+                        v.remove(i);
+                    }
+                }
+                if broken(&v[0].hops) {
+                    let hops = walk_parents(topo, &all[s], s, d);
+                    v[0] = Path::new(hops, FRESH);
+                    touched = true;
+                }
+                if touched {
+                    pairs_repaired += 1;
+                }
+            }
+        }
+        // Re-layer the fresh primaries: seed each layer's dependency
+        // graph with the surviving wireline paths (subsets of the
+        // original acyclic graphs, so seeding cannot fail), then place
+        // each fresh path in the first layer that stays acyclic.
+        let ndl = topo.links.len() * 2;
+        let dlink = |h: &Hop| -> usize {
+            match *h {
+                Hop::Wire { link, from, .. } => {
+                    let l = &topo.links[link];
+                    link * 2 + usize::from(from == l.b)
+                }
+                Hop::Air { .. } => unreachable!("air paths keep their layer"),
+            }
+        };
+        let path_deps = |p: &Path| -> Vec<(usize, usize)> {
+            p.hops.windows(2).map(|w| (dlink(&w[0]), dlink(&w[1]))).collect()
+        };
+        let mut layers: Vec<LayerDeps> = (0..rs.num_layers).map(|_| LayerDeps::new(ndl)).collect();
+        for v in &rs.cand {
+            for p in v {
+                if p.has_air() || p.layer == FRESH || p.hops.is_empty() {
+                    continue;
+                }
+                let ok = layers[p.layer as usize].try_insert(&path_deps(p));
+                debug_assert!(ok, "surviving paths were jointly acyclic before the repair");
+            }
+        }
+        for v in &mut rs.cand {
+            for p in v.iter_mut() {
+                if p.layer != FRESH {
+                    continue;
+                }
+                let deps = path_deps(p);
+                let mut placed = None;
+                for (li, layer) in layers.iter_mut().enumerate() {
+                    if layer.try_insert(&deps) {
+                        placed = Some(li as u32);
+                        break;
+                    }
+                }
+                p.layer = placed.unwrap_or_else(|| {
+                    let mut fresh = LayerDeps::new(ndl);
+                    let ok = fresh.try_insert(&deps);
+                    debug_assert!(ok, "single path must be acyclic");
+                    layers.push(fresh);
+                    (layers.len() - 1) as u32
+                });
+            }
+        }
+        rs.num_layers = layers.len() as u32;
+        rs.fill_costs(topo, air, nominal_flits);
+        (rs, pairs_repaired)
+    }
+
     /// Fraction of pairs with an enabled wireless path.
     pub fn air_coverage(&self) -> f64 {
         let mut have = 0;
@@ -379,6 +513,19 @@ impl DijkstraScratch {
 /// Dijkstra over link delays + per-hop router delay; writes the parent
 /// link per node into `parent`. Deterministic lowest-cost-then-id order.
 fn dijkstra_into(topo: &Topology, src: usize, parent: &mut [u32], scratch: &mut DijkstraScratch) {
+    dijkstra_masked_into(topo, src, None, parent, scratch)
+}
+
+/// [`dijkstra_into`] over a residual topology: links with `dead[link]`
+/// set are skipped (identical relaxation order otherwise, so the
+/// unmasked call stays byte-identical to the pre-repair code path).
+fn dijkstra_masked_into(
+    topo: &Topology,
+    src: usize,
+    dead: Option<&[bool]>,
+    parent: &mut [u32],
+    scratch: &mut DijkstraScratch,
+) {
     let n = topo.n;
     debug_assert_eq!(parent.len(), n);
     parent.fill(u32::MAX);
@@ -394,6 +541,9 @@ fn dijkstra_into(topo: &Topology, src: usize, parent: &mut [u32], scratch: &mut 
             continue;
         }
         for &(nbr, link) in topo.neighbors(r) {
+            if dead.is_some_and(|m| m[link]) {
+                continue;
+            }
             let nc = c + topo.router_delay(r) + topo.links[link].delay_cycles;
             if nc < cost[nbr] || (nc == cost[nbr] && (link as u32) < parent[nbr]) {
                 cost[nbr] = nc;
@@ -402,6 +552,35 @@ fn dijkstra_into(topo: &Topology, src: usize, parent: &mut [u32], scratch: &mut 
             }
         }
     }
+}
+
+/// Rebuild the wire head/tail segments of an air path around dead links
+/// using masked parent maps (`all[src]` from [`dijkstra_masked_into`]);
+/// `None` when either segment became unreachable.
+fn reroute_air(
+    topo: &Topology,
+    all: &[Vec<u32>],
+    hops: &[Hop],
+    s: usize,
+    d: usize,
+) -> Option<Vec<Hop>> {
+    let pos = hops.iter().position(|h| matches!(h, Hop::Air { .. }))?;
+    let (channel, wa, wb) = match hops[pos] {
+        Hop::Air { channel, from, to } => (channel, from, to),
+        Hop::Wire { .. } => unreachable!("position() found an air hop"),
+    };
+    let head = walk_parents(topo, &all[s], s, wa);
+    if head.is_empty() && s != wa {
+        return None;
+    }
+    let tail = walk_parents(topo, &all[wb], wb, d);
+    if tail.is_empty() && wb != d {
+        return None;
+    }
+    let mut out = head;
+    out.push(Hop::Air { channel, from: wa, to: wb });
+    out.extend(tail);
+    Some(out)
 }
 
 fn walk_parents(topo: &Topology, parent: &[u32], src: usize, dst: usize) -> Vec<Hop> {
@@ -706,6 +885,77 @@ mod tests {
         // 2*(n^2-1)/(3n) = 5.25; excluding self pairs: 5.25*4096/4032
         assert!((rs.mean_hops() - 5.25 * 4096.0 / 4032.0).abs() < 1e-9);
         assert_eq!(rs.air_coverage(), 0.0);
+    }
+
+    #[test]
+    fn repair_routes_around_a_dead_link() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let rs = RouteSet::xy_yx(&sys, &topo);
+        let mut dead = vec![false; topo.links.len()];
+        let victim = topo.link_between(0, 1).expect("mesh edge exists");
+        dead[victim] = true;
+        let (fixed, pairs) = rs.repaired(&topo, &WirelessSpec::new(0), &dead, 5);
+        assert!(pairs > 0, "many XY routes cross link 0-1");
+        for s in 0..64 {
+            for d in 0..64 {
+                if s == d {
+                    continue;
+                }
+                for p in fixed.candidates(s, d) {
+                    assert!(
+                        !p.hops.iter().any(|h| matches!(*h, Hop::Wire { link, .. } if link == victim)),
+                        "({s},{d}) still crosses the dead link"
+                    );
+                    let mut cur = s;
+                    for h in &p.hops {
+                        assert_eq!(h.from(), cur);
+                        cur = h.to();
+                    }
+                    assert_eq!(cur, d, "repaired path must still reach the destination");
+                }
+                // mesh minus one link stays connected: no sentinels
+                assert!(!fixed.primary(s, d).hops.is_empty());
+            }
+        }
+        verify_lash(&topo, &fixed).expect("repaired layering stays acyclic");
+        // no dead links -> plain clone, nothing repaired
+        let none = vec![false; topo.links.len()];
+        let (same, zero) = rs.repaired(&topo, &WirelessSpec::new(0), &none, 5);
+        assert_eq!(zero, 0);
+        assert_eq!(same.num_layers, rs.num_layers);
+        assert_eq!(same.candidates(0, 63), rs.candidates(0, 63));
+    }
+
+    #[test]
+    fn repair_reroutes_air_segments_and_marks_disconnections() {
+        // isolate corner 0 of a 4x4: every pair touching it is sentineled
+        let sys = SystemConfig::small_4x4();
+        let topo = Topology::mesh(&sys);
+        let mut air = WirelessSpec::new(2);
+        air.add_wi(5, 1);
+        air.add_wi(15, 1);
+        let rs = RouteSet::alash(&topo, &air, None, |_, _| vec![1], 5);
+        let mut dead = vec![false; topo.links.len()];
+        for &(_, l) in topo.neighbors(0) {
+            dead[l] = true;
+        }
+        let (fixed, pairs) = rs.repaired(&topo, &air, &dead, 5);
+        assert!(pairs > 0);
+        assert!(fixed.primary(0, 5).hops.is_empty(), "router 0 is cut off");
+        assert!(fixed.primary(5, 0).hops.is_empty());
+        assert!(!fixed.primary(5, 6).hops.is_empty(), "the rest stays routable");
+        // surviving air candidates avoid the dead links
+        for s in 0..16 {
+            for d in 0..16 {
+                for p in fixed.candidates(s, d) {
+                    assert!(!p.hops.iter().any(
+                        |h| matches!(*h, Hop::Wire { link, .. } if dead[link])
+                    ));
+                }
+            }
+        }
+        verify_lash(&topo, &fixed).expect("repair keeps LASH acyclic");
     }
 
     #[test]

@@ -61,8 +61,17 @@ use std::collections::BinaryHeap;
 use super::routing::{Hop, Path, RouteSet, RoutingKind};
 use super::topology::Topology;
 use super::wireless::WirelessSpec;
+use crate::faults::{ResilienceStats, SimFaults};
 use crate::model::{SystemConfig, TileKind};
 use crate::util::stats::Accum;
+
+/// Carrier-sense retries a packet pays on a jammed channel before
+/// falling back to wireline (§faults): exponential backoff starting at
+/// [`AIR_BACKOFF_BASE`] cycles, doubling per retry — a ~1000-cycle
+/// budget, far above any MAC queue but small against a real
+/// interference burst.
+const AIR_MAX_RETRIES: u32 = 6;
+const AIR_BACKOFF_BASE: u64 = 16;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MsgClass {
@@ -145,11 +154,24 @@ pub struct SimReport {
     /// Wireless flits by direction: to an MC (core->MC) / from an MC.
     pub air_flits_to_mc: u64,
     pub air_flits_from_mc: u64,
-    /// Messages (not events) not delivered when the horizon cut the run.
-    pub undelivered: u64,
+    /// Messages of groups never released when the run ended (gated
+    /// behind a horizon cut or an unreached predecessor).
+    pub unreleased: u64,
+    /// Released messages that did not tail-deliver: stranded in flight
+    /// by a horizon cut, or dropped at a fault with no repair path (see
+    /// [`ResilienceStats::undeliverable_after_repair`]).
+    pub undeliverable: u64,
+    /// Fault-injection counters; all zero for fault-free runs.
+    pub resilience: ResilienceStats,
 }
 
 impl SimReport {
+    /// Total messages (not events) not delivered when the run ended:
+    /// never-released plus released-but-stranded.
+    pub fn undelivered(&self) -> u64 {
+        self.unreleased + self.undeliverable
+    }
+
     /// Mean link utilization over the simulated span.
     pub fn link_utilization(&self) -> Vec<f64> {
         let c = self.cycles.max(1) as f64;
@@ -422,12 +444,15 @@ impl CalendarQueue {
 /// Route handle: (route source, destination, candidate index) into the
 /// shared `RouteSet` — no per-packet path allocation. After a MAC
 /// fallback the route re-roots at the WI router (`src` becomes that
-/// router, `idx` 0 = the wireline primary).
+/// router, `idx` 0 = the wireline primary). `fixed` routes resolve
+/// against the fault layer's *repaired* route set instead (set when a
+/// packet re-roots at a dead link).
 #[derive(Debug, Clone, Copy)]
 struct RouteRef {
     src: u32,
     dst: u32,
     idx: u8,
+    fixed: bool,
 }
 
 /// In-flight message state, structure-of-arrays: the hop handler touches
@@ -469,7 +494,7 @@ impl Flights {
         self.flits.push(m.flits);
         self.class.push(m.class);
         self.inject_at.push(m.inject_at);
-        self.route.push(RouteRef { src: m.src as u32, dst: m.dst as u32, idx: 0 });
+        self.route.push(RouteRef { src: m.src as u32, dst: m.dst as u32, idx: 0, fixed: false });
         self.group.push(group);
         idx
     }
@@ -626,6 +651,10 @@ pub struct NocSim<'a> {
     pub routes: &'a RouteSet,
     pub air: &'a WirelessSpec,
     pub cfg: SimConfig,
+    /// Compiled fault plan ([`crate::faults::FaultPlan::compile`]);
+    /// `None` keeps every fault hook off the hot path, so fault-free
+    /// runs are byte-identical to the pre-fault simulator.
+    faults: Option<&'a SimFaults>,
 }
 
 impl<'a> NocSim<'a> {
@@ -636,7 +665,26 @@ impl<'a> NocSim<'a> {
         air: &'a WirelessSpec,
         cfg: SimConfig,
     ) -> Self {
-        NocSim { sys, topo, routes, air, cfg }
+        NocSim { sys, topo, routes, air, cfg, faults: None }
+    }
+
+    /// Install a compiled fault plan: dead links re-route onto the
+    /// plan's repaired route set mid-flight, jammed channels charge
+    /// carrier-sense retries with exponential backoff before the
+    /// wireline fallback.
+    pub fn with_faults(mut self, faults: &'a SimFaults) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// The route set a handle resolves against: repaired for re-rooted
+    /// (`fixed`) routes, the original otherwise.
+    #[inline]
+    fn route_set(&self, fixed: bool) -> &RouteSet {
+        match self.faults {
+            Some(f) if fixed => f.repaired(),
+            _ => self.routes,
+        }
     }
 
     /// Run the trace to completion (or the configured horizon), reusing
@@ -704,6 +752,9 @@ impl<'a> NocSim<'a> {
             air_flits: vec![0; nch],
             ..SimReport::default()
         };
+        if let Some(f) = self.faults {
+            report.resilience.faults_injected = f.faults_injected;
+        }
         let SimWorkspace {
             queue,
             flights: fl,
@@ -801,7 +852,8 @@ impl<'a> NocSim<'a> {
                         chan_busy_until,
                         dedicated,
                     );
-                    fl.route[i] = RouteRef { src: src as u32, dst: dst as u32, idx: cand };
+                    fl.route[i] =
+                        RouteRef { src: src as u32, dst: dst as u32, idx: cand, fixed: false };
                     q.push(t, Event::Hop { idx, hop: 0 });
                 }
                 Event::Hop { idx, hop } => {
@@ -809,8 +861,9 @@ impl<'a> NocSim<'a> {
                     let flits = fl.flits[i];
                     let dst = fl.dst[i] as usize;
                     let rr = fl.route[i];
-                    let path: &Path = &self.routes.candidates(rr.src as usize, rr.dst as usize)
-                        [rr.idx as usize];
+                    let path: &Path = &self
+                        .route_set(rr.fixed)
+                        .candidates(rr.src as usize, rr.dst as usize)[rr.idx as usize];
                     let h = path.hops[hop as usize];
                     let from = h.from();
                     let ready = t + self.topo.router_delay(from);
@@ -818,6 +871,38 @@ impl<'a> NocSim<'a> {
                     let last = path.hops.len() as u16 - 1;
                     match h {
                         Hop::Wire { link, .. } => {
+                            if let Some(f) = self.faults {
+                                if !f.link_up(link, ready) {
+                                    // The link died under us: re-root on the
+                                    // repaired routes from this router,
+                                    // mid-flight, like the MAC fallback.
+                                    // Repaired paths avoid every dying link,
+                                    // so a packet re-roots at most once.
+                                    let rep = f.repaired().primary(from, dst);
+                                    if rep.hops.is_empty() && from != dst {
+                                        // disconnected residual topology:
+                                        // the message strands (counted in
+                                        // `undeliverable`); gated successors
+                                        // stay unreleased — a pipeline stall,
+                                        // exactly what a real fabric sees.
+                                        report.resilience.undeliverable_after_repair += 1;
+                                        continue;
+                                    }
+                                    report.resilience.packets_rerouted += 1;
+                                    fl.route[i] = RouteRef {
+                                        src: from as u32,
+                                        dst: dst as u32,
+                                        idx: 0,
+                                        fixed: true,
+                                    };
+                                    if rep.hops.is_empty() {
+                                        q.push(ready, Event::Deliver { idx });
+                                    } else {
+                                        q.push(ready, Event::Hop { idx, hop: 0 });
+                                    }
+                                    continue;
+                                }
+                            }
                             let start = ready.max(link_busy_until[link]);
                             link_busy_until[link] = start + flits;
                             report.link_busy[link] += flits;
@@ -836,7 +921,41 @@ impl<'a> NocSim<'a> {
                         Hop::Air { channel, .. } => {
                             let mac = self.air.mac_overhead_cycles(channel);
                             let ser = self.air.serialize_cycles(flits);
-                            let wait = chan_busy_until[channel].saturating_sub(ready);
+                            // Interference (§faults): while the channel is
+                            // jammed, carrier-sense again after a bounded
+                            // exponential backoff; if the jam outlasts the
+                            // retry budget, fall back to wireline like a
+                            // busy channel would. `sense == ready` on the
+                            // fault-free path.
+                            let mut sense = ready;
+                            if let Some(f) = self.faults {
+                                let mut retries = 0u32;
+                                while let Some(end) = f.jam_until(channel, sense) {
+                                    if retries >= AIR_MAX_RETRIES {
+                                        break;
+                                    }
+                                    report.resilience.retries += 1;
+                                    sense = (sense + (AIR_BACKOFF_BASE << retries)).min(end);
+                                    retries += 1;
+                                }
+                                if f.jam_until(channel, sense).is_some() {
+                                    report.air_fallbacks += 1;
+                                    report.resilience.fallback_flits += flits;
+                                    fl.route[i] = RouteRef {
+                                        src: from as u32,
+                                        dst: dst as u32,
+                                        idx: 0,
+                                        fixed: false,
+                                    };
+                                    if self.routes.primary(from, dst).hops.is_empty() {
+                                        q.push(sense, Event::Deliver { idx });
+                                    } else {
+                                        q.push(sense, Event::Hop { idx, hop: 0 });
+                                    }
+                                    continue;
+                                }
+                            }
+                            let wait = chan_busy_until[channel].saturating_sub(sense);
                             // MAC decision: queue for the channel if the
                             // residual wait still beats re-routing over
                             // wireline from this router; otherwise fall
@@ -852,16 +971,20 @@ impl<'a> NocSim<'a> {
                             if wait > 0 && wait + mac + ser > wire_alt {
                                 report.air_fallbacks += 1;
                                 // re-root on the wireline primary from here
-                                fl.route[i] =
-                                    RouteRef { src: from as u32, dst: dst as u32, idx: 0 };
+                                fl.route[i] = RouteRef {
+                                    src: from as u32,
+                                    dst: dst as u32,
+                                    idx: 0,
+                                    fixed: false,
+                                };
                                 if self.routes.primary(from, dst).hops.is_empty() {
-                                    q.push(ready, Event::Deliver { idx });
+                                    q.push(sense, Event::Deliver { idx });
                                 } else {
-                                    q.push(ready, Event::Hop { idx, hop: 0 });
+                                    q.push(sense, Event::Hop { idx, hop: 0 });
                                 }
                                 continue;
                             }
-                            let start = ready + wait + mac;
+                            let start = sense + wait + mac;
                             chan_busy_until[channel] = start + ser;
                             report.air_busy[channel] += ser;
                             report.air_flits[channel] += flits;
@@ -953,11 +1076,14 @@ impl<'a> NocSim<'a> {
                 }
             }
         }
-        // Count undelivered *messages*, not queued events — in-flight
-        // ones a horizon cut stranded, plus messages of groups never
-        // released (gated behind the cut, or behind a caller-supplied
-        // predecessor cycle). Zero when the run completed.
-        report.undelivered = fl.len() as u64 - report.delivered_packets + not_released;
+        // Count undelivered *messages*, not queued events, split by
+        // cause: `undeliverable` = released but never tail-delivered
+        // (stranded by a horizon cut or dropped at an unrepairable
+        // fault); `unreleased` = messages of groups never released
+        // (gated behind the cut or a caller-supplied predecessor).
+        // Both zero when the run completed.
+        report.unreleased = not_released;
+        report.undeliverable = fl.len() as u64 - report.delivered_packets;
         report
     }
 
@@ -1148,7 +1274,7 @@ mod tests {
         ];
         let rep = sim.run(&tr);
         assert_eq!(rep.delivered_packets, 0);
-        assert!(rep.undelivered > 0);
+        assert!(rep.undelivered() > 0);
     }
 
     #[test]
@@ -1168,7 +1294,11 @@ mod tests {
         ];
         let rep = sim.run(&tr);
         assert_eq!(rep.delivered_packets, 1);
-        assert_eq!(rep.undelivered, 2);
+        // plain runs release everything at cycle 0, so both cut
+        // messages are stranded in flight, never "unreleased"
+        assert_eq!(rep.undeliverable, 2);
+        assert_eq!(rep.unreleased, 0);
+        assert_eq!(rep.undelivered(), 2);
     }
 
     #[test]
@@ -1343,11 +1473,94 @@ mod tests {
         let groups = vec![vec![slow], vec![late, late]];
         let preds = vec![Vec::new(), vec![0u32]];
         let out = sim.run_timeline(&groups, &preds);
-        // the gated group never released: its 2 messages count undelivered
+        // the gated group never released: its 2 messages count as
+        // unreleased; the slow packet stranded in flight is undeliverable
         assert_eq!(out.report.delivered_packets, 0);
-        assert_eq!(out.report.undelivered, 3);
+        assert_eq!(out.report.unreleased, 2);
+        assert_eq!(out.report.undeliverable, 1);
+        assert_eq!(out.report.undelivered(), 3);
         assert_eq!(out.release[1], u64::MAX);
         assert_eq!(out.drain[1], u64::MAX);
+    }
+
+    #[test]
+    fn dead_link_reroutes_mid_flight() {
+        use crate::faults::FaultPlan;
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let victim = topo.link_between(0, 1).expect("mesh edge exists");
+        let plan: FaultPlan = format!("wire:link={victim}").parse().unwrap();
+        let fx = plan.compile(&topo, &rs, &air, 5).unwrap();
+        let sim = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default());
+        let tr = [Message { src: 0, dst: 1, flits: 5, class: MsgClass::Control, inject_at: 0 }];
+        let clean = sim.run(&tr);
+        let faulted = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default())
+            .with_faults(&fx)
+            .run(&tr);
+        assert_eq!(faulted.delivered_packets, 1, "repair path exists");
+        assert_eq!(faulted.undeliverable, 0);
+        assert_eq!(faulted.resilience.packets_rerouted, 1);
+        assert_eq!(faulted.resilience.undeliverable_after_repair, 0);
+        assert_eq!(faulted.resilience.faults_injected, 1);
+        assert!(
+            faulted.latency.mean() > clean.latency.mean(),
+            "the detour must cost cycles: {} vs {}",
+            faulted.latency.mean(),
+            clean.latency.mean()
+        );
+        // the dead link never carried a flit
+        assert_eq!(faulted.link_flits[victim], 0);
+    }
+
+    #[test]
+    fn link_dying_later_spares_early_packets() {
+        use crate::faults::FaultPlan;
+        let (sys, topo, rs) = mesh_setup();
+        let air = WirelessSpec::new(0);
+        let victim = topo.link_between(0, 1).expect("mesh edge exists");
+        let plan: FaultPlan = format!("wire:link={victim},at=1000").parse().unwrap();
+        let fx = plan.compile(&topo, &rs, &air, 5).unwrap();
+        let sim =
+            NocSim::new(&sys, &topo, &rs, &air, SimConfig::default()).with_faults(&fx);
+        let m = |at| Message { src: 0, dst: 1, flits: 5, class: MsgClass::Control, inject_at: at };
+        let rep = sim.run(&[m(0), m(2000)]);
+        assert_eq!(rep.delivered_packets, 2);
+        // only the packet reaching the link after cycle 1000 re-routes
+        assert_eq!(rep.resilience.packets_rerouted, 1);
+        assert_eq!(rep.link_flits[victim], 5);
+    }
+
+    #[test]
+    fn jammed_channel_retries_then_falls_back() {
+        use crate::faults::FaultPlan;
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let mut air = WirelessSpec::new(2);
+        air.add_wi(0, 1);
+        air.add_wi(63, 1);
+        let rs = RouteSet::alash(&topo, &air, None, |_, _| vec![1], 5);
+        let tr = [Message { src: 0, dst: 63, flits: 5, class: MsgClass::Control, inject_at: 0 }];
+        // a jam outlasting the whole backoff budget forces wireline
+        let long: FaultPlan = "air:ch=1,from=0,burst=100000".parse().unwrap();
+        let fx = long.compile(&topo, &rs, &air, 5).unwrap();
+        let rep = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default())
+            .with_faults(&fx)
+            .run(&tr);
+        assert_eq!(rep.delivered_packets, 1);
+        assert_eq!(rep.air_packets, 0, "channel unusable for the whole flight");
+        assert_eq!(rep.air_fallbacks, 1);
+        assert_eq!(rep.resilience.retries, AIR_MAX_RETRIES as u64);
+        assert_eq!(rep.resilience.fallback_flits, 5);
+        // a short burst is ridden out within the retry budget
+        let short: FaultPlan = "air:ch=1,from=0,burst=20".parse().unwrap();
+        let fx = short.compile(&topo, &rs, &air, 5).unwrap();
+        let rep = NocSim::new(&sys, &topo, &rs, &air, SimConfig::default())
+            .with_faults(&fx)
+            .run(&tr);
+        assert_eq!(rep.delivered_packets, 1);
+        assert_eq!(rep.air_packets, 1, "backoff outlives the burst");
+        assert!(rep.resilience.retries >= 1);
+        assert_eq!(rep.resilience.fallback_flits, 0);
     }
 
     #[test]

@@ -154,6 +154,31 @@ impl Topology {
         count == self.n
     }
 
+    /// [`Topology::is_connected`] over the residual topology with
+    /// `dead[link]` links removed — does every pair still have a path?
+    /// Used by the fault-injection layer to decide whether a repair path
+    /// must exist (the undeliverable-after-repair == 0 invariant).
+    pub fn connected_without(&self, dead: &[bool]) -> bool {
+        debug_assert_eq!(dead.len(), self.links.len());
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(r) = stack.pop() {
+            for &(nbr, link) in &self.adj[r] {
+                if !dead[link] && !seen[nbr] {
+                    seen[nbr] = true;
+                    count += 1;
+                    stack.push(nbr);
+                }
+            }
+        }
+        count == self.n
+    }
+
     /// BFS hop distances from `src` (u32::MAX if unreachable).
     pub fn bfs_hops(&self, src: usize) -> Vec<u32> {
         let mut dist = vec![u32::MAX; self.n];

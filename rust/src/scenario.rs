@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use crate::error::WihetError;
 use crate::fabric::Fabric;
+use crate::faults::FaultPlan;
 use crate::model::cnn::{cdbnet, lenet, ModelSpec};
 use crate::model::platform::Platform;
 use crate::model::SystemConfig;
@@ -189,6 +190,10 @@ pub struct Scenario {
     /// inter-chip links (see [`Fabric`]; the single-chip default adds
     /// nothing).
     pub fabric: Fabric,
+    /// Deterministic fault injection (see [`FaultPlan`]; the
+    /// [`FaultPlan::none`] default delegates byte-identically to the
+    /// fault-free paths).
+    pub faults: FaultPlan,
     pub effort: Effort,
     pub seed: u64,
     /// Training batch size the traffic model is derived at.
@@ -207,6 +212,7 @@ impl Scenario {
             schedule: SchedulePolicy::default(),
             noc: NocKind::WiHetNoc,
             fabric: Fabric::single(),
+            faults: FaultPlan::none(),
             effort: Effort::Quick,
             seed: 42,
             batch: 32,
@@ -238,6 +244,11 @@ impl Scenario {
         self
     }
 
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
     pub fn with_effort(mut self, effort: Effort) -> Self {
         self.effort = effort;
         self
@@ -263,8 +274,8 @@ impl Scenario {
 /// one concrete tile placement and fabric. Two placements that happen to
 /// share a human-readable tag hash differently, which is what makes
 /// [`crate::experiments::Ctx`]'s traffic cache safe; two mappings — or
-/// two schedules, or two fabrics — of the same workload never alias
-/// either.
+/// two schedules, two fabrics, or two fault plans — of the same
+/// workload never alias either.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ScenarioKey {
     pub model: ModelId,
@@ -274,6 +285,7 @@ pub struct ScenarioKey {
     pub mapping: MappingPolicy,
     pub schedule: SchedulePolicy,
     pub fabric: Fabric,
+    pub faults: FaultPlan,
 }
 
 impl ScenarioKey {
@@ -301,7 +313,18 @@ impl ScenarioKey {
         schedule: SchedulePolicy,
         fabric: Fabric,
     ) -> Self {
-        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule, fabric }
+        ScenarioKey::with_faults(model, sys, mapping, schedule, fabric, FaultPlan::none())
+    }
+
+    pub fn with_faults(
+        model: ModelId,
+        sys: &SystemConfig,
+        mapping: MappingPolicy,
+        schedule: SchedulePolicy,
+        fabric: Fabric,
+        faults: FaultPlan,
+    ) -> Self {
+        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule, fabric, faults }
     }
 }
 
@@ -400,13 +423,23 @@ mod tests {
             SchedulePolicy::default(),
             Fabric::new(4),
         );
+        let g = ScenarioKey::with_faults(
+            ModelId::LeNet,
+            &sys,
+            MappingPolicy::default(),
+            SchedulePolicy::default(),
+            Fabric::single(),
+            "wire:link=3".parse().unwrap(),
+        );
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d, "mapping must be part of the key");
         assert_ne!(a, e, "schedule must be part of the key");
         assert_ne!(a, f, "fabric must be part of the key");
+        assert_ne!(a, g, "fault plan must be part of the key");
         assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
         assert_eq!(a.fabric, Fabric::single(), "single chip is the default key fabric");
+        assert_eq!(a.faults, FaultPlan::none(), "fault-free is the default key plan");
     }
 
     #[test]
@@ -424,5 +457,14 @@ mod tests {
         let fabric: Fabric = "4:topo=ring".parse().unwrap();
         let sc = sc.with_fabric(fabric);
         assert_eq!(sc.fabric, fabric);
+    }
+
+    #[test]
+    fn scenario_carries_a_fault_plan() {
+        let sc = Scenario::paper();
+        assert!(sc.faults.is_none());
+        let plan: FaultPlan = "air:ch=1,from=0,burst=500".parse().unwrap();
+        let sc = sc.with_faults(plan.clone());
+        assert_eq!(sc.faults, plan);
     }
 }

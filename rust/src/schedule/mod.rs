@@ -39,5 +39,8 @@ pub mod run;
 pub mod timeline;
 
 pub use policy::{SchedulePolicy, GRAMMAR};
-pub use run::{run_expanded, run_schedule, timeline_groups, ScheduleReport};
+pub use run::{
+    run_expanded, run_expanded_faults, run_schedule, run_schedule_faults, timeline_groups,
+    ScheduleReport,
+};
 pub use timeline::{count_stages, expand, PhaseInstance, TrainingTimeline};

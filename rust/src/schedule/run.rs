@@ -25,6 +25,7 @@
 //!   that link: where overlap turns into NoC contention.
 
 use crate::error::WihetError;
+use crate::faults::{FaultPlan, ResilienceStats, SimFaults};
 use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
 use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
@@ -69,6 +70,14 @@ pub struct ScheduleReport {
     pub cpu_busy_cycles: u64,
 }
 
+impl ScheduleReport {
+    /// Fault-injection counters of the underlying simulation (all zero
+    /// for fault-free runs).
+    pub fn resilience(&self) -> &ResilienceStats {
+        &self.sim.resilience
+    }
+}
+
 /// Generate one message group per timeline instance. Offsets are
 /// release-relative (`start_cycle = 0`); one RNG stream over the
 /// canonical instance order keeps traces deterministic for a given seed.
@@ -97,10 +106,35 @@ pub fn run_schedule(
     policy: &SchedulePolicy,
     cfg: &TraceConfig,
 ) -> Result<ScheduleReport, WihetError> {
+    run_schedule_faults(sys, inst, tm, policy, cfg, &FaultPlan::none())
+}
+
+/// [`run_schedule`] under a fault plan: the plan is compiled once
+/// against this NoC (seeded kills expanded, routes repaired) and every
+/// simulated phase — serial trace or gated timeline — consults it. An
+/// empty plan ([`FaultPlan::none`]) installs no fault hooks at all, so
+/// results stay byte-identical to [`run_schedule`].
+pub fn run_schedule_faults(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+) -> Result<ScheduleReport, WihetError> {
+    let fx = if plan.has_noc_faults() {
+        let nominal = SimConfig::default().nominal_flits;
+        Some(plan.compile(&inst.topo, &inst.routes, &inst.air, nominal)?)
+    } else {
+        None
+    };
     if policy.is_serial() {
         // Legacy path, byte-identical: one trace, phases back to back.
-        let sim =
+        let mut sim =
             NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+        if let Some(f) = &fx {
+            sim = sim.with_faults(f);
+        }
         let (trace, windows) = training_trace(sys, &tm.phases, cfg);
         let rep = sim.run(&trace);
         let serial_ref = windows.last().map(|&(_, end)| end).unwrap_or(0);
@@ -141,7 +175,7 @@ pub fn run_schedule(
     // would count phase_trace's 16-cycle floor M times per phase and
     // overstate the speedup at small trace scales.
     let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
-    let (report, _release) = run_expanded(sys, inst, &tl, cfg, serial_ref);
+    let (report, _release) = run_expanded_faults(sys, inst, &tl, cfg, serial_ref, fx.as_ref());
     Ok(report)
 }
 
@@ -159,7 +193,23 @@ pub fn run_expanded(
     cfg: &TraceConfig,
     serial_ref: u64,
 ) -> (ScheduleReport, Vec<u64>) {
-    let sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    run_expanded_faults(sys, inst, tl, cfg, serial_ref, None)
+}
+
+/// [`run_expanded`] with an optional compiled fault plan installed on
+/// the gated simulator (`None` keeps the fault hooks off entirely).
+pub fn run_expanded_faults(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tl: &TrainingTimeline,
+    cfg: &TraceConfig,
+    serial_ref: u64,
+    faults: Option<&SimFaults>,
+) -> (ScheduleReport, Vec<u64>) {
+    let mut sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    if let Some(f) = faults {
+        sim = sim.with_faults(f);
+    }
     let (groups, _durs) = timeline_groups(sys, tl, cfg);
     let out = sim.run_timeline(&groups, &tl.preds);
     let makespan = out.report.cycles;
@@ -293,7 +343,29 @@ mod tests {
         assert!(gp.speedup_vs_serial > 1.0, "{}", gp.speedup_vs_serial);
         assert!(gp.peak_link_concurrency >= 1);
         // all traffic delivered: conservation carries into flits
-        assert_eq!(gp.sim.undelivered, 0);
+        assert_eq!(gp.sim.undelivered(), 0);
+    }
+
+    #[test]
+    fn faulted_schedule_still_delivers_everything() {
+        let (sys, inst, tm) = setup();
+        let cfg = TraceConfig { scale: 0.05, ..Default::default() };
+        let gp = SchedulePolicy::GPipe { microbatches: 4 };
+        let clean = run_schedule(&sys, &inst, &tm, &gp, &cfg).unwrap();
+        // one dead link: mesh minus one link stays connected, so a
+        // repair path always exists and nothing may be lost
+        let plan: FaultPlan = "wire:link=0".parse().unwrap();
+        let faulted = run_schedule_faults(&sys, &inst, &tm, &gp, &cfg, &plan).unwrap();
+        assert_eq!(faulted.sim.undelivered(), 0);
+        assert_eq!(faulted.resilience().undeliverable_after_repair, 0);
+        assert_eq!(faulted.resilience().faults_injected, 1);
+        assert_eq!(faulted.sim.delivered_packets, clean.sim.delivered_packets);
+        // the empty plan is byte-identical to the plain entry point
+        let none = run_schedule_faults(&sys, &inst, &tm, &gp, &cfg, &FaultPlan::none()).unwrap();
+        assert_eq!(none.sim.latency.sum, clean.sim.latency.sum);
+        assert_eq!(none.sim.link_busy, clean.sim.link_busy);
+        assert_eq!(none.makespan, clean.makespan);
+        assert_eq!(none.resilience(), &ResilienceStats::default());
     }
 
     #[test]
@@ -308,7 +380,7 @@ mod tests {
             &cfg,
         )
         .unwrap();
-        assert_eq!(r.sim.undelivered, 0);
+        assert_eq!(r.sim.undelivered(), 0);
         assert!(r.sim.delivered_packets > 0);
         assert!((0.0..=1.0).contains(&r.bubble_fraction));
     }

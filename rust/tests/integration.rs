@@ -44,7 +44,7 @@ fn full_design_flow_paper_system() {
         .filter(|m| m.class.spawns_response().is_some())
         .count() as u64;
     assert_eq!(rep.delivered_packets, trace.len() as u64 + responses);
-    assert_eq!(rep.undelivered, 0);
+    assert_eq!(rep.undelivered(), 0);
     let e = network_energy_pj(&inst.topo, &rep, &EnergyParams::default());
     assert!(e.total_pj() > 0.0 && e.wireless_pj > 0.0);
 }
@@ -70,7 +70,7 @@ fn full_design_flow_small_system() {
     let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
         .run(&trace);
     assert!(rep.delivered_packets > 0);
-    assert_eq!(rep.undelivered, 0);
+    assert_eq!(rep.undelivered(), 0);
 }
 
 #[test]

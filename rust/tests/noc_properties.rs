@@ -144,7 +144,7 @@ fn prop_sim_conserves_messages_and_flits() {
             trace.len(),
             responses
         );
-        prop_assert!(rep.undelivered == 0, "undelivered {}", rep.undelivered);
+        prop_assert!(rep.undelivered() == 0, "undelivered {}", rep.undelivered());
         // latency at least the zero-load bound for every packet: mean must
         // be >= min over per-hop floor (router >= 3 per hop)
         prop_assert!(

@@ -33,7 +33,7 @@ fn design_and_simulate_non_8x8_platform() {
     let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
         .run(&trace);
     assert!(rep.delivered_packets > 0);
-    assert_eq!(rep.undelivered, 0);
+    assert_eq!(rep.undelivered(), 0);
 }
 
 #[test]

@@ -112,7 +112,7 @@ fn gpipe_makespan_never_exceeds_serial() {
             gp.makespan,
             serial.makespan
         );
-        assert_eq!(gp.sim.undelivered, 0, "gpipe:{m} lost traffic");
+        assert_eq!(gp.sim.undelivered(), 0, "gpipe:{m} lost traffic");
         // conservation carries through simulation: every flit of every
         // microbatch is delivered
         assert!(gp.sim.delivered_packets > 0);

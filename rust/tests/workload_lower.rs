@@ -230,7 +230,7 @@ fn alexnet_simulates_on_12x12_corners_end_to_end() {
     let rep = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
         .run(&trace);
     assert!(rep.delivered_packets > 0);
-    assert_eq!(rep.undelivered, 0);
+    assert_eq!(rep.undelivered(), 0);
 }
 
 #[test]
