@@ -29,6 +29,7 @@ use wihetnoc::model::SystemConfig;
 use wihetnoc::noc::builder::{mesh_opt, wi_het_noc_quick, NocKind};
 use wihetnoc::noc::sim::{NocSim, SimConfig, SimWorkspace};
 use wihetnoc::schedule::{expand, run_schedule, SchedulePolicy};
+use wihetnoc::telemetry::Telemetry;
 use wihetnoc::traffic::phases::model_phases;
 use wihetnoc::traffic::trace::{training_trace, TraceConfig};
 use wihetnoc::util::exec::thread_count;
@@ -72,6 +73,35 @@ fn main() {
             let mut fresh = SimWorkspace::new();
             std::hint::black_box(sim.run_in(&trace, &mut fresh).delivered_packets);
         },
+    );
+
+    // --- telemetry overhead pair (ISSUE 8) ---
+    // same iteration with the sink detached vs attached: the off path is
+    // the never-taken-branch baseline, the on path prices the histogram
+    // records + time-series buckets per event
+    b.bench_items(
+        &format!("simcore/iteration telemetry-off ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            std::hint::black_box(sim.run_telemetry(&trace, None).delivered_packets);
+        },
+    );
+    let mut tel = Telemetry::new();
+    b.bench_items(
+        &format!("simcore/iteration telemetry-on ({packets} pkts)"),
+        Some(packets as f64),
+        &mut || {
+            std::hint::black_box(
+                sim.run_telemetry(&trace, Some(&mut tel)).delivered_packets,
+            );
+        },
+    );
+    // the sink must never perturb the simulation: the instrumented runs
+    // above produced the same report bytes as the plain path
+    assert_eq!(
+        format!("{:?}", sim.run(&trace)),
+        format!("{:?}", sim.run_telemetry(&trace, Some(&mut Telemetry::new()))),
+        "telemetry sink perturbed the simulation"
     );
 
     // --- workload lowering microbench (ISSUE 3) ---
@@ -248,7 +278,7 @@ fn main() {
     let mut figures = BTreeMap::new();
     for id in experiments::ALL.iter() {
         let mut report = None;
-        if matches!(*id, "workload_figs" | "scale_figs" | "resilience_figs") {
+        if matches!(*id, "workload_figs" | "scale_figs" | "resilience_figs" | "hotspot_figs") {
             // These harnesses build their own instances per run (AMOSA
             // designs on 144 tiles, or dozens of faulted full-trace
             // sims) — repeat samples would redo identical work, so time

@@ -15,8 +15,8 @@ use std::sync::LazyLock;
 use super::ctx::{Ctx, Effort};
 use super::report::Report;
 use super::{
-    compare_figs, optim_figs, param_figs, resilience_figs, scale_figs, table1, traffic_figs,
-    wireless_figs, workload_figs,
+    compare_figs, hotspot_figs, optim_figs, param_figs, resilience_figs, scale_figs, table1,
+    traffic_figs, wireless_figs, workload_figs,
 };
 use crate::error::WihetError;
 use crate::util::exec::{par_map_threads, thread_count};
@@ -180,6 +180,13 @@ pub const REGISTRY: &[Experiment] = &[
         min_effort: Effort::Quick,
         run: |ctx| Ok(resilience_figs::resilience_figs(ctx)),
     },
+    Experiment {
+        id: "hotspot_figs",
+        title: "link-utilization heatmap & tail latency (p50/p99/p999), mesh vs WiHetNoC",
+        paper: "Sec. 3",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(hotspot_figs::hotspot_figs(ctx)),
+    },
 ];
 
 /// All experiment ids, in registry order — a view over [`REGISTRY`].
@@ -258,7 +265,7 @@ mod tests {
     #[test]
     fn all_is_a_view_over_the_registry() {
         assert_eq!(ALL.len(), REGISTRY.len());
-        assert_eq!(ALL.len(), 19);
+        assert_eq!(ALL.len(), 20);
         for (id, e) in ALL.iter().zip(REGISTRY) {
             assert_eq!(*id, e.id);
         }

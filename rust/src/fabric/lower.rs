@@ -33,9 +33,10 @@ use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
 use crate::noc::sim::SimConfig;
 use crate::schedule::{
-    expand, run_expanded_faults, run_schedule_faults, PhaseInstance, SchedulePolicy,
-    ScheduleReport, TrainingTimeline,
+    expand, run_expanded_obs, run_schedule_obs, PhaseInstance, SchedulePolicy, ScheduleReport,
+    TrainingTimeline,
 };
+use crate::telemetry::Telemetry;
 use crate::traffic::phases::{LayerPhase, TrafficModel};
 use crate::traffic::trace::TraceConfig;
 
@@ -188,13 +189,33 @@ pub fn run_fabric_faults(
     cfg: &TraceConfig,
     plan: &FaultPlan,
 ) -> Result<FabricReport, WihetError> {
+    run_fabric_obs(sys, inst, tm, policy, fabric, grad_bytes, cfg, plan, None)
+}
+
+/// [`run_fabric_faults`] with an optional telemetry sink: per-chip
+/// simulation metrics plus timeline spans for every phase instance,
+/// collective step, and analytic inter-chip wire hop (category
+/// `"fabric"`, on a track one past the last pipeline stage). Reports
+/// are byte-identical with or without the sink.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fabric_obs(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    fabric: &Fabric,
+    grad_bytes: u64,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+    mut tel: Option<&mut Telemetry>,
+) -> Result<FabricReport, WihetError> {
     fabric.validate()?;
     let algorithm = fabric.collective.resolve(fabric.chips, grad_bytes);
     if fabric.is_single() {
         // degenerate fabric: the unmodified single-chip path,
         // byte-identical to `run_schedule` (pinned by tests); chip-tier
         // faults are inert without collective steps
-        let schedule = run_schedule_faults(sys, inst, tm, policy, cfg, plan)?;
+        let schedule = run_schedule_obs(sys, inst, tm, policy, cfg, plan, tel)?;
         let iteration_cycles = schedule.makespan;
         let resilience = schedule.sim.resilience.clone();
         return Ok(FabricReport {
@@ -221,7 +242,8 @@ pub fn run_fabric_faults(
     let mut tl = expand(tm, policy)?;
     let first_ar = extend_timeline(&mut tl, tm, sys, fabric, &st);
     let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
-    let (schedule, release) = run_expanded_faults(sys, inst, &tl, cfg, serial_ref, fx.as_ref());
+    let (schedule, release) =
+        run_expanded_obs(sys, inst, &tl, cfg, serial_ref, fx.as_ref(), tel.as_deref_mut());
 
     // straggler-aware degradation of the wire tier: every collective
     // step moves at the slowest replica's pace, and a flaky link repeats
@@ -246,7 +268,12 @@ pub fn run_fabric_faults(
             Some(&r) if r != u64::MAX => r,
             _ => 0,
         };
-        finish = finish.max(rel) + w_eff;
+        let start = finish.max(rel);
+        finish = start + w_eff;
+        if let Some(sink) = tel.as_deref_mut() {
+            // wire hops render one track past the last pipeline stage
+            sink.span(format!("wire AR{i}"), "fabric", tl.num_stages as u32, start, finish);
+        }
     }
     let iteration_cycles = schedule.makespan.max(finish);
     let comm_overhead_pct =

@@ -38,5 +38,5 @@ pub mod lower;
 pub mod spec;
 
 pub use collective::{steps, wire_bytes_per_chip, Collective, CollectiveStep};
-pub use lower::{extend_timeline, run_fabric, run_fabric_faults, FabricReport};
+pub use lower::{extend_timeline, run_fabric, run_fabric_faults, run_fabric_obs, FabricReport};
 pub use spec::{Fabric, GRAMMAR};

@@ -82,6 +82,7 @@ pub mod optim;
 pub mod runtime;
 pub mod scenario;
 pub mod schedule;
+pub mod telemetry;
 pub mod traffic;
 pub mod util;
 pub mod workload;

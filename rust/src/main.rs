@@ -24,8 +24,9 @@ use wihetnoc::noc::sim::{NocSim, SimConfig};
 use wihetnoc::runtime::Runtime;
 use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
-use wihetnoc::fabric::run_fabric_faults;
-use wihetnoc::schedule::run_schedule_faults;
+use wihetnoc::fabric::run_fabric_obs;
+use wihetnoc::schedule::run_schedule_obs;
+use wihetnoc::telemetry::{chrome_trace, Telemetry};
 use wihetnoc::workload::preset_names;
 use wihetnoc::{
     Fabric, FaultPlan, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError,
@@ -354,9 +355,25 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             is_flag: false,
         },
         ArgSpec { name: "scale", help: "trace downsampling", default: Some("0.05"), is_flag: false },
+        ArgSpec {
+            name: "trace",
+            help: "write a Chrome-trace/Perfetto timeline JSON to this path",
+            default: None,
+            is_flag: false,
+        },
+        ArgSpec {
+            name: "metrics",
+            help: "print telemetry (latency percentiles, link hotspots, queue peaks)",
+            default: None,
+            is_flag: true,
+        },
     ]);
     let args = parse(argv, &specs)?;
     let noc: NocKind = args.get_or("noc", "wihetnoc").parse().map_err(str_err)?;
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    let want_metrics = args.has_flag("metrics");
+    let mut tel =
+        (trace_path.is_some() || want_metrics).then(Telemetry::new);
     let scenario = scenario_from(&args)?.with_noc(noc);
     let mut ctx = Ctx::for_scenario(&scenario).map_err(str_err)?;
     let inst = ctx.instance_arc(noc);
@@ -379,7 +396,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             scenario.fabric
         );
         let t0 = std::time::Instant::now();
-        let fr = run_fabric_faults(
+        let fr = run_fabric_obs(
             &sys,
             &inst,
             &tm,
@@ -388,6 +405,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             grad,
             &cfg,
             &scenario.faults,
+            tel.as_mut(),
         )
         .map_err(str_err)?;
         println!(
@@ -404,6 +422,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             100.0 * fr.schedule.bubble_fraction,
         );
         print_resilience(&scenario, &fr.resilience, fr.schedule.sim.undeliverable);
+        emit_telemetry(tel.as_ref(), trace_path.as_deref(), want_metrics)?;
         return Ok(());
     }
     if !scenario.schedule.is_serial() {
@@ -414,8 +433,16 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             scenario.model, scenario.platform, scenario.mapping, scenario.schedule
         );
         let t0 = std::time::Instant::now();
-        let sr = run_schedule_faults(&sys, &inst, &tm, &scenario.schedule, &cfg, &scenario.faults)
-            .map_err(str_err)?;
+        let sr = run_schedule_obs(
+            &sys,
+            &inst,
+            &tm,
+            &scenario.schedule,
+            &cfg,
+            &scenario.faults,
+            tel.as_mut(),
+        )
+        .map_err(str_err)?;
         println!(
             "{} packets in {:.2}s wall | {} instances over {} stages | makespan {} cyc (speedup {:.2}x vs serial) | bubble {:.1}% | peak link concurrency {} | latency mean {:.2} | cpu-mc {:.2} | wireless {:.1}% (fallbacks {})",
             sr.sim.delivered_packets,
@@ -432,6 +459,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             sr.sim.air_fallbacks,
         );
         print_resilience(&scenario, sr.resilience(), sr.sim.undeliverable);
+        emit_telemetry(tel.as_ref(), trace_path.as_deref(), want_metrics)?;
         return Ok(());
     }
     let fx = if scenario.faults.has_noc_faults() {
@@ -445,7 +473,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     } else {
         None
     };
-    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    let (trace, windows) = training_trace(&sys, &tm.phases, &cfg);
     println!(
         "simulating {noc} on {} ({}, mapping {}{faults_tag}): {} messages ...",
         scenario.model,
@@ -459,7 +487,12 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     if let Some(f) = &fx {
         sim = sim.with_faults(f);
     }
-    let rep = sim.run(&trace);
+    let rep = sim.run_telemetry(&trace, tel.as_mut());
+    if let Some(sink) = tel.as_mut() {
+        for (p, &(start, end)) in tm.phases.iter().zip(&windows) {
+            sink.span(p.tag.clone(), "phase", 0, start, end);
+        }
+    }
     println!(
         "{} packets in {:.2}s wall | latency mean {:.2} max {:.0} | cpu-mc {:.2} | throughput {:.3} flits/cyc | wireless {:.1}% (fallbacks {})",
         rep.delivered_packets,
@@ -472,6 +505,38 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         rep.air_fallbacks,
     );
     print_resilience(&scenario, &rep.resilience, rep.undeliverable);
+    emit_telemetry(tel.as_ref(), trace_path.as_deref(), want_metrics)?;
+    Ok(())
+}
+
+/// Print `--metrics` and write `--trace` from a finished telemetry sink.
+fn emit_telemetry(
+    tel: Option<&Telemetry>,
+    trace_path: Option<&str>,
+    want_metrics: bool,
+) -> Result<(), String> {
+    let Some(tel) = tel else {
+        return Ok(());
+    };
+    if want_metrics {
+        print!("{}", tel.summary());
+    }
+    if let Some(path) = trace_path {
+        let doc = chrome_trace(tel);
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        let mut text = doc.dump();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("writing {path}: {e}"))?;
+        eprintln!(
+            "[trace: {} events -> {path}; open in chrome://tracing or https://ui.perfetto.dev]",
+            tel.spans.len() + tel.instants.len(),
+        );
+    }
     Ok(())
 }
 

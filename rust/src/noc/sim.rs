@@ -63,6 +63,7 @@ use super::topology::Topology;
 use super::wireless::WirelessSpec;
 use crate::faults::{ResilienceStats, SimFaults};
 use crate::model::{SystemConfig, TileKind};
+use crate::telemetry::{LatencyPercentiles, Telemetry};
 use crate::util::stats::Accum;
 
 /// Carrier-sense retries a packet pays on a jammed channel before
@@ -163,6 +164,11 @@ pub struct SimReport {
     pub undeliverable: u64,
     /// Fault-injection counters; all zero for fault-free runs.
     pub resilience: ResilienceStats,
+    /// Tail-latency percentiles per pair class. Always `None` straight
+    /// out of a run — even with a telemetry sink attached, so attached
+    /// and detached reports stay byte-identical. A display layer fills
+    /// it explicitly via [`SimReport::attach_percentiles`].
+    pub percentiles: Option<LatencyPercentiles>,
 }
 
 impl SimReport {
@@ -186,6 +192,38 @@ impl SimReport {
     /// Fraction of delivered packets that used a wireless hop.
     pub fn wireless_utilization(&self) -> f64 {
         self.air_packets as f64 / self.delivered_packets.max(1) as f64
+    }
+
+    /// Copy a finished sink's percentiles into this report. Never called
+    /// by the simulator itself — display layers opt in, keeping raw
+    /// reports byte-identical whether or not telemetry was attached.
+    pub fn attach_percentiles(&mut self, tel: &Telemetry) {
+        self.percentiles = Some(tel.percentiles());
+    }
+
+    /// Percentile lines for text rendering — empty when nothing was
+    /// measured, so existing experiments' `Report::to_text()` output is
+    /// unchanged byte for byte.
+    pub fn percentile_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        if let Some(p) = &self.percentiles {
+            for (name, c) in [
+                ("all", &p.all),
+                ("cpu-mc", &p.cpu_mc),
+                ("gpu-mc", &p.gpu_mc),
+                ("cpu-gpu", &p.cpu_gpu),
+            ] {
+                if c.count > 0 {
+                    let _ = writeln!(
+                        s,
+                        "latency {name} p50/p99/p999: {}/{}/{} cycles (n={})",
+                        c.p50, c.p99, c.p999, c.count
+                    );
+                }
+            }
+        }
+        s
     }
 }
 
@@ -501,9 +539,12 @@ impl Flights {
 }
 
 /// CPU/GPU<->MC pair classification values (see `SimWorkspace::pair_kind`).
-const PAIR_NONE: u8 = 0;
-const PAIR_CPU_MC: u8 = 1;
-const PAIR_GPU_MC: u8 = 2;
+/// `pub(crate)` so the telemetry sink can key its per-class latency
+/// histograms off the same table the simulator classifies with.
+pub(crate) const PAIR_NONE: u8 = 0;
+pub(crate) const PAIR_CPU_MC: u8 = 1;
+pub(crate) const PAIR_GPU_MC: u8 = 2;
+pub(crate) const PAIR_CPU_GPU: u8 = 3;
 
 /// Reusable per-run state. One workspace serves any number of runs on any
 /// platform — buffers are cleared (never freed) between runs, and the
@@ -562,6 +603,9 @@ impl SimWorkspace {
                         }
                         (TileKind::Gpu, TileKind::Mc) | (TileKind::Mc, TileKind::Gpu) => {
                             PAIR_GPU_MC
+                        }
+                        (TileKind::Cpu, TileKind::Gpu) | (TileKind::Gpu, TileKind::Cpu) => {
+                            PAIR_CPU_GPU
                         }
                         _ => PAIR_NONE,
                     };
@@ -696,7 +740,15 @@ impl<'a> NocSim<'a> {
     /// Run the trace using an explicit, reusable workspace. The result is
     /// identical whatever the workspace previously simulated.
     pub fn run_in(&self, trace: &[Message], ws: &mut SimWorkspace) -> SimReport {
-        self.run_gated(&[trace], None, ws)
+        self.run_gated(&[trace], None, ws, None)
+    }
+
+    /// [`NocSim::run`] with an optional telemetry sink. The report is
+    /// byte-identical to [`NocSim::run`]'s whether `tel` is `Some` or
+    /// `None` — the sink only observes (utilization series, latency
+    /// histograms, per-tile activity), it never feeds back.
+    pub fn run_telemetry(&self, trace: &[Message], tel: Option<&mut Telemetry>) -> SimReport {
+        TLS_WORKSPACE.with(|ws| self.run_gated(&[trace], None, &mut ws.borrow_mut(), tel))
     }
 
     /// Run a gated timeline, reusing this thread's workspace: one message
@@ -709,6 +761,19 @@ impl<'a> NocSim<'a> {
         TLS_WORKSPACE.with(|ws| self.run_timeline_in(groups, preds, &mut ws.borrow_mut()))
     }
 
+    /// [`NocSim::run_timeline`] with an optional telemetry sink (same
+    /// no-perturbation guarantee as [`NocSim::run_telemetry`]).
+    pub fn run_timeline_telemetry(
+        &self,
+        groups: &[Vec<Message>],
+        preds: &[Vec<u32>],
+        tel: Option<&mut Telemetry>,
+    ) -> TimelineOutcome {
+        TLS_WORKSPACE.with(|ws| {
+            self.run_timeline_telemetry_in(groups, preds, &mut ws.borrow_mut(), tel)
+        })
+    }
+
     /// [`NocSim::run_timeline`] with an explicit, reusable workspace.
     pub fn run_timeline_in(
         &self,
@@ -716,9 +781,19 @@ impl<'a> NocSim<'a> {
         preds: &[Vec<u32>],
         ws: &mut SimWorkspace,
     ) -> TimelineOutcome {
+        self.run_timeline_telemetry_in(groups, preds, ws, None)
+    }
+
+    fn run_timeline_telemetry_in(
+        &self,
+        groups: &[Vec<Message>],
+        preds: &[Vec<u32>],
+        ws: &mut SimWorkspace,
+        tel: Option<&mut Telemetry>,
+    ) -> TimelineOutcome {
         assert_eq!(groups.len(), preds.len(), "one predecessor list per group");
         let refs: Vec<&[Message]> = groups.iter().map(|g| g.as_slice()).collect();
-        let report = self.run_gated(&refs, Some(preds), ws);
+        let report = self.run_gated(&refs, Some(preds), ws, tel);
         TimelineOutcome {
             report,
             release: ws.tl_release.clone(),
@@ -737,11 +812,15 @@ impl<'a> NocSim<'a> {
         groups: &[&[Message]],
         preds: Option<&[Vec<u32>]>,
         ws: &mut SimWorkspace,
+        mut tel: Option<&mut Telemetry>,
     ) -> SimReport {
         let nl = self.topo.links.len();
         let nch = self.air.num_channels.max(1);
         let n = self.sys.num_tiles();
         ws.prepare(self.sys, nl, nch);
+        if let Some(sink) = tel.as_deref_mut() {
+            sink.begin(nl, nch, n);
+        }
         let ng = groups.len();
         let gated = preds.is_some();
         let mut report = SimReport {
@@ -835,6 +914,10 @@ impl<'a> NocSim<'a> {
             if self.cfg.horizon > 0 && t > self.cfg.horizon {
                 break;
             }
+            if let Some(sink) = tel.as_deref_mut() {
+                // depth after the pop: the backlog this event left behind
+                sink.queue_sample(t, q.len);
+            }
             match ev {
                 Event::Inject(idx) => {
                     let i = idx as usize;
@@ -868,6 +951,9 @@ impl<'a> NocSim<'a> {
                     let from = h.from();
                     let ready = t + self.topo.router_delay(from);
                     report.router_flits[from] += flits;
+                    if let Some(sink) = tel.as_deref_mut() {
+                        sink.hop(from, flits);
+                    }
                     let last = path.hops.len() as u16 - 1;
                     match h {
                         Hop::Wire { link, .. } => {
@@ -889,6 +975,9 @@ impl<'a> NocSim<'a> {
                                         continue;
                                     }
                                     report.resilience.packets_rerouted += 1;
+                                    if let Some(sink) = tel.as_deref_mut() {
+                                        sink.reroute(ready, from, dst);
+                                    }
                                     fl.route[i] = RouteRef {
                                         src: from as u32,
                                         dst: dst as u32,
@@ -907,6 +996,9 @@ impl<'a> NocSim<'a> {
                             link_busy_until[link] = start + flits;
                             report.link_busy[link] += flits;
                             report.link_flits[link] += flits;
+                            if let Some(sink) = tel.as_deref_mut() {
+                                sink.wire_hop(link, start, flits, start - ready);
+                            }
                             if gated {
                                 group_link_flits[fl.group[i] as usize * nl + link] += flits;
                             }
@@ -987,6 +1079,9 @@ impl<'a> NocSim<'a> {
                             let start = sense + wait + mac;
                             chan_busy_until[channel] = start + ser;
                             report.air_busy[channel] += ser;
+                            if let Some(sink) = tel.as_deref_mut() {
+                                sink.air_hop(channel, start, ser);
+                            }
                             report.air_flits[channel] += flits;
                             report.air_packets += 1;
                             if self.sys.tiles[dst] == TileKind::Mc {
@@ -1017,6 +1112,9 @@ impl<'a> NocSim<'a> {
                         PAIR_CPU_MC => report.cpu_mc_latency.push(lat),
                         PAIR_GPU_MC => report.gpu_mc_latency.push(lat),
                         _ => {}
+                    }
+                    if let Some(sink) = tel.as_deref_mut() {
+                        sink.delivered(pair_kind[src * n + dst], done - fl.inject_at[i]);
                     }
                     report.delivered_packets += 1;
                     report.delivered_flits += flits;
@@ -1084,6 +1182,9 @@ impl<'a> NocSim<'a> {
         // Both zero when the run completed.
         report.unreleased = not_released;
         report.undeliverable = fl.len() as u64 - report.delivered_packets;
+        if let Some(sink) = tel {
+            sink.finish(&report);
+        }
         report
     }
 

@@ -40,7 +40,7 @@ pub mod timeline;
 
 pub use policy::{SchedulePolicy, GRAMMAR};
 pub use run::{
-    run_expanded, run_expanded_faults, run_schedule, run_schedule_faults, timeline_groups,
-    ScheduleReport,
+    run_expanded, run_expanded_faults, run_expanded_obs, run_schedule, run_schedule_faults,
+    run_schedule_obs, timeline_groups, ScheduleReport,
 };
 pub use timeline::{count_stages, expand, PhaseInstance, TrainingTimeline};

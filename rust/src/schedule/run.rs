@@ -29,6 +29,7 @@ use crate::faults::{FaultPlan, ResilienceStats, SimFaults};
 use crate::model::SystemConfig;
 use crate::noc::builder::NocInstance;
 use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
+use crate::telemetry::Telemetry;
 use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::{phase_trace, training_trace, TraceConfig};
 use crate::util::rng::Rng;
@@ -122,6 +123,23 @@ pub fn run_schedule_faults(
     cfg: &TraceConfig,
     plan: &FaultPlan,
 ) -> Result<ScheduleReport, WihetError> {
+    run_schedule_obs(sys, inst, tm, policy, cfg, plan, None)
+}
+
+/// [`run_schedule_faults`] with an optional telemetry sink: the sink
+/// rides along the underlying simulation (metrics, histograms) and, once
+/// the run finishes, gets one timeline span per phase instance (serial:
+/// per phase window) so the Chrome-trace export shows the gated
+/// schedule. Reports are byte-identical with or without a sink.
+pub fn run_schedule_obs(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tm: &TrafficModel,
+    policy: &SchedulePolicy,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+    mut tel: Option<&mut Telemetry>,
+) -> Result<ScheduleReport, WihetError> {
     let fx = if plan.has_noc_faults() {
         let nominal = SimConfig::default().nominal_flits;
         Some(plan.compile(&inst.topo, &inst.routes, &inst.air, nominal)?)
@@ -136,7 +154,12 @@ pub fn run_schedule_faults(
             sim = sim.with_faults(f);
         }
         let (trace, windows) = training_trace(sys, &tm.phases, cfg);
-        let rep = sim.run(&trace);
+        let rep = sim.run_telemetry(&trace, tel.as_deref_mut());
+        if let Some(sink) = tel {
+            for (p, &(start, end)) in tm.phases.iter().zip(&windows) {
+                sink.span(p.tag.clone(), "phase", 0, start, end);
+            }
+        }
         let serial_ref = windows.last().map(|&(_, end)| end).unwrap_or(0);
         let n_gpu = sys.gpus().len() as u64;
         let mut gpu_busy = 0u64;
@@ -175,7 +198,8 @@ pub fn run_schedule_faults(
     // would count phase_trace's 16-cycle floor M times per phase and
     // overstate the speedup at small trace scales.
     let serial_ref: u64 = tm.phases.iter().map(|p| cfg.window(p.duration_cycles)).sum();
-    let (report, _release) = run_expanded_faults(sys, inst, &tl, cfg, serial_ref, fx.as_ref());
+    let (report, _release) =
+        run_expanded_obs(sys, inst, &tl, cfg, serial_ref, fx.as_ref(), tel);
     Ok(report)
 }
 
@@ -206,12 +230,44 @@ pub fn run_expanded_faults(
     serial_ref: u64,
     faults: Option<&SimFaults>,
 ) -> (ScheduleReport, Vec<u64>) {
+    run_expanded_obs(sys, inst, tl, cfg, serial_ref, faults, None)
+}
+
+/// [`run_expanded_faults`] with an optional telemetry sink: records one
+/// span per reached phase instance (name `"<tag> mb<k>"`, track = stage,
+/// category `"collective"` for allreduce instances) on top of the sink's
+/// simulation metrics. Reports are byte-identical with or without it.
+pub fn run_expanded_obs(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    tl: &TrainingTimeline,
+    cfg: &TraceConfig,
+    serial_ref: u64,
+    faults: Option<&SimFaults>,
+    mut tel: Option<&mut Telemetry>,
+) -> (ScheduleReport, Vec<u64>) {
     let mut sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
     if let Some(f) = faults {
         sim = sim.with_faults(f);
     }
     let (groups, _durs) = timeline_groups(sys, tl, cfg);
-    let out = sim.run_timeline(&groups, &tl.preds);
+    let out = sim.run_timeline_telemetry(&groups, &tl.preds, tel.as_deref_mut());
+    if let Some(sink) = tel {
+        for (g, pi) in tl.instances.iter().enumerate() {
+            let (r, d) = (out.release[g], out.drain[g]);
+            if r == u64::MAX || d == u64::MAX {
+                continue; // never released (horizon cut): no span
+            }
+            let cat = if pi.traffic.tag.starts_with("AR") { "collective" } else { "phase" };
+            sink.span(
+                format!("{} mb{}", pi.traffic.tag, pi.microbatch),
+                cat,
+                pi.stage as u32,
+                r,
+                d,
+            );
+        }
+    }
     let makespan = out.report.cycles;
     let speedup = serial_ref as f64 / makespan.max(1) as f64;
 

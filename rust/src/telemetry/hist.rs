@@ -1,0 +1,349 @@
+//! Deterministic log-bucket latency histograms with exact quantile
+//! semantics.
+//!
+//! [`crate::util::stats::Accum`] tracks count/sum/max — enough for the
+//! paper's mean-latency figures, but ROADMAP item 2 asks for tail
+//! percentiles (p50/p99/p999), and tails need a distribution. A sorted
+//! sample vector would give exact order statistics but allocates per
+//! packet and merges in O(n log n); [`LogHistogram`] instead buckets
+//! values into a *fixed* 1920-slot layout:
+//!
+//! * values `< 64` get one bucket each (the exact region — small
+//!   latencies, where a coarse bucket would swallow the whole story);
+//! * values `>= 64` get 32 sub-buckets per power-of-two octave, so the
+//!   relative quantization error is bounded by 1/32 (~3%) everywhere.
+//!
+//! Everything is integer arithmetic: recording is two shifts and a mask,
+//! merging is a bucket-wise add (commutative and associative), and
+//! [`LogHistogram::quantile`] is a deterministic function of the bucket
+//! counts — the same packets always produce the same p50/p99/p999, in
+//! any record order, at any `WIHETNOC_THREADS` (pinned by the tests
+//! below and `tests/telemetry.rs`).
+//!
+//! Quantile semantics (pinned, not approximate): `quantile(q)` returns
+//! the **lower bound of the bucket containing the rank-`ceil(q·count)`
+//! sample** (1-based, the nearest-rank definition). In the exact region
+//! this *is* the order statistic; above it, it underestimates by at most
+//! one bucket width.
+
+/// Sub-buckets per octave (32 → ≤ 1/32 relative error above the exact
+/// region).
+const SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << SUB_BITS;
+/// Exact one-bucket-per-value region: `0..EXACT`.
+const EXACT: usize = 2 * SUBS;
+/// Octaves above the exact region: msb 6 (values 64..128) through
+/// msb 63 (top of u64).
+const OCTAVES: usize = 64 - (SUB_BITS as usize + 1);
+/// Total fixed bucket count: 64 exact + 58 octaves × 32 sub-buckets.
+pub const NUM_BUCKETS: usize = EXACT + OCTAVES * SUBS;
+
+/// Fixed-layout logarithmic histogram over `u64` samples (latencies in
+/// cycles). See the module docs for the bucket layout and the pinned
+/// quantile semantics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// Bucket index of a value: identity below [`EXACT`], then
+/// `(octave, 5-bit mantissa)` above it.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < EXACT as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+        let octave = (msb - (SUB_BITS + 1)) as usize;
+        let sub = ((v >> (msb - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        EXACT + octave * SUBS + sub
+    }
+}
+
+/// Smallest value mapping to bucket `idx` — what [`LogHistogram::quantile`]
+/// reports for any rank landing in that bucket.
+#[inline]
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < EXACT {
+        idx as u64
+    } else {
+        let k = idx - EXACT;
+        let octave = (k / SUBS) as u32;
+        let sub = (k % SUBS) as u64;
+        (SUBS as u64 + sub) << (octave + 1)
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Drop every sample, keeping the allocation.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.count = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sample mean (the sum is kept exactly, not re-quantized).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Fold another histogram in. Bucket-wise integer addition:
+    /// commutative and associative, so any merge tree over any sharding
+    /// of the samples yields identical quantiles — the property the
+    /// thread-count determinism tests pin.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile: the lower bound of the bucket holding the
+    /// rank-`ceil(q·count)` sample (1-based; `q` is clamped to `[0, 1]`).
+    /// Exact below 64; within 1/32 relative error above. Returns 0 for
+    /// an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor(idx);
+            }
+        }
+        self.max // unreachable: seen reaches count
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::exec::par_map_threads;
+
+    #[test]
+    fn bucket_layout_invariants() {
+        // identity below the exact bound, floor <= v < next floor above
+        for v in 0..EXACT as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_floor(v as usize), v);
+        }
+        for v in [
+            64u64,
+            65,
+            95,
+            127,
+            128,
+            500,
+            1 << 20,
+            (1 << 20) + 12345,
+            u64::MAX / 3,
+            u64::MAX,
+        ] {
+            let idx = bucket_index(v);
+            assert!(idx < NUM_BUCKETS, "{v} -> {idx}");
+            let lo = bucket_floor(idx);
+            assert!(lo <= v, "{v}: floor {lo}");
+            if idx + 1 < NUM_BUCKETS {
+                assert!(bucket_floor(idx + 1) > v, "{v} not below next bucket");
+            }
+            // relative quantization error bounded by 1/32
+            assert!((v - lo) as f64 <= v as f64 / SUBS as f64 + 1.0, "{v}: floor {lo}");
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn exact_region_quantiles_are_order_statistics() {
+        let mut h = LogHistogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        // rank ceil(q*64), 1-based, over samples 0..=63
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.p50(), 31); // rank 32 -> sample 31
+        assert_eq!(h.quantile(0.25), 15);
+        assert_eq!(h.p99(), 63); // rank ceil(63.36) = 64
+        assert_eq!(h.quantile(1.0), 63);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        assert_eq!(h.mean(), 31.5);
+    }
+
+    #[test]
+    fn pinned_p50_p99_p999_on_uniform_1_to_1000() {
+        // The semantics contract: quantile(q) is the floor of the bucket
+        // holding the rank-ceil(q*n) sample. For 1..=1000 these land in
+        // hand-computed buckets — pinned literally so any change to the
+        // layout or the rank rule breaks loudly.
+        let mut h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), 496); // sample 500 lives in [496, 503]
+        assert_eq!(h.p99(), 976); // sample 990 lives in [976, 991]
+        assert_eq!(h.p999(), 992); // sample 999 lives in [992, 1007]
+        assert_eq!(h.quantile(1.0), 992); // sample 1000, same bucket
+        assert_eq!(h.max(), 1000);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(7);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 7);
+        }
+    }
+
+    #[test]
+    fn merge_is_order_invariant() {
+        let data: Vec<u64> = (0..3000).map(|i| (i * 2654435761u64) % 100_000).collect();
+        let mut whole = LogHistogram::new();
+        for &v in &data {
+            whole.record(v);
+        }
+        // shard three ways, merge in two different orders
+        let mut shards: Vec<LogHistogram> = (0..3).map(|_| LogHistogram::new()).collect();
+        for (i, &v) in data.iter().enumerate() {
+            shards[i % 3].record(v);
+        }
+        let mut fwd = LogHistogram::new();
+        for s in &shards {
+            fwd.merge(s);
+        }
+        let mut rev = LogHistogram::new();
+        for s in shards.iter().rev() {
+            rev.merge(s);
+        }
+        assert_eq!(fwd, whole);
+        assert_eq!(rev, whole);
+        assert_eq!(fwd.p999(), whole.p999());
+    }
+
+    #[test]
+    fn quantiles_deterministic_across_thread_counts() {
+        // shard the same sample stream over 1/2/8 workers, merge, and
+        // require byte-identical histograms (hence identical quantiles)
+        let data: Vec<u64> = (0..5000).map(|i| (i * 40503u64) % 250_000).collect();
+        let chunks: Vec<&[u64]> = data.chunks(613).collect();
+        let mut reference: Option<LogHistogram> = None;
+        for threads in [1usize, 2, 8] {
+            let parts = par_map_threads(threads, &chunks, |_, chunk| {
+                let mut h = LogHistogram::new();
+                for &v in *chunk {
+                    h.record(v);
+                }
+                h
+            });
+            let mut merged = LogHistogram::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            match &reference {
+                None => reference = Some(merged),
+                Some(r) => {
+                    assert_eq!(&merged, r, "histogram differs at {threads} threads");
+                    assert_eq!(merged.p50(), r.p50());
+                    assert_eq!(merged.p99(), r.p99());
+                    assert_eq!(merged.p999(), r.p999());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_matches_accum() {
+        use crate::util::stats::Accum;
+        let mut h = LogHistogram::new();
+        let mut a = Accum::default();
+        for v in [3u64, 19, 4421, 70, 70, 1_000_000] {
+            h.record(v);
+            a.push(v as f64);
+        }
+        assert_eq!(h.mean(), a.mean());
+        assert_eq!(h.count(), a.count);
+        assert_eq!(h.max() as f64, a.max);
+    }
+}

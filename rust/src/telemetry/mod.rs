@@ -1,0 +1,36 @@
+//! Observability for the gated simulator: metrics, percentiles, and a
+//! Chrome-trace timeline — zero overhead when off.
+//!
+//! The simulator's hot loop takes an `Option<&mut Telemetry>`; with
+//! `None` every hook is a never-taken branch, preserving the
+//! allocation-free byte-identical guarantee the determinism tests pin.
+//! With a sink attached the hooks are strictly read-only, so attaching
+//! telemetry never changes a single report byte either (proved by
+//! `tests/telemetry.rs` at `WIHETNOC_THREADS=1/2/8`).
+//!
+//! Three pieces:
+//! * [`hist`] — [`LogHistogram`], deterministic log-bucket latency
+//!   histograms with pinned p50/p99/p999 semantics. This is the tail
+//!   latency machinery ROADMAP item 2 calls for.
+//! * [`sink`] — [`Telemetry`], the collector: per-link utilization time
+//!   series + heatmap (the paper's §3 traffic analysis), per-pair-class
+//!   latency histograms, queue-depth / wireless-occupancy sampling,
+//!   unified resilience counters, and the per-tile active-cycle
+//!   counters ROADMAP item 5 needs for exact overlap energy.
+//! * [`trace`] — Chrome-trace/Perfetto JSON export of the
+//!   phase×microbatch timeline (release/drain spans, fabric collective
+//!   steps, fault reroute instants) plus its schema validator.
+//!
+//! Entry points that accept a sink: `NocSim::run_telemetry` /
+//! `run_timeline_telemetry`, `schedule::run_schedule_obs` /
+//! `run_expanded_obs`, `fabric::run_fabric_obs`, and the CLI flags
+//! `--metrics` / `--trace out.json`. The `hotspot_figs` experiment
+//! packages the heatmap and tail series as report artifacts.
+
+pub mod hist;
+pub mod sink;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use sink::{ClassPercentiles, Instant, LatencyPercentiles, Span, Telemetry};
+pub use trace::{chrome_trace, validate_chrome_trace};

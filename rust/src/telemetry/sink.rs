@@ -1,0 +1,454 @@
+//! The [`Telemetry`] sink: everything the simulator can tell an observer
+//! without the observer ever talking back.
+//!
+//! A sink is handed to a `run_*` entry point as `Option<&mut Telemetry>`
+//! (the same hooks-off-the-hot-path shape as the fault layer's
+//! `Option<&SimFaults>`): `None` compiles to a never-taken branch per
+//! hook site, keeping the off path allocation-free and byte-identical to
+//! the pre-telemetry simulator. With a sink attached the hooks only
+//! *read* simulation state — they never feed anything back — so the
+//! [`crate::noc::sim::SimReport`] is byte-identical either way (pinned
+//! by `tests/telemetry.rs` at 1/2/8 `WIHETNOC_THREADS`).
+//!
+//! What it collects (the paper's §3 traffic analysis, on our own
+//! simulator):
+//! * per-link flit counts bucketed into a utilization **time series**
+//!   (fold-on-overflow: a fixed row budget, doubling the bucket width as
+//!   the run outgrows it) plus the end-of-run link heatmap;
+//! * **latency histograms** ([`LogHistogram`]) per pair class — CPU-MC,
+//!   GPU-MC, CPU-GPU — with exact p50/p99/p999 semantics (ROADMAP 2);
+//! * event-**queue depth** peaks and wireless-**channel occupancy** per
+//!   time bucket, with retry/fallback counters unified from
+//!   [`ResilienceStats`] at [`Telemetry::finish`];
+//! * **per-tile active cycles** metered from hop events — the exact
+//!   per-router activity ROADMAP item 5's overlap-energy accounting
+//!   needs;
+//! * phase/collective **spans** and fault-reroute **instants** recorded
+//!   by the schedule/fabric layers, exported as a Chrome trace by
+//!   [`crate::telemetry::trace::chrome_trace`].
+
+use crate::faults::ResilienceStats;
+use crate::noc::sim::{SimReport, PAIR_CPU_GPU, PAIR_CPU_MC, PAIR_GPU_MC};
+
+use super::hist::LogHistogram;
+
+/// Row budget of the time series; outgrowing it folds adjacent rows and
+/// doubles [`Telemetry::bucket_cycles`], so memory stays bounded for
+/// arbitrarily long runs while short runs keep fine resolution.
+const MAX_ROWS: usize = 512;
+/// Initial time-series bucket width in cycles.
+const INITIAL_BUCKET_CYCLES: u64 = 256;
+
+/// One completed slice of simulated time on one track of the timeline
+/// (a phase×microbatch instance, a collective step, an analytic wire
+/// hop). `tid` is the pipeline stage (tracks render as rows in
+/// Perfetto); spans on one track never overlap — stage resource edges
+/// serialize them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    /// Category: `"phase"`, `"collective"`, or `"fabric"`.
+    pub cat: &'static str,
+    pub tid: u32,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// A point event (Chrome-trace instant): currently fault reroutes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instant {
+    pub name: String,
+    pub t: u64,
+}
+
+/// p50/p99/p999 (plus count and mean) of one latency class.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ClassPercentiles {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl ClassPercentiles {
+    fn of(h: &LogHistogram) -> ClassPercentiles {
+        ClassPercentiles {
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.p50(),
+            p99: h.p99(),
+            p999: h.p999(),
+        }
+    }
+}
+
+/// Tail-latency percentiles per pair class — the payload a display layer
+/// attaches to a report via
+/// [`crate::noc::sim::SimReport::attach_percentiles`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyPercentiles {
+    pub all: ClassPercentiles,
+    pub cpu_mc: ClassPercentiles,
+    pub gpu_mc: ClassPercentiles,
+    pub cpu_gpu: ClassPercentiles,
+}
+
+/// The metrics sink. Create one, pass `Some(&mut sink)` to a telemetry
+/// entry point (`run_telemetry`, `run_schedule_obs`, `run_fabric_obs`,
+/// CLI `--metrics`/`--trace`), then read the collected series,
+/// histograms, and spans. A sink is reset at the start of each attached
+/// run ([`Telemetry::begin`]); spans added *after* a run survive until
+/// the next one.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    nl: usize,
+    nch: usize,
+    /// Cycles per time-series row (doubles on fold).
+    bucket_cycles: u64,
+    rows: usize,
+    /// Flits per link per row, row-major (`row * nl + link`).
+    link_rows: Vec<u64>,
+    /// Wireless busy cycles per channel per row (`row * nch + ch`).
+    air_rows: Vec<u64>,
+    /// Event-queue depth peak per row.
+    queue_rows: Vec<u64>,
+    /// End-to-end latency histograms per pair class.
+    pub lat_all: LogHistogram,
+    pub lat_cpu_mc: LogHistogram,
+    pub lat_gpu_mc: LogHistogram,
+    pub lat_cpu_gpu: LogHistogram,
+    /// Wire-hop queueing delay (cycles a head waited for a busy link).
+    pub queue_wait: LogHistogram,
+    /// Per-tile active cycles: flit-traversals metered at each router's
+    /// hop events (ROADMAP 5's exact-overlap energy input).
+    pub tile_active: Vec<u64>,
+    /// Timeline spans (phases, collective steps, wire hops).
+    pub spans: Vec<Span>,
+    /// Point events (fault reroutes).
+    pub instants: Vec<Instant>,
+    /// End-of-run per-link flit totals (the heatmap), copied from the
+    /// report at [`Telemetry::finish`].
+    pub link_flits: Vec<u64>,
+    pub cycles: u64,
+    pub delivered_packets: u64,
+    /// Wireless MAC fallbacks, unified from the report.
+    pub air_fallbacks: u64,
+    /// Fault counters, unified from [`ResilienceStats`] (retries,
+    /// fallback flits, reroutes) so one artifact carries both tiers.
+    pub resilience: ResilienceStats,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { bucket_cycles: INITIAL_BUCKET_CYCLES, ..Telemetry::default() }
+    }
+
+    /// Reset and size for a run (called by the simulator when the sink
+    /// is attached). Spans and instants recorded before the run are
+    /// dropped — record them after.
+    pub fn begin(&mut self, num_links: usize, num_channels: usize, num_tiles: usize) {
+        self.nl = num_links;
+        self.nch = num_channels.max(1);
+        self.bucket_cycles = INITIAL_BUCKET_CYCLES;
+        self.rows = 0;
+        self.link_rows.clear();
+        self.air_rows.clear();
+        self.queue_rows.clear();
+        self.lat_all.reset();
+        self.lat_cpu_mc.reset();
+        self.lat_gpu_mc.reset();
+        self.lat_cpu_gpu.reset();
+        self.queue_wait.reset();
+        self.tile_active.clear();
+        self.tile_active.resize(num_tiles, 0);
+        self.spans.clear();
+        self.instants.clear();
+        self.link_flits.clear();
+        self.cycles = 0;
+        self.delivered_packets = 0;
+        self.air_fallbacks = 0;
+        self.resilience = ResilienceStats::default();
+    }
+
+    /// Row index for cycle `t`, folding/growing the series as needed.
+    #[inline]
+    fn row_for(&mut self, t: u64) -> usize {
+        let mut r = (t / self.bucket_cycles) as usize;
+        while r >= MAX_ROWS {
+            self.fold();
+            r = (t / self.bucket_cycles) as usize;
+        }
+        if r >= self.rows {
+            self.rows = r + 1;
+            self.link_rows.resize(self.rows * self.nl, 0);
+            self.air_rows.resize(self.rows * self.nch, 0);
+            self.queue_rows.resize(self.rows, 0);
+        }
+        r
+    }
+
+    /// Halve the time resolution: combine adjacent row pairs (sum for
+    /// flits/busy, max for queue-depth peaks) and double the bucket
+    /// width. Totals are conserved exactly.
+    fn fold(&mut self) {
+        let new_rows = self.rows.div_ceil(2);
+        for r in 0..new_rows {
+            let (a, b) = (2 * r, 2 * r + 1);
+            for l in 0..self.nl {
+                let hi = if b < self.rows { self.link_rows[b * self.nl + l] } else { 0 };
+                self.link_rows[r * self.nl + l] = self.link_rows[a * self.nl + l] + hi;
+            }
+            for c in 0..self.nch {
+                let hi = if b < self.rows { self.air_rows[b * self.nch + c] } else { 0 };
+                self.air_rows[r * self.nch + c] = self.air_rows[a * self.nch + c] + hi;
+            }
+            let hi = if b < self.rows { self.queue_rows[b] } else { 0 };
+            self.queue_rows[r] = self.queue_rows[a].max(hi);
+        }
+        self.rows = new_rows;
+        self.link_rows.truncate(new_rows * self.nl);
+        self.air_rows.truncate(new_rows * self.nch);
+        self.queue_rows.truncate(new_rows);
+        self.bucket_cycles *= 2;
+    }
+
+    // ---- hot-path hooks (read-only views of simulator state) ----
+
+    /// A head flit traversed router `tile` carrying `flits`.
+    #[inline]
+    pub fn hop(&mut self, tile: usize, flits: u64) {
+        self.tile_active[tile] += flits;
+    }
+
+    /// A packet occupied wireline `link` from `start`, after waiting
+    /// `wait` cycles for it to drain.
+    #[inline]
+    pub fn wire_hop(&mut self, link: usize, start: u64, flits: u64, wait: u64) {
+        let nl = self.nl;
+        let r = self.row_for(start);
+        self.link_rows[r * nl + link] += flits;
+        self.queue_wait.record(wait);
+    }
+
+    /// A packet occupied wireless `channel` for `ser` cycles from `start`.
+    #[inline]
+    pub fn air_hop(&mut self, channel: usize, start: u64, ser: u64) {
+        let nch = self.nch;
+        let r = self.row_for(start);
+        self.air_rows[r * nch + channel] += ser;
+    }
+
+    /// Event-queue depth observed at cycle `t` (per-bucket peak).
+    #[inline]
+    pub fn queue_sample(&mut self, t: u64, depth: usize) {
+        let r = self.row_for(t);
+        if depth as u64 > self.queue_rows[r] {
+            self.queue_rows[r] = depth as u64;
+        }
+    }
+
+    /// A packet tail-delivered with end-to-end latency `lat`; `pair` is
+    /// the simulator's pair-class code.
+    #[inline]
+    pub fn delivered(&mut self, pair: u8, lat: u64) {
+        self.lat_all.record(lat);
+        match pair {
+            PAIR_CPU_MC => self.lat_cpu_mc.record(lat),
+            PAIR_GPU_MC => self.lat_gpu_mc.record(lat),
+            PAIR_CPU_GPU => self.lat_cpu_gpu.record(lat),
+            _ => {}
+        }
+    }
+
+    /// A packet re-rooted around a dead link at router `from` (fault
+    /// path only — allocation here never touches fault-free runs).
+    pub fn reroute(&mut self, t: u64, from: usize, dst: usize) {
+        self.instants.push(Instant { name: format!("reroute r{from}->t{dst}"), t });
+    }
+
+    // ---- post-run recording ----
+
+    /// Record a timeline span (schedule/fabric layers, after the run).
+    pub fn span(
+        &mut self,
+        name: String,
+        cat: &'static str,
+        tid: u32,
+        start: u64,
+        end: u64,
+    ) {
+        debug_assert!(end >= start, "span ends before it starts");
+        self.spans.push(Span { name, cat, tid, start, end });
+    }
+
+    /// Absorb the finished report: the link heatmap, run extent, and the
+    /// unified retry/fallback/reroute counters.
+    pub fn finish(&mut self, report: &SimReport) {
+        self.link_flits = report.link_flits.clone();
+        self.cycles = report.cycles;
+        self.delivered_packets = report.delivered_packets;
+        self.air_fallbacks = report.air_fallbacks;
+        self.resilience = report.resilience.clone();
+    }
+
+    // ---- accessors ----
+
+    /// Number of time-series rows collected so far.
+    pub fn num_rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Cycles per time-series row.
+    pub fn bucket_cycles(&self) -> u64 {
+        self.bucket_cycles
+    }
+
+    /// Flits link `link` carried during row `row`.
+    pub fn link_flits_at(&self, row: usize, link: usize) -> u64 {
+        self.link_rows[row * self.nl + link]
+    }
+
+    /// Busy cycles channel `ch` spent during row `row`.
+    pub fn air_busy_at(&self, row: usize, ch: usize) -> u64 {
+        self.air_rows[row * self.nch + ch]
+    }
+
+    /// Peak event-queue depth during row `row`.
+    pub fn queue_depth_at(&self, row: usize) -> u64 {
+        self.queue_rows[row]
+    }
+
+    /// Peak event-queue depth over the whole run.
+    pub fn queue_depth_peak(&self) -> u64 {
+        self.queue_rows.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Aggregate network utilization per row: flits moved during the row
+    /// over `links x bucket_cycles` capacity.
+    pub fn utilization_series(&self) -> Vec<f64> {
+        let cap = (self.nl as u64 * self.bucket_cycles).max(1) as f64;
+        (0..self.rows)
+            .map(|r| {
+                let flits: u64 =
+                    (0..self.nl).map(|l| self.link_rows[r * self.nl + l]).sum();
+                flits as f64 / cap
+            })
+            .collect()
+    }
+
+    /// Tail-latency percentiles for every pair class.
+    pub fn percentiles(&self) -> LatencyPercentiles {
+        LatencyPercentiles {
+            all: ClassPercentiles::of(&self.lat_all),
+            cpu_mc: ClassPercentiles::of(&self.lat_cpu_mc),
+            gpu_mc: ClassPercentiles::of(&self.lat_gpu_mc),
+            cpu_gpu: ClassPercentiles::of(&self.lat_cpu_gpu),
+        }
+    }
+
+    /// Links sorted hottest-first as `(link, flits)`, capped at `top`.
+    pub fn hottest_links(&self, top: usize) -> Vec<(usize, u64)> {
+        let mut v: Vec<(usize, u64)> =
+            self.link_flits.iter().copied().enumerate().filter(|&(_, f)| f > 0).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(top);
+        v
+    }
+
+    /// Human-readable summary (the CLI's `--metrics` output).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let p = self.percentiles();
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "telemetry: {} packets over {} cycles ({} x {}-cycle buckets)",
+            self.delivered_packets, self.cycles, self.rows, self.bucket_cycles
+        );
+        let class = |s: &mut String, name: &str, c: &ClassPercentiles| {
+            if c.count > 0 {
+                let _ = writeln!(
+                    s,
+                    "  latency {name:<7} p50 {:>6}  p99 {:>6}  p999 {:>6}  (n={}, mean {:.1})",
+                    c.p50, c.p99, c.p999, c.count, c.mean
+                );
+            }
+        };
+        class(&mut s, "all", &p.all);
+        class(&mut s, "cpu-mc", &p.cpu_mc);
+        class(&mut s, "gpu-mc", &p.gpu_mc);
+        class(&mut s, "cpu-gpu", &p.cpu_gpu);
+        let hot = self.hottest_links(5);
+        if !hot.is_empty() {
+            let c = self.cycles.max(1) as f64;
+            let _ = write!(s, "  hottest links:");
+            for (l, f) in &hot {
+                let _ = write!(s, " #{l} ({f} flits, {:.2} util)", *f as f64 / c);
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(
+            s,
+            "  queue depth peak {} | wire-queue wait p99 {} cyc | {} air fallbacks | {} reroutes | {} retries",
+            self.queue_depth_peak(),
+            self.queue_wait.p99(),
+            self.air_fallbacks,
+            self.resilience.packets_rerouted,
+            self.resilience.retries,
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_folds_but_conserves_totals() {
+        let mut t = Telemetry::new();
+        t.begin(2, 1, 4);
+        // spread hits far past the initial MAX_ROWS * bucket window
+        let horizon = INITIAL_BUCKET_CYCLES * MAX_ROWS as u64 * 8;
+        let mut total = 0u64;
+        let step = horizon / 1000;
+        for i in 0..1000u64 {
+            t.wire_hop(i as usize % 2, i * step, 3, 0);
+            total += 3;
+        }
+        assert!(t.num_rows() <= MAX_ROWS);
+        assert!(t.bucket_cycles() > INITIAL_BUCKET_CYCLES, "must have folded");
+        let sum: u64 =
+            (0..t.num_rows()).map(|r| t.link_flits_at(r, 0) + t.link_flits_at(r, 1)).sum();
+        assert_eq!(sum, total, "folding must conserve flit totals");
+    }
+
+    #[test]
+    fn queue_peak_folds_as_max() {
+        let mut t = Telemetry::new();
+        t.begin(1, 1, 1);
+        t.queue_sample(0, 7);
+        t.queue_sample(INITIAL_BUCKET_CYCLES * MAX_ROWS as u64 * 2, 3);
+        assert_eq!(t.queue_depth_peak(), 7);
+    }
+
+    #[test]
+    fn class_routing_and_summary() {
+        let mut t = Telemetry::new();
+        t.begin(1, 1, 2);
+        t.delivered(PAIR_CPU_MC, 10);
+        t.delivered(PAIR_GPU_MC, 20);
+        t.delivered(PAIR_CPU_GPU, 30);
+        t.delivered(0, 40);
+        let p = t.percentiles();
+        assert_eq!(p.all.count, 4);
+        assert_eq!(p.cpu_mc.count, 1);
+        assert_eq!(p.gpu_mc.p50, 20);
+        assert_eq!(p.cpu_gpu.p50, 30);
+        t.hop(1, 5);
+        assert_eq!(t.tile_active, vec![0, 5]);
+        let s = t.summary();
+        assert!(s.contains("cpu-gpu"), "{s}");
+    }
+}

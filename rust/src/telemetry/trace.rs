@@ -1,0 +1,172 @@
+//! Chrome-trace / Perfetto export of the gated timeline.
+//!
+//! [`chrome_trace`] turns a [`Telemetry`] sink's spans and instants into
+//! the Trace Event Format consumed by `chrome://tracing` and
+//! <https://ui.perfetto.dev>: an object with a `traceEvents` array of
+//! complete-duration events (`ph: "X"`, one per phase×microbatch
+//! instance / collective step / fabric wire hop, `tid` = pipeline
+//! stage), global instants (`ph: "i"`) for fault reroutes, and counter
+//! events (`ph: "C"`) tracking network utilization and event-queue
+//! depth per time bucket. Timestamps are simulated cycles reported as
+//! microseconds — the viewer only needs a consistent unit.
+//!
+//! [`validate_chrome_trace`] is the Rust-side schema check the CI jq
+//! validation mirrors: `tests/telemetry.rs` runs it on every exported
+//! trace, so a malformed event can't reach an artifact.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::sink::Telemetry;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Build the Chrome-trace document for a finished run.
+pub fn chrome_trace(tel: &Telemetry) -> Json {
+    let mut events = Vec::new();
+    for s in &tel.spans {
+        events.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("cat", Json::Str(s.cat.to_string())),
+            ("ph", Json::Str("X".into())),
+            ("ts", num(s.start)),
+            ("dur", num(s.end - s.start)),
+            ("pid", num(0)),
+            ("tid", num(s.tid as u64)),
+        ]));
+    }
+    for i in &tel.instants {
+        events.push(obj(vec![
+            ("name", Json::Str(i.name.clone())),
+            ("cat", Json::Str("fault".into())),
+            ("ph", Json::Str("i".into())),
+            ("s", Json::Str("g".into())),
+            ("ts", num(i.t)),
+            ("pid", num(0)),
+            ("tid", num(0)),
+        ]));
+    }
+    // counter tracks: aggregate link utilization and event-queue depth
+    // per time-series bucket (one sample at each bucket start)
+    let util = tel.utilization_series();
+    for (r, u) in util.iter().enumerate() {
+        let ts = r as u64 * tel.bucket_cycles();
+        events.push(obj(vec![
+            ("name", Json::Str("link_utilization".into())),
+            ("cat", Json::Str("metric".into())),
+            ("ph", Json::Str("C".into())),
+            ("ts", num(ts)),
+            ("pid", num(0)),
+            ("args", obj(vec![("util", Json::Num(*u))])),
+        ]));
+        events.push(obj(vec![
+            ("name", Json::Str("queue_depth".into())),
+            ("cat", Json::Str("metric".into())),
+            ("ph", Json::Str("C".into())),
+            ("ts", num(ts)),
+            ("pid", num(0)),
+            ("args", obj(vec![("depth", num(tel.queue_depth_at(r)))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Schema check for an exported trace: `traceEvents` is an array, every
+/// event carries `name`/`ph`/`ts` (string, string, number), complete
+/// events (`X`) carry a non-negative `dur`, instants carry a scope `s`,
+/// and counters carry an `args` object. Returns the first violation.
+pub fn validate_chrome_trace(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let fail = |what: &str| Err(format!("event {i}: {what}"));
+        if ev.get("name").and_then(|n| n.as_str()).is_none() {
+            return fail("missing name");
+        }
+        let ph = match ev.get("ph").and_then(|p| p.as_str()) {
+            Some(p) => p,
+            None => return fail("missing ph"),
+        };
+        let ts = match ev.get("ts").and_then(|t| t.as_f64()) {
+            Some(t) => t,
+            None => return fail("missing ts"),
+        };
+        if !ts.is_finite() || ts < 0.0 {
+            return fail("non-finite or negative ts");
+        }
+        match ph {
+            "X" => match ev.get("dur").and_then(|d| d.as_f64()) {
+                Some(d) if d.is_finite() && d >= 0.0 => {}
+                _ => return fail("X event without non-negative dur"),
+            },
+            "i" => {
+                if ev.get("s").and_then(|s| s.as_str()).is_none() {
+                    return fail("instant without scope");
+                }
+            }
+            "C" => {
+                if ev.get("args").and_then(|a| a.as_obj()).is_none() {
+                    return fail("counter without args object");
+                }
+            }
+            other => return Err(format!("event {i}: unknown ph {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_tel() -> Telemetry {
+        let mut t = Telemetry::new();
+        t.begin(2, 1, 4);
+        t.wire_hop(0, 10, 4, 0);
+        t.queue_sample(12, 3);
+        t.span("F0 mb0".into(), "phase", 0, 0, 100);
+        t.span("AR0".into(), "collective", 1, 100, 250);
+        t.reroute(40, 3, 9);
+        t
+    }
+
+    #[test]
+    fn export_validates_and_roundtrips() {
+        let tel = sample_tel();
+        let doc = chrome_trace(&tel);
+        validate_chrome_trace(&doc).unwrap();
+        let text = doc.dump();
+        let back = parse(&text).unwrap();
+        validate_chrome_trace(&back).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 spans + 1 instant + 2 counters per row
+        assert!(events.len() >= 5, "{}", events.len());
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("reroute r3->t9"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_events() {
+        assert!(validate_chrome_trace(&parse("{}").unwrap()).is_err());
+        let no_dur = r#"{"traceEvents":[{"name":"a","ph":"X","ts":0}]}"#;
+        assert!(validate_chrome_trace(&parse(no_dur).unwrap()).is_err());
+        let bad_ph = r#"{"traceEvents":[{"name":"a","ph":"Z","ts":0}]}"#;
+        assert!(validate_chrome_trace(&parse(bad_ph).unwrap()).is_err());
+        let ok = r#"{"traceEvents":[{"name":"a","ph":"X","ts":0,"dur":5}]}"#;
+        assert!(validate_chrome_trace(&parse(ok).unwrap()).is_ok());
+    }
+}

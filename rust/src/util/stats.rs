@@ -1,4 +1,9 @@
 //! Small statistics helpers used by the simulator, optimizer, and benches.
+//!
+//! These operate on complete `&[f64]` samples held in memory. For
+//! streaming per-packet latencies (millions of values, recorded while
+//! the simulator runs), use [`crate::telemetry::LogHistogram`] instead:
+//! O(1) per record, deterministic quantiles, mergeable across shards.
 
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {

@@ -69,6 +69,8 @@ fn every_experiment_roundtrips_through_json() {
             "table1" => "Table 1",
             "workload_figs" => "Workload figs",
             "scale_figs" => "Scale figs",
+            "resilience_figs" => "Resilience figs",
+            "hotspot_figs" => "Hotspot figs",
             _ => "Fig",
         }));
         assert!(rep.to_csv().lines().count() > 1, "{id} has an empty CSV");

@@ -1,0 +1,266 @@
+//! Telemetry integration tests (ISSUE 8):
+//!
+//! * attaching a [`Telemetry`] sink never perturbs simulation —
+//!   `SimReport` / `ScheduleReport` / `FabricReport` are byte-identical
+//!   (via exhaustive `Debug` formatting, which round-trips every f64)
+//!   to the telemetry-off run, inside 1/2/8-worker pools
+//!   (`WIHETNOC_THREADS` equivalents);
+//! * the Chrome-trace export validates (Rust-side schema check mirrored
+//!   by the CI jq step), spans stay serialized per track for `gpipe:8`
+//!   and a 4-chip ring fabric, and fault reroutes appear as instants;
+//! * `hotspot_figs` emits a finite `wihetnoc_p99_reduction_x` scalar
+//!   and valid `trace.json` / `heatmap.csv` artifacts.
+
+use wihetnoc::experiments::{self, Ctx, Effort, SectionData};
+use wihetnoc::fabric::{run_fabric_faults, run_fabric_obs};
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::builder::{mesh_opt, NocInstance};
+use wihetnoc::noc::sim::{NocSim, SimConfig};
+use wihetnoc::schedule::{run_schedule_faults, run_schedule_obs};
+use wihetnoc::telemetry::{chrome_trace, validate_chrome_trace, Span, Telemetry};
+use wihetnoc::traffic::phases::TrafficModel;
+use wihetnoc::traffic::trace::{training_trace, TraceConfig};
+use wihetnoc::util::exec::par_map_threads;
+use wihetnoc::util::json;
+use wihetnoc::workload::{lower_id, MappingPolicy};
+use wihetnoc::{Fabric, FaultPlan, ModelId, SchedulePolicy};
+
+fn setup() -> (SystemConfig, NocInstance, TrafficModel) {
+    let sys = SystemConfig::paper_8x8();
+    let inst = mesh_opt(&sys, true);
+    let tm = lower_id(
+        &ModelId::LeNet,
+        &MappingPolicy::LayerPipelined { stages: 2 },
+        &sys,
+        32,
+    )
+    .unwrap();
+    (sys, inst, tm)
+}
+
+fn cfg() -> TraceConfig {
+    TraceConfig { scale: 0.02, ..Default::default() }
+}
+
+/// Per-track spans must be serialized: stage resource edges gate each
+/// instance on its predecessor's drain, so a successor may start exactly
+/// at (but never before) the previous span's end.
+fn assert_tracks_serialized(spans: &[Span]) {
+    let mut tids: Vec<u32> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let mut track: Vec<&Span> = spans.iter().filter(|s| s.tid == tid).collect();
+        track.sort_by_key(|s| (s.start, s.end));
+        for w in track.windows(2) {
+            assert!(
+                w[1].start >= w[0].end,
+                "track {tid}: '{}' [{}, {}) overlaps '{}' [{}, {})",
+                w[0].name,
+                w[0].start,
+                w[0].end,
+                w[1].name,
+                w[1].start,
+                w[1].end,
+            );
+        }
+    }
+}
+
+#[test]
+fn serial_report_identical_with_sink_attached_across_thread_counts() {
+    let (sys, inst, tm) = setup();
+    let cfg = cfg();
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    let reference = format!("{:?}", sim.run(&trace));
+    assert!(reference.len() > 100);
+
+    for threads in [1usize, 2, 8] {
+        // several workers run the off/on pair concurrently: the sink must
+        // not perturb results under any pool size
+        let jobs = vec![(); 4];
+        let outcomes = par_map_threads(threads, &jobs, |_, _| {
+            let sim =
+                NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+            let off = sim.run(&trace);
+            let mut tel = Telemetry::new();
+            let on = sim.run_telemetry(&trace, Some(&mut tel));
+            assert!(on.percentiles.is_none(), "sink must not leak into the report");
+            assert_eq!(tel.delivered_packets, on.delivered_packets);
+            assert_eq!(tel.link_flits, on.link_flits);
+            (format!("{off:?}"), format!("{on:?}"))
+        });
+        for (off, on) in outcomes {
+            assert_eq!(off, reference, "telemetry-off drifted at {threads} threads");
+            assert_eq!(on, reference, "telemetry-on differs at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn schedule_report_identical_and_gpipe8_trace_validates() {
+    let (sys, inst, tm) = setup();
+    let cfg = cfg();
+    let gp = SchedulePolicy::GPipe { microbatches: 8 };
+    let off =
+        run_schedule_faults(&sys, &inst, &tm, &gp, &cfg, &FaultPlan::none()).unwrap();
+    let reference = format!("{off:?}");
+
+    for threads in [1usize, 2, 8] {
+        let jobs = vec![(); 2];
+        let outcomes = par_map_threads(threads, &jobs, |_, _| {
+            let mut tel = Telemetry::new();
+            let on = run_schedule_obs(
+                &sys,
+                &inst,
+                &tm,
+                &gp,
+                &cfg,
+                &FaultPlan::none(),
+                Some(&mut tel),
+            )
+            .unwrap();
+            (format!("{on:?}"), tel)
+        });
+        for (on, tel) in outcomes {
+            assert_eq!(on, reference, "gpipe:8 report differs with sink at {threads} threads");
+            // every instance drained -> one span each, on its stage track
+            assert_eq!(tel.spans.len(), off.instances);
+            assert!(tel.spans.iter().all(|s| s.cat == "phase"));
+            assert!(tel.spans.iter().any(|s| s.name.ends_with("mb7")));
+            assert_tracks_serialized(&tel.spans);
+            let doc = chrome_trace(&tel);
+            validate_chrome_trace(&doc).unwrap();
+            validate_chrome_trace(&json::parse(&doc.dump()).unwrap()).unwrap();
+            // latency histogram saw every delivered packet
+            assert_eq!(tel.percentiles().all.count, off.sim.delivered_packets);
+        }
+    }
+}
+
+#[test]
+fn fabric_report_identical_and_ring_trace_has_collective_and_wire_spans() {
+    let (sys, inst, tm) = setup();
+    let cfg = cfg();
+    let gp = SchedulePolicy::GPipe { microbatches: 4 };
+    let fabric: Fabric = "4:topo=ring".parse().unwrap();
+    let grad = ModelId::LeNet.spec().total_weight_bytes();
+    let off = run_fabric_faults(
+        &sys,
+        &inst,
+        &tm,
+        &gp,
+        &fabric,
+        grad,
+        &cfg,
+        &FaultPlan::none(),
+    )
+    .unwrap();
+    let reference = format!("{off:?}");
+
+    for threads in [1usize, 2, 8] {
+        let jobs = vec![(); 2];
+        let outcomes = par_map_threads(threads, &jobs, |_, _| {
+            let mut tel = Telemetry::new();
+            let on = run_fabric_obs(
+                &sys,
+                &inst,
+                &tm,
+                &gp,
+                &fabric,
+                grad,
+                &cfg,
+                &FaultPlan::none(),
+                Some(&mut tel),
+            )
+            .unwrap();
+            (format!("{on:?}"), tel)
+        });
+        for (on, tel) in outcomes {
+            assert_eq!(on, reference, "fabric report differs with sink at {threads} threads");
+            assert!(tel.spans.iter().any(|s| s.cat == "phase"));
+            assert!(
+                tel.spans.iter().any(|s| s.cat == "collective"),
+                "allreduce instances must appear as collective spans"
+            );
+            let wires: Vec<&Span> = tel.spans.iter().filter(|s| s.cat == "fabric").collect();
+            assert_eq!(wires.len(), off.steps, "one wire span per collective step");
+            assert_tracks_serialized(&tel.spans);
+            let doc = chrome_trace(&tel);
+            validate_chrome_trace(&doc).unwrap();
+        }
+    }
+}
+
+#[test]
+fn fault_reroutes_surface_as_trace_instants() {
+    let (sys, inst, tm) = setup();
+    let cfg = cfg();
+    let (trace, _) = training_trace(&sys, &tm.phases, &cfg);
+    let clean = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .run(&trace);
+    // kill the hottest link: traffic demonstrably crosses it, so the
+    // faulted run must reroute at least once
+    let hot = clean
+        .link_flits
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &f)| f)
+        .map(|(l, _)| l)
+        .unwrap();
+    assert!(clean.link_flits[hot] > 0);
+    let plan: FaultPlan = format!("wire:link={hot}").parse().unwrap();
+    let fx = plan
+        .compile(&inst.topo, &inst.routes, &inst.air, SimConfig::default().nominal_flits)
+        .unwrap();
+    let sim = NocSim::new(&sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default())
+        .with_faults(&fx);
+    let mut tel = Telemetry::new();
+    let rep = sim.run_telemetry(&trace, Some(&mut tel));
+    assert!(rep.resilience.packets_rerouted > 0, "dead hot link must force reroutes");
+    assert_eq!(tel.instants.len() as u64, rep.resilience.packets_rerouted);
+    assert_eq!(tel.resilience, rep.resilience, "sink unifies ResilienceStats");
+    let dumped = chrome_trace(&tel).dump();
+    validate_chrome_trace(&json::parse(&dumped).unwrap()).unwrap();
+    assert!(dumped.contains("\"ph\":\"i\""), "reroute instants missing:\n{dumped}");
+    assert!(dumped.contains("reroute"));
+}
+
+#[test]
+fn hotspot_figs_emits_finite_headline_and_valid_artifacts() {
+    let mut ctx = Ctx::new(Effort::Quick, 1);
+    let rep = experiments::run("hotspot_figs", &mut ctx).unwrap();
+    assert!(rep.to_text().starts_with("Hotspot figs"));
+    let headline = rep
+        .scalars()
+        .find(|(name, _)| *name == "wihetnoc_p99_reduction_x")
+        .map(|(_, v)| v)
+        .expect("headline scalar present");
+    assert!(headline.is_finite() && headline > 0.0, "headline {headline}");
+    // tail series are present and ordered p50 <= p99 <= p999
+    for name in ["lenet_wihet_tail", "cdbnet_mesh_tail"] {
+        let s = rep.section(name).unwrap_or_else(|| panic!("missing series {name}"));
+        match &s.data {
+            SectionData::Series { values, .. } => {
+                assert_eq!(values.len(), 3);
+                assert!(values[0] <= values[1] && values[1] <= values[2], "{values:?}");
+            }
+            other => panic!("{name} is not a series: {other:?}"),
+        }
+    }
+    let trace = rep
+        .artifacts
+        .iter()
+        .find(|a| a.name == "trace.json")
+        .expect("trace.json artifact");
+    let doc = json::parse(&trace.content).expect("trace.json parses");
+    validate_chrome_trace(&doc).unwrap();
+    let heatmap = rep
+        .artifacts
+        .iter()
+        .find(|a| a.name == "heatmap.csv")
+        .expect("heatmap.csv artifact");
+    assert!(heatmap.content.starts_with("model,noc,link,a,b,flits,utilization"));
+    assert!(heatmap.content.lines().count() > 10, "heatmap covers the links");
+}
