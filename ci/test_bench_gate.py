@@ -81,6 +81,46 @@ class GateBench(unittest.TestCase):
         self.assertEqual(len(errors), 1)
         self.assertIn("fig17.wihetnoc_latency_reduction_pct", errors[0])
 
+    def test_design_figs_search_scalars_are_gated_once_recorded(self):
+        # the design-search convergence scalars ride the same figures
+        # mechanism as every other experiment: stable values pass, a
+        # drifted evals_to_99pct_hypervolume fails
+        base = series(
+            "baseline",
+            figures={
+                "design_figs": {
+                    "evals_to_99pct_hypervolume": 2408.0,
+                    "evals_after_front_stable_pct": 35.0,
+                }
+            },
+        )
+        steady = series(
+            "current",
+            figures={
+                "design_figs": {
+                    "evals_to_99pct_hypervolume": 2408.0,
+                    "evals_after_front_stable_pct": 35.0,
+                }
+            },
+        )
+        self.assertEqual(bench_gate.gate_bench(doc(base, steady)), [])
+        drifted = copy.deepcopy(steady)
+        drifted["figures"]["design_figs"]["evals_to_99pct_hypervolume"] = 4000.0
+        errors = bench_gate.gate_bench(doc(base, drifted))
+        self.assertEqual(len(errors), 1)
+        self.assertIn("design_figs.evals_to_99pct_hypervolume", errors[0])
+
+    def test_design_figs_scalars_disarmed_while_trajectory_empty(self):
+        # BENCH_sim.json still ships with an empty runs[] (no toolchain
+        # in the authoring containers): a current-only series carrying
+        # the new search scalars must not arm the gate
+        current = series(
+            "current",
+            figures={"design_figs": {"evals_to_99pct_hypervolume": 2408.0}},
+        )
+        self.assertEqual(bench_gate.gate_bench(doc(current)), [])
+        self.assertEqual(bench_gate.gate_bench({"runs": []}), [])
+
 
 class GatePaperRefs(unittest.TestCase):
     REPORT = {

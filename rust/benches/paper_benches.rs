@@ -278,7 +278,10 @@ fn main() {
     let mut figures = BTreeMap::new();
     for id in experiments::ALL.iter() {
         let mut report = None;
-        if matches!(*id, "workload_figs" | "scale_figs" | "resilience_figs" | "hotspot_figs") {
+        if matches!(
+            *id,
+            "workload_figs" | "scale_figs" | "resilience_figs" | "hotspot_figs" | "design_figs"
+        ) {
             // These harnesses build their own instances per run (AMOSA
             // designs on 144 tiles, or dozens of faulted full-trace
             // sims) — repeat samples would redo identical work, so time

@@ -29,10 +29,12 @@ use crate::noc::builder::{
 };
 use crate::noc::routing::RouteSet;
 use crate::noc::topology::Topology;
-use crate::optim::placement::optimize_placement;
+use crate::optim::amosa::SearchObserver;
+use crate::optim::placement::optimize_placement_observed;
 use crate::optim::wiplace::build_wireless;
 use crate::scenario::{ModelId, Scenario, ScenarioKey};
 use crate::schedule::SchedulePolicy;
+use crate::telemetry::search::{record_stage, SearchSink, SearchStage};
 use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
 use crate::util::exec::par_map;
@@ -83,6 +85,13 @@ pub struct Ctx {
     traffic: HashMap<ScenarioKey, Arc<TrafficModel>>,
     wireline: HashMap<usize, Arc<Topology>>, // per k_max
     instances: HashMap<NocKind, Arc<NocInstance>>,
+    /// Optional design-search trace sink ([`Ctx::observe_search`]).
+    /// Attached to every [`DesignConfig`] this context derives, so each
+    /// search pass (mesh placement, per-k wireline AMOSA, greedy WI
+    /// placement) deposits its convergence stage. `None` is the
+    /// zero-overhead default; caches still apply, so attach the sink
+    /// *before* the first design if the trace must cover it.
+    search: Option<SearchSink>,
 }
 
 impl Ctx {
@@ -107,7 +116,16 @@ impl Ctx {
             traffic: HashMap::new(),
             wireline: HashMap::new(),
             instances: HashMap::new(),
+            search: None,
         }
+    }
+
+    /// Attach a design-search trace sink: every optimization pass this
+    /// context runs from now on records its convergence stage into
+    /// `sink`. Read-only — designs are byte-identical with or without it
+    /// (pinned by `tests/search_obs.rs`).
+    pub fn observe_search(&mut self, sink: SearchSink) {
+        self.search = Some(sink);
     }
 
     /// Context for a typed scenario: validates and builds the platform,
@@ -165,7 +183,10 @@ impl Ctx {
     }
 
     pub fn design_cfg(&self) -> DesignConfig {
-        DesignConfig::scaled(&self.sys, self.effort, self.seed)
+        DesignConfig {
+            observer: self.search.clone(),
+            ..DesignConfig::scaled(&self.sys, self.effort, self.seed)
+        }
     }
 
     pub fn trace_cfg(&self) -> TraceConfig {
@@ -183,7 +204,12 @@ impl Ctx {
     /// handle on hits).
     pub fn mesh_sys(&mut self) -> Arc<SystemConfig> {
         if self.mesh_sys.is_none() {
-            self.mesh_sys = Some(Arc::new(optimize_placement(&self.sys, self.seed)));
+            let mut obs = self.search.as_ref().map(|_| SearchObserver::new());
+            let placed = optimize_placement_observed(&self.sys, self.seed, obs.as_mut());
+            if let (Some(sink), Some(obs)) = (&self.search, &obs) {
+                record_stage(sink, SearchStage::from_observer("placement", obs));
+            }
+            self.mesh_sys = Some(Arc::new(placed));
         }
         self.mesh_sys.clone().unwrap()
     }

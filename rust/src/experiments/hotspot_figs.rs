@@ -89,6 +89,11 @@ pub fn hotspot_figs(ctx: &mut Ctx) -> Report {
     let mut reduction_sum = 0.0;
     let mut reduction_n = 0u32;
     let mut lenet_wihet_trace: Option<String> = None;
+    // ROADMAP item 5 groundwork: exact per-tile activity (router
+    // flit-traversal counters) vs the phase-span upper bound every tile
+    // being "on" for the whole timeline would charge.
+    let mut counter_active = 0u64;
+    let mut span_active = 0u64;
 
     for name in ["lenet", "cdbnet"] {
         let model: ModelId = name.parse().expect("preset exists");
@@ -96,6 +101,17 @@ pub fn hotspot_figs(ctx: &mut Ctx) -> Report {
         let tm = ctx.traffic_on(model.clone(), &sys);
         let (_, mesh_tel) = run_observed(&mesh_sys, &mesh, &mesh_tm, &cfg);
         let (_, wihet_tel) = run_observed(&sys, &wihet, &tm, &cfg);
+        for (tel, n_tiles) in
+            [(&mesh_tel, mesh_sys.num_tiles()), (&wihet_tel, sys.num_tiles())]
+        {
+            counter_active += tel.tile_active.iter().sum::<u64>();
+            span_active += tel
+                .spans
+                .iter()
+                .filter(|s| s.cat == "phase")
+                .map(|s| (s.end - s.start) * n_tiles as u64)
+                .sum::<u64>();
+        }
 
         // -- latency tails ---------------------------------------------
         let (mp, wp) = (mesh_tel.percentiles(), wihet_tel.percentiles());
@@ -199,6 +215,11 @@ pub fn hotspot_figs(ctx: &mut Ctx) -> Report {
 
     let headline = if reduction_n == 0 { 1.0 } else { reduction_sum / reduction_n as f64 };
     rep.scalar("wihetnoc_p99_reduction_x", headline, "x");
+    // Share of span-charged tile-cycles that carried actual router
+    // activity — how far the span-based energy accounting overestimates
+    // what the exact counters meter (ROADMAP item 5).
+    let active_pct = 100.0 * counter_active as f64 / span_active.max(1) as f64;
+    rep.scalar("tile_active_vs_span_pct", active_pct, "%");
     rep.table(
         "link_heatmap_top",
         &["model", "noc", "link", "a", "b", "flits", "utilization"],
@@ -210,7 +231,9 @@ pub fn hotspot_figs(ctx: &mut Ctx) -> Report {
     }
     out.push_str(&format!(
         "\n  WiHetNoC cuts p99 latency {headline:.2}x vs the optimized mesh\n  \
-         (mean over workloads; trace.json + heatmap.csv attached as artifacts)\n"
+         (mean over workloads; trace.json + heatmap.csv attached as artifacts)\n  \
+         exact tile-activity counters cover {active_pct:.2}% of the span-charged\n  \
+         tile-cycles — the overlap-energy correction ROADMAP item 5 will apply\n"
     ));
     rep.set_text(out);
     rep

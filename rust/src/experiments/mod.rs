@@ -25,6 +25,7 @@ pub mod workload_figs; // non-paper workloads x schedules on 12x12
 pub mod scale_figs; // multi-chip data-parallel fabric scaling
 pub mod resilience_figs; // fault injection: graceful degradation sweeps
 pub mod hotspot_figs; // telemetry: link heatmaps + tail latency, mesh vs WiHetNoC
+pub mod design_figs; // design-search observability: AMOSA convergence + eval profiler
 
 pub use ctx::{Ctx, Effort};
 pub use registry::{find, ids, run, run_many, run_many_threads, Experiment, ALL, REGISTRY};

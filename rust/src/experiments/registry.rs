@@ -15,8 +15,8 @@ use std::sync::LazyLock;
 use super::ctx::{Ctx, Effort};
 use super::report::Report;
 use super::{
-    compare_figs, hotspot_figs, optim_figs, param_figs, resilience_figs, scale_figs, table1,
-    traffic_figs, wireless_figs, workload_figs,
+    compare_figs, design_figs, hotspot_figs, optim_figs, param_figs, resilience_figs, scale_figs,
+    table1, traffic_figs, wireless_figs, workload_figs,
 };
 use crate::error::WihetError;
 use crate::util::exec::{par_map_threads, thread_count};
@@ -187,6 +187,13 @@ pub const REGISTRY: &[Experiment] = &[
         min_effort: Effort::Quick,
         run: |ctx| Ok(hotspot_figs::hotspot_figs(ctx)),
     },
+    Experiment {
+        id: "design_figs",
+        title: "AMOSA convergence, Pareto snapshots & design-search eval attribution",
+        paper: "",
+        min_effort: Effort::Quick,
+        run: |ctx| Ok(design_figs::design_figs(ctx)),
+    },
 ];
 
 /// All experiment ids, in registry order — a view over [`REGISTRY`].
@@ -265,7 +272,7 @@ mod tests {
     #[test]
     fn all_is_a_view_over_the_registry() {
         assert_eq!(ALL.len(), REGISTRY.len());
-        assert_eq!(ALL.len(), 20);
+        assert_eq!(ALL.len(), 21);
         for (id, e) in ALL.iter().zip(REGISTRY) {
             assert_eq!(*id, e.id);
         }

@@ -26,7 +26,7 @@ use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
 use wihetnoc::fabric::run_fabric_obs;
 use wihetnoc::schedule::run_schedule_obs;
-use wihetnoc::telemetry::{chrome_trace, Telemetry};
+use wihetnoc::telemetry::{chrome_trace, search_sink, sink_trace, Telemetry};
 use wihetnoc::workload::preset_names;
 use wihetnoc::{
     Fabric, FaultPlan, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError,
@@ -277,11 +277,29 @@ fn cmd_design(argv: &[String]) -> Result<(), String> {
         ArgSpec { name: "kmax", help: "router port bound (default: scaled)", default: None, is_flag: false },
         ArgSpec { name: "nwi", help: "GPU-MC wireless interfaces (default: scaled)", default: None, is_flag: false },
         ArgSpec { name: "channels", help: "GPU-MC channels (default: scaled)", default: None, is_flag: false },
+        ArgSpec {
+            name: "search-trace",
+            help: "write the AMOSA convergence trace JSON to this path",
+            default: None,
+            is_flag: false,
+        },
+        ArgSpec {
+            name: "profile",
+            help: "print the design-search eval-attribution table",
+            default: None,
+            is_flag: true,
+        },
     ]);
     let args = parse(argv, &specs)?;
     let noc: NocKind = args.get_or("noc", "wihetnoc").parse().map_err(str_err)?;
+    let search_path = args.get("search-trace").map(|s| s.to_string());
+    let want_profile = args.has_flag("profile");
+    let sink = (search_path.is_some() || want_profile).then(search_sink);
     let scenario = scenario_from(&args)?.with_noc(noc);
     let mut designer = NocDesigner::for_scenario(&scenario).map_err(str_err)?;
+    if let Some(sink) = &sink {
+        designer = designer.observe(sink.clone());
+    }
     if args.get("kmax").is_some() {
         designer = designer.k_max(args.get_usize("kmax", 0)?);
     }
@@ -335,6 +353,28 @@ fn cmd_design(argv: &[String]) -> Result<(), String> {
             print!(" ({},{})", wi.router, wi.channel);
         }
         println!();
+    }
+    if let Some(sink) = &sink {
+        let trace = sink_trace(sink);
+        if want_profile {
+            print!("\n{}", trace.profile_text());
+        }
+        if let Some(path) = &search_path {
+            if let Some(parent) = std::path::Path::new(path).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)
+                        .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+                }
+            }
+            let mut text = trace.to_json().dump();
+            text.push('\n');
+            std::fs::write(path, text).map_err(|e| format!("writing {path}: {e}"))?;
+            eprintln!(
+                "[search trace: {} stages, {} evals -> {path}]",
+                trace.stages().len(),
+                trace.total_evals(),
+            );
+        }
     }
     Ok(())
 }

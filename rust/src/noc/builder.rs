@@ -18,10 +18,17 @@ use super::topology::Topology;
 use super::wireless::WirelessSpec;
 use crate::error::WihetError;
 use crate::model::{SystemConfig, TileKind};
-use crate::optim::amosa::{Amosa, AmosaConfig};
+use crate::optim::amosa::{Amosa, AmosaConfig, SearchObserver};
 use crate::optim::linkplace::LinkPlacement;
-use crate::optim::wiplace::build_wireless;
+use crate::optim::wiplace::build_wireless_counted;
 use crate::scenario::{Effort, Scenario};
+use crate::telemetry::search::{record_stage, SearchSink, SearchStage};
+
+/// Default seed for the design flow — the paper evaluates **one**
+/// designed WiHetNoC, so every entry point that does not take an
+/// explicit seed (`DesignConfig::default`, `NocDesigner::new`) must
+/// derive the *same* topology. Keep them on this one constant.
+pub const DEFAULT_DESIGN_SEED: u64 = 0xC0DE;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NocKind {
@@ -101,6 +108,14 @@ pub struct DesignConfig {
     /// AMOSA effort for the wireline optimization.
     pub amosa: AmosaConfig,
     pub seed: u64,
+    /// Optional design-search trace sink. `None` (the default) is the
+    /// zero-overhead path; with a sink attached each search pass records
+    /// a read-only convergence stage (`wireline:k<k>` / `wireless`) into
+    /// the shared [`crate::telemetry::search::SearchTrace`] — the
+    /// designed NoC stays byte-identical either way (pinned by
+    /// `tests/search_obs.rs`). Shared (`Arc`) so a cloned config carries
+    /// the same trace through `par_map` design fan-outs.
+    pub observer: Option<SearchSink>,
 }
 
 impl Default for DesignConfig {
@@ -117,7 +132,8 @@ impl Default for DesignConfig {
                 iters_per_temp: 400,
                 ..Default::default()
             },
-            seed: 0xC0DE,
+            seed: DEFAULT_DESIGN_SEED,
+            observer: None,
         }
     }
 }
@@ -181,10 +197,39 @@ pub fn mesh_opt(sys: &SystemConfig, adaptive: bool) -> NocInstance {
 }
 
 /// Run the Eqn 6-9 wireline optimization and return the chosen topology.
+/// With `cfg.observer` attached, the pass deposits a `wireline:k<k_max>`
+/// convergence stage (`:metal` suffix for the unbounded-reach HetNoC
+/// ablation) into the sink — the topology is byte-identical either way.
 pub fn optimize_wireline(
     sys: &SystemConfig,
     traffic: &TrafficMatrix,
     cfg: &DesignConfig,
+) -> Topology {
+    let mut obs = cfg.observer.as_ref().map(|_| SearchObserver::new());
+    let topo = optimize_wireline_observed(sys, traffic, cfg, obs.as_mut());
+    if let (Some(sink), Some(obs)) = (&cfg.observer, &obs) {
+        record_stage(sink, SearchStage::from_observer(wireline_stage_name(cfg), obs));
+    }
+    topo
+}
+
+/// Stage key the wireline pass records under: distinguishes per-k runs
+/// and the unbounded-reach (metal-only, HetNoC) ablation.
+pub fn wireline_stage_name(cfg: &DesignConfig) -> String {
+    match cfg.max_link_mm {
+        Some(_) => format!("wireline:k{}", cfg.k_max),
+        None => format!("wireline:k{}:metal", cfg.k_max),
+    }
+}
+
+/// [`optimize_wireline`] with an explicit observer handle (ignores
+/// `cfg.observer`) — for callers that package the stage themselves, like
+/// the `design_figs` experiment.
+pub fn optimize_wireline_observed(
+    sys: &SystemConfig,
+    traffic: &TrafficMatrix,
+    cfg: &DesignConfig,
+    obs: Option<&mut SearchObserver>,
 ) -> Topology {
     let num_links = Topology::mesh(sys).links.len();
     let problem = LinkPlacement::new(sys, traffic, num_links, cfg.k_max)
@@ -192,7 +237,7 @@ pub fn optimize_wireline(
     let mut amosa_cfg = cfg.amosa.clone();
     amosa_cfg.seed = cfg.seed;
     let mut opt = Amosa::new(&problem, amosa_cfg);
-    opt.run();
+    opt.run_observed(obs);
     // Balanced scalarization over (Ū, σ): the per-k_max EDP choice happens
     // in the Fig 11 experiment; here we return the balanced knee point.
     let best = opt.best_by(&[1.0, 1.0]);
@@ -223,7 +268,7 @@ pub fn wi_het_noc_on(
     cfg: &DesignConfig,
     topo: Arc<Topology>,
 ) -> NocInstance {
-    let air = build_wireless(
+    let (air, wi_evals) = build_wireless_counted(
         &topo,
         traffic,
         &sys.cpus(),
@@ -231,6 +276,11 @@ pub fn wi_het_noc_on(
         cfg.n_wi,
         cfg.gpu_channels,
     );
+    if let Some(sink) = &cfg.observer {
+        // Greedy WI placement has no temperature schedule — record it as
+        // a flat stage so the profiler still attributes its evaluations.
+        record_stage(sink, SearchStage::flat("wireless", wi_evals));
+    }
     let routes = alash_routes(sys, &topo, &air, traffic);
     NocInstance { kind: NocKind::WiHetNoc, topo, routes, air }
 }
@@ -323,7 +373,7 @@ impl NocDesigner {
     /// platform-scaled quick-effort knobs and the generic many-to-few
     /// traffic (replace via [`NocDesigner::traffic`]).
     pub fn new(sys: SystemConfig) -> Self {
-        let cfg = DesignConfig::scaled(&sys, Effort::Quick, 0xC0DE);
+        let cfg = DesignConfig::scaled(&sys, Effort::Quick, DEFAULT_DESIGN_SEED);
         NocDesigner { sys, kind: NocKind::WiHetNoc, cfg, traffic: None }
     }
 
@@ -378,6 +428,15 @@ impl NocDesigner {
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self.cfg.amosa.seed = seed;
+        self
+    }
+
+    /// Attach a search-trace sink: every optimization pass the build runs
+    /// (wireline AMOSA, greedy WI placement) deposits its convergence
+    /// stage into `sink`. Strictly read-only — the designed NoC is
+    /// byte-identical with or without it.
+    pub fn observe(mut self, sink: SearchSink) -> Self {
+        self.cfg.observer = Some(sink);
         self
     }
 
@@ -518,7 +577,7 @@ mod tests {
     #[test]
     fn scaled_cfg_matches_default_on_paper_platform() {
         let sys = SystemConfig::paper_8x8();
-        let cfg = DesignConfig::scaled(&sys, Effort::Full, 0xC0DE);
+        let cfg = DesignConfig::scaled(&sys, Effort::Full, DEFAULT_DESIGN_SEED);
         let def = DesignConfig::default();
         assert_eq!(cfg.n_wi, def.n_wi);
         assert_eq!(cfg.gpu_channels, def.gpu_channels);

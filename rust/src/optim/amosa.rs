@@ -11,6 +11,34 @@
 //! All objectives are minimized. When the archive exceeds `hard_limit` it
 //! is thinned to `soft_limit` by greedy nearest-pair clustering in
 //! objective space.
+//!
+//! # Observer contract
+//!
+//! [`Amosa::run_observed`] takes an `Option<&mut SearchObserver>` — the
+//! same zero-overhead idiom as the simulator's `Option<&mut Telemetry>`
+//! hooks. With `None` every hook is a never-taken branch and
+//! [`Amosa::run`] is byte-identical to the unobserved annealer. With an
+//! observer attached the hooks are **strictly read-only**: they never
+//! draw from the annealer's [`Rng`], never touch the archive or the
+//! current point, and never change an acceptance decision — so the
+//! designed solution is byte-identical with or without one (pinned by
+//! `tests/search_obs.rs`). The observer sees
+//!
+//! * every evaluated objective vector (it maintains its own best-so-far
+//!   non-dominated front, so its hypervolume series is monotone
+//!   non-decreasing by construction — archive clustering can shrink the
+//!   *archive's* front, never the observer's),
+//! * every acceptance verdict (accepted / uphill-accepted / rejected,
+//!   plus dominated-candidate and archive-insertion counts),
+//! * one [`LevelStats`] snapshot per temperature level: temperature,
+//!   cumulative evals, the verdict counters, archive size, objective
+//!   ranges, deterministic hypervolume vs a fixed reference point, and
+//!   the Pareto-archive objective vectors at that cooling step.
+//!
+//! The reference point is fixed once, from the seed archive (component
+//! max over finite seed objectives plus a 25% span margin), so
+//! hypervolume is comparable across levels and deterministic given the
+//! seed.
 
 use crate::util::rng::Rng;
 
@@ -89,6 +117,195 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     strictly
 }
 
+/// One per-temperature-level convergence snapshot (see the module docs'
+/// observer contract). `front` is the Pareto-archive snapshot: the
+/// objective vectors of every archive member at the end of the level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelStats {
+    /// Temperature-level index (0 = hottest).
+    pub level: usize,
+    pub temp: f64,
+    /// Cumulative problem evaluations at the end of this level
+    /// (including the seed-archive evaluations).
+    pub evals: u64,
+    /// Candidates accepted this level (deterministic + uphill).
+    pub accepted: u64,
+    /// Of those, probabilistic amount-of-domination acceptances.
+    pub accepted_uphill: u64,
+    /// Candidates rejected this level.
+    pub rejected: u64,
+    /// Candidates dominated by the current point or an archive member.
+    pub dominated: u64,
+    /// Candidates that actually entered the archive this level.
+    pub archived: u64,
+    pub archive_len: usize,
+    /// Componentwise objective minima over the archive.
+    pub obj_min: Vec<f64>,
+    /// Componentwise objective maxima over the archive.
+    pub obj_max: Vec<f64>,
+    /// Hypervolume of the observer's best-so-far front vs the fixed
+    /// reference point (exact for 2 objectives, 0.0 otherwise).
+    pub hypervolume: f64,
+    /// Pareto-archive snapshot: archive objective vectors at this level.
+    pub front: Vec<Vec<f64>>,
+}
+
+/// Read-only convergence recorder for one [`Amosa::run_observed`] pass.
+/// See the module docs for the contract; package a finished observer
+/// into a [`crate::telemetry::search::SearchTrace`] stage for export.
+#[derive(Debug, Clone, Default)]
+pub struct SearchObserver {
+    /// One snapshot per temperature level, in cooling order.
+    pub levels: Vec<LevelStats>,
+    /// Fixed hypervolume reference point, derived from the seed archive
+    /// at [`Amosa::run_observed`] start (empty until then, or forever if
+    /// no seed solution evaluated finite).
+    pub ref_point: Vec<f64>,
+    /// Best-so-far non-dominated front over *every* finite evaluation —
+    /// grows monotonically in coverage, unlike the clustered archive.
+    front: Vec<Vec<f64>>,
+    accepted: u64,
+    accepted_uphill: u64,
+    rejected: u64,
+    dominated: u64,
+    archived: u64,
+}
+
+impl SearchObserver {
+    pub fn new() -> SearchObserver {
+        SearchObserver::default()
+    }
+
+    /// Total evaluations recorded (cumulative count of the last level).
+    pub fn evals(&self) -> u64 {
+        self.levels.last().map_or(0, |l| l.evals)
+    }
+
+    /// The best-so-far non-dominated front (objective vectors).
+    pub fn best_front(&self) -> &[Vec<f64>] {
+        &self.front
+    }
+
+    /// Fix the reference point from the seed archive: componentwise max
+    /// over finite members plus a 25% span margin. No finite seed member
+    /// leaves it empty (hypervolume stays 0.0).
+    fn start(&mut self, seed_objs: &[&[f64]], m: usize) {
+        self.levels.clear();
+        self.front.clear();
+        self.ref_point.clear();
+        self.reset_counters();
+        let finite: Vec<&&[f64]> =
+            seed_objs.iter().filter(|o| o.iter().all(|v| v.is_finite())).collect();
+        if !finite.is_empty() {
+            for i in 0..m {
+                let lo = finite.iter().fold(f64::INFINITY, |a, o| a.min(o[i]));
+                let hi = finite.iter().fold(f64::NEG_INFINITY, |a, o| a.max(o[i]));
+                self.ref_point.push(hi + 0.25 * (hi - lo).max(1e-9));
+            }
+        }
+        for o in seed_objs {
+            self.saw(o);
+        }
+    }
+
+    fn reset_counters(&mut self) {
+        self.accepted = 0;
+        self.accepted_uphill = 0;
+        self.rejected = 0;
+        self.dominated = 0;
+        self.archived = 0;
+    }
+
+    /// An objective vector was evaluated: fold it into the best-so-far
+    /// front (non-finite vectors — infeasibility fences — are ignored).
+    fn saw(&mut self, obj: &[f64]) {
+        if !obj.iter().all(|v| v.is_finite()) {
+            return;
+        }
+        if self.front.iter().any(|f| dominates(f, obj) || f[..] == *obj) {
+            return;
+        }
+        self.front.retain(|f| !dominates(obj, f));
+        self.front.push(obj.to_vec());
+    }
+
+    fn verdict(&mut self, accepted: bool, uphill: bool, dominated: bool) {
+        if accepted {
+            self.accepted += 1;
+            if uphill {
+                self.accepted_uphill += 1;
+            }
+        } else {
+            self.rejected += 1;
+        }
+        if dominated {
+            self.dominated += 1;
+        }
+    }
+
+    fn archived(&mut self) {
+        self.archived += 1;
+    }
+
+    /// Close a temperature level: snapshot the counters, the archive
+    /// front, and the best-so-far hypervolume.
+    fn level_end(&mut self, temp: f64, evals: u64, archive_objs: &[&[f64]]) {
+        let m = archive_objs.first().map_or(0, |o| o.len());
+        let mut obj_min = vec![f64::INFINITY; m];
+        let mut obj_max = vec![f64::NEG_INFINITY; m];
+        for o in archive_objs {
+            for i in 0..m {
+                obj_min[i] = obj_min[i].min(o[i]);
+                obj_max[i] = obj_max[i].max(o[i]);
+            }
+        }
+        self.levels.push(LevelStats {
+            level: self.levels.len(),
+            temp,
+            evals,
+            accepted: self.accepted,
+            accepted_uphill: self.accepted_uphill,
+            rejected: self.rejected,
+            dominated: self.dominated,
+            archived: self.archived,
+            archive_len: archive_objs.len(),
+            obj_min,
+            obj_max,
+            hypervolume: hypervolume_2d(&self.front, &self.ref_point),
+            front: archive_objs.iter().map(|o| o.to_vec()).collect(),
+        });
+        self.reset_counters();
+    }
+}
+
+/// Exact 2-objective hypervolume of a minimization front w.r.t. a
+/// reference point: the area dominated by the front inside the box
+/// `[min, ref)`. Points not strictly dominating `ref_point` contribute
+/// nothing. Returns 0.0 for other objective counts (every problem in
+/// this crate is biobjective) or an unset reference.
+pub fn hypervolume_2d(front: &[Vec<f64>], ref_point: &[f64]) -> f64 {
+    if ref_point.len() != 2 {
+        return 0.0;
+    }
+    let mut pts: Vec<(f64, f64)> = front
+        .iter()
+        .filter(|o| o.len() == 2 && o[0] < ref_point[0] && o[1] < ref_point[1])
+        .map(|o| (o[0], o[1]))
+        .collect();
+    // sweep by ascending f0; a non-dominated front then has strictly
+    // descending f1, and each point owns the rectangle down to the next
+    pts.sort_by(|a, b| a.partial_cmp(b).expect("finite objectives"));
+    let mut hv = 0.0;
+    let mut best1 = ref_point[1];
+    for (x, y) in pts {
+        if y < best1 {
+            hv += (ref_point[0] - x) * (best1 - y);
+            best1 = y;
+        }
+    }
+    hv
+}
+
 pub struct Amosa<'p, P: Problem> {
     pub problem: &'p P,
     pub cfg: AmosaConfig,
@@ -109,16 +326,36 @@ impl<'p, P: Problem> Amosa<'p, P> {
     /// (and its owned `Vec`) is built only when a candidate is actually
     /// accepted or archived.
     pub fn run(&mut self) -> &[Archived<P::Sol>] {
+        self.run_observed(None)
+    }
+
+    /// [`Amosa::run`] with an optional read-only [`SearchObserver`]
+    /// attached (see the module docs for the contract). `None` takes the
+    /// exact same code path as `run`; `Some` records convergence
+    /// snapshots without perturbing a single acceptance decision or RNG
+    /// draw, so the returned archive is byte-identical either way.
+    pub fn run_observed(
+        &mut self,
+        mut obs: Option<&mut SearchObserver>,
+    ) -> &[Archived<P::Sol>] {
         let mut rng = Rng::new(self.cfg.seed);
         let m = self.problem.num_objectives();
         let mut cand_obj = vec![0.0; m];
         let mut ranges = vec![0.0; m];
         // Seed archive with a few random solutions.
+        let mut seed_objs: Vec<Vec<f64>> = Vec::new();
         for _ in 0..self.cfg.soft_limit.min(8) {
             let s = self.problem.initial(&mut rng);
             self.evaluations += 1;
             self.problem.objectives_into(&s, &mut cand_obj);
+            if obs.is_some() {
+                seed_objs.push(cand_obj.clone());
+            }
             self.add_to_archive(Archived { sol: s, obj: cand_obj.clone() });
+        }
+        if let Some(o) = obs.as_deref_mut() {
+            let views: Vec<&[f64]> = seed_objs.iter().map(|v| v.as_slice()).collect();
+            o.start(&views, m);
         }
         let mut current = self.archive[rng.below(self.archive.len())].clone();
 
@@ -128,8 +365,24 @@ impl<'p, P: Problem> Amosa<'p, P> {
                 let cand_sol = self.problem.perturb(&current.sol, &mut rng);
                 self.evaluations += 1;
                 self.problem.objectives_into(&cand_sol, &mut cand_obj);
+                if let Some(o) = obs.as_deref_mut() {
+                    o.saw(&cand_obj);
+                }
                 self.objective_ranges_into(&mut ranges);
-                current = self.step(current, cand_sol, &cand_obj, &ranges, temp, &mut rng);
+                current = self.step(
+                    current,
+                    cand_sol,
+                    &cand_obj,
+                    &ranges,
+                    temp,
+                    &mut rng,
+                    obs.as_deref_mut(),
+                );
+            }
+            if let Some(o) = obs.as_deref_mut() {
+                let archive_objs: Vec<&[f64]> =
+                    self.archive.iter().map(|a| a.obj.as_slice()).collect();
+                o.level_end(temp, self.evaluations, &archive_objs);
             }
             temp *= self.cfg.cooling;
         }
@@ -138,7 +391,9 @@ impl<'p, P: Problem> Amosa<'p, P> {
 
     /// One AMOSA acceptance step; returns the (possibly new) current point.
     /// `cand_obj`/`ranges` are borrowed scratch — the candidate is only
-    /// materialized as an `Archived` on acceptance.
+    /// materialized as an `Archived` on acceptance. The observer hooks
+    /// record the verdict but never influence it.
+    #[allow(clippy::too_many_arguments)]
     fn step(
         &mut self,
         current: Archived<P::Sol>,
@@ -147,6 +402,7 @@ impl<'p, P: Problem> Amosa<'p, P> {
         ranges: &[f64],
         temp: f64,
         rng: &mut Rng,
+        mut obs: Option<&mut SearchObserver>,
     ) -> Archived<P::Sol> {
         if dominates(&current.obj, cand_obj) {
             // current (and possibly archive members) dominate the candidate:
@@ -161,7 +417,11 @@ impl<'p, P: Problem> Amosa<'p, P> {
             }
             let avg = dom_sum / k as f64;
             let p = 1.0 / (1.0 + (avg * temp).exp());
-            if rng.chance(p) {
+            let take = rng.chance(p);
+            if let Some(o) = obs.as_deref_mut() {
+                o.verdict(take, take, true);
+            }
+            if take {
                 Archived { sol: cand_sol, obj: cand_obj.to_vec() }
             } else {
                 current
@@ -170,7 +430,13 @@ impl<'p, P: Problem> Amosa<'p, P> {
             // candidate dominates current: accept; archive-dominance decides
             // whether it also enters the archive.
             let cand = Archived { sol: cand_sol, obj: cand_obj.to_vec() };
-            self.add_to_archive(cand.clone());
+            let inserted = self.add_to_archive(cand.clone());
+            if let Some(o) = obs.as_deref_mut() {
+                o.verdict(true, false, false);
+                if inserted {
+                    o.archived();
+                }
+            }
             cand
         } else {
             // mutually non-dominating w.r.t. current.
@@ -188,14 +454,24 @@ impl<'p, P: Problem> Amosa<'p, P> {
                     .sum::<f64>()
                     / dominated_by_archive as f64;
                 let p = 1.0 / (1.0 + (avg * temp).exp());
-                if rng.chance(p) {
+                let take = rng.chance(p);
+                if let Some(o) = obs.as_deref_mut() {
+                    o.verdict(take, take, true);
+                }
+                if take {
                     Archived { sol: cand_sol, obj: cand_obj.to_vec() }
                 } else {
                     current
                 }
             } else {
                 let cand = Archived { sol: cand_sol, obj: cand_obj.to_vec() };
-                self.add_to_archive(cand.clone());
+                let inserted = self.add_to_archive(cand.clone());
+                if let Some(o) = obs.as_deref_mut() {
+                    o.verdict(true, false, false);
+                    if inserted {
+                        o.archived();
+                    }
+                }
                 cand
             }
         }
@@ -221,20 +497,23 @@ impl<'p, P: Problem> Amosa<'p, P> {
         out
     }
 
-    /// Insert and keep the archive mutually non-dominating.
-    pub fn add_to_archive(&mut self, cand: Archived<P::Sol>) {
+    /// Insert and keep the archive mutually non-dominating. Returns
+    /// whether the candidate actually entered (a dominated or duplicate
+    /// candidate is dropped).
+    pub fn add_to_archive(&mut self, cand: Archived<P::Sol>) -> bool {
         if self
             .archive
             .iter()
             .any(|a| dominates(&a.obj, &cand.obj) || a.obj == cand.obj)
         {
-            return;
+            return false;
         }
         self.archive.retain(|a| !dominates(&cand.obj, &a.obj));
         self.archive.push(cand);
         if self.archive.len() > self.cfg.hard_limit {
             self.cluster_to(self.cfg.soft_limit);
         }
+        true
     }
 
     /// Greedy clustering: repeatedly merge the closest pair (in normalized
@@ -368,6 +647,99 @@ mod tests {
         let mut a = Amosa::new(&p, cfg);
         a.run();
         assert!(a.archive.len() <= 8);
+    }
+
+    #[test]
+    fn hypervolume_2d_exact_on_known_fronts() {
+        let r = [4.0, 4.0];
+        // single point: one rectangle
+        assert_eq!(hypervolume_2d(&[vec![1.0, 1.0]], &r), 9.0);
+        // staircase: (1,2) and (2,1) — union of rectangles, overlap once
+        let hv = hypervolume_2d(&[vec![1.0, 2.0], vec![2.0, 1.0]], &r);
+        assert!((hv - 8.0).abs() < 1e-12, "{hv}");
+        // point outside the reference box contributes nothing
+        assert_eq!(hypervolume_2d(&[vec![5.0, 5.0]], &r), 0.0);
+        // order-independent
+        let ba = hypervolume_2d(&[vec![2.0, 1.0], vec![1.0, 2.0]], &r);
+        assert_eq!(hv, ba);
+        // unset / wrong-arity reference
+        assert_eq!(hypervolume_2d(&[vec![1.0, 1.0]], &[]), 0.0);
+    }
+
+    #[test]
+    fn observer_is_neutral_and_levels_account_for_every_eval() {
+        let p = Toy;
+        let cfg = AmosaConfig { iters_per_temp: 40, ..Default::default() };
+        let mut plain = Amosa::new(&p, cfg.clone());
+        plain.run();
+        let reference: Vec<f64> = plain.archive.iter().map(|m| m.sol).collect();
+
+        let mut observed = Amosa::new(&p, cfg.clone());
+        let mut obs = SearchObserver::new();
+        observed.run_observed(Some(&mut obs));
+        let with_obs: Vec<f64> = observed.archive.iter().map(|m| m.sol).collect();
+        assert_eq!(reference, with_obs, "observer perturbed the archive");
+        assert_eq!(plain.evaluations, observed.evaluations);
+
+        // one snapshot per temperature level, evals fully attributed
+        assert!(!obs.levels.is_empty());
+        assert_eq!(obs.evals(), observed.evaluations);
+        let mut expect = 8u64; // seed evaluations
+        for l in &obs.levels {
+            expect += cfg.iters_per_temp as u64;
+            assert_eq!(l.evals, expect, "level {} evals", l.level);
+            assert_eq!(
+                l.accepted + l.rejected,
+                cfg.iters_per_temp as u64,
+                "level {} verdicts", l.level
+            );
+            assert!(l.accepted_uphill <= l.accepted);
+            assert_eq!(l.archive_len, l.front.len());
+            assert!(l.archive_len >= 1);
+            for (lo, hi) in l.obj_min.iter().zip(&l.obj_max) {
+                assert!(lo <= hi);
+            }
+        }
+        // temperatures cool geometrically across snapshots
+        for w in obs.levels.windows(2) {
+            assert!(w[1].temp < w[0].temp);
+        }
+    }
+
+    #[test]
+    fn observer_hypervolume_is_monotone_nondecreasing() {
+        let p = Toy;
+        let mut a = Amosa::new(&p, AmosaConfig { iters_per_temp: 60, ..Default::default() });
+        let mut obs = SearchObserver::new();
+        a.run_observed(Some(&mut obs));
+        assert_eq!(obs.ref_point.len(), 2);
+        let hv: Vec<f64> = obs.levels.iter().map(|l| l.hypervolume).collect();
+        assert!(hv.last().copied().unwrap() > 0.0, "{hv:?}");
+        for w in hv.windows(2) {
+            assert!(w[1] >= w[0], "hypervolume decreased: {hv:?}");
+        }
+        // the best-so-far front is itself non-dominated
+        let f = obs.best_front();
+        for i in 0..f.len() {
+            for j in 0..f.len() {
+                assert!(i == j || !dominates(&f[i], &f[j]));
+            }
+        }
+    }
+
+    #[test]
+    fn observed_rerun_is_deterministic() {
+        let p = Toy;
+        let snap = |seed| {
+            let mut a = Amosa::new(
+                &p,
+                AmosaConfig { seed, iters_per_temp: 20, ..Default::default() },
+            );
+            let mut obs = SearchObserver::new();
+            a.run_observed(Some(&mut obs));
+            format!("{obs:?}")
+        };
+        assert_eq!(snap(13), snap(13));
     }
 
     #[test]

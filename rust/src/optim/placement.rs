@@ -7,7 +7,7 @@
 //! objectives are closed-form — no BFS needed.
 
 use crate::model::{SystemConfig, TileKind};
-use crate::optim::amosa::{Amosa, AmosaConfig, Problem};
+use crate::optim::amosa::{Amosa, AmosaConfig, Problem, SearchObserver};
 use crate::util::rng::Rng;
 
 pub struct MeshPlacement<'a> {
@@ -89,6 +89,17 @@ impl<'a> Problem for MeshPlacement<'a> {
 /// Optimize CPU/MC placement on the mesh; returns a `SystemConfig` with
 /// the best (balanced-scalarization) placement.
 pub fn optimize_placement(sys: &SystemConfig, seed: u64) -> SystemConfig {
+    optimize_placement_observed(sys, seed, None)
+}
+
+/// [`optimize_placement`] with an optional read-only [`SearchObserver`]
+/// (the "placement" stage of the design-search eval profiler). The
+/// returned placement is byte-identical with or without one.
+pub fn optimize_placement_observed(
+    sys: &SystemConfig,
+    seed: u64,
+    obs: Option<&mut SearchObserver>,
+) -> SystemConfig {
     let p = MeshPlacement { sys, gpu_weight: 1.0, cpu_weight: 1.0 };
     let cfg = AmosaConfig {
         initial_temp: 50.0,
@@ -98,7 +109,7 @@ pub fn optimize_placement(sys: &SystemConfig, seed: u64) -> SystemConfig {
         ..Default::default()
     };
     let mut a = Amosa::new(&p, cfg);
-    a.run();
+    a.run_observed(obs);
     let best = a.best_by(&[1.0, 1.0]);
     sys.with_tiles(best.sol.clone())
 }

@@ -25,7 +25,23 @@ pub fn place_wis(
     first_channel: usize,
     channels: usize,
 ) -> Vec<(usize, usize)> {
+    place_wis_counted(topo, traffic, n_wi, first_channel, channels).0
+}
+
+/// [`place_wis`] plus its evaluation count: how many traffic-weighted
+/// hop-count objective evaluations the greedy search spent — the
+/// "wireless" stage of the design-search eval profiler
+/// (`telemetry::search`). Counting is pure bookkeeping; the placement is
+/// byte-identical to [`place_wis`].
+pub fn place_wis_counted(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    n_wi: usize,
+    first_channel: usize,
+    channels: usize,
+) -> (Vec<(usize, usize)>, u64) {
     assert!(channels >= 1);
+    let mut evals = 0u64;
     let n = topo.n;
     // base all-pairs hop counts
     let mut hops = vec![0u32; n * n];
@@ -49,6 +65,7 @@ pub fn place_wis(
             }
             let mut trial = wis.clone();
             trial.push(cand);
+            evals += 1;
             let cost = twhc_with_wis(&hops, traffic, &trial, n);
             let better = match best {
                 None => true,
@@ -78,7 +95,7 @@ pub fn place_wis(
     for (rank, &idx) in order.iter().enumerate() {
         out[idx] = (wis[idx], first_channel + rank % channels);
     }
-    out
+    (out, evals)
 }
 
 /// Traffic-weighted hop count when `wis` routers are pairwise connected by
@@ -121,6 +138,19 @@ pub fn build_wireless(
     n_wi: usize,
     gpu_channels: usize,
 ) -> WirelessSpec {
+    build_wireless_counted(topo, traffic, cpus, mcs, n_wi, gpu_channels).0
+}
+
+/// [`build_wireless`] plus the greedy placement's evaluation count (0
+/// when no GPU WIs are placed).
+pub fn build_wireless_counted(
+    topo: &Topology,
+    traffic: &TrafficMatrix,
+    cpus: &[usize],
+    mcs: &[usize],
+    n_wi: usize,
+    gpu_channels: usize,
+) -> (WirelessSpec, u64) {
     let mut spec = WirelessSpec::new(1 + gpu_channels);
     for &c in cpus {
         spec.add_wi(c, 0);
@@ -128,12 +158,15 @@ pub fn build_wireless(
     for &m in mcs {
         spec.add_wi(m, 0);
     }
+    let mut evals = 0;
     if gpu_channels > 0 && n_wi > 0 {
-        for (router, channel) in place_wis(topo, traffic, n_wi, 1, gpu_channels) {
+        let (placed, e) = place_wis_counted(topo, traffic, n_wi, 1, gpu_channels);
+        evals = e;
+        for (router, channel) in placed {
             spec.add_wi(router, channel);
         }
     }
-    spec
+    (spec, evals)
 }
 
 #[cfg(test)]
@@ -193,6 +226,23 @@ mod tests {
             per[c] += 1;
         }
         assert!(per[1..=4].iter().all(|&k| k == 2), "{per:?}");
+    }
+
+    #[test]
+    fn counted_placement_is_identical_and_attributes_every_eval() {
+        let sys = SystemConfig::paper_8x8();
+        let topo = Topology::mesh(&sys);
+        let tm = corner_traffic(64);
+        let plain = place_wis(&topo, &tm, 4, 1, 2);
+        let (counted, evals) = place_wis_counted(&topo, &tm, 4, 1, 2);
+        assert_eq!(plain, counted, "counting must not perturb the placement");
+        // greedy scans every non-WI candidate per added WI
+        assert_eq!(evals, 64 + 63 + 62 + 61);
+        let (spec, e) = build_wireless_counted(&topo, &tm, &sys.cpus(), &sys.mcs(), 4, 2);
+        assert_eq!(e, evals);
+        assert_eq!(spec.wis.len(), 8 + 4);
+        let (_, zero) = build_wireless_counted(&topo, &tm, &sys.cpus(), &sys.mcs(), 0, 2);
+        assert_eq!(zero, 0);
     }
 
     #[test]

@@ -20,17 +20,31 @@
 //! * [`trace`] — Chrome-trace/Perfetto JSON export of the
 //!   phase×microbatch timeline (release/drain spans, fabric collective
 //!   steps, fault reroute instants) plus its schema validator.
+//! * [`search`] — [`SearchTrace`], the *design-search* observability
+//!   counterpart: AMOSA convergence snapshots per temperature level
+//!   (recorded by `optim::amosa::SearchObserver`), a commutative merge
+//!   for parallel per-k designs, and the eval-count profiler behind
+//!   `design --profile` / the `design_figs` experiment.
 //!
 //! Entry points that accept a sink: `NocSim::run_telemetry` /
 //! `run_timeline_telemetry`, `schedule::run_schedule_obs` /
 //! `run_expanded_obs`, `fabric::run_fabric_obs`, and the CLI flags
-//! `--metrics` / `--trace out.json`. The `hotspot_figs` experiment
-//! packages the heatmap and tail series as report artifacts.
+//! `--metrics` / `--trace out.json`; for the design flow,
+//! `DesignConfig::observer` / `NocDesigner::observe` /
+//! `Ctx::observe_search` and the CLI flags `--search-trace` /
+//! `--profile`. The `hotspot_figs` experiment packages the heatmap and
+//! tail series as report artifacts; `design_figs` packages the search
+//! trace.
 
 pub mod hist;
+pub mod search;
 pub mod sink;
 pub mod trace;
 
 pub use hist::LogHistogram;
+pub use search::{
+    record_stage, search_sink, sink_trace, validate_search_trace, SearchSink, SearchStage,
+    SearchTrace,
+};
 pub use sink::{ClassPercentiles, Instant, LatencyPercentiles, Span, Telemetry};
 pub use trace::{chrome_trace, validate_chrome_trace};

@@ -1,0 +1,494 @@
+//! Design-search observability: convergence traces and an eval-count
+//! profiler for the AMOSA design flow (ROADMAP item 3's measurement
+//! groundwork — before building the surrogate fast path, measure where
+//! the ~10^5 evaluations per design go and how early the Pareto front
+//! stabilizes).
+//!
+//! A [`SearchTrace`] is a set of [`SearchStage`]s, one per search pass of
+//! a design: `placement` (mesh CPU/MC AMOSA), `wireline:k<k_max>` (the
+//! Eqn 6-9 link-placement AMOSA, `:metal` suffix for the unbounded-reach
+//! HetNoC ablation), and `wireless` (the greedy WI placement, counted by
+//! its traffic-weighted-hop-count evaluations). AMOSA stages carry the
+//! full per-temperature-level [`LevelStats`] series recorded by a
+//! [`SearchObserver`]; flat stages carry an eval count only.
+//!
+//! Stages are kept in a canonical order (stage name, then serialized
+//! content), so [`SearchTrace::record`] and [`SearchTrace::merge`] are
+//! **commutative**: `Ctx::wirelines`' per-k parallel designs produce a
+//! byte-identical trace at any `WIHETNOC_THREADS` (pinned by
+//! `tests/search_obs.rs`). A [`SearchSink`] (`Arc<Mutex<SearchTrace>>`)
+//! is the shareable handle `DesignConfig`/`Ctx` plumb through the design
+//! flow — each search pass locks it once, at the end, to deposit its
+//! finished stage.
+//!
+//! Exports: [`SearchTrace::to_json`] (validated by
+//! [`validate_search_trace`] and the CI jq smoke), [`SearchTrace::to_csv`]
+//! (one row per temperature level), and [`SearchTrace::profile_text`]
+//! (the `design --profile` eval-attribution table).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::optim::amosa::{LevelStats, SearchObserver};
+use crate::util::json::Json;
+
+/// Schema tag carried by every exported trace document.
+pub const SEARCH_TRACE_SCHEMA: &str = "wihetnoc-search-trace-v1";
+
+/// One search pass of a design: an AMOSA run (with its convergence
+/// series) or a flat counted stage (greedy WI placement).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchStage {
+    /// Stage key: `placement`, `wireline:k6`, `wireline:k6:metal`,
+    /// `wireless`.
+    pub stage: String,
+    /// Total problem evaluations attributed to this stage.
+    pub evals: u64,
+    /// Fixed hypervolume reference point (empty for flat stages).
+    pub ref_point: Vec<f64>,
+    /// Per-temperature-level snapshots (empty for flat stages).
+    pub levels: Vec<LevelStats>,
+}
+
+impl SearchStage {
+    /// Package a finished [`SearchObserver`] as a named stage.
+    pub fn from_observer(stage: impl Into<String>, obs: &SearchObserver) -> SearchStage {
+        SearchStage {
+            stage: stage.into(),
+            evals: obs.evals(),
+            ref_point: obs.ref_point.clone(),
+            levels: obs.levels.clone(),
+        }
+    }
+
+    /// A counted stage without a convergence series (e.g. the greedy
+    /// wireless placement, attributed by its objective evaluations).
+    pub fn flat(stage: impl Into<String>, evals: u64) -> SearchStage {
+        SearchStage { stage: stage.into(), evals, ref_point: Vec::new(), levels: Vec::new() }
+    }
+
+    /// Final best-so-far hypervolume (0.0 for flat stages).
+    pub fn final_hypervolume(&self) -> f64 {
+        self.levels.last().map_or(0.0, |l| l.hypervolume)
+    }
+
+    /// Cumulative evals at the first level whose hypervolume reaches
+    /// `frac` of the final hypervolume. `None` for flat stages or a
+    /// degenerate (zero) final hypervolume.
+    pub fn evals_to_hv_fraction(&self, frac: f64) -> Option<u64> {
+        let target = frac * self.final_hypervolume();
+        if !(target > 0.0) {
+            return None;
+        }
+        self.levels.iter().find(|l| l.hypervolume >= target).map(|l| l.evals)
+    }
+
+    /// Evaluations spent after the hypervolume last improved — the
+    /// quantitative case for a surrogate-guided early stop ("X% of evals
+    /// occur after the front stops moving"). 0 for flat stages.
+    pub fn evals_after_front_stable(&self) -> u64 {
+        let mut last_improve = self.levels.first().map_or(0, |l| l.evals);
+        let mut prev = 0.0;
+        for l in &self.levels {
+            if l.hypervolume > prev {
+                prev = l.hypervolume;
+                last_improve = l.evals;
+            }
+        }
+        self.evals.saturating_sub(last_improve)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("stage".into(), Json::Str(self.stage.clone()));
+        o.insert("evals".into(), Json::Num(self.evals as f64));
+        o.insert("ref_point".into(), num_arr(&self.ref_point));
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("level".into(), Json::Num(l.level as f64));
+                m.insert("temp".into(), Json::Num(l.temp));
+                m.insert("evals".into(), Json::Num(l.evals as f64));
+                m.insert("accepted".into(), Json::Num(l.accepted as f64));
+                m.insert("accepted_uphill".into(), Json::Num(l.accepted_uphill as f64));
+                m.insert("rejected".into(), Json::Num(l.rejected as f64));
+                m.insert("dominated".into(), Json::Num(l.dominated as f64));
+                m.insert("archived".into(), Json::Num(l.archived as f64));
+                m.insert("archive_len".into(), Json::Num(l.archive_len as f64));
+                m.insert("obj_min".into(), num_arr(&l.obj_min));
+                m.insert("obj_max".into(), num_arr(&l.obj_max));
+                m.insert("hypervolume".into(), Json::Num(l.hypervolume));
+                m.insert(
+                    "front".into(),
+                    Json::Arr(l.front.iter().map(|p| num_arr(p)).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        o.insert("levels".into(), Json::Arr(levels));
+        Json::Obj(o)
+    }
+}
+
+fn num_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::Num(v)).collect())
+}
+
+/// The full search trace of one design (or several merged designs):
+/// stages in canonical order, independent of recording order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchTrace {
+    stages: Vec<SearchStage>,
+}
+
+impl SearchTrace {
+    pub fn new() -> SearchTrace {
+        SearchTrace::default()
+    }
+
+    /// Stages in canonical order.
+    pub fn stages(&self) -> &[SearchStage] {
+        &self.stages
+    }
+
+    /// First stage with this key, if recorded.
+    pub fn stage(&self, key: &str) -> Option<&SearchStage> {
+        self.stages.iter().find(|s| s.stage == key)
+    }
+
+    /// Deposit a finished stage. Stages are re-sorted into the canonical
+    /// order (name, then serialized content), so concurrent recorders
+    /// produce the same trace bytes regardless of completion order.
+    pub fn record(&mut self, stage: SearchStage) {
+        self.stages.push(stage);
+        self.canonicalize();
+    }
+
+    /// Commutative union: `a.merge(b)` and `b.merge(a)` yield identical
+    /// traces — the per-k `Ctx::wirelines` fan-out merges worker-local
+    /// results in any completion order.
+    pub fn merge(&mut self, other: SearchTrace) {
+        self.stages.extend(other.stages);
+        self.canonicalize();
+    }
+
+    fn canonicalize(&mut self) {
+        self.stages.sort_by(|a, b| {
+            a.stage
+                .cmp(&b.stage)
+                .then_with(|| a.to_json().dump().cmp(&b.to_json().dump()))
+        });
+    }
+
+    /// Total evaluations across all stages.
+    pub fn total_evals(&self) -> u64 {
+        self.stages.iter().map(|s| s.evals).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// The exported trace document (stable key order via `util::json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("schema".into(), Json::Str(SEARCH_TRACE_SCHEMA.into()));
+        o.insert("total_evals".into(), Json::Num(self.total_evals() as f64));
+        o.insert(
+            "stages".into(),
+            Json::Arr(self.stages.iter().map(|s| s.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// One CSV row per temperature level (flat stages emit a single row
+    /// with empty level fields).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "stage,level,temp,evals,accepted,accepted_uphill,rejected,dominated,archived,archive_len,hypervolume\n",
+        );
+        for s in &self.stages {
+            if s.levels.is_empty() {
+                out.push_str(&format!("{},,,{},,,,,,,\n", s.stage, s.evals));
+                continue;
+            }
+            for l in &s.levels {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{},{},{},{},{}\n",
+                    s.stage,
+                    l.level,
+                    l.temp,
+                    l.evals,
+                    l.accepted,
+                    l.accepted_uphill,
+                    l.rejected,
+                    l.dominated,
+                    l.archived,
+                    l.archive_len,
+                    l.hypervolume,
+                ));
+            }
+        }
+        out
+    }
+
+    /// The `design --profile` eval-attribution table: evaluations per
+    /// stage, share of the total, and convergence headlines.
+    pub fn profile_text(&self) -> String {
+        let total = self.total_evals();
+        let mut out = String::from(
+            "eval attribution (design search)\n\
+             stage                     evals   share%  levels  final_hv  evals_to_99%hv\n",
+        );
+        if self.stages.is_empty() {
+            out.push_str("  (no search stages recorded — mesh architectures run no search)\n");
+            return out;
+        }
+        for s in &self.stages {
+            let share = 100.0 * s.evals as f64 / total.max(1) as f64;
+            let (hv, to99) = if s.levels.is_empty() {
+                ("-".to_string(), "-".to_string())
+            } else {
+                (
+                    format!("{:.4}", s.final_hypervolume()),
+                    s.evals_to_hv_fraction(0.99)
+                        .map_or_else(|| "-".to_string(), |e| e.to_string()),
+                )
+            };
+            out.push_str(&format!(
+                "{:<24} {:>8}  {:>6.1}  {:>6}  {:>8}  {:>14}\n",
+                s.stage,
+                s.evals,
+                share,
+                if s.levels.is_empty() { "-".to_string() } else { s.levels.len().to_string() },
+                hv,
+                to99,
+            ));
+        }
+        out.push_str(&format!("{:<24} {:>8}   100.0\n", "total", total));
+        out
+    }
+}
+
+/// Shareable trace sink: `Clone` + `Send + Sync`, so one sink threads
+/// through `DesignConfig` into `par_map` design fan-outs. Each search
+/// pass locks it exactly once, when its stage is finished.
+pub type SearchSink = Arc<Mutex<SearchTrace>>;
+
+/// A fresh empty sink.
+pub fn search_sink() -> SearchSink {
+    Arc::new(Mutex::new(SearchTrace::new()))
+}
+
+/// Deposit a finished stage into a sink (poisoned-lock-safe: a panicked
+/// recorder does not lose the other workers' stages).
+pub fn record_stage(sink: &SearchSink, stage: SearchStage) {
+    match sink.lock() {
+        Ok(mut t) => t.record(stage),
+        Err(poison) => poison.into_inner().record(stage),
+    }
+}
+
+/// Snapshot a sink's current trace.
+pub fn sink_trace(sink: &SearchSink) -> SearchTrace {
+    match sink.lock() {
+        Ok(t) => t.clone(),
+        Err(poison) => poison.into_inner().clone(),
+    }
+}
+
+/// Schema check for an exported search-trace document — the Rust-side
+/// mirror of the CI jq smoke, run by the tests on every artifact:
+/// required keys, finite hypervolumes, per-stage monotone non-decreasing
+/// hypervolume, and strictly increasing cumulative evals.
+pub fn validate_search_trace(doc: &Json) -> Result<(), String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing schema tag")?;
+    if schema != SEARCH_TRACE_SCHEMA {
+        return Err(format!("unexpected schema '{schema}'"));
+    }
+    let total = doc
+        .get("total_evals")
+        .and_then(Json::as_f64)
+        .ok_or("missing total_evals")?;
+    let stages = doc
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or("missing stages array")?;
+    let mut sum = 0.0;
+    for (i, s) in stages.iter().enumerate() {
+        let name = s
+            .get("stage")
+            .and_then(Json::as_str)
+            .ok_or(format!("stage {i}: missing name"))?;
+        let evals = s
+            .get("evals")
+            .and_then(Json::as_f64)
+            .ok_or(format!("stage {name}: missing evals"))?;
+        if !(evals >= 0.0) {
+            return Err(format!("stage {name}: negative evals"));
+        }
+        sum += evals;
+        let levels = s
+            .get("levels")
+            .and_then(Json::as_arr)
+            .ok_or(format!("stage {name}: missing levels"))?;
+        let mut prev_hv = f64::NEG_INFINITY;
+        let mut prev_evals = f64::NEG_INFINITY;
+        for l in levels {
+            let hv = l
+                .get("hypervolume")
+                .and_then(Json::as_f64)
+                .ok_or(format!("stage {name}: level missing hypervolume"))?;
+            if !hv.is_finite() || hv < 0.0 {
+                return Err(format!("stage {name}: bad hypervolume {hv}"));
+            }
+            if hv < prev_hv {
+                return Err(format!(
+                    "stage {name}: hypervolume not monotone ({prev_hv} -> {hv})"
+                ));
+            }
+            prev_hv = hv;
+            let ev = l
+                .get("evals")
+                .and_then(Json::as_f64)
+                .ok_or(format!("stage {name}: level missing evals"))?;
+            if ev <= prev_evals {
+                return Err(format!("stage {name}: evals not increasing"));
+            }
+            prev_evals = ev;
+            for key in ["temp", "accepted", "rejected", "archive_len"] {
+                if l.get(key).and_then(Json::as_f64).is_none() {
+                    return Err(format!("stage {name}: level missing {key}"));
+                }
+            }
+        }
+        if !levels.is_empty() && prev_evals != evals {
+            return Err(format!(
+                "stage {name}: evals {evals} != last level's cumulative {prev_evals}"
+            ));
+        }
+    }
+    if sum != total {
+        return Err(format!("total_evals {total} != stage sum {sum}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn stage(name: &str, evals: u64, hv: &[f64]) -> SearchStage {
+        let mut levels = Vec::new();
+        let per = evals / hv.len().max(1) as u64;
+        for (i, &h) in hv.iter().enumerate() {
+            levels.push(LevelStats {
+                level: i,
+                temp: 10.0 * 0.9f64.powi(i as i32),
+                evals: if i + 1 == hv.len() { evals } else { per * (i as u64 + 1) },
+                accepted: per / 2,
+                accepted_uphill: per / 4,
+                rejected: per - per / 2,
+                dominated: per / 3,
+                archived: 2,
+                archive_len: 3,
+                obj_min: vec![0.1, 0.2],
+                obj_max: vec![1.0, 2.0],
+                hypervolume: h,
+                front: vec![vec![0.1, 2.0], vec![1.0, 0.2]],
+            });
+        }
+        SearchStage { stage: name.into(), evals, ref_point: vec![2.0, 3.0], levels }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_order_independent() {
+        let a = stage("wireline:k4", 800, &[0.1, 0.5, 0.5]);
+        let b = stage("wireline:k6", 900, &[0.2, 0.6, 0.7]);
+        let c = SearchStage::flat("wireless", 120);
+        let mut ab = SearchTrace::new();
+        ab.record(a.clone());
+        ab.record(b.clone());
+        ab.record(c.clone());
+        let mut ba = SearchTrace::new();
+        ba.record(c);
+        ba.record(b);
+        ba.record(a);
+        assert_eq!(ab.to_json().dump(), ba.to_json().dump());
+
+        let mut m1 = SearchTrace::new();
+        m1.merge(ab.clone());
+        let mut m2 = ba.clone();
+        m2.merge(SearchTrace::new());
+        assert_eq!(m1, m2);
+        assert_eq!(ab.total_evals(), 800 + 900 + 120);
+    }
+
+    #[test]
+    fn json_roundtrips_and_validates() {
+        let mut t = SearchTrace::new();
+        t.record(stage("placement", 600, &[0.0, 0.3, 0.3, 0.4]));
+        t.record(SearchStage::flat("wireless", 64));
+        let doc = t.to_json();
+        validate_search_trace(&doc).unwrap();
+        let reparsed = json::parse(&doc.dump()).unwrap();
+        validate_search_trace(&reparsed).unwrap();
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        let mut t = SearchTrace::new();
+        t.record(stage("placement", 600, &[0.4, 0.3])); // hv decreases
+        let err = validate_search_trace(&t.to_json()).unwrap_err();
+        assert!(err.contains("monotone"), "{err}");
+        assert!(validate_search_trace(&Json::Num(3.0)).is_err());
+        let parsed = json::parse(r#"{"schema":"nope","total_evals":0,"stages":[]}"#).unwrap();
+        assert!(validate_search_trace(&parsed).is_err());
+    }
+
+    #[test]
+    fn convergence_headlines() {
+        let s = stage("wireline:k6", 1000, &[0.1, 0.8, 0.99, 1.0, 1.0]);
+        assert_eq!(s.final_hypervolume(), 1.0);
+        // 99% of 1.0 first reached at the third level (cumulative 600)
+        assert_eq!(s.evals_to_hv_fraction(0.99), Some(600));
+        // last improvement at level 3 (cumulative 800): 200 evals wasted
+        assert_eq!(s.evals_after_front_stable(), 200);
+        assert_eq!(SearchStage::flat("wireless", 9).evals_to_hv_fraction(0.99), None);
+        assert_eq!(SearchStage::flat("wireless", 9).evals_after_front_stable(), 0);
+    }
+
+    #[test]
+    fn csv_and_profile_render() {
+        let mut t = SearchTrace::new();
+        t.record(stage("placement", 600, &[0.1, 0.2, 0.3]));
+        t.record(SearchStage::flat("wireless", 64));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("stage,level,temp,evals,"));
+        assert_eq!(csv.lines().count(), 1 + 3 + 1);
+        let prof = t.profile_text();
+        assert!(prof.contains("placement"));
+        assert!(prof.contains("wireless"));
+        assert!(prof.contains("total"));
+        assert!(SearchTrace::new().profile_text().contains("no search stages"));
+    }
+
+    #[test]
+    fn sink_records_and_snapshots() {
+        let sink = search_sink();
+        record_stage(&sink, SearchStage::flat("wireless", 5));
+        record_stage(&sink, stage("placement", 100, &[0.5]));
+        let t = sink_trace(&sink);
+        assert_eq!(t.stages().len(), 2);
+        assert_eq!(t.stages()[0].stage, "placement", "canonical order");
+        assert_eq!(t.total_evals(), 105);
+        assert!(t.stage("wireless").is_some());
+    }
+}

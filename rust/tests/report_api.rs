@@ -71,6 +71,7 @@ fn every_experiment_roundtrips_through_json() {
             "scale_figs" => "Scale figs",
             "resilience_figs" => "Resilience figs",
             "hotspot_figs" => "Hotspot figs",
+            "design_figs" => "Design figs",
             _ => "Fig",
         }));
         assert!(rep.to_csv().lines().count() > 1, "{id} has an empty CSV");
