@@ -110,6 +110,44 @@ class GateBench(unittest.TestCase):
         self.assertEqual(len(errors), 1)
         self.assertIn("design_figs.evals_to_99pct_hypervolume", errors[0])
 
+    def test_serving_figs_knee_scalars_are_gated_once_recorded(self):
+        # the serving tail-latency scalars ride the same figures
+        # mechanism: a steady knee passes, a collapsed knee-throughput
+        # ratio fails
+        base = series(
+            "baseline",
+            figures={
+                "serving_figs": {
+                    "wihetnoc_knee_throughput_x": 1.8,
+                    "wihetnoc_p99_at_0p7_load_reduction_x": 1.4,
+                }
+            },
+        )
+        steady = series(
+            "current",
+            figures={
+                "serving_figs": {
+                    "wihetnoc_knee_throughput_x": 1.8,
+                    "wihetnoc_p99_at_0p7_load_reduction_x": 1.4,
+                }
+            },
+        )
+        self.assertEqual(bench_gate.gate_bench(doc(base, steady)), [])
+        drifted = copy.deepcopy(steady)
+        drifted["figures"]["serving_figs"]["wihetnoc_knee_throughput_x"] = 0.9
+        errors = bench_gate.gate_bench(doc(base, drifted))
+        self.assertEqual(len(errors), 1)
+        self.assertIn("serving_figs.wihetnoc_knee_throughput_x", errors[0])
+
+    def test_serving_figs_scalars_disarmed_while_trajectory_empty(self):
+        # same empty-runs[] story as design_figs: a current-only series
+        # carrying the serving knee scalars must not arm the gate
+        current = series(
+            "current",
+            figures={"serving_figs": {"wihetnoc_knee_throughput_x": 1.8}},
+        )
+        self.assertEqual(bench_gate.gate_bench(doc(current)), [])
+
     def test_design_figs_scalars_disarmed_while_trajectory_empty(self):
         # BENCH_sim.json still ships with an empty runs[] (no toolchain
         # in the authoring containers): a current-only series carrying

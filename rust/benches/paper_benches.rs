@@ -265,6 +265,29 @@ fn main() {
         );
     }
 
+    // --- serving microbench (ISSUE 10) ---
+    // one open-loop poisson run of a two-tenant mix through the gated
+    // simulator: arrival draw + continuous batching + concurrent-batch
+    // contention, the serving_figs inner loop
+    let mix = wihetnoc::serving::TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet]);
+    let serve_spec: wihetnoc::ServingSpec =
+        "poisson:rate=0.5,seed=7;batch=4,timeout=256,n=16".parse().expect("well-formed spec");
+    let serve_cfg = TraceConfig { scale: 0.02, ..Default::default() };
+    let served = wihetnoc::serving::run_serving(&sys, &inst, &mix, &serve_spec, &serve_cfg)
+        .expect("serving runs")
+        .delivered;
+    b.bench_items(
+        &format!("serving/poisson 2-tenant ({served} reqs)"),
+        Some(served as f64),
+        &mut || {
+            std::hint::black_box(
+                wihetnoc::serving::run_serving(&sys, &inst, &mix, &serve_spec, &serve_cfg)
+                    .expect("serving runs")
+                    .delivered,
+            );
+        },
+    );
+
     // --- full experiment harnesses ---
     // Warm the expensive caches once so per-figure timings reflect the
     // harness, not the shared design step.
@@ -280,7 +303,12 @@ fn main() {
         let mut report = None;
         if matches!(
             *id,
-            "workload_figs" | "scale_figs" | "resilience_figs" | "hotspot_figs" | "design_figs"
+            "workload_figs"
+                | "scale_figs"
+                | "resilience_figs"
+                | "hotspot_figs"
+                | "design_figs"
+                | "serving_figs"
         ) {
             // These harnesses build their own instances per run (AMOSA
             // designs on 144 tiles, or dozens of faulted full-trace

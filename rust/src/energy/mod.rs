@@ -8,6 +8,6 @@ pub mod system;
 pub use network::{network_energy_pj, message_edp, NetworkEnergy};
 pub use params::EnergyParams;
 pub use system::{
-    full_system_run, full_system_run_fabric, full_system_run_faults, full_system_run_scheduled,
-    FullSystemReport,
+    core_energy_from_counters, full_system_run, full_system_run_fabric, full_system_run_faults,
+    full_system_run_scheduled, full_system_run_serving, FullSystemReport,
 };

@@ -34,6 +34,7 @@ use crate::optim::placement::optimize_placement_observed;
 use crate::optim::wiplace::build_wireless;
 use crate::scenario::{ModelId, Scenario, ScenarioKey};
 use crate::schedule::SchedulePolicy;
+use crate::serving::ServingSpec;
 use crate::telemetry::search::{record_stage, SearchSink, SearchStage};
 use crate::traffic::phases::TrafficModel;
 use crate::traffic::trace::TraceConfig;
@@ -77,6 +78,12 @@ pub struct Ctx {
     /// [`ScenarioKey`] so keys stay faithful to the scenario. Private:
     /// fixed at construction like `batch`.
     faults: FaultPlan,
+    /// Open-loop serving spec of the scenario. Lowered traffic is
+    /// serving-independent (the serving runner lowers per-batch models
+    /// itself), so the spec never splits the traffic cache — it is
+    /// carried into every [`ScenarioKey`] so keys stay faithful to the
+    /// scenario. Private: fixed at construction like `batch`.
+    serving: ServingSpec,
     /// WiHetNoC tile placement (§5.2: CPUs center, MCs quadrant centers).
     /// Shared handle — cloning it is pointer-cheap.
     pub sys: Arc<SystemConfig>,
@@ -111,6 +118,7 @@ impl Ctx {
             schedule: SchedulePolicy::default(),
             fabric: Fabric::single(),
             faults: FaultPlan::none(),
+            serving: ServingSpec::none(),
             sys: Arc::new(sys),
             mesh_sys: None,
             traffic: HashMap::new(),
@@ -138,6 +146,24 @@ impl Ctx {
         sc.schedule.validate_for(sc.batch)?;
         sc.fabric.validate()?;
         sc.faults.validate()?;
+        sc.serving.validate()?;
+        if !sc.serving.is_none() {
+            // Serving injects open-loop forward traffic on one chip's
+            // clock: a multi-chip fabric or an overlapping training
+            // schedule has no meaning for it.
+            if !sc.fabric.is_single() {
+                return Err(WihetError::InvalidArg(format!(
+                    "--serve runs on a single chip; drop the fabric (got {})",
+                    sc.fabric
+                )));
+            }
+            if !sc.schedule.is_serial() {
+                return Err(WihetError::InvalidArg(format!(
+                    "--serve replaces the training schedule; use schedule=serial (got {})",
+                    sc.schedule
+                )));
+            }
+        }
         let mut ctx = Ctx::on_platform(sys, sc.effort, sc.seed);
         ctx.model = sc.model.clone();
         ctx.batch = sc.batch;
@@ -145,6 +171,7 @@ impl Ctx {
         ctx.schedule = sc.schedule;
         ctx.fabric = sc.fabric;
         ctx.faults = sc.faults.clone();
+        ctx.serving = sc.serving.clone();
         Ok(ctx)
     }
 
@@ -171,6 +198,12 @@ impl Ctx {
     /// The fault plan the scenario's simulations run under.
     pub fn faults(&self) -> &FaultPlan {
         &self.faults
+    }
+
+    /// The open-loop serving spec of the scenario ([`ServingSpec::none`]
+    /// for the closed-loop training scenarios).
+    pub fn serving(&self) -> &ServingSpec {
+        &self.serving
     }
 
     /// The batch size the traffic models are derived at.
@@ -226,13 +259,14 @@ impl Ctx {
     /// counts, so this holds for all internal callers; handing in an
     /// unrelated smaller chip is a caller bug and panics).
     pub fn traffic_on(&mut self, model: ModelId, sys: &SystemConfig) -> Arc<TrafficModel> {
-        let key = ScenarioKey::with_faults(
+        let key = ScenarioKey::with_serving(
             model,
             sys,
             self.mapping,
             self.schedule,
             self.fabric,
             self.faults.clone(),
+            self.serving.clone(),
         );
         if !self.traffic.contains_key(&key) {
             let tm = lower_id(&key.model, &self.mapping, sys, self.batch)
@@ -447,6 +481,24 @@ mod tests {
         );
         let _ = ctx.traffic_on(ModelId::CdbNet, &wihet_sys);
         assert_eq!(ctx.cached_traffic_models(), 3);
+    }
+
+    #[test]
+    fn for_scenario_validates_serving() {
+        let sc = crate::scenario::Scenario::paper()
+            .with_serving("poisson:rate=0.5".parse().unwrap());
+        let ctx = Ctx::for_scenario(&sc).unwrap();
+        assert!(!ctx.serving().is_none());
+        assert_eq!(ctx.serving(), &sc.serving);
+        let fabric = Ctx::for_scenario(&sc.clone().with_fabric("4:topo=ring".parse().unwrap()));
+        assert!(matches!(fabric, Err(WihetError::InvalidArg(_))), "serving + fabric");
+        let sched = Ctx::for_scenario(
+            &sc.with_schedule(SchedulePolicy::GPipe { microbatches: 4 }),
+        );
+        assert!(matches!(sched, Err(WihetError::InvalidArg(_))), "serving + pipeline");
+        // serving-off contexts default to the none spec
+        let plain = Ctx::new(Effort::Quick, 1);
+        assert!(plain.serving().is_none());
     }
 
     #[test]

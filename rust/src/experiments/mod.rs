@@ -26,6 +26,7 @@ pub mod scale_figs; // multi-chip data-parallel fabric scaling
 pub mod resilience_figs; // fault injection: graceful degradation sweeps
 pub mod hotspot_figs; // telemetry: link heatmaps + tail latency, mesh vs WiHetNoC
 pub mod design_figs; // design-search observability: AMOSA convergence + eval profiler
+pub mod serving_figs; // open-loop serving: offered-load sweep to the tail-latency knee
 
 pub use ctx::{Ctx, Effort};
 pub use registry::{find, ids, run, run_many, run_many_threads, Experiment, ALL, REGISTRY};

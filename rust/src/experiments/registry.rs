@@ -16,7 +16,7 @@ use super::ctx::{Ctx, Effort};
 use super::report::Report;
 use super::{
     compare_figs, design_figs, hotspot_figs, optim_figs, param_figs, resilience_figs, scale_figs,
-    table1, traffic_figs, wireless_figs, workload_figs,
+    serving_figs, table1, traffic_figs, wireless_figs, workload_figs,
 };
 use crate::error::WihetError;
 use crate::util::exec::{par_map_threads, thread_count};
@@ -194,6 +194,13 @@ pub const REGISTRY: &[Experiment] = &[
         min_effort: Effort::Quick,
         run: |ctx| Ok(design_figs::design_figs(ctx)),
     },
+    Experiment {
+        id: "serving_figs",
+        title: "open-loop serving: offered-load sweep to the tail-latency knee, mesh vs WiHetNoC",
+        paper: "",
+        min_effort: Effort::Quick,
+        run: serving_figs::serving_figs,
+    },
 ];
 
 /// All experiment ids, in registry order — a view over [`REGISTRY`].
@@ -272,7 +279,7 @@ mod tests {
     #[test]
     fn all_is_a_view_over_the_registry() {
         assert_eq!(ALL.len(), REGISTRY.len());
-        assert_eq!(ALL.len(), 21);
+        assert_eq!(ALL.len(), 22);
         for (id, e) in ALL.iter().zip(REGISTRY) {
             assert_eq!(*id, e.id);
         }

@@ -1,0 +1,320 @@
+//! Open-loop serving figures: offered load vs tail latency, mesh vs
+//! WiHetNoC (non-paper extension; ROADMAP item 2's serving workload).
+//!
+//! A two-tenant mix (LeNet + CDBNet) shares one 8x8 chip. Requests
+//! arrive on a Poisson clock and are continuously batched
+//! (`batch=4;timeout=256`); each dispatched batch runs its model's
+//! forward phases through the gated simulator, so consecutive batches
+//! and the two tenants *contend* for the same links and MCs. The
+//! harness sweeps the offered rate up a x2 ladder and records, per NoC
+//! and per step, the delivered throughput and the end-to-end latency
+//! tail (with its queueing / network split).
+//!
+//! **Knee**: the first ladder step whose aggregate e2e p99 exceeds
+//! [`KNEE_K`] x the unloaded (step-0) p99 — the classic open-loop
+//! saturation signature. The step before it is the last sustainable
+//! operating point, and its delivered rate is the NoC's knee
+//! throughput.
+//!
+//! Headline scalars (both guarded, always finite):
+//! * `wihetnoc_knee_throughput_x` — WiHetNoC knee throughput over the
+//!   optimized mesh's.
+//! * `wihetnoc_p99_at_0p7_load_reduction_x` — mesh p99 over WiHetNoC
+//!   p99 at the ladder step closest to 70% of the mesh's knee load
+//!   (both NoCs see the identical arrival streams there).
+//!
+//! The full sweep is attached as a `rows.csv` artifact.
+
+use super::ctx::Ctx;
+use super::report::{Cell, Report};
+use crate::error::WihetError;
+use crate::noc::builder::NocKind;
+use crate::scenario::ModelId;
+use crate::serving::{detect_knee, run_serving, ArrivalProcess, ServingSpec, TenantMix};
+use crate::telemetry::LogHistogram;
+use crate::traffic::phases::Pass;
+use crate::workload::{lower_id, MappingPolicy};
+
+/// Offered-load ladder: multipliers over the base (well under-loaded)
+/// rate. x2 steps reach 128x, far past single-chip saturation.
+const LOAD_STEPS: [u64; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+/// Knee threshold: first step whose p99 exceeds `KNEE_K` x the unloaded
+/// p99.
+const KNEE_K: f64 = 2.0;
+/// Continuous-batching policy for every step of the sweep.
+const BATCH: u32 = 4;
+const TIMEOUT: u64 = 256;
+/// Requests per tenant per step — 6 batches of 4 when full, enough
+/// concurrent batches at the top of the ladder to saturate the chip.
+const REQUESTS: u32 = 24;
+
+/// `a / b`, guarded so headline scalars stay finite: a zero or missing
+/// denominator yields parity (1.0), never inf/NaN.
+fn guarded_ratio(a: f64, b: f64) -> f64 {
+    if b <= 0.0 || !b.is_finite() {
+        1.0
+    } else {
+        a / b
+    }
+}
+
+/// Per-step measurements for one NoC.
+struct StepRow {
+    multiplier: u64,
+    offered_rate_pmc: f64,
+    delivered_rate_pmc: f64,
+    delivered: u64,
+    offered: u64,
+    p50: u64,
+    p99: u64,
+    p999: u64,
+    queue_p99: u64,
+    net_p99: u64,
+}
+
+/// The serving saturation sweep, mesh vs WiHetNoC.
+pub fn serving_figs(ctx: &mut Ctx) -> Result<Report, WihetError> {
+    let mut rep = Report::new(
+        "serving_figs",
+        "open-loop serving: offered-load sweep to the tail-latency knee, mesh vs WiHetNoC",
+    );
+    let mesh = ctx.instance_arc(NocKind::MeshXyYx);
+    let wihet = ctx.instance_arc(NocKind::WiHetNoc);
+    let mesh_sys = ctx.sys_for(NocKind::MeshXyYx);
+    let wihet_sys = ctx.sys_for(NocKind::WiHetNoc);
+    let mut cfg = ctx.trace_cfg();
+    // 2 NoCs x 8 ladder steps, each a multi-batch concurrent simulation
+    cfg.scale = cfg.scale.min(0.02);
+    let seed = ctx.seed;
+
+    let mix = TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet]);
+    // Base rate from the mean forward-service window of the mix at the
+    // dispatch batch size: mean inter-arrival gap = 4x that window, so
+    // step 1x is comfortably under-loaded and the ladder's top is ~32x
+    // past back-to-back service. Both platforms are the paper 8x8 chip,
+    // so one ladder serves both NoCs and every step compares them under
+    // byte-identical arrival streams.
+    let mut service_sum = 0u64;
+    for t in &mix.tenants {
+        let tm = lower_id(&t.model, &MappingPolicy::default(), &mesh_sys, BATCH as usize)?;
+        service_sum += tm
+            .pass_phases(Pass::Forward)
+            .iter()
+            .map(|p| cfg.window(p.duration_cycles))
+            .sum::<u64>();
+    }
+    let service = (service_sum / mix.len() as u64).max(1);
+    let base_gap = 4 * service;
+
+    let mut out = format!(
+        "Serving figs — open-loop saturation sweep on the 8x8 chip (trace scale {:.3})\n\
+         (tenants: lenet + cdbnet, poisson arrivals, batch={BATCH} timeout={TIMEOUT} \
+         n={REQUESTS}/tenant/step;\n  base mean gap {base_gap} cyc = 4x the mean forward \
+         window; knee = first step with p99 > {KNEE_K}x unloaded)\n",
+        cfg.scale
+    );
+    let mut csv = String::from(
+        "noc,step,multiplier,offered_rate_pmc,delivered_rate_pmc,p50,p99,p999,queue_p99,net_p99,knee\n",
+    );
+    let mut table_rows = Vec::new();
+    // per-NoC results for the headline scalars
+    let mut knee_tp = [0.0f64; 2];
+    let mut p99_series = [Vec::new(), Vec::new()];
+    let mut offered_series = [Vec::new(), Vec::new()];
+    let mut knee_steps = [None, None];
+
+    for (ni, (noc_name, inst, sys)) in
+        [("mesh", &mesh, &mesh_sys), ("wihet", &wihet, &wihet_sys)].into_iter().enumerate()
+    {
+        let mut rows = Vec::with_capacity(LOAD_STEPS.len());
+        for &m in &LOAD_STEPS {
+            let gap = (base_gap / m).max(1);
+            let rate_pmc = (1_000_000 / gap).clamp(1, 1_000_000);
+            let spec = ServingSpec {
+                arrival: Some(ArrivalProcess::Poisson { rate_pmc, seed }),
+                batch: BATCH,
+                timeout: TIMEOUT,
+                requests: REQUESTS,
+            };
+            let r = run_serving(sys, inst, &mix, &spec, &cfg)?;
+            let mut e2e = LogHistogram::new();
+            let mut queue = LogHistogram::new();
+            let mut net = LogHistogram::new();
+            for t in &r.tenants {
+                e2e.merge(&t.e2e);
+                queue.merge(&t.queue);
+                net.merge(&t.net);
+            }
+            rows.push(StepRow {
+                multiplier: m,
+                offered_rate_pmc: (mix.len() as u64 * rate_pmc) as f64,
+                delivered_rate_pmc: r.delivered_rate_pmc(),
+                delivered: r.delivered,
+                offered: r.offered,
+                p50: e2e.p50(),
+                p99: e2e.p99(),
+                p999: e2e.p999(),
+                queue_p99: queue.p99(),
+                net_p99: net.p99(),
+            });
+        }
+
+        let p99s: Vec<u64> = rows.iter().map(|r| r.p99).collect();
+        let knee = detect_knee(&p99s, KNEE_K);
+        knee_steps[ni] = knee;
+        // knee throughput = delivered rate at the last sustainable step
+        let tp_step = knee.map(|k| k - 1).unwrap_or(rows.len() - 1);
+        knee_tp[ni] = rows[tp_step].delivered_rate_pmc;
+        p99_series[ni] = rows.iter().map(|r| r.p99 as f64).collect();
+        offered_series[ni] = rows.iter().map(|r| r.offered_rate_pmc).collect();
+
+        out.push_str(&format!(
+            "\n  {noc_name}: knee {} (sustains {:.3} req/Mcyc at step {})\n  \
+             step   x   offered  delivered     p50     p99    p999  q_p99  net_p99\n",
+            match knee {
+                Some(k) => format!("at step {k} ({}x)", rows[k].multiplier),
+                None => "not reached".to_string(),
+            },
+            knee_tp[ni],
+            tp_step,
+        ));
+        for (si, row) in rows.iter().enumerate() {
+            let at_knee = knee == Some(si);
+            out.push_str(&format!(
+                "  {si:>4} {:>3}  {:>8.3}  {:>9.3}  {:>6}  {:>6}  {:>6}  {:>5}  {:>7}{}\n",
+                row.multiplier,
+                row.offered_rate_pmc,
+                row.delivered_rate_pmc,
+                row.p50,
+                row.p99,
+                row.p999,
+                row.queue_p99,
+                row.net_p99,
+                if at_knee { "  <- knee" } else { "" },
+            ));
+            csv.push_str(&format!(
+                "{noc_name},{si},{},{:.6},{:.6},{},{},{},{},{},{}\n",
+                row.multiplier,
+                row.offered_rate_pmc,
+                row.delivered_rate_pmc,
+                row.p50,
+                row.p99,
+                row.p999,
+                row.queue_p99,
+                row.net_p99,
+                at_knee as u8,
+            ));
+            table_rows.push(vec![
+                Cell::str(noc_name),
+                Cell::num(si as f64),
+                Cell::num(row.multiplier as f64),
+                Cell::num(row.offered_rate_pmc),
+                Cell::num(row.delivered_rate_pmc),
+                Cell::num(row.p99 as f64),
+                Cell::num(row.queue_p99 as f64),
+                Cell::num(row.net_p99 as f64),
+                Cell::num(at_knee as u8 as f64),
+            ]);
+        }
+        let labels: Vec<String> = rows.iter().map(|r| format!("{}x", r.multiplier)).collect();
+        rep.series(format!("{noc_name}_p99_vs_load"), "cycles", labels.clone(), p99_series[ni].clone());
+        rep.series(
+            format!("{noc_name}_delivered_vs_load"),
+            "req/Mcyc",
+            labels,
+            rows.iter().map(|r| r.delivered_rate_pmc).collect(),
+        );
+        rep.scalar(
+            format!("{noc_name}_knee_step"),
+            knee.map(|k| k as f64).unwrap_or(-1.0),
+            "step",
+        );
+        rep.scalar(format!("{noc_name}_knee_throughput_pmc"), knee_tp[ni], "req/Mcyc");
+        let last = rows.last().expect("ladder is non-empty");
+        rep.scalar(
+            format!("{noc_name}_delivered_share_at_peak_pct"),
+            100.0 * last.delivered as f64 / last.offered.max(1) as f64,
+            "%",
+        );
+    }
+
+    // headline 1: knee throughput, WiHetNoC over mesh
+    let knee_x = guarded_ratio(knee_tp[1], knee_tp[0]);
+    rep.scalar("wihetnoc_knee_throughput_x", knee_x, "x");
+    // headline 2: p99 at ~70% of the mesh's knee load, mesh over WiHetNoC
+    // (same ladder => same offered rate at the chosen step for both NoCs)
+    let mesh_tp_step = knee_steps[0].map(|k| k - 1).unwrap_or(LOAD_STEPS.len() - 1);
+    let target = 0.7 * offered_series[0][mesh_tp_step];
+    let ref_step = (0..LOAD_STEPS.len())
+        .min_by(|&a, &b| {
+            let da = (offered_series[0][a] - target).abs();
+            let db = (offered_series[0][b] - target).abs();
+            da.partial_cmp(&db).expect("rates are finite")
+        })
+        .expect("ladder is non-empty");
+    let p99_x = guarded_ratio(p99_series[0][ref_step], p99_series[1][ref_step]);
+    rep.scalar("wihetnoc_p99_at_0p7_load_reduction_x", p99_x, "x");
+
+    rep.table(
+        "load_sweep",
+        &[
+            "noc", "step", "multiplier", "offered_pmc", "delivered_pmc", "p99", "queue_p99",
+            "net_p99", "knee",
+        ],
+        table_rows,
+    );
+    rep.artifact("rows.csv", csv);
+    out.push_str(&format!(
+        "\n  WiHetNoC sustains {knee_x:.2}x the mesh's knee throughput and cuts e2e p99\n  \
+         {p99_x:.2}x at step {ref_step} (~70% of the mesh knee load); full sweep in rows.csv\n"
+    ));
+    rep.set_text(out);
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ctx::Effort;
+
+    #[test]
+    fn guarded_ratio_is_always_finite() {
+        assert_eq!(guarded_ratio(3.0, 0.0), 1.0);
+        assert_eq!(guarded_ratio(0.0, 0.0), 1.0);
+        assert_eq!(guarded_ratio(3.0, f64::NAN), 1.0);
+        assert_eq!(guarded_ratio(6.0, 3.0), 2.0);
+    }
+
+    /// The full harness at Quick effort: finite headline scalars, a
+    /// detected knee on both NoCs, and a complete csv artifact.
+    #[test]
+    fn sweep_detects_a_knee_on_both_nocs() {
+        let mut ctx = Ctx::new(Effort::Quick, 7);
+        let rep = serving_figs(&mut ctx).unwrap();
+        let get = |name: &str| -> f64 {
+            rep.scalars()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("scalar '{name}' missing"))
+                .1
+        };
+        let knee_x = get("wihetnoc_knee_throughput_x");
+        let p99_x = get("wihetnoc_p99_at_0p7_load_reduction_x");
+        assert!(knee_x.is_finite() && knee_x > 0.0, "knee_x={knee_x}");
+        assert!(p99_x.is_finite() && p99_x > 0.0, "p99_x={p99_x}");
+        for noc in ["mesh", "wihet"] {
+            let step = get(&format!("{noc}_knee_step"));
+            assert!(step >= 1.0, "{noc} never crossed the knee (step={step})");
+            let tp = get(&format!("{noc}_knee_throughput_pmc"));
+            assert!(tp > 0.0, "{noc} knee throughput {tp}");
+        }
+        // the csv artifact carries the whole sweep
+        let csv = &rep
+            .artifacts
+            .iter()
+            .find(|a| a.name == "rows.csv")
+            .expect("rows.csv attached")
+            .content;
+        assert_eq!(csv.lines().count(), 1 + 2 * LOAD_STEPS.len());
+        assert!(csv.lines().next().unwrap().starts_with("noc,step,multiplier"));
+    }
+}

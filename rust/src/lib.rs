@@ -82,6 +82,7 @@ pub mod optim;
 pub mod runtime;
 pub mod scenario;
 pub mod schedule;
+pub mod serving;
 pub mod telemetry;
 pub mod traffic;
 pub mod util;
@@ -93,4 +94,5 @@ pub use faults::FaultPlan;
 pub use model::{Platform, PlacementPolicy};
 pub use scenario::{Effort, ModelId, Scenario, ScenarioKey};
 pub use schedule::SchedulePolicy;
+pub use serving::ServingSpec;
 pub use workload::{ArchSpec, MappingPolicy};

@@ -26,10 +26,12 @@ use wihetnoc::traffic::trace::training_trace;
 use wihetnoc::util::cli::{parse, usage, ArgSpec, Args};
 use wihetnoc::fabric::run_fabric_obs;
 use wihetnoc::schedule::run_schedule_obs;
-use wihetnoc::telemetry::{chrome_trace, search_sink, sink_trace, Telemetry};
+use wihetnoc::serving::{run_serving_obs, TenantMix};
+use wihetnoc::telemetry::{chrome_trace, class_line, search_sink, sink_trace, ClassPercentiles, Telemetry};
 use wihetnoc::workload::preset_names;
 use wihetnoc::{
-    Fabric, FaultPlan, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, WihetError,
+    Fabric, FaultPlan, MappingPolicy, ModelId, Platform, Scenario, SchedulePolicy, ServingSpec,
+    WihetError,
 };
 
 fn main() -> ExitCode {
@@ -134,6 +136,17 @@ fn faults_spec() -> ArgSpec {
     }
 }
 
+fn serve_spec() -> ArgSpec {
+    ArgSpec {
+        name: "serve",
+        help: "open-loop serving instead of a training iteration: \
+               poisson:rate=R[,seed=S] | burst:rate=R,on=A,off=B[,x=M] | trace:file=PATH, \
+               plus batch=B;timeout=T;n=N — ';'-separated clauses (default: off)",
+        default: None,
+        is_flag: false,
+    }
+}
+
 fn str_err(e: WihetError) -> String {
     e.to_string()
 }
@@ -151,6 +164,10 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
         Some(s) => s.parse().map_err(str_err)?,
         None => FaultPlan::none(),
     };
+    let serving: ServingSpec = match args.get("serve") {
+        Some(s) => s.parse().map_err(str_err)?,
+        None => ServingSpec::none(),
+    };
     let effort: Effort = args.get_or("effort", "quick").parse().map_err(str_err)?;
     let seed = args.get_u64("seed", 42)?;
     Ok(Scenario::new(platform, model)
@@ -158,6 +175,7 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
         .with_schedule(schedule)
         .with_fabric(fabric)
         .with_faults(faults)
+        .with_serving(serving)
         .with_effort(effort)
         .with_seed(seed))
 }
@@ -388,6 +406,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         schedule_spec(),
         fabric_spec(),
         faults_spec(),
+        serve_spec(),
         ArgSpec {
             name: "noc",
             help: "mesh_xy|mesh_opt|hetnoc|wihetnoc",
@@ -426,6 +445,60 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     } else {
         format!(", faults {}", scenario.faults)
     };
+    if !scenario.serving.is_none() {
+        // open-loop serving: the requested model becomes a single tenant
+        // and inference batches arrive on the spec's clock instead of a
+        // training iteration (Ctx::for_scenario already rejected fabric
+        // and schedule combinations)
+        let mix = TenantMix::single(scenario.model.clone());
+        println!(
+            "serving {noc} on {} ({}, serve {}{faults_tag}) ...",
+            scenario.model, scenario.platform, scenario.serving
+        );
+        let t0 = std::time::Instant::now();
+        let sr = run_serving_obs(
+            &sys,
+            &inst,
+            &mix,
+            &scenario.serving,
+            &cfg,
+            &scenario.faults,
+            tel.as_mut(),
+        )
+        .map_err(str_err)?;
+        println!(
+            "{} packets in {:.2}s wall | {} offered -> {} dispatched in {} batches, {} delivered ({} in flight, {} queued) | makespan {} cyc | {:.3} req/Mcyc delivered",
+            sr.sim.delivered_packets,
+            t0.elapsed().as_secs_f64(),
+            sr.offered,
+            sr.dispatched,
+            sr.batches,
+            sr.delivered,
+            sr.in_flight,
+            sr.queued,
+            sr.makespan,
+            sr.delivered_rate_pmc(),
+        );
+        for t in &sr.tenants {
+            println!(
+                "tenant {}: {} delivered / {} offered ({} batches, {:.3} req/Mcyc)",
+                t.name,
+                t.delivered,
+                t.offered,
+                t.batches,
+                t.delivered_rate_pmc(sr.makespan),
+            );
+            for (name, h) in [("e2e", &t.e2e), ("queue", &t.queue), ("net", &t.net)] {
+                let line = class_line(name, &ClassPercentiles::of(h));
+                if !line.is_empty() {
+                    println!("{line}");
+                }
+            }
+        }
+        print_resilience(&scenario, sr.resilience(), sr.sim.undeliverable);
+        emit_telemetry(tel.as_ref(), trace_path.as_deref(), want_metrics)?;
+        return Ok(());
+    }
     if !scenario.fabric.is_single() {
         // multi-chip fabric: co-simulate the chip's iteration with the
         // lowered allreduce and charge the alpha-beta inter-chip hops

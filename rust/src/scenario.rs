@@ -22,6 +22,7 @@ use crate::model::platform::Platform;
 use crate::model::SystemConfig;
 use crate::noc::builder::NocKind;
 use crate::schedule::SchedulePolicy;
+use crate::serving::ServingSpec;
 use crate::workload::{preset, ArchSpec, MappingPolicy};
 
 /// A CNN workload: one of the named presets, or a custom architecture
@@ -194,6 +195,10 @@ pub struct Scenario {
     /// [`FaultPlan::none`] default delegates byte-identically to the
     /// fault-free paths).
     pub faults: FaultPlan,
+    /// Open-loop inference serving (see [`ServingSpec`]; the
+    /// [`ServingSpec::none`] default keeps every path the closed-loop
+    /// training iteration it always was).
+    pub serving: ServingSpec,
     pub effort: Effort,
     pub seed: u64,
     /// Training batch size the traffic model is derived at.
@@ -213,6 +218,7 @@ impl Scenario {
             noc: NocKind::WiHetNoc,
             fabric: Fabric::single(),
             faults: FaultPlan::none(),
+            serving: ServingSpec::none(),
             effort: Effort::Quick,
             seed: 42,
             batch: 32,
@@ -249,6 +255,11 @@ impl Scenario {
         self
     }
 
+    pub fn with_serving(mut self, serving: ServingSpec) -> Self {
+        self.serving = serving;
+        self
+    }
+
     pub fn with_effort(mut self, effort: Effort) -> Self {
         self.effort = effort;
         self
@@ -274,8 +285,8 @@ impl Scenario {
 /// one concrete tile placement and fabric. Two placements that happen to
 /// share a human-readable tag hash differently, which is what makes
 /// [`crate::experiments::Ctx`]'s traffic cache safe; two mappings — or
-/// two schedules, two fabrics, or two fault plans — of the same
-/// workload never alias either.
+/// two schedules, two fabrics, two fault plans, or two serving specs —
+/// of the same workload never alias either.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ScenarioKey {
     pub model: ModelId,
@@ -286,6 +297,7 @@ pub struct ScenarioKey {
     pub schedule: SchedulePolicy,
     pub fabric: Fabric,
     pub faults: FaultPlan,
+    pub serving: ServingSpec,
 }
 
 impl ScenarioKey {
@@ -324,7 +336,35 @@ impl ScenarioKey {
         fabric: Fabric,
         faults: FaultPlan,
     ) -> Self {
-        ScenarioKey { model, placement: sys.placement_key(), mapping, schedule, fabric, faults }
+        ScenarioKey::with_serving(
+            model,
+            sys,
+            mapping,
+            schedule,
+            fabric,
+            faults,
+            ServingSpec::none(),
+        )
+    }
+
+    pub fn with_serving(
+        model: ModelId,
+        sys: &SystemConfig,
+        mapping: MappingPolicy,
+        schedule: SchedulePolicy,
+        fabric: Fabric,
+        faults: FaultPlan,
+        serving: ServingSpec,
+    ) -> Self {
+        ScenarioKey {
+            model,
+            placement: sys.placement_key(),
+            mapping,
+            schedule,
+            fabric,
+            faults,
+            serving,
+        }
     }
 }
 
@@ -431,15 +471,26 @@ mod tests {
             Fabric::single(),
             "wire:link=3".parse().unwrap(),
         );
+        let h = ScenarioKey::with_serving(
+            ModelId::LeNet,
+            &sys,
+            MappingPolicy::default(),
+            SchedulePolicy::default(),
+            Fabric::single(),
+            FaultPlan::none(),
+            "poisson:rate=0.5".parse().unwrap(),
+        );
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d, "mapping must be part of the key");
         assert_ne!(a, e, "schedule must be part of the key");
         assert_ne!(a, f, "fabric must be part of the key");
         assert_ne!(a, g, "fault plan must be part of the key");
+        assert_ne!(a, h, "serving spec must be part of the key");
         assert_eq!(a, ScenarioKey::new(ModelId::LeNet, &sys.clone()));
         assert_eq!(a.fabric, Fabric::single(), "single chip is the default key fabric");
         assert_eq!(a.faults, FaultPlan::none(), "fault-free is the default key plan");
+        assert_eq!(a.serving, ServingSpec::none(), "serving-off is the default key spec");
     }
 
     #[test]
@@ -466,5 +517,14 @@ mod tests {
         let plan: FaultPlan = "air:ch=1,from=0,burst=500".parse().unwrap();
         let sc = sc.with_faults(plan.clone());
         assert_eq!(sc.faults, plan);
+    }
+
+    #[test]
+    fn scenario_carries_a_serving_spec() {
+        let sc = Scenario::paper();
+        assert!(sc.serving.is_none());
+        let spec: ServingSpec = "poisson:rate=0.5;batch=8".parse().unwrap();
+        let sc = sc.with_serving(spec.clone());
+        assert_eq!(sc.serving, spec);
     }
 }

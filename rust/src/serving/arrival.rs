@@ -1,0 +1,333 @@
+//! Request arrival processes: deterministic seeded cycle stamps.
+//!
+//! An [`ArrivalProcess`] turns a spec clause into a monotone stream of
+//! absolute arrival cycles. Streams derive only from (process fields,
+//! tenant salt) — never from thread or workspace state — so serving
+//! runs are byte-identical across `WIHETNOC_THREADS` settings, the same
+//! guarantee [`crate::faults::FaultPlan::compile`] gives fault
+//! injection.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+use crate::util::rng::Rng;
+
+use super::{parse_num, GRAMMAR};
+
+/// Default burst multiplier (`x`): the on-window arrival rate is
+/// `rate * x`.
+pub const DEFAULT_BURST_X: u32 = 4;
+
+/// Stream-domain separators so a Poisson and a burst process with the
+/// same seed/salt still draw from unrelated streams.
+const POISSON_STREAM: u64 = 0x5049_534e_0000_0001;
+const BURST_STREAM: u64 = 0x4255_5253_0000_0001;
+
+/// A request arrival process (see [`GRAMMAR`]). Rates are stored as
+/// integer requests-per-megacycle (`rate_pmc`) so the process is
+/// `Hash + Eq` and can ride inside [`crate::ScenarioKey`]; the grammar's
+/// `rate=<r>` is in requests per kilocycle, so `rate_pmc = r * 1000`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps with mean
+    /// `1e6 / rate_pmc` cycles.
+    Poisson { rate_pmc: u64, seed: u64 },
+    /// On/off-modulated Poisson: inside each `on`-cycle window of the
+    /// `on + off` period the rate is boosted to `rate * x`; outside it
+    /// runs at the base rate.
+    Burst { rate_pmc: u64, on: u64, off: u64, x: u32 },
+    /// Trace-driven: one absolute arrival cycle per line (blank lines
+    /// and `#` comments skipped), sorted, truncated to the requested
+    /// count. A shorter file simply offers fewer requests.
+    Trace { file: String },
+}
+
+impl ArrivalProcess {
+    /// Semantic checks beyond the grammar.
+    pub fn validate(&self) -> Result<(), WihetError> {
+        match self {
+            ArrivalProcess::Poisson { rate_pmc, .. } => check_rate(*rate_pmc),
+            ArrivalProcess::Burst { rate_pmc, on, x, .. } => {
+                check_rate(*rate_pmc)?;
+                if *on == 0 {
+                    return Err(WihetError::InvalidArg(format!(
+                        "burst: on-window must be >= 1 cycle\n{GRAMMAR}"
+                    )));
+                }
+                if *x == 0 {
+                    return Err(WihetError::InvalidArg(format!(
+                        "burst: x multiplier must be >= 1\n{GRAMMAR}"
+                    )));
+                }
+                check_rate((*rate_pmc).saturating_mul(*x as u64))
+            }
+            ArrivalProcess::Trace { file } => {
+                if file.is_empty() {
+                    return Err(WihetError::InvalidArg(format!(
+                        "trace: clause needs file=<path>\n{GRAMMAR}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Generate the first `n` arrival cycles of this process, salted per
+    /// tenant so tenants sharing one spec still see independent streams.
+    /// Stochastic processes always succeed; `trace:` reads its file
+    /// here (a shorter file offers fewer than `n` requests).
+    pub fn arrivals(&self, n: usize, salt: u64) -> Result<Vec<u64>, WihetError> {
+        match self {
+            ArrivalProcess::Poisson { rate_pmc, seed } => {
+                let mean_gap = 1e6 / *rate_pmc as f64;
+                let mut rng = Rng::new(seed ^ salt ^ POISSON_STREAM);
+                let mut t = 0f64;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t += exp_gap(&mut rng, mean_gap);
+                    out.push(t as u64);
+                }
+                Ok(out)
+            }
+            ArrivalProcess::Burst { rate_pmc, on, off, x } => {
+                let base_gap = 1e6 / *rate_pmc as f64;
+                let period = on + off;
+                let mut rng = Rng::new(salt ^ BURST_STREAM);
+                let mut t = 0f64;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // draw the gap at the rate of the window the stream
+                    // is currently in
+                    let mean = if (t as u64) % period < *on {
+                        base_gap / *x as f64
+                    } else {
+                        base_gap
+                    };
+                    t += exp_gap(&mut rng, mean);
+                    out.push(t as u64);
+                }
+                Ok(out)
+            }
+            ArrivalProcess::Trace { file } => {
+                let text = std::fs::read_to_string(file).map_err(|e| {
+                    WihetError::InvalidArg(format!("trace:file={file}: {e}\n{GRAMMAR}"))
+                })?;
+                let mut out = Vec::new();
+                for (ln, line) in text.lines().enumerate() {
+                    let line = line.trim();
+                    if line.is_empty() || line.starts_with('#') {
+                        continue;
+                    }
+                    let cycle: u64 = line.parse().map_err(|_| {
+                        WihetError::InvalidArg(format!(
+                            "trace:file={file} line {}: '{line}' is not a cycle\n{GRAMMAR}",
+                            ln + 1
+                        ))
+                    })?;
+                    out.push(cycle);
+                }
+                out.sort_unstable();
+                out.truncate(n);
+                Ok(out)
+            }
+        }
+    }
+}
+
+fn check_rate(rate_pmc: u64) -> Result<(), WihetError> {
+    if rate_pmc == 0 {
+        return Err(WihetError::InvalidArg(format!(
+            "rate must be > 0 requests per kilocycle\n{GRAMMAR}"
+        )));
+    }
+    // mean gap below one cycle cannot be represented on a cycle clock
+    if rate_pmc > 1_000_000 {
+        return Err(WihetError::InvalidArg(format!(
+            "rate {} req/kcycle exceeds one request per cycle\n{GRAMMAR}",
+            rate_pmc as f64 / 1000.0
+        )));
+    }
+    Ok(())
+}
+
+/// One exponential inter-arrival gap with the given mean, in cycles.
+/// `u` is in [0, 1), so `1 - u` is in (0, 1] and the gap is finite and
+/// non-negative.
+fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
+    -(1.0 - rng.f64()).max(f64::MIN_POSITIVE).ln() * mean
+}
+
+impl fmt::Display for ArrivalProcess {
+    /// Canonical form (defaults omitted); round-trips through
+    /// [`ArrivalProcess::from_str`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrivalProcess::Poisson { rate_pmc, seed } => {
+                let mut s = format!("poisson:rate={}", *rate_pmc as f64 / 1000.0);
+                if *seed != 0 {
+                    s.push_str(&format!(",seed={seed}"));
+                }
+                f.pad(&s)
+            }
+            ArrivalProcess::Burst { rate_pmc, on, off, x } => {
+                let mut s = format!(
+                    "burst:rate={},on={on},off={off}",
+                    *rate_pmc as f64 / 1000.0
+                );
+                if *x != DEFAULT_BURST_X {
+                    s.push_str(&format!(",x={x}"));
+                }
+                f.pad(&s)
+            }
+            ArrivalProcess::Trace { file } => f.pad(&format!("trace:file={file}")),
+        }
+    }
+}
+
+fn parse_rate(v: &str) -> Result<u64, WihetError> {
+    let r: f64 = parse_num("rate", v)?;
+    if !r.is_finite() || r <= 0.0 {
+        return Err(WihetError::InvalidArg(format!(
+            "rate must be > 0 requests per kilocycle, got {v}\n{GRAMMAR}"
+        )));
+    }
+    Ok(((r * 1000.0).round() as u64).max(1))
+}
+
+impl FromStr for ArrivalProcess {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let clause = s.trim();
+        let (head, rest) = clause.split_once(':').ok_or_else(|| {
+            WihetError::InvalidArg(format!(
+                "arrival clause '{clause}' needs a poisson:/burst:/trace: head\n{GRAMMAR}"
+            ))
+        })?;
+        let mut kv = Vec::new();
+        for item in rest.split(',') {
+            let (k, v) = item.split_once('=').ok_or_else(|| {
+                WihetError::InvalidArg(format!(
+                    "expected key=value in arrival clause, got '{item}'\n{GRAMMAR}"
+                ))
+            })?;
+            kv.push((k.trim(), v.trim()));
+        }
+        let get = |key: &str| kv.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+        let known = |allowed: &[&str]| -> Result<(), WihetError> {
+            for (k, _) in &kv {
+                if !allowed.contains(k) {
+                    return Err(WihetError::InvalidArg(format!(
+                        "unknown key '{k}' in {head}: arrival clause\n{GRAMMAR}"
+                    )));
+                }
+            }
+            Ok(())
+        };
+        let need = |key: &str| {
+            get(key).ok_or_else(|| {
+                WihetError::InvalidArg(format!("{head}: clause needs {key}=...\n{GRAMMAR}"))
+            })
+        };
+        let p = match head.trim() {
+            "poisson" => {
+                known(&["rate", "seed"])?;
+                ArrivalProcess::Poisson {
+                    rate_pmc: parse_rate(need("rate")?)?,
+                    seed: get("seed").map(|v| parse_num("seed", v)).transpose()?.unwrap_or(0),
+                }
+            }
+            "burst" => {
+                known(&["rate", "on", "off", "x"])?;
+                ArrivalProcess::Burst {
+                    rate_pmc: parse_rate(need("rate")?)?,
+                    on: parse_num("on", need("on")?)?,
+                    off: parse_num("off", need("off")?)?,
+                    x: get("x")
+                        .map(|v| parse_num("x", v))
+                        .transpose()?
+                        .unwrap_or(DEFAULT_BURST_X),
+                }
+            }
+            "trace" => {
+                known(&["file"])?;
+                ArrivalProcess::Trace { file: need("file")?.to_string() }
+            }
+            other => {
+                return Err(WihetError::InvalidArg(format!(
+                    "unknown arrival process '{other}' (poisson|burst|trace)\n{GRAMMAR}"
+                )));
+            }
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_streams_are_deterministic_and_salted() {
+        let p: ArrivalProcess = "poisson:rate=0.5,seed=7".parse().unwrap();
+        let a = p.arrivals(64, 1).unwrap();
+        let b = p.arrivals(64, 1).unwrap();
+        assert_eq!(a, b, "same (seed, salt) must replay the same stream");
+        let c = p.arrivals(64, 2).unwrap();
+        assert_ne!(a, c, "a different tenant salt must decorrelate the stream");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals are monotone");
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_rate() {
+        // rate=0.5 req/kcycle -> mean gap 2000 cycles; 512 samples keep
+        // the sample mean well within a factor of 2
+        let p = ArrivalProcess::Poisson { rate_pmc: 500, seed: 3 };
+        let a = p.arrivals(512, 0).unwrap();
+        let mean = *a.last().unwrap() as f64 / a.len() as f64;
+        assert!((1000.0..4000.0).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn burst_on_window_is_denser() {
+        let p = ArrivalProcess::Burst { rate_pmc: 100, on: 10_000, off: 30_000, x: 8 };
+        p.validate().unwrap();
+        let a = p.arrivals(400, 5).unwrap();
+        let period = 40_000u64;
+        let on = a.iter().filter(|&&t| t % period < 10_000).count();
+        let off = a.len() - on;
+        // on-window holds 25% of the time but is 8x denser; with 400
+        // samples it must clearly dominate
+        assert!(on > off, "on-window {on} vs off-window {off} arrivals");
+    }
+
+    #[test]
+    fn trace_reads_sorts_and_truncates() {
+        let path = std::env::temp_dir().join("wihetnoc_serving_arrival_trace.txt");
+        std::fs::write(&path, "# header\n300\n100\n\n200\n400\n").unwrap();
+        let p = ArrivalProcess::Trace { file: path.to_string_lossy().into_owned() };
+        assert_eq!(p.arrivals(3, 9).unwrap(), vec![100, 200, 300]);
+        assert_eq!(p.arrivals(10, 9).unwrap(), vec![100, 200, 300, 400]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_errors_name_the_file() {
+        let p = ArrivalProcess::Trace { file: "/nonexistent/arrivals.txt".into() };
+        let WihetError::InvalidArg(msg) = p.arrivals(4, 0).unwrap_err() else {
+            panic!("wrong variant");
+        };
+        assert!(msg.contains("/nonexistent/arrivals.txt"), "{msg}");
+        assert!(msg.contains("serve grammar"), "{msg}");
+    }
+
+    #[test]
+    fn rates_outside_the_cycle_clock_are_rejected() {
+        assert!("poisson:rate=1001".parse::<ArrivalProcess>().is_err());
+        assert!("poisson:rate=1000".parse::<ArrivalProcess>().is_ok());
+        // burst boost must also stay under one request per cycle
+        assert!("burst:rate=500,on=8,off=8,x=4".parse::<ArrivalProcess>().is_err());
+    }
+}

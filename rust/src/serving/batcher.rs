@@ -1,0 +1,117 @@
+//! Continuous batching: group an arrival stream into dispatched
+//! batches.
+//!
+//! A batch opens when the oldest undispatched request arrives and
+//! dispatches on whichever comes first:
+//!
+//! * **size** — the `batch`-th request arrives (dispatch at its arrival
+//!   cycle), or
+//! * **timeout** — `timeout` cycles pass since the batch opened
+//!   (dispatch at `open + timeout` with however many requests made it).
+//!
+//! The timeout bounds per-request queueing delay at light load —
+//! without it, a lone request would wait forever for batch-mates and
+//! the unloaded p99 baseline that knee detection divides by would be
+//! meaningless. Batching is a pure function of the arrival stream and
+//! the policy: no simulator feedback, which is exactly what "open loop"
+//! means.
+
+/// Continuous-batching knobs (see [`super::GRAMMAR`]'s `<load>` clause).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchPolicy {
+    /// Dispatch when this many requests are waiting.
+    pub batch: u32,
+    /// Dispatch this many cycles after the oldest waiting request
+    /// arrived, even if the batch is not full.
+    pub timeout: u64,
+}
+
+/// One dispatched batch: requests `first .. first + count` of the
+/// arrival stream, dispatched at `dispatch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Batch {
+    /// Cycle the batch enters the network.
+    pub dispatch: u64,
+    /// Index of the batch's first request in the arrival stream.
+    pub first: usize,
+    /// Number of requests in the batch (1 ..= policy.batch).
+    pub count: usize,
+}
+
+/// Group a monotone arrival stream into dispatched batches. Every
+/// arrival lands in exactly one batch; dispatch cycles are monotone
+/// non-decreasing; per-request queueing delay (`dispatch - arrival`) is
+/// at most `policy.timeout`.
+pub fn batches(arrivals: &[u64], policy: &BatchPolicy) -> Vec<Batch> {
+    let cap = policy.batch.max(1) as usize;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < arrivals.len() {
+        let open = arrivals[i];
+        let deadline = open + policy.timeout;
+        let mut j = i + 1;
+        while j - i < cap && j < arrivals.len() && arrivals[j] <= deadline {
+            j += 1;
+        }
+        let count = j - i;
+        let dispatch = if count == cap { arrivals[j - 1] } else { deadline };
+        out.push(Batch { dispatch, first: i, count });
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: BatchPolicy = BatchPolicy { batch: 4, timeout: 100 };
+
+    #[test]
+    fn full_batch_dispatches_at_the_filling_arrival() {
+        let b = batches(&[10, 20, 30, 40, 500], &P);
+        assert_eq!(b[0], Batch { dispatch: 40, first: 0, count: 4 });
+        assert_eq!(b[1], Batch { dispatch: 600, first: 4, count: 1 });
+    }
+
+    #[test]
+    fn timeout_dispatches_a_partial_batch() {
+        let b = batches(&[10, 20, 300, 310], &P);
+        // 10 and 20 time out at 110; 300/310 open a fresh batch
+        assert_eq!(b[0], Batch { dispatch: 110, first: 0, count: 2 });
+        assert_eq!(b[1], Batch { dispatch: 400, first: 2, count: 2 });
+    }
+
+    #[test]
+    fn every_arrival_lands_in_exactly_one_batch() {
+        let arrivals: Vec<u64> = (0..37).map(|i| i * 13).collect();
+        let b = batches(&arrivals, &P);
+        let covered: usize = b.iter().map(|x| x.count).sum();
+        assert_eq!(covered, arrivals.len());
+        for w in b.windows(2) {
+            assert_eq!(w[0].first + w[0].count, w[1].first, "batches are contiguous");
+            assert!(w[0].dispatch <= w[1].dispatch, "dispatch is monotone");
+        }
+    }
+
+    #[test]
+    fn queue_wait_is_bounded_by_the_timeout() {
+        let arrivals: Vec<u64> = (0..50).map(|i| i * i).collect();
+        for b in batches(&arrivals, &P) {
+            for &a in &arrivals[b.first..b.first + b.count] {
+                assert!(b.dispatch >= a, "dispatch before arrival");
+                assert!(b.dispatch - a <= P.timeout, "wait {} > timeout", b.dispatch - a);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_of_one_dispatches_immediately() {
+        let p = BatchPolicy { batch: 1, timeout: 100 };
+        for b in batches(&[5, 6, 7], &p) {
+            assert_eq!(b.count, 1);
+        }
+        assert_eq!(batches(&[5, 6, 7], &p)[0].dispatch, 5);
+        assert!(batches(&[], &p).is_empty());
+    }
+}

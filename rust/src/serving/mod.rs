@@ -1,0 +1,306 @@
+//! Open-loop inference serving: arrival processes, continuous batching,
+//! and multi-tenant tail-latency accounting.
+//!
+//! Every other scenario in the crate is a *closed-loop* training
+//! iteration: inject one iteration's traffic, measure its mean latency.
+//! This module is ROADMAP item 2's "millions of users" story — an
+//! *open-loop* workload where requests arrive on their own clock
+//! whether or not the NoC has drained the previous ones, so the figure
+//! of merit becomes tail latency under contention:
+//!
+//! * [`ArrivalProcess`] — Poisson / bursty / trace-driven request
+//!   arrivals, generated as deterministic seeded cycle stamps (see the
+//!   [`GRAMMAR`]). Determinism mirrors the fault plan: streams derive
+//!   only from (spec, seed, tenant salt), never from thread or
+//!   workspace state.
+//! * [`BatchPolicy`] — continuous batching: a batch dispatches when `B`
+//!   requests are waiting or `T` cycles after the oldest arrived,
+//!   whichever first. The timeout bounds queueing delay at light load,
+//!   which is what makes the saturation knee detectable.
+//! * [`TenantMix`] — several models sharing one chip's tiles, each with
+//!   per-tenant [`crate::telemetry::LogHistogram`] end-to-end latency
+//!   split into queueing delay and network latency, plus
+//!   delivered-vs-offered throughput and [`detect_knee`].
+//! * [`run_serving`] — lowers each dispatched batch to forward-only
+//!   phase traffic and injects it open-loop through the gated
+//!   calendar-queue simulator
+//!   ([`crate::noc::sim::NocSim::run_timeline_telemetry`]): the first
+//!   phase of a batch has no predecessors, so its absolute `inject_at`
+//!   offsets *are* the dispatch cycle; later phases gate on their
+//!   predecessor's drain exactly like schedule instances.
+//!
+//! A [`ServingSpec`] parses from the same compact clause grammar as
+//! [`crate::faults::FaultPlan`], rides inside [`crate::ScenarioKey`]
+//! (all-integer fields), and defaults to [`ServingSpec::none`] — the
+//! entire subsystem is behind `is_none()` checks, so serving-off runs
+//! stay byte-identical to the pre-serving code paths.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::WihetError;
+
+pub mod arrival;
+pub mod batcher;
+pub mod run;
+pub mod tenant;
+
+pub use arrival::ArrivalProcess;
+pub use batcher::{batches, Batch, BatchPolicy};
+pub use run::{run_serving, run_serving_faults, run_serving_obs, ServingReport};
+pub use tenant::{detect_knee, Tenant, TenantMix, TenantStats};
+
+/// The `--serve` grammar (embedded in every parse error).
+pub const GRAMMAR: &str = "serve grammar:
+  <spec>    := none | <arrival>[;<load>]
+  <arrival> := poisson:rate=<r>[,seed=<n>]            Poisson arrivals, <r> requests per kilocycle
+             | burst:rate=<r>,on=<a>,off=<b>[,x=<m>]  on/off Poisson: rate*<m> inside each <a>-cycle on-window (x default 4)
+             | trace:file=<path>                      one absolute arrival cycle per line ('#' comments)
+  <load>    := [batch=<b>][,timeout=<t>][,n=<k>]      dispatch on <b> requests or <t> cycles (defaults 4/256); <k> requests per tenant (default 64)
+  examples: poisson:rate=0.5 | burst:rate=0.25,on=4096,off=12288,x=8;batch=8,timeout=512 | trace:file=arrivals.txt;n=32";
+
+/// Default continuous-batching batch size.
+pub const DEFAULT_BATCH: u32 = 4;
+/// Default continuous-batching timeout, cycles.
+pub const DEFAULT_TIMEOUT: u64 = 256;
+/// Default offered requests per tenant.
+pub const DEFAULT_REQUESTS: u32 = 64;
+
+pub(crate) fn parse_num<T: FromStr>(key: &str, v: &str) -> Result<T, WihetError> {
+    v.trim().parse::<T>().map_err(|_| {
+        WihetError::InvalidArg(format!("{key}={v} is not a valid number\n{GRAMMAR}"))
+    })
+}
+
+/// A typed, deterministic serving spec. Parses from the [`GRAMMAR`];
+/// rates are stored in integer requests-per-megacycle so the spec can
+/// ride inside the `Hash + Eq` [`crate::ScenarioKey`] (same trick as
+/// `FaultPlan::wire_rate_ppm`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ServingSpec {
+    /// Request arrival process; `None` means serving is off and every
+    /// code path behaves exactly as before this subsystem existed.
+    pub arrival: Option<ArrivalProcess>,
+    /// Continuous-batching batch size: dispatch when this many requests
+    /// are waiting.
+    pub batch: u32,
+    /// Continuous-batching timeout: dispatch `timeout` cycles after the
+    /// oldest waiting request arrived, even if the batch is not full.
+    pub timeout: u64,
+    /// Offered requests per tenant.
+    pub requests: u32,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec {
+            arrival: None,
+            batch: DEFAULT_BATCH,
+            timeout: DEFAULT_TIMEOUT,
+            requests: DEFAULT_REQUESTS,
+        }
+    }
+}
+
+impl ServingSpec {
+    /// The empty spec: serving off, byte-identical to pre-serving runs.
+    pub fn none() -> Self {
+        ServingSpec::default()
+    }
+
+    /// True when serving is off.
+    pub fn is_none(&self) -> bool {
+        self.arrival.is_none()
+    }
+
+    /// The continuous-batching policy of this spec.
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy { batch: self.batch, timeout: self.timeout }
+    }
+
+    /// Semantic checks beyond the grammar. The empty spec is always
+    /// valid.
+    pub fn validate(&self) -> Result<(), WihetError> {
+        let Some(a) = &self.arrival else { return Ok(()) };
+        a.validate()?;
+        if self.batch == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "serve: batch must be >= 1\n{GRAMMAR}"
+            )));
+        }
+        if self.timeout == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "serve: timeout must be >= 1 cycle\n{GRAMMAR}"
+            )));
+        }
+        if self.requests == 0 {
+            return Err(WihetError::InvalidArg(format!(
+                "serve: n must be >= 1 request\n{GRAMMAR}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ServingSpec {
+    /// Canonical form (defaults omitted); round-trips through
+    /// [`ServingSpec::from_str`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Some(a) = &self.arrival else { return f.pad("none") };
+        let mut parts = vec![a.to_string()];
+        let mut kv: Vec<String> = Vec::new();
+        if self.batch != DEFAULT_BATCH {
+            kv.push(format!("batch={}", self.batch));
+        }
+        if self.timeout != DEFAULT_TIMEOUT {
+            kv.push(format!("timeout={}", self.timeout));
+        }
+        if self.requests != DEFAULT_REQUESTS {
+            kv.push(format!("n={}", self.requests));
+        }
+        if !kv.is_empty() {
+            parts.push(kv.join(","));
+        }
+        f.pad(&parts.join(";"))
+    }
+}
+
+impl FromStr for ServingSpec {
+    type Err = WihetError;
+
+    fn from_str(s: &str) -> Result<Self, WihetError> {
+        let t = s.trim();
+        let mut spec = ServingSpec::none();
+        if t.is_empty() || t.eq_ignore_ascii_case("none") {
+            return Ok(spec);
+        }
+        for clause in t.split(';') {
+            let clause = clause.trim();
+            if clause.contains(':') {
+                // headed clause: an arrival process
+                if spec.arrival.is_some() {
+                    return Err(WihetError::InvalidArg(format!(
+                        "at most one arrival clause per serve spec\n{GRAMMAR}"
+                    )));
+                }
+                spec.arrival = Some(clause.parse()?);
+            } else {
+                // headless load clause: batch=<b>,timeout=<t>,n=<k>
+                for item in clause.split(',') {
+                    let (k, v) = item.split_once('=').ok_or_else(|| {
+                        WihetError::InvalidArg(format!(
+                            "expected key=value in serve load clause, got '{item}'\n{GRAMMAR}"
+                        ))
+                    })?;
+                    match k.trim() {
+                        "batch" => spec.batch = parse_num("batch", v)?,
+                        "timeout" => spec.timeout = parse_num("timeout", v)?,
+                        "n" => spec.requests = parse_num("n", v)?,
+                        other => {
+                            return Err(WihetError::InvalidArg(format!(
+                                "unknown key '{other}' in serve load clause\n{GRAMMAR}"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        if spec.arrival.is_none() {
+            return Err(WihetError::InvalidArg(format!(
+                "serve spec '{t}' has no arrival clause (poisson:/burst:/trace:)\n{GRAMMAR}"
+            )));
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_none_and_displays() {
+        let spec = ServingSpec::none();
+        assert!(spec.is_none());
+        assert_eq!(spec.to_string(), "none");
+        assert_eq!("none".parse::<ServingSpec>().unwrap(), spec);
+        assert_eq!("".parse::<ServingSpec>().unwrap(), spec);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_fills_defaults() {
+        let spec: ServingSpec = "poisson:rate=0.5".parse().unwrap();
+        assert!(!spec.is_none());
+        assert_eq!(spec.batch, DEFAULT_BATCH);
+        assert_eq!(spec.timeout, DEFAULT_TIMEOUT);
+        assert_eq!(spec.requests, DEFAULT_REQUESTS);
+        assert_eq!(
+            spec.arrival,
+            Some(ArrivalProcess::Poisson { rate_pmc: 500, seed: 0 })
+        );
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in [
+            "poisson:rate=0.5",
+            "poisson:rate=2,seed=7",
+            "burst:rate=0.25,on=4096,off=12288",
+            "burst:rate=0.25,on=4096,off=12288,x=8;batch=8,timeout=512",
+            "trace:file=arrivals.txt;n=32",
+            "poisson:rate=0.5;batch=1,timeout=1,n=1",
+            "none",
+        ] {
+            let spec: ServingSpec = s.parse().unwrap();
+            let canon = spec.to_string();
+            let again: ServingSpec = canon.parse().unwrap();
+            assert_eq!(spec, again, "{s} -> {canon}");
+        }
+    }
+
+    #[test]
+    fn load_clause_alone_needs_an_arrival() {
+        let err = "batch=8,timeout=512".parse::<ServingSpec>().unwrap_err();
+        let WihetError::InvalidArg(msg) = err else { panic!("wrong variant") };
+        assert!(msg.contains("no arrival clause"), "{msg}");
+        assert!(msg.contains("serve grammar"), "{msg}");
+    }
+
+    #[test]
+    fn errors_carry_the_grammar() {
+        for bad in [
+            "poisson:rate=zero",
+            "poisson:speed=1",
+            "poisson:rate=0",
+            "poisson:rate=-1",
+            "burst:rate=0.5",
+            "burst:rate=0.5,on=0,off=64",
+            "trace:",
+            "trace:path=x",
+            "arrivals:rate=1",
+            "poisson:rate=1;poisson:rate=2",
+            "poisson:rate=1;batch=0",
+            "poisson:rate=1;batch",
+            "poisson:rate=1;pace=3",
+        ] {
+            let err = bad.parse::<ServingSpec>().unwrap_err();
+            let WihetError::InvalidArg(msg) = err else {
+                panic!("{bad}: wrong error variant");
+            };
+            assert!(msg.contains("serve grammar"), "{bad}: {msg}");
+        }
+    }
+
+    #[test]
+    fn specs_hash_into_keys() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert("poisson:rate=0.5".parse::<ServingSpec>().unwrap());
+        set.insert("poisson:rate=0.5;batch=8".parse::<ServingSpec>().unwrap());
+        set.insert(ServingSpec::none());
+        assert_eq!(set.len(), 3);
+        assert!(set.contains(&"poisson:rate=0.5".parse::<ServingSpec>().unwrap()));
+    }
+}

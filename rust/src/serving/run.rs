@@ -1,0 +1,313 @@
+//! Running an open-loop serving workload through the gated simulator.
+//!
+//! Each dispatched batch lowers to its model's *forward* phases only
+//! (inference: no backward pass, no weight update) at the batch's
+//! realized size. The first phase of a batch has no predecessors, so
+//! the gated event loop releases it at cycle 0 and its absolute
+//! `inject_at` offsets — `dispatch + t` from [`phase_trace`] — are the
+//! open-loop injection clock; later phases gate on their predecessor's
+//! drain exactly like schedule instances. Batches from every tenant
+//! coexist in one simulation, so contention between tenants (and
+//! between consecutive batches of one tenant) is modeled, not assumed.
+//!
+//! The entry chain mirrors the schedule runner:
+//! [`run_serving`] → [`run_serving_faults`] → [`run_serving_obs`], with
+//! [`FaultPlan::none`] installing no fault hooks and a `None` telemetry
+//! sink recording nothing, so the plain entry point stays
+//! byte-identical to the observed one.
+
+use std::collections::HashMap;
+
+use crate::error::WihetError;
+use crate::faults::{FaultPlan, ResilienceStats};
+use crate::model::SystemConfig;
+use crate::noc::builder::NocInstance;
+use crate::noc::sim::{Message, NocSim, SimConfig, SimReport};
+use crate::telemetry::Telemetry;
+use crate::traffic::phases::{Pass, TrafficModel};
+use crate::traffic::trace::{phase_trace, TraceConfig};
+use crate::util::rng::Rng;
+use crate::workload::{lower_id, MappingPolicy};
+
+use super::{batches, ServingSpec, TenantMix, TenantStats, GRAMMAR};
+
+/// Outcome of one open-loop serving run on one NoC.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Aggregate network report over every tenant's traffic.
+    pub sim: SimReport,
+    /// Last tail-delivery cycle of the run.
+    pub makespan: u64,
+    /// Request conservation over all tenants:
+    /// `offered == delivered + queued + in_flight`.
+    pub offered: u64,
+    pub dispatched: u64,
+    pub delivered: u64,
+    pub in_flight: u64,
+    pub queued: u64,
+    /// Batches dispatched over all tenants.
+    pub batches: u64,
+    /// Per-tenant accounting, in [`TenantMix`] order.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl ServingReport {
+    /// Fault-injection counters of the underlying simulation (all zero
+    /// for fault-free runs).
+    pub fn resilience(&self) -> &ResilienceStats {
+        &self.sim.resilience
+    }
+
+    /// Delivered throughput over all tenants, requests per megacycle.
+    pub fn delivered_rate_pmc(&self) -> f64 {
+        self.delivered as f64 * 1e6 / self.makespan.max(1) as f64
+    }
+}
+
+/// Tenant stream salt: decorrelates per-tenant arrival streams drawn
+/// from one shared spec (golden-ratio stride, like splitmix).
+fn tenant_salt(ti: usize) -> u64 {
+    (ti as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Simulate `spec`'s open-loop request load of `mix` on `inst`.
+pub fn run_serving(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    mix: &TenantMix,
+    spec: &ServingSpec,
+    cfg: &TraceConfig,
+) -> Result<ServingReport, WihetError> {
+    run_serving_faults(sys, inst, mix, spec, cfg, &FaultPlan::none())
+}
+
+/// [`run_serving`] under a fault plan, compiled once against this NoC.
+/// An empty plan ([`FaultPlan::none`]) installs no fault hooks at all,
+/// so results stay byte-identical to [`run_serving`].
+pub fn run_serving_faults(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    mix: &TenantMix,
+    spec: &ServingSpec,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+) -> Result<ServingReport, WihetError> {
+    run_serving_obs(sys, inst, mix, spec, cfg, plan, None)
+}
+
+/// [`run_serving_faults`] with an optional telemetry sink: the sink
+/// rides along the simulation and, once the run finishes, gets one span
+/// per drained batch (name `"<tenant> b<k>"`, track = tenant index,
+/// category `"serve"`, dispatch → drain). Reports are byte-identical
+/// with or without a sink.
+pub fn run_serving_obs(
+    sys: &SystemConfig,
+    inst: &NocInstance,
+    mix: &TenantMix,
+    spec: &ServingSpec,
+    cfg: &TraceConfig,
+    plan: &FaultPlan,
+    mut tel: Option<&mut Telemetry>,
+) -> Result<ServingReport, WihetError> {
+    spec.validate()?;
+    let arrival = spec.arrival.as_ref().ok_or_else(|| {
+        WihetError::InvalidArg(format!(
+            "serving run needs an arrival clause (spec is none)\n{GRAMMAR}"
+        ))
+    })?;
+    if mix.is_empty() {
+        return Err(WihetError::InvalidArg(
+            "serving needs at least one tenant model".into(),
+        ));
+    }
+    let fx = if plan.has_noc_faults() {
+        let nominal = SimConfig::default().nominal_flits;
+        Some(plan.compile(&inst.topo, &inst.routes, &inst.air, nominal)?)
+    } else {
+        None
+    };
+
+    // Arrival streams and batch layout are pure functions of the spec —
+    // computed before any simulator state exists.
+    let policy = spec.policy();
+    let mut tenant_arrivals = Vec::with_capacity(mix.len());
+    let mut tenant_batches = Vec::with_capacity(mix.len());
+    for ti in 0..mix.len() {
+        let arr = arrival.arrivals(spec.requests as usize, tenant_salt(ti))?;
+        tenant_batches.push(batches(&arr, &policy));
+        tenant_arrivals.push(arr);
+    }
+
+    // One message group per (batch, forward phase), one RNG stream over
+    // the canonical (tenant, batch, phase) order — deterministic for a
+    // given seed, like `timeline_groups`. Lowering is cached per
+    // realized batch size; the traffic draw is per group.
+    let mut rng = Rng::new(cfg.seed);
+    let mut groups: Vec<Vec<Message>> = Vec::new();
+    let mut preds: Vec<Vec<u32>> = Vec::new();
+    let mut batch_last_group: Vec<Vec<usize>> = Vec::with_capacity(mix.len());
+    for (ti, t) in mix.tenants.iter().enumerate() {
+        let mut lowered: HashMap<usize, TrafficModel> = HashMap::new();
+        let mut last_ids = Vec::with_capacity(tenant_batches[ti].len());
+        for b in &tenant_batches[ti] {
+            if !lowered.contains_key(&b.count) {
+                let tm = lower_id(&t.model, &MappingPolicy::default(), sys, b.count)?;
+                lowered.insert(b.count, tm);
+            }
+            let tm = &lowered[&b.count];
+            let mut prev: Option<usize> = None;
+            for phase in tm.pass_phases(Pass::Forward) {
+                let start = if prev.is_none() { b.dispatch } else { 0 };
+                let (msgs, _dur) = phase_trace(sys, phase, start, cfg, &mut rng);
+                let g = groups.len();
+                groups.push(msgs);
+                preds.push(prev.map(|p| vec![p as u32]).unwrap_or_default());
+                prev = Some(g);
+            }
+            last_ids.push(prev.expect("a lowered model always has forward phases"));
+        }
+        batch_last_group.push(last_ids);
+    }
+
+    let mut sim = NocSim::new(sys, &inst.topo, &inst.routes, &inst.air, SimConfig::default());
+    if let Some(f) = &fx {
+        sim = sim.with_faults(f);
+    }
+    let out = sim.run_timeline_telemetry(&groups, &preds, tel.as_deref_mut());
+
+    if let Some(sink) = tel {
+        for (ti, t) in mix.tenants.iter().enumerate() {
+            for (bi, b) in tenant_batches[ti].iter().enumerate() {
+                let d = out.drain[batch_last_group[ti][bi]];
+                if d == u64::MAX {
+                    continue; // horizon-cut batch: no span
+                }
+                sink.span(format!("{} b{bi}", t.name), "serve", ti as u32, b.dispatch, d);
+            }
+        }
+    }
+
+    let mut tenants = Vec::with_capacity(mix.len());
+    for (ti, t) in mix.tenants.iter().enumerate() {
+        let mut st = TenantStats::new(t.name.clone());
+        let arr = &tenant_arrivals[ti];
+        st.offered = arr.len() as u64;
+        for (bi, b) in tenant_batches[ti].iter().enumerate() {
+            st.dispatched += b.count as u64;
+            st.batches += 1;
+            let d = out.drain[batch_last_group[ti][bi]];
+            if d == u64::MAX {
+                st.in_flight += b.count as u64;
+                continue;
+            }
+            st.delivered += b.count as u64;
+            for &a in &arr[b.first..b.first + b.count] {
+                st.e2e.record(d.saturating_sub(a));
+                st.queue.record(b.dispatch.saturating_sub(a));
+                st.net.record(d.saturating_sub(b.dispatch));
+            }
+        }
+        st.queued = st.offered - st.dispatched;
+        tenants.push(st);
+    }
+
+    let makespan = out.report.cycles;
+    Ok(ServingReport {
+        sim: out.report,
+        makespan,
+        offered: tenants.iter().map(|t| t.offered).sum(),
+        dispatched: tenants.iter().map(|t| t.dispatched).sum(),
+        delivered: tenants.iter().map(|t| t.delivered).sum(),
+        in_flight: tenants.iter().map(|t| t.in_flight).sum(),
+        queued: tenants.iter().map(|t| t.queued).sum(),
+        batches: tenants.iter().map(|t| t.batches).sum(),
+        tenants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::builder::mesh_opt;
+    use crate::ModelId;
+
+    fn setup() -> (SystemConfig, NocInstance, TenantMix, ServingSpec, TraceConfig) {
+        let sys = SystemConfig::paper_8x8();
+        let inst = mesh_opt(&sys, true);
+        let mix = TenantMix::single(ModelId::LeNet);
+        let spec: ServingSpec = "poisson:rate=0.2,seed=3;n=12".parse().unwrap();
+        let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+        (sys, inst, mix, spec, cfg)
+    }
+
+    #[test]
+    fn serving_run_delivers_and_conserves() {
+        let (sys, inst, mix, spec, cfg) = setup();
+        let r = run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap();
+        assert_eq!(r.offered, 12);
+        assert_eq!(r.offered, r.delivered + r.queued + r.in_flight, "conservation");
+        assert!(r.delivered > 0, "open-loop traffic must drain");
+        assert_eq!(r.sim.undelivered(), 0);
+        assert!(r.makespan > 0);
+        assert!(r.batches > 0 && r.batches <= r.offered);
+        let t = &r.tenants[0];
+        assert_eq!(t.e2e.count(), t.delivered);
+        assert_eq!(t.queue.count(), t.delivered);
+        assert!(t.e2e.p99() >= t.e2e.p50());
+        // e2e = queue + net, so the e2e tail dominates the network tail
+        assert!(t.e2e.p99() >= t.net.p99());
+        assert!(t.queue.max() <= spec.timeout, "queue wait is timeout-bounded");
+        assert!(r.delivered_rate_pmc() > 0.0);
+    }
+
+    #[test]
+    fn none_fault_plan_and_sink_are_byte_identical() {
+        let (sys, inst, mix, spec, cfg) = setup();
+        let plain = run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap();
+        let none =
+            run_serving_faults(&sys, &inst, &mix, &spec, &cfg, &FaultPlan::none()).unwrap();
+        let mut tel = Telemetry::new();
+        let obs = run_serving_obs(
+            &sys,
+            &inst,
+            &mix,
+            &spec,
+            &cfg,
+            &FaultPlan::none(),
+            Some(&mut tel),
+        )
+        .unwrap();
+        for r in [&none, &obs] {
+            assert_eq!(r.sim.latency.sum, plain.sim.latency.sum);
+            assert_eq!(r.sim.link_busy, plain.sim.link_busy);
+            assert_eq!(r.makespan, plain.makespan);
+            assert_eq!(r.delivered, plain.delivered);
+        }
+        assert_eq!(plain.resilience(), &ResilienceStats::default());
+        let serve_spans = tel.spans.iter().filter(|s| s.cat == "serve").count();
+        assert_eq!(serve_spans as u64, plain.batches, "one span per drained batch");
+        assert!(tel.spans.iter().all(|s| s.cat != "serve" || s.end >= s.start));
+    }
+
+    #[test]
+    fn multi_tenant_mix_shares_the_chip() {
+        let (sys, inst, _, spec, cfg) = setup();
+        let mix = TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet]);
+        let r = run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap();
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.offered, 24, "12 requests per tenant");
+        assert_eq!(r.offered, r.delivered + r.queued + r.in_flight);
+        // salted streams: the two tenants must not batch identically
+        let a: Vec<u64> = r.tenants.iter().map(|t| t.e2e.count()).collect();
+        assert!(a.iter().all(|&c| c > 0), "both tenants delivered: {a:?}");
+    }
+
+    #[test]
+    fn a_none_spec_is_rejected_at_the_run_boundary() {
+        let (sys, inst, mix, _, cfg) = setup();
+        let err =
+            run_serving(&sys, &inst, &mix, &ServingSpec::none(), &cfg).unwrap_err();
+        let WihetError::InvalidArg(msg) = err else { panic!("wrong variant") };
+        assert!(msg.contains("serve grammar"), "{msg}");
+    }
+}

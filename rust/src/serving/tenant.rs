@@ -1,0 +1,140 @@
+//! Multi-tenant serving: several models sharing one chip's tiles, with
+//! per-tenant latency accounting and saturation-knee detection.
+
+use crate::scenario::ModelId;
+use crate::telemetry::LogHistogram;
+
+/// One serving tenant: a named model whose requests share the chip with
+/// every other tenant's.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tenant {
+    /// Display name (the model's canonical string, suffixed on
+    /// collision).
+    pub name: String,
+    pub model: ModelId,
+}
+
+/// The set of models co-resident on one chip. All tenants share one
+/// arrival spec; per-tenant salts decorrelate their streams.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantMix {
+    pub tenants: Vec<Tenant>,
+}
+
+impl TenantMix {
+    /// A mix over the given models, named by their canonical strings
+    /// (`#k`-suffixed when one model serves several tenants).
+    pub fn new(models: Vec<ModelId>) -> Self {
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(models.len());
+        for model in models {
+            let base = model.to_string();
+            let dup = tenants.iter().filter(|t| t.model == model).count();
+            let name = if dup == 0 { base } else { format!("{base}#{}", dup + 1) };
+            tenants.push(Tenant { name, model });
+        }
+        TenantMix { tenants }
+    }
+
+    /// The single-tenant mix — what `simulate --serve` runs for the
+    /// scenario's model.
+    pub fn single(model: ModelId) -> Self {
+        TenantMix::new(vec![model])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+}
+
+/// Per-tenant serving outcome: request conservation counters plus the
+/// three latency views (end-to-end = queueing + network).
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub name: String,
+    /// Requests the arrival process generated.
+    pub offered: u64,
+    /// Requests the batcher put on the network.
+    pub dispatched: u64,
+    /// Requests whose batch fully drained.
+    pub delivered: u64,
+    /// Requests dispatched but not drained (horizon-cut runs only).
+    pub in_flight: u64,
+    /// Requests never dispatched (`offered - dispatched`).
+    pub queued: u64,
+    /// Batches the policy dispatched.
+    pub batches: u64,
+    /// End-to-end latency: arrival to batch drain, cycles.
+    pub e2e: LogHistogram,
+    /// Queueing delay: arrival to batch dispatch (bounded by the batch
+    /// timeout).
+    pub queue: LogHistogram,
+    /// Network latency: batch dispatch to batch drain.
+    pub net: LogHistogram,
+}
+
+impl TenantStats {
+    pub fn new(name: String) -> Self {
+        TenantStats {
+            name,
+            offered: 0,
+            dispatched: 0,
+            delivered: 0,
+            in_flight: 0,
+            queued: 0,
+            batches: 0,
+            e2e: LogHistogram::new(),
+            queue: LogHistogram::new(),
+            net: LogHistogram::new(),
+        }
+    }
+
+    /// Delivered throughput in requests per megacycle — directly
+    /// comparable to the spec's offered `rate_pmc`.
+    pub fn delivered_rate_pmc(&self, makespan: u64) -> f64 {
+        self.delivered as f64 * 1e6 / makespan.max(1) as f64
+    }
+}
+
+/// First load step whose p99 exceeds `k` times the unloaded (step 0)
+/// p99 — the saturation knee. `None` when the series never crosses
+/// (or has fewer than two steps).
+pub fn detect_knee(p99: &[u64], k: f64) -> Option<usize> {
+    let base = (*p99.first()?).max(1) as f64;
+    p99.iter().enumerate().skip(1).find(|(_, &v)| v as f64 > k * base).map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_names_disambiguate_duplicates() {
+        let mix = TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet, ModelId::LeNet]);
+        let names: Vec<&str> = mix.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["lenet", "cdbnet", "lenet#2"]);
+        assert_eq!(TenantMix::single(ModelId::LeNet).len(), 1);
+    }
+
+    #[test]
+    fn knee_is_the_first_crossing() {
+        assert_eq!(detect_knee(&[100, 150, 300, 500, 900], 4.0), Some(3));
+        assert_eq!(detect_knee(&[100, 401], 4.0), Some(1));
+        assert_eq!(detect_knee(&[100, 120, 130], 4.0), None, "flat series has no knee");
+        assert_eq!(detect_knee(&[], 4.0), None);
+        assert_eq!(detect_knee(&[100], 4.0), None);
+        // a zero baseline clamps to 1 instead of making every step a knee
+        assert_eq!(detect_knee(&[0, 3, 5], 4.0), Some(2));
+    }
+
+    #[test]
+    fn delivered_rate_is_in_requests_per_megacycle() {
+        let mut st = TenantStats::new("t".into());
+        st.delivered = 50;
+        assert_eq!(st.delivered_rate_pmc(1_000_000), 50.0);
+        assert!(st.delivered_rate_pmc(0).is_finite(), "zero makespan is guarded");
+    }
+}

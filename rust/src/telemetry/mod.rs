@@ -28,7 +28,8 @@
 //!
 //! Entry points that accept a sink: `NocSim::run_telemetry` /
 //! `run_timeline_telemetry`, `schedule::run_schedule_obs` /
-//! `run_expanded_obs`, `fabric::run_fabric_obs`, and the CLI flags
+//! `run_expanded_obs`, `fabric::run_fabric_obs`,
+//! `serving::run_serving_obs`, and the CLI flags
 //! `--metrics` / `--trace out.json`; for the design flow,
 //! `DesignConfig::observer` / `NocDesigner::observe` /
 //! `Ctx::observe_search` and the CLI flags `--search-trace` /
@@ -46,5 +47,5 @@ pub use search::{
     record_stage, search_sink, sink_trace, validate_search_trace, SearchSink, SearchStage,
     SearchTrace,
 };
-pub use sink::{ClassPercentiles, Instant, LatencyPercentiles, Span, Telemetry};
+pub use sink::{class_line, ClassPercentiles, Instant, LatencyPercentiles, Span, Telemetry};
 pub use trace::{chrome_trace, validate_chrome_trace};

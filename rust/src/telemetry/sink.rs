@@ -47,7 +47,8 @@ const INITIAL_BUCKET_CYCLES: u64 = 256;
 #[derive(Debug, Clone, PartialEq)]
 pub struct Span {
     pub name: String,
-    /// Category: `"phase"`, `"collective"`, or `"fabric"`.
+    /// Category: `"phase"`, `"collective"`, `"fabric"`, or `"serve"`
+    /// (one span per drained serving batch).
     pub cat: &'static str,
     pub tid: u32,
     pub start: u64,
@@ -72,7 +73,10 @@ pub struct ClassPercentiles {
 }
 
 impl ClassPercentiles {
-    fn of(h: &LogHistogram) -> ClassPercentiles {
+    /// Snapshot a histogram's percentile view. Public so per-tenant
+    /// serving histograms render through the same machinery as the
+    /// simulator's pair classes.
+    pub fn of(h: &LogHistogram) -> ClassPercentiles {
         ClassPercentiles {
             count: h.count(),
             mean: h.mean(),
@@ -81,6 +85,20 @@ impl ClassPercentiles {
             p999: h.p999(),
         }
     }
+}
+
+/// One `--metrics`-style latency line for a named class (empty when the
+/// class saw no samples). Shared by [`Telemetry::summary`] and the
+/// serving CLI's per-tenant percentile block, so both render
+/// identically.
+pub fn class_line(name: &str, c: &ClassPercentiles) -> String {
+    if c.count == 0 {
+        return String::new();
+    }
+    format!(
+        "  latency {name:<7} p50 {:>6}  p99 {:>6}  p999 {:>6}  (n={}, mean {:.1})",
+        c.p50, c.p99, c.p999, c.count, c.mean
+    )
 }
 
 /// Tail-latency percentiles per pair class — the payload a display layer
@@ -337,6 +355,12 @@ impl Telemetry {
             .collect()
     }
 
+    /// The single headline number: p99 end-to-end latency over *all*
+    /// delivered traffic, every pair class together.
+    pub fn headline_p99(&self) -> u64 {
+        self.lat_all.p99()
+    }
+
     /// Tail-latency percentiles for every pair class.
     pub fn percentiles(&self) -> LatencyPercentiles {
         LatencyPercentiles {
@@ -366,13 +390,17 @@ impl Telemetry {
             "telemetry: {} packets over {} cycles ({} x {}-cycle buckets)",
             self.delivered_packets, self.cycles, self.rows, self.bucket_cycles
         );
+        if p.all.count > 0 {
+            let _ = writeln!(
+                s,
+                "  headline: all-traffic p99 {} cyc over {} packets",
+                p.all.p99, p.all.count
+            );
+        }
         let class = |s: &mut String, name: &str, c: &ClassPercentiles| {
-            if c.count > 0 {
-                let _ = writeln!(
-                    s,
-                    "  latency {name:<7} p50 {:>6}  p99 {:>6}  p999 {:>6}  (n={}, mean {:.1})",
-                    c.p50, c.p99, c.p999, c.count, c.mean
-                );
+            let line = class_line(name, c);
+            if !line.is_empty() {
+                let _ = writeln!(s, "{line}");
             }
         };
         class(&mut s, "all", &p.all);
@@ -450,5 +478,19 @@ mod tests {
         assert_eq!(t.tile_active, vec![0, 5]);
         let s = t.summary();
         assert!(s.contains("cpu-gpu"), "{s}");
+        // the aggregate headline line rides above the class lines
+        assert!(s.contains("headline: all-traffic p99"), "{s}");
+        assert_eq!(t.headline_p99(), p.all.p99);
+    }
+
+    #[test]
+    fn class_line_matches_the_summary_rendering() {
+        let mut t = Telemetry::new();
+        t.begin(1, 1, 1);
+        t.delivered(PAIR_CPU_MC, 10);
+        let p = t.percentiles();
+        let line = class_line("cpu-mc", &p.cpu_mc);
+        assert!(t.summary().contains(&line), "{line}");
+        assert!(class_line("empty", &ClassPercentiles::default()).is_empty());
     }
 }

@@ -1,0 +1,230 @@
+//! Serving-subsystem guarantees (ISSUE 10):
+//!
+//! * **Serving-off identity** — `ServingSpec::none()` is the default
+//!   everywhere: scenarios, scenario keys, and contexts built without a
+//!   spec are indistinguishable from pre-serving ones, and the legacy
+//!   `ScenarioKey::with_faults` constructor delegates to the new tip.
+//! * **Determinism** — open-loop serving reports are byte-identical
+//!   across repeat runs and across 1/2/8 `par_map` workers.
+//! * **Conservation** — `offered == delivered + queued + in_flight`
+//!   at every point of a rate ladder, per tenant and in aggregate.
+//! * **Knee consistency** — `detect_knee` flags the *first* step whose
+//!   p99 crosses the threshold, and nothing below it.
+//! * **Typed errors** — malformed `--serve` grammars are
+//!   `WihetError::InvalidArg`s carrying the serve grammar, never panics.
+
+use wihetnoc::model::SystemConfig;
+use wihetnoc::noc::builder::{mesh_opt, NocInstance};
+use wihetnoc::noc::sim::SimReport;
+use wihetnoc::serving::{detect_knee, run_serving, ArrivalProcess, ServingReport, TenantMix};
+use wihetnoc::traffic::trace::TraceConfig;
+use wihetnoc::util::exec::par_map_threads;
+use wihetnoc::workload::MappingPolicy;
+use wihetnoc::{
+    Effort, Fabric, FaultPlan, ModelId, Scenario, ScenarioKey, SchedulePolicy, ServingSpec,
+    WihetError,
+};
+
+/// Everything a `SimReport` aggregates, as one comparable value.
+fn sim_fingerprint(r: &SimReport) -> (u64, u64, u64, String, Vec<u64>) {
+    (
+        r.delivered_packets,
+        r.delivered_flits,
+        r.cycles,
+        format!("{:.9}/{:.9}/{:.9}", r.latency.sum, r.latency.max, r.cpu_mc_latency.sum),
+        r.link_flits.clone(),
+    )
+}
+
+/// A serving report down to its per-tenant tails, as one comparable
+/// value.
+#[allow(clippy::type_complexity)]
+fn serving_fingerprint(
+    r: &ServingReport,
+) -> ((u64, u64, u64, String, Vec<u64>), u64, u64, u64, Vec<(u64, u64, u64, u64)>) {
+    (
+        sim_fingerprint(&r.sim),
+        r.makespan,
+        r.delivered,
+        r.batches,
+        r.tenants
+            .iter()
+            .map(|t| (t.delivered, t.e2e.p99(), t.queue.p99(), t.net.p99()))
+            .collect(),
+    )
+}
+
+fn setup() -> (SystemConfig, NocInstance, TraceConfig) {
+    let sys = SystemConfig::paper_8x8();
+    let inst = mesh_opt(&sys, true);
+    let cfg = TraceConfig { scale: 0.02, ..Default::default() };
+    (sys, inst, cfg)
+}
+
+#[test]
+fn serving_off_is_the_default_everywhere() {
+    // a scenario built without a spec carries the none spec ...
+    let sc = Scenario::new("8x8".parse().unwrap(), ModelId::LeNet);
+    assert!(sc.serving.is_none());
+    assert_eq!(sc.serving, ServingSpec::none());
+    assert_eq!(sc.serving.to_string(), "none");
+    // ... the legacy key constructor delegates to the serving-aware tip ...
+    let sys = SystemConfig::paper_8x8();
+    let legacy = ScenarioKey::with_faults(
+        ModelId::LeNet,
+        &sys,
+        MappingPolicy::default(),
+        SchedulePolicy::Serial,
+        Fabric::single(),
+        FaultPlan::none(),
+    );
+    let tip = ScenarioKey::with_serving(
+        ModelId::LeNet,
+        &sys,
+        MappingPolicy::default(),
+        SchedulePolicy::Serial,
+        Fabric::single(),
+        FaultPlan::none(),
+        ServingSpec::none(),
+    );
+    assert_eq!(legacy, tip, "with_faults must delegate to with_serving(none)");
+    // ... and a context for a serving-off scenario validates untouched
+    let ctx = wihetnoc::experiments::Ctx::for_scenario(&sc).unwrap();
+    assert!(ctx.serving().is_none());
+    // a serving scenario rejects multi-chip fabrics and overlap schedules
+    let serve: ServingSpec = "poisson:rate=0.5;n=8".parse().unwrap();
+    let bad = sc.clone().with_serving(serve.clone()).with_fabric("4:topo=ring".parse().unwrap());
+    let e = wihetnoc::experiments::Ctx::for_scenario(&bad).unwrap_err();
+    assert!(e.to_string().contains("single chip"), "{e}");
+    let bad = sc
+        .clone()
+        .with_serving(serve)
+        .with_schedule(SchedulePolicy::GPipe { microbatches: 4 })
+        .with_effort(Effort::Quick);
+    let e = wihetnoc::experiments::Ctx::for_scenario(&bad).unwrap_err();
+    assert!(e.to_string().contains("schedule=serial"), "{e}");
+}
+
+#[test]
+fn serving_simulation_is_thread_count_invariant() {
+    let (sys, inst, cfg) = setup();
+    let mix = TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet]);
+    // one job per offered rate, seeds derived from the job index
+    let jobs: Vec<u64> = vec![50, 200, 800];
+    let run_all = |threads: usize| {
+        par_map_threads(threads, &jobs, |i, &rate_pmc| {
+            let spec = ServingSpec {
+                arrival: Some(ArrivalProcess::Poisson { rate_pmc, seed: 0x5E1 + i as u64 }),
+                batch: 4,
+                timeout: 256,
+                requests: 12,
+            };
+            let cfg = TraceConfig { seed: 0xCAFE + i as u64, ..cfg.clone() };
+            serving_fingerprint(&run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap())
+        })
+    };
+    let serial = run_all(1);
+    assert_eq!(run_all(1), serial, "repeat runs must match");
+    for threads in [2, 8] {
+        assert_eq!(run_all(threads), serial, "thread count {threads} diverged");
+    }
+}
+
+#[test]
+fn requests_are_conserved_across_the_rate_ladder() {
+    let (sys, inst, cfg) = setup();
+    let mix = TenantMix::new(vec![ModelId::LeNet, ModelId::CdbNet]);
+    for rate_pmc in [20, 100, 500, 2000] {
+        for (batch, timeout) in [(1u32, 1u64), (4, 256), (8, 64)] {
+            let spec = ServingSpec {
+                arrival: Some(ArrivalProcess::Poisson { rate_pmc, seed: 9 }),
+                batch,
+                timeout,
+                requests: 10,
+            };
+            let r = run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap();
+            let tag = format!("rate={rate_pmc} batch={batch} timeout={timeout}");
+            assert_eq!(r.offered, 20, "{tag}");
+            assert_eq!(
+                r.offered,
+                r.delivered + r.queued + r.in_flight,
+                "{tag}: conservation"
+            );
+            for t in &r.tenants {
+                assert_eq!(t.offered, t.delivered + t.queued + t.in_flight, "{tag} {}", t.name);
+                assert_eq!(t.e2e.count(), t.delivered, "{tag} {}", t.name);
+                assert!(t.queue.max() <= timeout, "{tag} {}: queue wait bound", t.name);
+            }
+            assert!(r.batches <= r.dispatched.max(1), "{tag}: batches never exceed requests");
+        }
+    }
+}
+
+#[test]
+fn knee_detection_flags_the_first_crossing_of_a_real_sweep() {
+    let (sys, inst, cfg) = setup();
+    let mix = TenantMix::single(ModelId::LeNet);
+    // a x4 rate ladder: p99 must not *detect* a knee before the first
+    // actual crossing, and the flagged step must really cross
+    let mut p99s = Vec::new();
+    for rate_pmc in [10, 40, 160, 640, 2560] {
+        let spec = ServingSpec {
+            arrival: Some(ArrivalProcess::Poisson { rate_pmc, seed: 11 }),
+            batch: 4,
+            timeout: 256,
+            requests: 16,
+        };
+        let r = run_serving(&sys, &inst, &mix, &spec, &cfg).unwrap();
+        let t = &r.tenants[0];
+        assert!(t.delivered > 0, "rate {rate_pmc} delivered nothing");
+        p99s.push(t.e2e.p99());
+    }
+    for k in [1.5f64, 2.0, 4.0] {
+        match detect_knee(&p99s, k) {
+            Some(i) => {
+                assert!(i >= 1 && i < p99s.len());
+                let floor = k * p99s[0].max(1) as f64;
+                assert!(p99s[i] as f64 > floor, "flagged step {i} below {k}x: {p99s:?}");
+                for (j, &p) in p99s.iter().enumerate().take(i).skip(1) {
+                    assert!(p as f64 <= floor, "step {j} crossed before the knee: {p99s:?}");
+                }
+            }
+            None => {
+                let floor = k * p99s[0].max(1) as f64;
+                assert!(
+                    p99s.iter().skip(1).all(|&p| p as f64 <= floor),
+                    "a crossing exists but no knee was detected: {p99s:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_serve_grammars_are_typed_errors_carrying_the_grammar() {
+    for bad in [
+        "gaussian:rate=1",              // unknown arrival head
+        "poisson",                      // missing kv payload
+        "poisson:rate=0",               // zero rate
+        "poisson:rate=1e9",             // beyond one request per cycle
+        "poisson:rate=1,burst=2",       // unknown key
+        "poisson:rate=1;burst:rate=1,on=2,off=2", // two arrival clauses
+        "batch=4;timeout=9",            // load knobs without an arrival
+        "poisson:rate=1;batch=0",       // empty batch
+        "poisson:rate=1;n=0",           // no requests
+        "poisson:rate=1;what=3",        // unknown load key
+        "burst:rate=1,on=0,off=4",      // degenerate burst window
+        "trace:rate=1",                 // trace needs file=
+    ] {
+        let e = bad.parse::<ServingSpec>().unwrap_err();
+        assert!(matches!(e, WihetError::InvalidArg(_)), "{bad}: {e:?}");
+        let msg = e.to_string();
+        assert!(msg.contains("serve grammar"), "{bad}: grammar missing in {msg}");
+    }
+    // the run boundary rejects a none spec with the same typed error
+    let (sys, inst, cfg) = setup();
+    let mix = TenantMix::single(ModelId::LeNet);
+    let e = run_serving(&sys, &inst, &mix, &ServingSpec::none(), &cfg).unwrap_err();
+    assert!(matches!(e, WihetError::InvalidArg(_)), "{e:?}");
+    assert!(e.to_string().contains("serve grammar"), "{e}");
+}
